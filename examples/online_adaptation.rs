@@ -1,0 +1,81 @@
+//! Online adaptation (§3.4): the workload's Zipf head rotates mid-run
+//! ("phase drift"), and we compare ACPC+TCN with the online feedback loop
+//! ON vs OFF. With feedback, the predictor retrains on observed reuse
+//! outcomes (replay buffer + compiled Adam steps from rust) and recovers;
+//! without it, predictions go stale.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example online_adaptation
+//! ```
+
+use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::predictor::{Dataset, GeometryHints, ModelRuntime, PredictorBox};
+use acpc::runtime::{Engine, Manifest};
+use acpc::sim::run_experiment;
+use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
+use acpc::training::{train, TrainConfig};
+
+fn main() {
+    let Some(dir) = acpc::runtime::artifacts_dir() else {
+        eprintln!("online_adaptation: run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let window = manifest.model("tcn").expect("tcn").window;
+    let seed = 0xADA7;
+
+    // Pre-train on a *stationary* trace (no phase drift).
+    println!("[1/3] pre-training TCN on a drift-free trace ...");
+    let mut gcfg = GeneratorConfig::new(ModelProfile::gpt3ish(), seed);
+    gcfg.phase_period = 0; // stationary
+    let geom = GeometryHints::from_generator(&gcfg);
+    let trace = TraceGenerator::new(gcfg).generate(400_000);
+    let ds = Dataset::build(&trace, window, geom, 4096, 6);
+    let split = ds.split(seed);
+    let mut pretrained = ModelRuntime::load(&engine, &manifest, "tcn").expect("tcn");
+    let res = train(
+        &mut pretrained,
+        &ds,
+        &split,
+        &TrainConfig { epochs: 10, patience: 0, max_batches_per_epoch: 40, seed, verbose_every: 0 },
+    );
+    println!("      pre-trained loss: {:.3}", res.final_train_loss);
+    let ckpt = std::env::temp_dir().join("acpc_online_adapt.ckpt");
+    pretrained.store.save_checkpoint(&ckpt).expect("ckpt");
+
+    // Evaluation trace WITH aggressive phase drift.
+    let mk_cfg = |feedback: usize| {
+        let mut cfg = ExperimentConfig::table1("acpc", PredictorKind::Tcn);
+        cfg.accesses = 600_000;
+        cfg.generator.phase_period = 1_500; // rotate the hot set frequently
+        cfg.feedback_interval = feedback;
+        cfg.name = format!("drift-feedback{feedback}");
+        cfg
+    };
+    let load = |engine: &Engine| {
+        let mut rt = ModelRuntime::load(engine, &manifest, "tcn").expect("tcn");
+        rt.store.load_checkpoint(&ckpt).expect("load");
+        rt
+    };
+
+    println!("[2/3] drifting workload, feedback OFF ...");
+    let mut frozen = PredictorBox::Model(Box::new(load(&engine)));
+    let off = run_experiment(&mk_cfg(0), &mut frozen);
+
+    println!("[3/3] drifting workload, feedback ON (retrain every 50k accesses) ...");
+    let mut adaptive = PredictorBox::Model(Box::new(load(&engine)));
+    let on = run_experiment(&mk_cfg(50_000), &mut adaptive);
+
+    println!("\n== online adaptation under phase drift ==");
+    println!("  feedback OFF: {} (online steps: {})", off.report.summary(), off.online_train_steps);
+    println!("  feedback ON : {} (online steps: {})", on.report.summary(), on.online_train_steps);
+    println!(
+        "\nadaptation gain: CHR {:+.2} pp, pollution {:+.1}%",
+        (on.report.l2_hit_rate - off.report.l2_hit_rate) * 100.0,
+        (on.report.l2_pollution_ratio / off.report.l2_pollution_ratio - 1.0) * 100.0
+    );
+    std::fs::remove_file(ckpt).ok();
+}

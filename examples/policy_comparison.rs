@@ -1,0 +1,66 @@
+//! Policy shoot-out across the whole zoo — every replacement policy in the
+//! library on the same GPT-style trace, including the Belady upper bound,
+//! run in parallel on the thread pool.
+//!
+//! ```bash
+//! cargo run --release --example policy_comparison [accesses]
+//! ```
+
+use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::predictor::{HeuristicPredictor, PredictorBox};
+use acpc::sim::run_experiment;
+use acpc::util::bench::print_table;
+use acpc::util::pool::{default_threads, run_parallel};
+
+fn main() {
+    let accesses: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(500_000);
+
+    let policies =
+        ["random", "lru", "plru", "lip", "bip", "dip", "srrip", "brrip", "drrip", "ship",
+         "mlpredict", "acpc", "belady"];
+
+    let jobs: Vec<_> = policies
+        .iter()
+        .map(|&policy| {
+            move || {
+                let needs_pred = matches!(policy, "mlpredict" | "acpc");
+                let kind =
+                    if needs_pred { PredictorKind::Heuristic } else { PredictorKind::None };
+                let mut cfg = ExperimentConfig::table1(policy, kind);
+                cfg.accesses = accesses;
+                let mut predictor = if needs_pred {
+                    PredictorBox::Heuristic(HeuristicPredictor)
+                } else {
+                    PredictorBox::None
+                };
+                (policy, run_experiment(&cfg, &mut predictor))
+            }
+        })
+        .collect();
+    let results = run_parallel(default_threads(), jobs);
+
+    let lru_report =
+        results.iter().find(|(p, _)| *p == "lru").map(|(_, r)| r.report.clone()).unwrap();
+    let mut rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(policy, r)| {
+            vec![
+                policy.to_string(),
+                format!("{:.1}", r.report.l2_hit_rate * 100.0),
+                format!("{:.2}", r.report.l2_pollution_ratio * 100.0),
+                format!("{:+.1}", r.report.miss_penalty_reduction_vs(&lru_report)),
+                format!("{:.2}", r.report.amat),
+                format!("{:.2}", r.emu),
+                format!("{:.2}M", r.accesses_per_sec / 1e6),
+            ]
+        })
+        .collect();
+    rows.sort_by(|a, b| b[1].parse::<f64>().unwrap().total_cmp(&a[1].parse::<f64>().unwrap()));
+    print_table(
+        "All policies, GPT-style trace",
+        &["policy", "CHR %", "PPR %", "MPR vs LRU %", "AMAT", "EMU", "sim acc/s"],
+        &rows,
+    );
+    println!("\n(belady is the clairvoyant upper bound; mlpredict/acpc use the heuristic predictor here)");
+}

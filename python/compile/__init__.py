@@ -1,0 +1,3 @@
+"""Build-time compile package: L2 jax model + L1 pallas kernels + AOT.
+
+Never imported at runtime; `make artifacts` is its only consumer."""

@@ -1,0 +1,139 @@
+"""AOT compile path: lower the L2 models (TCN + ablation variants + DNN
+baseline) to HLO **text** and emit the artifact bundle the rust runtime
+consumes:
+
+    artifacts/
+      manifest.json          # shapes, param order, batch sizes, file map
+      params_<model>.bin     # f32 LE initial parameters, manifest order
+      <model>_infer.hlo.txt  # (params..., x) -> (probs,)
+      <model>_train.hlo.txt  # (params..., m..., v..., step, x, y)
+                             #   -> (params', m', v', loss)
+      <model>_eval.hlo.txt   # (params..., x, y) -> (loss,)
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+INFER_BATCH = 256
+TRAIN_BATCH = 512
+EVAL_BATCH = 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_model(name: str, mdef: dict, out_dir: str, seed: int) -> dict:
+    """Lower infer/train/eval for one model; write files; return manifest."""
+    specs = mdef["specs"]
+    n = len(specs)
+    window = mdef["window"]
+    fdim = mdef["feature_dim"]
+    x_infer = spec((INFER_BATCH, window, fdim)) if mdef["kind"] == "tcn" else spec((INFER_BATCH, fdim))
+    x_train = spec((TRAIN_BATCH, window, fdim)) if mdef["kind"] == "tcn" else spec((TRAIN_BATCH, fdim))
+    x_eval = spec((EVAL_BATCH, window, fdim)) if mdef["kind"] == "tcn" else spec((EVAL_BATCH, fdim))
+    p_specs = [spec(s) for _, s in specs]
+
+    files = {}
+
+    # --- infer: (params..., x) -> (probs,) -------------------------------
+    def infer_fn(*args):
+        return (mdef["infer"](list(args[:n]), args[n]),)
+
+    lowered = jax.jit(infer_fn).lower(*p_specs, x_infer)
+    files["infer"] = f"{name}_infer.hlo.txt"
+    with open(os.path.join(out_dir, files["infer"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # --- train step -------------------------------------------------------
+    train_step = M.make_train_step(mdef["forward"], n)
+    t_args = p_specs + p_specs + p_specs + [spec(()), x_train, spec((TRAIN_BATCH,))]
+    lowered = jax.jit(train_step).lower(*t_args)
+    files["train"] = f"{name}_train.hlo.txt"
+    with open(os.path.join(out_dir, files["train"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # --- eval loss --------------------------------------------------------
+    eval_loss = M.make_eval_loss(mdef["forward"])
+    lowered = jax.jit(eval_loss).lower(*p_specs, x_eval, spec((EVAL_BATCH,)))
+    files["eval"] = f"{name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, files["eval"]), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # --- initial parameters ------------------------------------------------
+    params = M.init_params(specs, seed=seed)
+    bin_name = f"params_{name}.bin"
+    with open(os.path.join(out_dir, bin_name), "wb") as f:
+        for p in params:
+            f.write(bytes(jnp.asarray(p, jnp.float32).tobytes()))
+
+    return {
+        "kind": mdef["kind"],
+        "window": window,
+        "feature_dim": fdim,
+        "dilations": mdef["dilations"],
+        "params": [{"name": nm, "shape": list(sh)} for nm, sh in specs],
+        "params_bin": bin_name,
+        "infer": {"hlo": files["infer"], "batch": INFER_BATCH},
+        "train": {"hlo": files["train"], "batch": TRAIN_BATCH, "n_params": n},
+        "eval": {"hlo": files["eval"], "batch": EVAL_BATCH},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--models", default="tcn,tcn_flat,tcn_short,dnn",
+        help="comma-separated subset of the model zoo",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    zoo = M.model_zoo()
+    manifest = {
+        "version": 1,
+        "adam": {"lr": M.ADAM_LR, "b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        "dropout_p": M.DROPOUT_P,
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in zoo:
+            raise SystemExit(f"unknown model '{name}' (zoo: {sorted(zoo)})")
+        print(f"[aot] lowering {name} ...", flush=True)
+        manifest["models"][name] = lower_model(name, zoo[name], args.out, args.seed)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[aot] wrote {args.out}/manifest.json ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

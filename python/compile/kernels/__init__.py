@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO)."""
+
+from . import dense, ref, tcn_conv  # noqa: F401

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness contract).
+
+These are written with independent primitives (``lax.conv_general_dilated``
+for the conv, plain ``@`` for dense) so a bug in the kernels' slicing or
+blocking logic cannot be mirrored here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dilated_causal_conv1d_ref(x: jax.Array, w: jax.Array, b: jax.Array, *, dilation: int) -> jax.Array:
+    """Oracle for kernels.tcn_conv.dilated_causal_conv1d.
+
+    x: (B, T, Cin), w: (K, Cin, Cout), b: (Cout,) → (B, T, Cout).
+    Causal: output t depends on inputs t, t-d, ..., t-(K-1)*d.
+    """
+    k = w.shape[0]
+    pad = (k - 1) * dilation
+    # conv_general_dilated with explicit left padding; feature dims:
+    # lhs (B, T, C) = "NWC"; rhs (K, Cin, Cout) = "WIO".
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1,),
+        padding=[(pad, 0)],
+        rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    ) + b[None, None, :]
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "none") -> jax.Array:
+    """Oracle for kernels.dense.dense."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    elif activation != "none":
+        raise ValueError(activation)
+    return y

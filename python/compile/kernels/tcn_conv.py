@@ -1,0 +1,155 @@
+"""L1 Pallas kernel: dilated causal 1-D convolution — the TCN hot-spot.
+
+The paper's predictor (eq. 1) is a stack of dilated causal convolutions over
+per-line access-feature sequences. On GPU the reference implementation would
+be a cuDNN conv; here the kernel is *rethought for TPU* (DESIGN.md
+§Hardware-Adaptation):
+
+- the input block ``(B_tile, T + pad, C_in)`` and the full filter
+  ``(K, C_in, C_out)`` are staged in VMEM via ``BlockSpec`` (no HBM traffic
+  inside the kernel);
+- the dilated gather is restructured into ``K`` *static* slices of the
+  left-padded input, each feeding a dense ``(B_tile*T, C_in) @ (C_in, C_out)``
+  matmul — i.e. all FLOPs land on the MXU systolic array instead of a
+  sliding-window loop;
+- causality comes from the left-padding alone: output ``t`` only sees inputs
+  ``t - k*d`` for ``k in [0, K)``.
+
+``interpret=True`` is mandatory on this image: CPU PJRT cannot execute
+Mosaic custom-calls, and the interpreted path lowers to plain HLO that the
+rust runtime executes directly. Numerics are pinned against the pure-jnp
+oracle in ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: keeps the VMEM slab small (see vmem_bytes()) while leaving the
+# (B_tile*T, C_in) matmul big enough to fill the 128x128 MXU.
+DEFAULT_BLOCK_B = 64
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, dilation: int, t: int):
+    """One grid step: causal dilated conv over a (B_tile, T+pad, C_in) slab.
+
+    x_ref holds the *pre-padded* input, so slice ``[:, j*d : j*d+T, :]`` is
+    the shifted view feeding filter tap ``j``; the loop over taps is a python
+    loop over K static slices — unrolled at trace time into K MXU matmuls.
+    """
+    x = x_ref[...]  # (Bt, T + (k-1)*d, Cin)
+    w = w_ref[...]  # (K, Cin, Cout)
+    b = b_ref[...]  # (Cout,)
+    bt = x.shape[0]
+    cin = x.shape[2]
+    cout = w.shape[2]
+    acc = jnp.zeros((bt * t, cout), dtype=jnp.float32)
+    for j in range(k):
+        # Tap j sees input shifted by j*dilation; with left-pad (k-1)*d the
+        # slice is static — no gather, pure contiguous reads.
+        xj = jax.lax.slice_in_dim(x, j * dilation, j * dilation + t, axis=1)
+        acc = acc + jnp.dot(
+            xj.reshape(bt * t, cin), w[j], preferred_element_type=jnp.float32
+        )
+    o_ref[...] = (acc + b[None, :]).reshape(bt, t, cout)
+
+
+def _conv_pallas(x, w, b, dilation: int, block_b: int):
+    batch, t, cin = x.shape
+    k, cin_w, cout = w.shape
+    assert cin == cin_w, f"channel mismatch {cin} vs {cin_w}"
+    block_b = min(block_b, batch)
+    assert batch % block_b == 0, f"B={batch} not divisible by block_b={block_b}"
+    pad = (k - 1) * dilation
+
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (pad, 0), (0, 0)))
+    grid = (batch // block_b,)
+    kernel = functools.partial(_conv_kernel, k=k, dilation=dilation, t=t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, t + pad, cin), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k, cin, cout), lambda i: (0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, t, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, t, cout), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, w.astype(jnp.float32), b.astype(jnp.float32))
+
+
+# Interpret-mode pallas_call does not support reverse-mode AD, so the kernel
+# carries an analytic VJP: the backward pass is the standard conv-transpose
+# expressed as K shifted matmuls (MXU-shaped, same as the forward) in plain
+# jnp — it lowers into the same fused train-step HLO.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _conv(x, w, b, dilation, block_b):
+    return _conv_pallas(x, w, b, dilation, block_b)
+
+
+def _conv_fwd(x, w, b, dilation, block_b):
+    return _conv_pallas(x, w, b, dilation, block_b), (x, w)
+
+
+def _conv_bwd(dilation, block_b, res, dy):
+    x, w = res
+    k = w.shape[0]
+    _, t, _ = x.shape
+    pad = (k - 1) * dilation
+    xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    dw = jnp.stack(
+        [
+            jnp.einsum(
+                "btc,bto->co",
+                jax.lax.slice_in_dim(xp, j * dilation, j * dilation + t, axis=1),
+                dy,
+            )
+            for j in range(k)
+        ]
+    )
+    db = dy.sum(axis=(0, 1))
+    dxp = jnp.zeros_like(xp)
+    for j in range(k):
+        upd = jnp.einsum("bto,co->btc", dy, w[j])
+        dxp = dxp.at[:, j * dilation : j * dilation + t, :].add(upd)
+    dx = dxp[:, pad:, :]
+    return dx, dw, db
+
+
+_conv.defvjp(_conv_fwd, _conv_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("dilation", "block_b"))
+def dilated_causal_conv1d(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, dilation: int, block_b: int = DEFAULT_BLOCK_B
+) -> jax.Array:
+    """Causal dilated conv: x (B, T, Cin), w (K, Cin, Cout), b (Cout,).
+
+    Returns (B, T, Cout) float32. B must be divisible by ``block_b`` (the AOT
+    path lowers with fixed shapes, so this is checked at trace time).
+    Differentiable via the custom VJP above.
+    """
+    return _conv(x, w, b, dilation, block_b)
+
+
+def vmem_bytes(block_b: int, t: int, cin: int, cout: int, k: int, dilation: int) -> int:
+    """Per-grid-step VMEM footprint estimate (f32), used by the §Perf
+    structural analysis in EXPERIMENTS.md: input slab + filter + output."""
+    pad = (k - 1) * dilation
+    x_slab = block_b * (t + pad) * cin * 4
+    w_slab = k * cin * cout * 4
+    o_slab = block_b * t * cout * 4
+    acc = block_b * t * cout * 4
+    return x_slab + w_slab + o_slab + acc
+
+
+def mxu_flops_fraction() -> float:
+    """Fraction of kernel FLOPs issued as MXU-shaped matmuls: the tap loop
+    emits only ``jnp.dot`` contractions plus a bias add, so effectively all
+    multiply-accumulate work is MXU work."""
+    return 1.0

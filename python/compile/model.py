@@ -1,0 +1,264 @@
+"""L2: the paper's predictor models as pure-jax functions over explicit
+parameter lists, built on the L1 Pallas kernels.
+
+- **TCN** (§3.2, Fig. 1): three dilated causal conv layers (kernel 3,
+  dilations [1, 2, 4] by default), ReLU between layers, then two fully-
+  connected layers on the last time step with dropout p=0.3 (§4.2) and a
+  sigmoid head producing the reuse probability ŷ_t of eq. (1).
+- **DNN (ML-Predict baseline)**: an MLP over the *current* access feature
+  vector only — the canonical "no temporal weight sharing" baseline the
+  paper contrasts against (DESIGN.md §3).
+- **Training** (§3.4): binary cross-entropy (eq. 4) + Adam(lr=1e-4), one
+  fused ``train_step`` suitable for AOT lowering: all state (params, Adam
+  moments, step) is explicit inputs/outputs, so the rust trainer can drive
+  epochs without Python.
+
+Parameters travel as flat lists in a fixed order (see ``*_param_specs``);
+``aot.py`` serializes the same order into ``manifest.json`` + ``params_*.bin``
+and the rust ``runtime::params`` loader mirrors it.
+
+Dropout is deterministic-counter based (a Fibonacci-hash of element index
+folded with the step) rather than ``jax.random``: xla_extension 0.5.1 has no
+problem with threefry, but the counter scheme keeps the train-step HLO free
+of RNG state plumbing and makes rust-side replay bit-reproducible.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense
+from .kernels.tcn_conv import dilated_causal_conv1d
+
+# ---------------------------------------------------------------------------
+# Architecture constants (paper §4.2)
+# ---------------------------------------------------------------------------
+FEATURE_DIM = 12          # per-access feature vector (paper eq. 5 features)
+WINDOW = 16               # per-line history length fed to the TCN
+TCN_CHANNELS = 32
+TCN_KERNEL = 3
+TCN_DILATIONS = (1, 2, 4)  # receptive field 1 + 2*(1+2+4) = 15 ≤ WINDOW
+FC_HIDDEN = 16
+DROPOUT_P = 0.3
+DNN_HIDDEN = (64, 32)
+ADAM_LR = 1e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs + init
+# ---------------------------------------------------------------------------
+
+def tcn_param_specs(dilations: Sequence[int] = TCN_DILATIONS):
+    """Ordered (name, shape) list — the AOT/rust param contract."""
+    specs = []
+    cin = FEATURE_DIM
+    for i, _ in enumerate(dilations):
+        specs.append((f"conv{i}_w", (TCN_KERNEL, cin, TCN_CHANNELS)))
+        specs.append((f"conv{i}_b", (TCN_CHANNELS,)))
+        cin = TCN_CHANNELS
+    specs.append(("fc1_w", (TCN_CHANNELS, FC_HIDDEN)))
+    specs.append(("fc1_b", (FC_HIDDEN,)))
+    specs.append(("fc2_w", (FC_HIDDEN, 1)))
+    specs.append(("fc2_b", (1,)))
+    return specs
+
+
+def dnn_param_specs():
+    specs = []
+    cin = FEATURE_DIM
+    for i, h in enumerate(DNN_HIDDEN):
+        specs.append((f"fc{i}_w", (cin, h)))
+        specs.append((f"fc{i}_b", (h,)))
+        cin = h
+    specs.append((f"fc{len(DNN_HIDDEN)}_w", (cin, 1)))
+    specs.append((f"fc{len(DNN_HIDDEN)}_b", (1,)))
+    return specs
+
+
+def init_params(specs, seed: int = 0):
+    """He-style init, deterministic in `seed`."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in specs:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            if len(shape) == 3:  # conv: (K, Cin, Cout)
+                fan_in = shape[0] * shape[1]
+            scale = jnp.sqrt(2.0 / fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Deterministic dropout (counter-based; no RNG ops in the lowered HLO)
+# ---------------------------------------------------------------------------
+
+def _hash_uniform(shape, step: jax.Array, salt: int) -> jax.Array:
+    """Pseudo-uniform in [0,1): Fibonacci hash of (element index, step)."""
+    n = 1
+    for s in shape:
+        n *= s
+    idx = jax.lax.iota(jnp.uint32, n)
+    stepu = step.astype(jnp.uint32) + jnp.uint32(salt)
+    h = (idx + stepu * jnp.uint32(0x9E3779B9)) * jnp.uint32(0x85EBCA6B)
+    h = (h ^ (h >> 13)) * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h.astype(jnp.float32) / jnp.float32(4294967296.0)).reshape(shape)
+
+
+def dropout(x: jax.Array, step: jax.Array, *, p: float = DROPOUT_P, salt: int = 1) -> jax.Array:
+    keep = (_hash_uniform(x.shape, step, salt) >= p).astype(jnp.float32)
+    return x * keep / (1.0 - p)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def tcn_forward(params, x, *, dilations: Sequence[int] = TCN_DILATIONS,
+                train: bool = False, step=None):
+    """ŷ = σ(W ⊛ X + b) stack (eq. 1). x: (B, T, F) → (B,) reuse probs."""
+    h = x
+    i = 0
+    for li, d in enumerate(dilations):
+        w, b = params[i], params[i + 1]
+        i += 2
+        h = dilated_causal_conv1d(h, w, b, dilation=d)
+        h = jnp.maximum(h, 0.0)
+        del li
+    last = h[:, -1, :]  # prediction for the line's state *now*
+    z = dense(last, params[i], params[i + 1], activation="relu")
+    if train:
+        z = dropout(z, step, salt=7)
+    logit_w, logit_b = params[i + 2], params[i + 3]
+    # Return logits from a fused dense; sigmoid applied by callers/loss.
+    logits = dense(z, logit_w, logit_b, activation="none")[:, 0]
+    return logits
+
+
+def dnn_forward(params, x, *, train: bool = False, step=None):
+    """ML-Predict baseline. x: (B, F) current-access features → (B,) logits."""
+    h = x
+    i = 0
+    for li in range(len(DNN_HIDDEN)):
+        h = dense(h, params[i], params[i + 1], activation="relu")
+        i += 2
+        if train and li == len(DNN_HIDDEN) - 1:
+            h = dropout(h, step, salt=11)
+    return dense(h, params[i], params[i + 1], activation="none")[:, 0]
+
+
+def tcn_infer(params, x):
+    """AOT entry: (params..., x[B,T,F]) → reuse probabilities (B,)."""
+    return jax.nn.sigmoid(tcn_forward(params, x))
+
+
+def dnn_infer(params, x):
+    return jax.nn.sigmoid(dnn_forward(params, x))
+
+
+# ---------------------------------------------------------------------------
+# Loss (eq. 4) + Adam train step
+# ---------------------------------------------------------------------------
+
+def bce_from_logits(logits, y):
+    """Numerically-stable binary cross-entropy (eq. 4)."""
+    # max(z,0) - z*y + log(1+exp(-|z|))
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def make_train_step(forward, n_params: int):
+    """Build ``train_step(params, m, v, step, x, y) → (params', m', v', loss)``.
+
+    Everything is positional f32 tensors so the lowered HLO has a flat
+    (3*n_params + 3)-input, (3*n_params + 1)-output signature the rust
+    trainer can drive generically.
+    """
+
+    def loss_fn(params, x, y, step):
+        logits = forward(params, x, train=True, step=step)
+        return bce_from_logits(logits, y)
+
+    def train_step(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        step = args[3 * n_params]
+        x = args[3 * n_params + 1]
+        y = args[3 * n_params + 2]
+
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, step)
+        step1 = step + 1.0
+        b1t = ADAM_B1 ** step1
+        b2t = ADAM_B2 ** step1
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+            mhat = mi / (1.0 - b1t)
+            vhat = vi / (1.0 - b2t)
+            new_p.append(p - ADAM_LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return train_step
+
+
+def make_eval_loss(forward):
+    """``eval_loss(params, x, y) → loss`` (no dropout) for val/test curves."""
+
+    def eval_loss(*args):
+        params = list(args[:-2])
+        x, y = args[-2], args[-1]
+        logits = forward(params, x, train=False)
+        return (bce_from_logits(logits, y),)
+
+    return eval_loss
+
+
+# Named model zoo for aot.py and the ablation benches.
+def model_zoo():
+    """name → dict(forward, infer, specs, dilations/window metadata)."""
+
+    def tcn_like(name, dilations, window):
+        def fwd(params, x, *, train=False, step=None):
+            return tcn_forward(params, x, dilations=dilations, train=train, step=step)
+
+        return {
+            "name": name,
+            "kind": "tcn",
+            "window": window,
+            "feature_dim": FEATURE_DIM,
+            "specs": tcn_param_specs(dilations),
+            "forward": fwd,
+            "infer": lambda params, x: jax.nn.sigmoid(fwd(params, x)),
+            "dilations": list(dilations),
+        }
+
+    return {
+        "tcn": tcn_like("tcn", TCN_DILATIONS, WINDOW),
+        # Ablation B: no dilation growth (receptive field 7 instead of 15).
+        "tcn_flat": tcn_like("tcn_flat", (1, 1, 1), WINDOW),
+        # Ablation B': single-scale shallow variant.
+        "tcn_short": tcn_like("tcn_short", (1, 2), WINDOW),
+        "dnn": {
+            "name": "dnn",
+            "kind": "dnn",
+            "window": 1,
+            "feature_dim": FEATURE_DIM,
+            "specs": dnn_param_specs(),
+            "forward": dnn_forward,
+            "infer": dnn_infer,
+            "dilations": [],
+        },
+    }

@@ -1,0 +1,58 @@
+//! Ablation A (DESIGN.md §5): sweep the PARM balance coefficient α (eq. 3)
+//! with the heuristic predictor held fixed — how much does blending
+//! prediction (α→1) vs frequency (α→0) matter?
+//!
+//! Runs the sweep in parallel over the thread pool.
+//! `ACPC_BENCH_SCALE=smoke` shrinks the per-point trace.
+
+use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::predictor::{HeuristicPredictor, PredictorBox};
+use acpc::sim::run_experiment;
+use acpc::util::bench::print_table;
+use acpc::util::pool::{default_threads, run_parallel};
+
+fn main() {
+    let smoke = matches!(std::env::var("ACPC_BENCH_SCALE").as_deref(), Ok("smoke"));
+    let accesses = if smoke { 150_000 } else { 1_000_000 };
+    let alphas = [0.0, 0.25, 0.5, 0.7, 0.9, 1.0];
+
+    let jobs: Vec<_> = alphas
+        .iter()
+        .map(|&alpha| {
+            move || {
+                let mut cfg =
+                    ExperimentConfig::table1(&format!("acpc@{alpha}"), PredictorKind::Heuristic);
+                cfg.accesses = accesses;
+                let mut predictor = PredictorBox::Heuristic(HeuristicPredictor);
+                (alpha, run_experiment(&cfg, &mut predictor))
+            }
+        })
+        .collect();
+    let results = run_parallel(default_threads(), jobs);
+
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(alpha, r)| {
+            vec![
+                format!("{alpha:.2}"),
+                format!("{:.1}", r.report.l2_hit_rate * 100.0),
+                format!("{:.2}", r.report.l2_pollution_ratio * 100.0),
+                format!("{:.2}", r.report.amat),
+                format!("{:.2}", r.emu),
+            ]
+        })
+        .collect();
+    print_table(
+        "Ablation A — PARM α sweep (eq. 3), heuristic predictor",
+        &["alpha", "CHR %", "PPR %", "AMAT", "EMU"],
+        &rows,
+    );
+
+    let chr = |i: usize| results[i].1.report.l2_hit_rate;
+    println!(
+        "\nmid-range best CHR {:.3} vs extremes (α=0: {:.3}, α=1: {:.3})",
+        chr(2).max(chr(3)).max(chr(4)),
+        chr(0),
+        chr(5)
+    );
+}

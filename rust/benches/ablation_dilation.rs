@@ -1,0 +1,67 @@
+//! Ablation B (DESIGN.md §5): dilation schedule of the TCN — the paper's
+//! [1,2,4] (receptive field 15) vs a flat [1,1,1] stack (RF 7) vs a
+//! two-layer [1,2] variant (RF 7, fewer params). Each variant is a separate
+//! AOT artifact, trained identically here; we report the converged BCE.
+//!
+//! `ACPC_BENCH_SCALE=smoke` shrinks the trace/epochs.
+
+use acpc::predictor::{Dataset, GeometryHints, ModelRuntime};
+use acpc::runtime::{Engine, Manifest};
+use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
+use acpc::training::{eval_split, train, TrainConfig};
+use acpc::util::bench::print_table;
+
+fn main() {
+    let Some(dir) = acpc::runtime::artifacts_dir() else {
+        eprintln!("ablation_dilation: artifacts/ missing — run `make artifacts`");
+        std::process::exit(0);
+    };
+    let smoke = matches!(std::env::var("ACPC_BENCH_SCALE").as_deref(), Ok("smoke"));
+    let (accesses, epochs, max_batches) = if smoke { (150_000, 6, 10) } else { (800_000, 40, 80) };
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    let seed = 0xD11A;
+    let gcfg = GeneratorConfig::new(ModelProfile::gpt3ish(), seed);
+    let geom = GeometryHints::from_generator(&gcfg);
+    println!("generating training trace ({accesses} accesses) ...");
+    let trace = TraceGenerator::new(gcfg).generate(accesses);
+
+    let mut rows = Vec::new();
+    for name in ["tcn", "tcn_flat", "tcn_short"] {
+        let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
+        let ds = Dataset::build(&trace, rt.mm.window, geom, 4096, 6);
+        let split = ds.split(seed);
+        let res = train(
+            &mut rt,
+            &ds,
+            &split,
+            &TrainConfig {
+                epochs,
+                patience: 0,
+                max_batches_per_epoch: max_batches,
+                seed,
+                verbose_every: 0,
+            },
+        );
+        let test = eval_split(&rt, &ds, &split.test);
+        println!(
+            "{name}: dilations {:?} → train {:.3} val {:.3} test {:.3} ({})",
+            rt.mm.dilations, res.final_train_loss, res.final_val_loss, test, res.stability()
+        );
+        rows.push(vec![
+            name.to_string(),
+            format!("{:?}", rt.mm.dilations),
+            format!("{:.3}", res.final_train_loss),
+            format!("{:.3}", res.final_val_loss),
+            format!("{:.3}", test),
+            res.stability(),
+        ]);
+    }
+    print_table(
+        "Ablation B — TCN dilation schedule",
+        &["model", "dilations", "train BCE", "val BCE", "test BCE", "stability"],
+        &rows,
+    );
+}

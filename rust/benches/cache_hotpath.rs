@@ -1,0 +1,48 @@
+//! µbench: the simulator hot path — hierarchy accesses/second per policy,
+//! plus the raw trace-generation rate. This is the L3 perf target from
+//! DESIGN.md §8 (≥10M LRU accesses/s single-thread) and feeds
+//! EXPERIMENTS.md §Perf.
+
+use acpc::mem::{Hierarchy, HierarchyConfig};
+use acpc::policy::AccessMeta;
+use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
+use acpc::util::bench::{black_box, Bench};
+
+fn main() {
+    let n = 1_000_000usize;
+    let gcfg = GeneratorConfig::new(ModelProfile::gpt3ish(), 42);
+
+    // Raw generator rate (upper bound for streaming mode).
+    let bench = Bench::new(1, 5).throughput(n as u64);
+    bench.run("trace_generator", || {
+        let mut gen = TraceGenerator::new(gcfg.clone());
+        for _ in 0..n {
+            black_box(gen.next_access());
+        }
+    });
+
+    // Pre-materialized trace → pure cache-simulator rate per policy.
+    let trace = TraceGenerator::new(gcfg.clone()).generate(n);
+    for policy in ["lru", "plru", "srrip", "drrip", "dip", "ship", "acpc", "mlpredict"] {
+        let mut hcfg = HierarchyConfig::scaled();
+        hcfg.prefetcher = "composite".into();
+        bench.run(&format!("hierarchy[{policy}]"), || {
+            let mut h = Hierarchy::new(hcfg.clone(), policy);
+            for a in &trace {
+                let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+                black_box(h.access(a, &meta));
+            }
+        });
+    }
+
+    // No-prefetcher variant isolates prefetch-machinery cost.
+    let mut hcfg = HierarchyConfig::scaled();
+    hcfg.prefetcher = "none".into();
+    bench.run("hierarchy[lru,no-prefetch]", || {
+        let mut h = Hierarchy::new(hcfg.clone(), "lru");
+        for a in &trace {
+            let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+            black_box(h.access(a, &meta));
+        }
+    });
+}

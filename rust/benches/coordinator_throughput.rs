@@ -1,0 +1,41 @@
+//! µbench: the serving coordinator — wall-clock token throughput scaling
+//! over worker counts, router imbalance, and dynamic-batcher fill, using
+//! the heuristic predictor (so the bench isolates *coordination* cost from
+//! model cost).
+
+use acpc::coordinator::{serve, RouterPolicy, ServeConfig};
+use acpc::predictor::{HeuristicPredictor, PredictorBox};
+use acpc::util::bench::print_table;
+use std::time::Duration;
+
+fn main() {
+    let smoke = matches!(std::env::var("ACPC_BENCH_SCALE").as_deref(), Ok("smoke"));
+    let sessions: u64 = if smoke { 24 } else { 160 };
+
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4] {
+        for router in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded] {
+            let mut cfg = ServeConfig::quick("acpc");
+            cfg.workers = workers;
+            cfg.total_sessions = sessions;
+            cfg.router = router;
+            cfg.arrival_interval = Duration::from_micros(20);
+            let rep = serve(&cfg, 1, || PredictorBox::Heuristic(HeuristicPredictor));
+            rows.push(vec![
+                format!("{workers}"),
+                format!("{router:?}"),
+                format!("{:.0}", rep.tokens_per_sec_wall),
+                format!("{:.1}", rep.l2_hit_rate * 100.0),
+                format!("{:.1}", rep.session_latency_ms_p50),
+                format!("{:.1}", rep.session_latency_ms_p95),
+                format!("{:.1}", rep.mean_batch_fill),
+                format!("{}", rep.router_imbalance_max),
+            ]);
+        }
+    }
+    print_table(
+        "Coordinator scaling (heuristic predictor)",
+        &["workers", "router", "tok/s", "CHR %", "p50 ms", "p95 ms", "batch fill", "imbalance"],
+        &rows,
+    );
+}

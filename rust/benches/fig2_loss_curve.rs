@@ -1,0 +1,81 @@
+//! Bench: regenerate the paper's **Figure 2** (training-loss curve of the
+//! ACPC Temporal CNN) — rust-driven training of the compiled Adam step.
+//!
+//! Paper shape: loss starts ≈0.8, falls below ≈0.3 by ~epoch 20, converges
+//! ≈0.21 by epochs 60–80, smooth and monotone-ish. We print the measured
+//! curve (ASCII), the shape checkpoints, and write `reports/fig2.json`.
+//!
+//! Scale via env: `ACPC_BENCH_SCALE=full|smoke`.
+
+use acpc::predictor::{Dataset, GeometryHints, ModelRuntime};
+use acpc::runtime::{Engine, Manifest};
+use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
+use acpc::training::{train, TrainConfig};
+use acpc::util::json::Json;
+
+fn main() {
+    let Some(dir) = acpc::runtime::artifacts_dir() else {
+        eprintln!("fig2 bench: artifacts/ missing — run `make artifacts` first");
+        std::process::exit(0);
+    };
+    let smoke = matches!(std::env::var("ACPC_BENCH_SCALE").as_deref(), Ok("smoke"));
+    let (accesses, epochs, max_batches) =
+        if smoke { (150_000, 8, 12) } else { (1_200_000, 80, 120) };
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut rt = ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+
+    let seed = 0xF162_2025;
+    let gcfg = GeneratorConfig::new(ModelProfile::gpt3ish(), seed);
+    let geom = GeometryHints::from_generator(&gcfg);
+    println!("generating training trace ({accesses} accesses) ...");
+    let trace = TraceGenerator::new(gcfg).generate(accesses);
+    let ds = Dataset::build(&trace, rt.mm.window, geom, 4096, 6);
+    let split = ds.split(seed);
+    println!("dataset n={} positive_rate={:.3}", ds.n, ds.positive_rate());
+
+    let t0 = std::time::Instant::now();
+    let res = train(
+        &mut rt,
+        &ds,
+        &split,
+        &TrainConfig {
+            epochs,
+            patience: if smoke { 0 } else { 15 },
+            max_batches_per_epoch: max_batches,
+            seed,
+            verbose_every: 10,
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== Figure 2 (reproduced): TCN training loss ===");
+    println!("{}", acpc::cli::commands::ascii_plot(&res.train_curve, 70, 16));
+    let e20 = res.train_curve.get(19).copied().unwrap_or(f64::NAN);
+    println!(
+        "shape: start={:.3} (paper ≈0.8) | epoch20={:.3} (paper ≈0.3) | final={:.3} (paper ≈0.21)",
+        res.train_curve.first().copied().unwrap_or(f64::NAN),
+        e20,
+        res.final_train_loss
+    );
+    println!(
+        "epochs={} early_stop={} stability={} val_final={:.3} wall={:.1}s",
+        res.epochs_run,
+        res.stopped_early,
+        res.stability(),
+        res.final_val_loss,
+        wall
+    );
+
+    std::fs::create_dir_all("reports").ok();
+    let j = Json::from_pairs(vec![
+        ("train_curve", Json::array_f64(&res.train_curve)),
+        ("val_curve", Json::array_f64(&res.val_curve)),
+        ("final_train_loss", Json::Num(res.final_train_loss)),
+        ("stability", Json::Str(res.stability())),
+        ("epochs", Json::Num(res.epochs_run as f64)),
+    ]);
+    std::fs::write("reports/fig2.json", j.to_pretty()).unwrap();
+    println!("report: reports/fig2.json");
+}

@@ -1,0 +1,58 @@
+//! µbench: predictor-service latency/throughput — per-batch PJRT dispatch
+//! for the compiled TCN/DNN at their fixed AOT batch sizes, plus the
+//! feature-extraction rate feeding them. Targets EXPERIMENTS.md §Perf
+//! ("predictor amortized to <10% of end-to-end sim time").
+
+use acpc::predictor::{FeatureExtractor, GeometryHints, ModelRuntime, ReusePredictor};
+use acpc::runtime::{Engine, Manifest};
+use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
+use acpc::util::bench::{black_box, Bench};
+
+fn main() {
+    let Some(dir) = acpc::runtime::artifacts_dir() else {
+        eprintln!("predictor_latency: artifacts/ missing — run `make artifacts`");
+        std::process::exit(0);
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // Feature extraction rate.
+    let gcfg = GeneratorConfig::new(ModelProfile::gpt3ish(), 3);
+    let geom = GeometryHints::from_generator(&gcfg);
+    let trace = TraceGenerator::new(gcfg).generate(200_000);
+    let window = manifest.model("tcn").unwrap().window;
+    let bench = Bench::new(1, 5).throughput(trace.len() as u64);
+    bench.run("feature_extractor.push", || {
+        let mut fx = FeatureExtractor::new(window, geom);
+        let mut seq = vec![0.0f32; window * acpc::predictor::FEATURE_DIM];
+        for a in &trace {
+            fx.push(a, &mut seq);
+            black_box(seq[0]);
+        }
+    });
+
+    // Model inference at the AOT batch size.
+    for name in ["tcn", "dnn"] {
+        let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
+        let b = rt.infer_batch;
+        let row = rt.row_elems();
+        let x = vec![0.3f32; b * row];
+        let bench = Bench::new(2, 10).throughput(b as u64);
+        bench.run(&format!("{name}.predict[b={b}]"), || {
+            black_box(rt.predict(&x, b));
+        });
+    }
+
+    // Train step latency (online-learning budget).
+    for name in ["tcn", "dnn"] {
+        let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
+        let b = rt.mm.train.batch;
+        let row = rt.row_elems();
+        let x = vec![0.3f32; b * row];
+        let y = vec![1.0f32; b];
+        let bench = Bench::new(1, 5).throughput(b as u64);
+        bench.run(&format!("{name}.train_step[b={b}]"), || {
+            black_box(rt.train_step(x.clone(), y.clone()).unwrap());
+        });
+    }
+}

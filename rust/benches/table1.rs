@@ -1,0 +1,59 @@
+//! Bench: regenerate the paper's **Table 1** (Comparative Performance of
+//! Different Models) — CHR / PPR / MPR / TGT / final loss / stability for
+//! LRU, static RRIP, ML-Predict (DNN) and Temporal CNN (ACPC).
+//!
+//! Scale via env: `ACPC_BENCH_SCALE=full|smoke` (default full).
+//! Output: the paper-format table + headline deltas + per-run reports,
+//! also written to `reports/table1.json`.
+
+use acpc::metrics::render_table1;
+use acpc::sim::{run_table1, Table1Scale};
+use acpc::util::json::Json;
+
+fn main() {
+    let scale = match std::env::var("ACPC_BENCH_SCALE").as_deref() {
+        Ok("smoke") => Table1Scale::smoke(),
+        _ => Table1Scale::full(),
+    };
+    if acpc::runtime::artifacts_dir().is_none() {
+        eprintln!("table1 bench: artifacts/ missing — run `make artifacts` first");
+        std::process::exit(0);
+    }
+    let t0 = std::time::Instant::now();
+    let out = run_table1(&scale).expect("table1 pipeline");
+
+    println!("\n=== Table 1 (reproduced; paper values below) ===");
+    println!("{}", render_table1(&out.rows));
+    println!("paper:   LRU 71.4/18.7/0.0/187/0.84 | RRIP 76.8/14.2/7.9/195/0.69");
+    println!("paper:   DNN 82.3/10.8/15.5/214/0.47 | TCN 89.6/6.3/24.8/248/0.21");
+    println!("\n{}", out.headline_deltas());
+    println!("\nheld-out BCE: tcn={:.3} dnn={:.3}", out.tcn_test_loss, out.dnn_test_loss);
+    for r in &out.reports {
+        println!("{}", r.summary());
+    }
+    println!("\nwall time: {:.1}s", t0.elapsed().as_secs_f64());
+
+    std::fs::create_dir_all("reports").ok();
+    let rows: Vec<Json> = out
+        .rows
+        .iter()
+        .map(|r| {
+            Json::from_pairs(vec![
+                ("model", Json::Str(r.model.clone())),
+                ("chr", Json::Num(r.chr)),
+                ("ppr", Json::Num(r.ppr)),
+                ("mpr", Json::Num(r.mpr)),
+                ("tgt", Json::Num(r.tgt)),
+                ("final_loss", Json::Num(r.final_loss)),
+                ("stability", Json::Str(r.stability.clone())),
+            ])
+        })
+        .collect();
+    let j = Json::from_pairs(vec![
+        ("table", Json::Arr(rows)),
+        ("tcn_curve", Json::array_f64(&out.tcn_curve)),
+        ("dnn_curve", Json::array_f64(&out.dnn_curve)),
+    ]);
+    std::fs::write("reports/table1.json", j.to_pretty()).expect("write report");
+    println!("report: reports/table1.json");
+}

@@ -1,0 +1,128 @@
+//! Tiny argument parser: positionals + `--key value` + `--flag` booleans.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: usize,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).
+    pub fn new(argv: Vec<String>) -> Self {
+        let mut positionals = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value =
+                    it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                if next_is_value {
+                    options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else {
+                positionals.push(a);
+            }
+        }
+        Self { positionals, options, flags, consumed: 0 }
+    }
+
+    pub fn next_positional(&mut self) -> Option<String> {
+        let p = self.positionals.get(self.consumed).cloned();
+        if p.is_some() {
+            self.consumed += 1;
+        }
+        p
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Reject unknown option keys (call after reading all expected ones).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(s: &str) -> Args {
+        Args::new(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // Note: `--flag value`-style ambiguity resolves toward options, so
+        // boolean flags belong at the end (or before another `--` token).
+        let mut a = mk("simulate --policy acpc --accesses 1000 next --verbose");
+        assert_eq!(a.next_positional().as_deref(), Some("simulate"));
+        assert_eq!(a.opt("policy"), Some("acpc"));
+        assert_eq!(a.usize_or("accesses", 0).unwrap(), 1000);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.next_positional().as_deref(), Some("next"));
+        assert_eq!(a.next_positional(), None);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = mk("x --n abc");
+        assert_eq!(a.usize_or("m", 7).unwrap(), 7);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = mk("cmd --good 1 --bad 2");
+        assert!(a.ensure_known(&["good"]).is_err());
+        assert!(a.ensure_known(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,80 @@
+//! CLI subcommand implementations.
+
+pub mod policies;
+pub mod serve;
+pub mod simulate;
+pub mod table1;
+pub mod trace_stats;
+pub mod train;
+
+use crate::config::PredictorKind;
+use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
+use crate::runtime::{Engine, Manifest};
+use anyhow::{Context, Result};
+
+/// Build a predictor box for a kind, loading + (optionally) quick-training
+/// the model from the artifacts when needed.
+pub fn build_predictor(kind: PredictorKind, model_override: Option<&str>) -> Result<PredictorBox> {
+    match kind {
+        PredictorKind::None => Ok(PredictorBox::None),
+        PredictorKind::Heuristic => Ok(PredictorBox::Heuristic(HeuristicPredictor)),
+        PredictorKind::Dnn | PredictorKind::Tcn => {
+            let dir = crate::runtime::artifacts_dir()
+                .context("artifacts/ not found — run `make artifacts`")?;
+            let manifest = Manifest::load(&dir)?;
+            let engine = Engine::cpu()?;
+            let name = model_override.unwrap_or(match kind {
+                PredictorKind::Dnn => "dnn",
+                _ => "tcn",
+            });
+            let rt = ModelRuntime::load(&engine, &manifest, name)?;
+            Ok(PredictorBox::Model(Box::new(rt)))
+        }
+    }
+}
+
+/// ASCII plot of a loss curve (y auto-scaled), for terminal-friendly Fig 2.
+pub fn ascii_plot(curve: &[f64], width: usize, height: usize) -> String {
+    if curve.is_empty() {
+        return String::new();
+    }
+    let ymax = curve.iter().cloned().fold(f64::MIN, f64::max);
+    let ymin = curve.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (i, &v) in curve.iter().enumerate() {
+        let x = i * (width - 1) / curve.len().max(1);
+        let yr = ((v - ymin) / span * (height - 1) as f64).round() as usize;
+        let y = height - 1 - yr.min(height - 1);
+        grid[y][x.min(width - 1)] = b'*';
+    }
+    let mut s = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:6.3} |")
+        } else if r == height - 1 {
+            format!("{ymin:6.3} |")
+        } else {
+            "       |".to_string()
+        };
+        s.push_str(&label);
+        s.push_str(std::str::from_utf8(row).unwrap());
+        s.push('\n');
+    }
+    s.push_str(&format!("        +{}\n", "-".repeat(width)));
+    s.push_str(&format!("         epoch 1 .. {}\n", curve.len()));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_plot_renders() {
+        let curve: Vec<f64> = (0..50).map(|i| 0.8 * (-(i as f64) / 15.0).exp() + 0.21).collect();
+        let p = ascii_plot(&curve, 60, 12);
+        assert!(p.contains('*'));
+        assert!(p.lines().count() >= 12);
+    }
+}

@@ -1,0 +1,18 @@
+//! `acpc policies` — list selectable components.
+
+use anyhow::Result;
+
+pub fn run() -> Result<i32> {
+    println!("replacement policies (L2, under test):");
+    for p in crate::policy::POLICY_NAMES {
+        println!("  {p}");
+    }
+    println!("\nprefetchers:");
+    for p in crate::mem::prefetch::PREFETCHER_NAMES {
+        println!("  {p}");
+    }
+    println!("\nworkload profiles: gpt3ish llama2ish t5ish");
+    println!("hierarchy presets: scaled epyc7763");
+    println!("predictors: none heuristic dnn tcn (artifact models: tcn tcn_flat tcn_short dnn)");
+    Ok(0)
+}

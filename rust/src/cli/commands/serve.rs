@@ -1,0 +1,118 @@
+//! `acpc serve` — multi-worker serving-node simulation.
+
+use crate::cli::Args;
+use crate::config::PredictorKind;
+use crate::coordinator::{serve, RouterPolicy, ServeConfig};
+use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
+use crate::runtime::{Engine, Manifest};
+use crate::trace::{GeneratorConfig, ModelProfile};
+use anyhow::{Context, Result};
+use std::time::Duration;
+
+const HELP: &str = "\
+acpc serve — serving-node simulation: router + workers + batched predictor
+
+OPTIONS:
+    --workers <n>        worker threads [default: 4]
+    --sessions <n>       sessions to admit [default: 200]
+    --policy <name>      L2 policy [default: acpc]
+    --predictor <kind>   none|heuristic|dnn|tcn [default: heuristic]
+    --router <policy>    rr|least [default: least]
+    --profile <name>     workload profile [default: gpt3ish]
+    --batch <n>          predictor batch size [default: 256]
+    --deadline-us <n>    batching deadline [default: 2000]
+    --arrival-us <n>     inter-arrival pacing [default: 100]
+    --seed <n>
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&[
+        "workers", "sessions", "policy", "predictor", "router", "profile", "batch",
+        "deadline-us", "arrival-us", "seed", "help",
+    ])?;
+
+    let kind = PredictorKind::parse(&args.opt_or("predictor", "heuristic"))?;
+    let seed = args.u64_or("seed", 0x5E21)?;
+    let profile =
+        ModelProfile::by_name(&args.opt_or("profile", "gpt3ish")).context("unknown profile")?;
+    let mut generator = GeneratorConfig::new(profile, seed);
+    generator.arrival_p_hot = 0.0;
+    generator.arrival_p_cold = 0.0;
+
+    let cfg = ServeConfig {
+        workers: args.usize_or("workers", 4)?,
+        policy: args.opt_or("policy", "acpc"),
+        hierarchy: crate::mem::HierarchyConfig::scaled(),
+        generator,
+        total_sessions: args.u64_or("sessions", 200)?,
+        arrival_interval: Duration::from_micros(args.u64_or("arrival-us", 100)?),
+        router: RouterPolicy::parse(&args.opt_or("router", "least")).context("router: rr|least")?,
+        predict_batch: args.usize_or("batch", 256)?,
+        predict_deadline: Duration::from_micros(args.u64_or("deadline-us", 2000)?),
+    };
+
+    // Window + thread-local factory (PJRT is !Send).
+    let (window, model_name): (usize, Option<String>) = match kind {
+        PredictorKind::None => (0, None),
+        PredictorKind::Heuristic | PredictorKind::Dnn => (1, kind_model(kind)),
+        PredictorKind::Tcn => {
+            let dir = crate::runtime::artifacts_dir().context("run `make artifacts`")?;
+            let manifest = Manifest::load(&dir)?;
+            (manifest.model("tcn")?.window, Some("tcn".into()))
+        }
+    };
+    println!(
+        "serving: workers={} sessions={} policy={} predictor={:?} router={:?}",
+        cfg.workers, cfg.total_sessions, cfg.policy, kind, cfg.router
+    );
+    let rep = serve(&cfg, window, move || build_in_thread(kind, model_name.as_deref()));
+
+    println!("\n== serve report ==");
+    println!(
+        "sessions: admitted={} completed={} rejected={}",
+        rep.sessions_admitted, rep.sessions_completed, rep.sessions_rejected
+    );
+    println!(
+        "tokens={} accesses={} wall={:.2}s throughput={:.0} tok/s (wall)",
+        rep.tokens, rep.accesses, rep.wall_secs, rep.tokens_per_sec_wall
+    );
+    println!(
+        "L2 hit rate={:.1}% pollution={:.2}% | session latency p50={:.1}ms p95={:.1}ms",
+        rep.l2_hit_rate * 100.0,
+        rep.l2_pollution_ratio * 100.0,
+        rep.session_latency_ms_p50,
+        rep.session_latency_ms_p95
+    );
+    println!(
+        "prediction: batches={} mean_fill={:.1} | router imbalance(max)={}",
+        rep.prediction_batches, rep.mean_batch_fill, rep.router_imbalance_max
+    );
+    Ok(0)
+}
+
+fn kind_model(kind: PredictorKind) -> Option<String> {
+    match kind {
+        PredictorKind::Dnn => Some("dnn".into()),
+        PredictorKind::Tcn => Some("tcn".into()),
+        _ => None,
+    }
+}
+
+/// Factory body run inside the predictor-service thread.
+fn build_in_thread(kind: PredictorKind, model: Option<&str>) -> PredictorBox {
+    match kind {
+        PredictorKind::None => PredictorBox::None,
+        PredictorKind::Heuristic => PredictorBox::Heuristic(HeuristicPredictor),
+        PredictorKind::Dnn | PredictorKind::Tcn => {
+            let dir = crate::runtime::artifacts_dir().expect("artifacts");
+            let manifest = Manifest::load(&dir).expect("manifest");
+            let engine = Engine::cpu().expect("engine");
+            let rt = ModelRuntime::load(&engine, &manifest, model.unwrap()).expect("model");
+            PredictorBox::Model(Box::new(rt))
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! `acpc simulate` — one simulation run with full metric output.
+
+use super::build_predictor;
+use crate::cli::Args;
+use crate::config::{ExperimentConfig, PredictorKind};
+use crate::sim::run_experiment;
+use anyhow::Result;
+use std::path::Path;
+
+const HELP: &str = "\
+acpc simulate — run one cache simulation
+
+OPTIONS:
+    --policy <name>       L2 replacement policy [default: acpc]
+    --predictor <kind>    none|heuristic|dnn|tcn [default: heuristic]
+    --model <name>        artifact model override (tcn_flat, tcn_short, ...)
+    --accesses <n>        trace length [default: 2000000]
+    --profile <name>      gpt3ish|llama2ish|t5ish [default: gpt3ish]
+    --prefetcher <name>   none|nextline|stride|correlation|composite
+    --hierarchy <preset>  scaled|epyc7763 [default: scaled]
+    --config <file.json>  JSON config overrides (see config module)
+    --feedback <n>        online-learning interval in accesses (0 = off)
+    --seed <n>            RNG seed
+    --json <path>         write the metrics report as JSON
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&[
+        "policy", "predictor", "model", "accesses", "profile", "prefetcher", "hierarchy",
+        "config", "feedback", "seed", "json", "help",
+    ])?;
+
+    let kind = PredictorKind::parse(&args.opt_or("predictor", "heuristic"))?;
+    let mut cfg = ExperimentConfig::table1(&args.opt_or("policy", "acpc"), kind);
+    if let Some(path) = args.opt("config") {
+        cfg = ExperimentConfig::from_file(Path::new(path))?;
+    }
+    cfg.accesses = args.usize_or("accesses", cfg.accesses)?;
+    cfg.feedback_interval = args.usize_or("feedback", cfg.feedback_interval)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.generator.seed = cfg.seed;
+    if let Some(p) = args.opt("profile") {
+        let profile = crate::trace::ModelProfile::by_name(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown profile '{p}'"))?;
+        cfg.generator = crate::trace::GeneratorConfig::new(profile, cfg.seed);
+    }
+    if let Some(p) = args.opt("prefetcher") {
+        cfg.hierarchy.prefetcher = p.to_string();
+    }
+    if let Some(h) = args.opt("hierarchy") {
+        let pf = cfg.hierarchy.prefetcher.clone();
+        cfg.hierarchy = crate::mem::HierarchyConfig::by_name(h)
+            .ok_or_else(|| anyhow::anyhow!("unknown hierarchy '{h}'"))?;
+        cfg.hierarchy.prefetcher = pf;
+    }
+    if crate::policy::make_policy(&cfg.policy, 2, 2, 0).is_none() {
+        anyhow::bail!("unknown policy '{}' (see `acpc policies`)", cfg.policy);
+    }
+
+    let mut predictor = build_predictor(kind, args.opt("model"))?;
+    println!(
+        "simulating: policy={} predictor={} accesses={} profile={} prefetcher={}",
+        cfg.policy, predictor.name(), cfg.accesses, cfg.generator.profile.name, cfg.hierarchy.prefetcher
+    );
+    let res = run_experiment(&cfg, &mut predictor);
+
+    println!("\n{}", res.report.summary());
+    println!(
+        "tokens={} emu={:.3} pred_batches={} online_steps={} wall={:.2}s ({:.2}M acc/s)",
+        res.tokens,
+        res.emu,
+        res.prediction_batches,
+        res.online_train_steps,
+        res.wall_secs,
+        res.accesses_per_sec / 1e6
+    );
+    if let Some(path) = args.opt("json") {
+        let mut j = res.report.to_json();
+        j.set("config", cfg.to_json());
+        std::fs::write(path, j.to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(0)
+}

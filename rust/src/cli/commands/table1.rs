@@ -1,0 +1,55 @@
+//! `acpc table1` — the paper's Table 1, end-to-end.
+
+use crate::cli::Args;
+use crate::metrics::report::render_table1;
+use crate::sim::{run_table1, Table1Scale};
+use anyhow::Result;
+
+const HELP: &str = "\
+acpc table1 — reproduce Table 1 (train TCN + DNN, simulate 4 policies)
+
+OPTIONS:
+    --scale <full|smoke>   [default: full]
+    --json <path>          dump rows as JSON
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&["scale", "json", "help"])?;
+    let scale = match args.opt_or("scale", "full").as_str() {
+        "smoke" => Table1Scale::smoke(),
+        _ => Table1Scale::full(),
+    };
+    let out = run_table1(&scale)?;
+    println!("\nTable 1 — Comparative Performance of Different Models (reproduced)\n");
+    println!("{}", render_table1(&out.rows));
+    println!("{}", out.headline_deltas());
+    println!(
+        "\nheld-out (test) BCE: tcn={:.3} dnn={:.3}",
+        out.tcn_test_loss, out.dnn_test_loss
+    );
+    if let Some(path) = args.opt("json") {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = out
+            .rows
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("model", Json::Str(r.model.clone())),
+                    ("chr", Json::Num(r.chr)),
+                    ("ppr", Json::Num(r.ppr)),
+                    ("mpr", Json::Num(r.mpr)),
+                    ("tgt", Json::Num(r.tgt)),
+                    ("final_loss", Json::Num(r.final_loss)),
+                    ("stability", Json::Str(r.stability.clone())),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::Arr(rows).to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(0)
+}

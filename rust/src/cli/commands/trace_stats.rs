@@ -1,0 +1,51 @@
+//! `acpc trace-stats` — workload characterization (validates the premise:
+//! bursty, irregular, mixed-reuse LLM access streams).
+
+use crate::cli::Args;
+use crate::trace::{stats, GeneratorConfig, ModelProfile, TraceGenerator};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+const HELP: &str = "\
+acpc trace-stats — generate + characterize a workload trace
+
+OPTIONS:
+    --profile <name>   gpt3ish|llama2ish|t5ish [default: gpt3ish]
+    --accesses <n>     [default: 500000]
+    --seed <n>
+    --save <path>      also persist the trace (.acpctrace binary format)
+    --load <path>      analyze an existing trace file instead
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&["profile", "accesses", "seed", "save", "load", "help"])?;
+
+    let trace = if let Some(path) = args.opt("load") {
+        crate::trace::file::read_trace(Path::new(path))?
+    } else {
+        let profile = ModelProfile::by_name(&args.opt_or("profile", "gpt3ish"))
+            .context("unknown profile")?;
+        let cfg = GeneratorConfig::new(profile, args.u64_or("seed", 0x7AC3)?);
+        let mut gen = TraceGenerator::new(cfg);
+        let t = gen.generate(args.usize_or("accesses", 500_000)?);
+        println!(
+            "generated {} accesses / {} tokens / {} sessions completed",
+            t.len(),
+            gen.tokens_done(),
+            gen.sessions_completed()
+        );
+        if let Some(path) = args.opt("save") {
+            crate::trace::file::write_trace(Path::new(path), &t)?;
+            println!("trace saved to {path}");
+        }
+        t
+    };
+
+    let st = stats::analyze(&trace);
+    println!("\n{}", st.report());
+    Ok(0)
+}

@@ -1,0 +1,95 @@
+//! `acpc train` — train a predictor from rust via the compiled Adam step;
+//! reproduces the Figure 2 loss curve.
+
+use super::ascii_plot;
+use crate::cli::Args;
+use crate::predictor::{Dataset, GeometryHints, ModelRuntime};
+use crate::runtime::{Engine, Manifest};
+use crate::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
+use crate::training::{train, TrainConfig};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+const HELP: &str = "\
+acpc train — train a predictor (compiled train-step HLO, rust-driven)
+
+OPTIONS:
+    --model <name>      tcn|tcn_flat|tcn_short|dnn [default: tcn]
+    --epochs <n>        [default: 80]
+    --patience <n>      early-stopping patience [default: 10]
+    --accesses <n>      training-trace length [default: 1200000]
+    --sample-every <n>  keep 1/n of accesses as samples [default: 6]
+    --max-batches <n>   cap train minibatches per epoch [default: 120]
+    --profile <name>    workload profile [default: gpt3ish]
+    --seed <n>
+    --save <path.ckpt>  checkpoint the trained parameters
+    --curve <path>      write the loss curve (JSON)
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&[
+        "model", "epochs", "patience", "accesses", "sample-every", "max-batches", "profile",
+        "seed", "save", "curve", "help",
+    ])?;
+
+    let dir = crate::runtime::artifacts_dir().context("run `make artifacts` first")?;
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let model = args.opt_or("model", "tcn");
+    let mut rt = ModelRuntime::load(&engine, &manifest, &model)?;
+    let seed = args.u64_or("seed", 0xF162)?;
+
+    let profile = ModelProfile::by_name(&args.opt_or("profile", "gpt3ish"))
+        .context("unknown profile")?;
+    let gcfg = GeneratorConfig::new(profile, seed);
+    let geom = GeometryHints::from_generator(&gcfg);
+    let n_acc = args.usize_or("accesses", 1_200_000)?;
+    println!("generating training trace ({n_acc} accesses) ...");
+    let trace = TraceGenerator::new(gcfg).generate(n_acc);
+    let ds = Dataset::build(&trace, rt.mm.window, geom, 4096, args.usize_or("sample-every", 6)?);
+    let split = ds.split(seed);
+    println!("dataset: n={} positive_rate={:.3}", ds.n, ds.positive_rate());
+
+    let cfg = TrainConfig {
+        epochs: args.usize_or("epochs", 80)?,
+        patience: args.usize_or("patience", 10)?,
+        max_batches_per_epoch: args.usize_or("max-batches", 120)?,
+        seed,
+        verbose_every: 5,
+    };
+    let res = train(&mut rt, &ds, &split, &cfg);
+
+    println!("\nFigure 2 — training loss ({}):", res.model);
+    println!("{}", ascii_plot(&res.train_curve, 64, 14));
+    println!(
+        "final train loss {:.3} | final val {:.3} | best val {:.3} | epochs {} | {} | stability: {}",
+        res.final_train_loss,
+        res.final_val_loss,
+        res.best_val_loss,
+        res.epochs_run,
+        if res.stopped_early { "early-stopped" } else { "full run" },
+        res.stability()
+    );
+
+    if let Some(path) = args.opt("save") {
+        rt.store.save_checkpoint(Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    if let Some(path) = args.opt("curve") {
+        let j = Json::from_pairs(vec![
+            ("model", Json::Str(res.model.clone())),
+            ("train_curve", Json::array_f64(&res.train_curve)),
+            ("val_curve", Json::array_f64(&res.val_curve)),
+            ("final_train_loss", Json::Num(res.final_train_loss)),
+            ("stability", Json::Str(res.stability())),
+        ]);
+        std::fs::write(path, j.to_pretty())?;
+        println!("curve written to {path}");
+    }
+    Ok(0)
+}

@@ -1,0 +1,56 @@
+//! Hand-rolled CLI (no `clap` in the offline registry): subcommands with
+//! `--flag value` options, `--help` per subcommand, typo-hostile parsing.
+
+mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::Result;
+
+pub const USAGE: &str = "\
+acpc — Adaptive Cache Pollution Control for LLM inference workloads
+
+USAGE:
+    acpc <COMMAND> [OPTIONS]
+
+COMMANDS:
+    simulate     run one cache simulation (policy × predictor × workload)
+    train        train a predictor with the compiled Adam step (Fig. 2)
+    table1       reproduce the paper's Table 1 end-to-end
+    serve        multi-worker serving-node simulation (router + batcher)
+    trace-stats  characterize a generated workload trace
+    policies     list replacement policies / prefetchers / profiles
+    help         show this message
+
+Run `acpc <COMMAND> --help` for per-command options.
+Environment: ACPC_LOG=debug|info|warn|error, ACPC_ARTIFACTS=<dir>.";
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> Result<i32> {
+    crate::util::log::init();
+    let mut args = Args::new(argv);
+    let cmd = match args.next_positional() {
+        Some(c) => c,
+        None => {
+            println!("{USAGE}");
+            return Ok(2);
+        }
+    };
+    match cmd.as_str() {
+        "simulate" => commands::simulate::run(&mut args),
+        "train" => commands::train::run(&mut args),
+        "table1" => commands::table1::run(&mut args),
+        "serve" => commands::serve::run(&mut args),
+        "trace-stats" => commands::trace_stats::run(&mut args),
+        "policies" => commands::policies::run(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            Ok(2)
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! The experiment config: one struct, JSON-overridable, preset-seeded.
+
+use crate::mem::HierarchyConfig;
+use crate::trace::{GeneratorConfig, ModelProfile};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Which learned predictor (if any) feeds the L2 policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// No learned predictor (classic policies).
+    None,
+    /// Flattened-window MLP — the paper's ML-Predict baseline.
+    Dnn,
+    /// Temporal CNN — the paper's ACPC predictor.
+    Tcn,
+    /// Cheap frequency heuristic (tests / predictor-free ACPC ablation).
+    Heuristic,
+}
+
+impl PredictorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Self::None,
+            "dnn" => Self::Dnn,
+            "tcn" => Self::Tcn,
+            "heuristic" => Self::Heuristic,
+            _ => bail!("unknown predictor '{s}' (none|dnn|tcn|heuristic)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Dnn => "dnn",
+            Self::Tcn => "tcn",
+            Self::Heuristic => "heuristic",
+        }
+    }
+}
+
+/// Everything needed to reproduce one simulation run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// L2 replacement policy under test (see `policy::POLICY_NAMES`).
+    pub policy: String,
+    pub predictor: PredictorKind,
+    pub hierarchy: HierarchyConfig,
+    pub generator: GeneratorConfig,
+    /// Number of accesses to simulate.
+    pub accesses: usize,
+    /// Predictor batch size (accesses buffered before a model invocation).
+    pub predict_batch: usize,
+    /// Online-learning feedback: retrain every N accesses (0 = off).
+    pub feedback_interval: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// The Table 1 workload: GPT-style decode mix over the scaled hierarchy
+    /// with the composite prefetcher.
+    pub fn table1(policy: &str, predictor: PredictorKind) -> Self {
+        let seed = 0xAC9C_2025;
+        Self {
+            name: format!("table1-{policy}"),
+            policy: policy.into(),
+            predictor,
+            hierarchy: HierarchyConfig::scaled(),
+            generator: GeneratorConfig::new(ModelProfile::gpt3ish(), seed),
+            accesses: 2_000_000,
+            predict_batch: 256,
+            feedback_interval: 0,
+            seed,
+        }
+    }
+
+    /// Fast config for tests.
+    pub fn smoke(policy: &str) -> Self {
+        let seed = 7;
+        let mut c = Self::table1(policy, PredictorKind::None);
+        c.name = format!("smoke-{policy}");
+        c.generator = GeneratorConfig::tiny(seed);
+        c.accesses = 50_000;
+        c.seed = seed;
+        c
+    }
+
+    /// Apply JSON overrides on top of `self`. Unknown keys are errors (typo
+    /// protection); nested objects override field-wise.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config root must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "name" => self.name = v.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+                "policy" => {
+                    let p = v.as_str().ok_or_else(|| anyhow!("policy"))?;
+                    if crate::policy::make_policy(p, 2, 2, 0).is_none() {
+                        bail!("unknown policy '{p}'");
+                    }
+                    self.policy = p.to_string();
+                }
+                "predictor" => {
+                    self.predictor =
+                        PredictorKind::parse(v.as_str().ok_or_else(|| anyhow!("predictor"))?)?
+                }
+                "accesses" => self.accesses = v.as_usize().ok_or_else(|| anyhow!("accesses"))?,
+                "predict_batch" => {
+                    self.predict_batch = v.as_usize().ok_or_else(|| anyhow!("predict_batch"))?
+                }
+                "feedback_interval" => {
+                    self.feedback_interval = v.as_usize().ok_or_else(|| anyhow!("feedback_interval"))?
+                }
+                "seed" => {
+                    self.seed = v.as_i64().ok_or_else(|| anyhow!("seed"))? as u64;
+                    self.generator.seed = self.seed;
+                }
+                "hierarchy" => self.apply_hierarchy(v)?,
+                "workload" => self.apply_workload(v)?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_hierarchy(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("hierarchy must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "preset" => {
+                    let name = v.as_str().ok_or_else(|| anyhow!("preset"))?;
+                    self.hierarchy = HierarchyConfig::by_name(name)
+                        .ok_or_else(|| anyhow!("unknown hierarchy preset '{name}'"))?;
+                }
+                "prefetcher" => {
+                    let p = v.as_str().ok_or_else(|| anyhow!("prefetcher"))?;
+                    if crate::mem::prefetch::make_prefetcher(p, 0).is_none() {
+                        bail!("unknown prefetcher '{p}'");
+                    }
+                    self.hierarchy.prefetcher = p.to_string();
+                }
+                "l1_kb" => self.hierarchy.l1.size_bytes = num(v, "l1_kb")? * 1024,
+                "l2_kb" => self.hierarchy.l2.size_bytes = num(v, "l2_kb")? * 1024,
+                "l3_kb" => self.hierarchy.l3.size_bytes = num(v, "l3_kb")? * 1024,
+                "l1_assoc" => self.hierarchy.l1.assoc = num(v, "l1_assoc")? as usize,
+                "l2_assoc" => self.hierarchy.l2.assoc = num(v, "l2_assoc")? as usize,
+                "l3_assoc" => self.hierarchy.l3.assoc = num(v, "l3_assoc")? as usize,
+                "dram_latency" => self.hierarchy.dram_latency = num(v, "dram_latency")?,
+                other => bail!("unknown hierarchy key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_workload(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("workload must be an object"))?;
+        // `profile` resets the whole generator, so it must apply before any
+        // sibling keys regardless of JSON object order.
+        if let Some(v) = obj.get("profile") {
+            let name = v.as_str().ok_or_else(|| anyhow!("profile"))?;
+            let profile = ModelProfile::by_name(name)
+                .ok_or_else(|| anyhow!("unknown model profile '{name}'"))?;
+            let seed = self.generator.seed;
+            self.generator = GeneratorConfig::new(profile, seed);
+        }
+        for (k, v) in obj {
+            match k.as_str() {
+                "profile" => {}
+                "max_live_sessions" => {
+                    self.generator.max_live_sessions = num(v, "max_live_sessions")? as usize
+                }
+                "phase_period" => self.generator.phase_period = num(v, "phase_period")?,
+                "max_ctx" => self.generator.max_ctx = num(v, "max_ctx")? as u32,
+                "arrival_p_hot" => {
+                    self.generator.arrival_p_hot = v.as_f64().ok_or_else(|| anyhow!("arrival_p_hot"))?
+                }
+                "arrival_p_cold" => {
+                    self.generator.arrival_p_cold =
+                        v.as_f64().ok_or_else(|| anyhow!("arrival_p_cold"))?
+                }
+                other => bail!("unknown workload key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON file over the table1 preset.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let base = j.get("preset").and_then(|p| p.as_str()).unwrap_or("table1");
+        let mut cfg = match base {
+            "table1" => Self::table1("lru", PredictorKind::None),
+            "smoke" => Self::smoke("lru"),
+            other => bail!("unknown preset '{other}'"),
+        };
+        // `preset` itself is consumed above.
+        if let Json::Obj(mut m) = j {
+            m.remove("preset");
+            cfg.apply_json(&Json::Obj(m))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize the *effective* config for report provenance.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("predictor", Json::Str(self.predictor.label().into())),
+            ("accesses", Json::Num(self.accesses as f64)),
+            ("predict_batch", Json::Num(self.predict_batch as f64)),
+            ("feedback_interval", Json::Num(self.feedback_interval as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("profile", Json::Str(self.generator.profile.name.clone())),
+            ("prefetcher", Json::Str(self.hierarchy.prefetcher.clone())),
+            ("l2_kb", Json::Num(self.hierarchy.l2.size_bytes as f64 / 1024.0)),
+        ])
+    }
+}
+
+fn num(v: &Json, what: &str) -> Result<u64> {
+    v.as_f64().map(|x| x as u64).ok_or_else(|| anyhow!("{what} must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_construct() {
+        let t = ExperimentConfig::table1("acpc", PredictorKind::Tcn);
+        assert_eq!(t.policy, "acpc");
+        assert_eq!(t.predictor, PredictorKind::Tcn);
+        let s = ExperimentConfig::smoke("lru");
+        assert!(s.accesses < t.accesses);
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut c = ExperimentConfig::table1("lru", PredictorKind::None);
+        let j = Json::parse(
+            r#"{"policy": "srrip", "accesses": 1000,
+                "hierarchy": {"l2_kb": 128, "prefetcher": "stride"},
+                "workload": {"profile": "llama2", "max_ctx": 256}}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.policy, "srrip");
+        assert_eq!(c.accesses, 1000);
+        assert_eq!(c.hierarchy.l2.size_bytes, 128 * 1024);
+        assert_eq!(c.hierarchy.prefetcher, "stride");
+        assert_eq!(c.generator.profile.name, "llama2ish");
+        assert_eq!(c.generator.max_ctx, 256);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let mut c = ExperimentConfig::table1("lru", PredictorKind::None);
+        assert!(c.apply_json(&Json::parse(r#"{"polcy": "lru"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"policy": "nope"}"#).unwrap()).is_err());
+        assert!(c
+            .apply_json(&Json::parse(r#"{"hierarchy": {"l9_kb": 1}}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn provenance_roundtrip() {
+        let c = ExperimentConfig::table1("acpc", PredictorKind::Tcn);
+        let j = c.to_json();
+        assert_eq!(j.get("policy").unwrap().as_str(), Some("acpc"));
+        assert_eq!(j.get("predictor").unwrap().as_str(), Some("tcn"));
+    }
+}

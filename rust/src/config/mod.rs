@@ -1,0 +1,12 @@
+//! Experiment configuration system: JSON config files + named presets.
+//!
+//! A single [`ExperimentConfig`] describes everything needed to reproduce a
+//! run: workload (model profile + generator knobs), hierarchy, policy,
+//! predictor integration, and trace length. Configs load from JSON
+//! (`acpc simulate --config path.json`) with every field optional on top of
+//! a named preset — the same mechanism the benches use, so bench rows and
+//! CLI runs cannot drift apart.
+
+mod experiment;
+
+pub use experiment::{ExperimentConfig, PredictorKind};

@@ -1,0 +1,127 @@
+//! Size-or-deadline dynamic batcher for predictor queries.
+//!
+//! Workers enqueue (tag, feature-row) requests; the batch flushes when it
+//! reaches `max_batch` or when the oldest entry exceeds `max_wait`. The
+//! same policy a serving engine applies to model invocations — here it
+//! amortizes PJRT dispatch overhead across workers (measured by
+//! `benches/coordinator_throughput.rs`).
+
+use std::time::{Duration, Instant};
+
+/// One pending request: an opaque tag (e.g. (worker, line)) + feature row.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub tag: T,
+    pub row_offset: usize,
+}
+
+pub struct DynamicBatcher<T> {
+    row: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    x: Vec<f32>,
+    pending: Vec<Pending<T>>,
+    oldest: Option<Instant>,
+    pub flushes_size: u64,
+    pub flushes_deadline: u64,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(row: usize, max_batch: usize, max_wait: Duration) -> Self {
+        Self {
+            row,
+            max_batch,
+            max_wait,
+            x: Vec::with_capacity(row * max_batch),
+            pending: Vec::with_capacity(max_batch),
+            oldest: None,
+            flushes_size: 0,
+            flushes_deadline: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Enqueue one request. Returns true if the batch is now full
+    /// (caller should flush).
+    pub fn push(&mut self, tag: T, features: &[f32]) -> bool {
+        assert_eq!(features.len(), self.row);
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(Pending { tag, row_offset: self.x.len() });
+        self.x.extend_from_slice(features);
+        self.pending.len() >= self.max_batch
+    }
+
+    /// Deadline check (call on a timer / loop tick).
+    pub fn deadline_expired(&self) -> bool {
+        matches!(self.oldest, Some(t) if t.elapsed() >= self.max_wait) && !self.pending.is_empty()
+    }
+
+    /// Drain the batch: returns (tags, x, n). Caller runs the predictor and
+    /// pairs `probs[i]` with `tags[i]`.
+    pub fn flush(&mut self, by_deadline: bool) -> (Vec<T>, Vec<f32>, usize) {
+        if by_deadline {
+            self.flushes_deadline += 1;
+        } else {
+            self.flushes_size += 1;
+        }
+        let n = self.pending.len();
+        let tags = self.pending.drain(..).map(|p| p.tag).collect();
+        let x = std::mem::take(&mut self.x);
+        self.oldest = None;
+        (tags, x, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b: DynamicBatcher<u32> = DynamicBatcher::new(2, 3, Duration::from_secs(10));
+        assert!(!b.push(1, &[0.0, 0.1]));
+        assert!(!b.push(2, &[0.2, 0.3]));
+        assert!(b.push(3, &[0.4, 0.5]));
+        let (tags, x, n) = b.flush(false);
+        assert_eq!(tags, vec![1, 2, 3]);
+        assert_eq!(n, 3);
+        assert_eq!(x.len(), 6);
+        assert!(b.is_empty());
+        assert_eq!(b.flushes_size, 1);
+    }
+
+    #[test]
+    fn deadline_fires_only_with_content() {
+        let mut b: DynamicBatcher<u32> = DynamicBatcher::new(1, 100, Duration::from_millis(1));
+        assert!(!b.deadline_expired());
+        b.push(7, &[1.0]);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(b.deadline_expired());
+        let (tags, _, _) = b.flush(true);
+        assert_eq!(tags, vec![7]);
+        assert!(!b.deadline_expired(), "empty batcher has no deadline");
+        assert_eq!(b.flushes_deadline, 1);
+    }
+
+    #[test]
+    fn rows_keep_alignment() {
+        let mut b: DynamicBatcher<usize> = DynamicBatcher::new(3, 4, Duration::from_secs(1));
+        for i in 0..4 {
+            b.push(i, &[i as f32; 3]);
+        }
+        let (tags, x, n) = b.flush(false);
+        for (i, &tag) in tags.iter().enumerate() {
+            assert_eq!(x[i * 3], tag as f32);
+        }
+        assert_eq!(n, 4);
+    }
+}

@@ -1,0 +1,19 @@
+//! Serving-style coordinator — the L3 system wrapper that turns the
+//! simulator into a multi-worker "LLM serving node" (DESIGN.md S16):
+//!
+//! - [`router`]: admits incoming sessions to workers (least-loaded /
+//!   round-robin), the request-routing role of a vLLM-style frontend;
+//! - [`batcher`]: size-or-deadline dynamic batching of predictor queries —
+//!   the same discipline a serving engine uses for model invocations;
+//! - [`server`]: worker threads (each owning a cache hierarchy + its
+//!   sessions) and a shared predictor service thread, connected by
+//!   channels; Python never appears — the predictor service executes the
+//!   AOT artifacts via PJRT.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use batcher::DynamicBatcher;
+pub use router::{Router, RouterPolicy};
+pub use server::{serve, ServeConfig, ServeReport};

@@ -1,0 +1,144 @@
+//! Session router: assigns incoming inference sessions to workers.
+
+/// Routing discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round_robin" => Some(Self::RoundRobin),
+            "least" | "least_loaded" => Some(Self::LeastLoaded),
+            _ => None,
+        }
+    }
+}
+
+/// Tracks per-worker load (outstanding sessions / queue depth) and picks
+/// targets. Loads are updated by the server as sessions start/finish.
+#[derive(Debug)]
+pub struct Router {
+    policy: RouterPolicy,
+    loads: Vec<usize>,
+    /// Per-worker admission capacity (KV slots).
+    capacity: Vec<usize>,
+    rr_next: usize,
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, workers: usize, capacity_per_worker: usize) -> Self {
+        Self {
+            policy,
+            loads: vec![0; workers],
+            capacity: vec![capacity_per_worker; workers],
+            rr_next: 0,
+            admitted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn load(&self, w: usize) -> usize {
+        self.loads[w]
+    }
+
+    /// Pick a worker for a new session; `None` when every worker is full
+    /// (admission control — the request would be queued/rejected upstream).
+    pub fn route(&mut self) -> Option<usize> {
+        let n = self.loads.len();
+        let pick = match self.policy {
+            RouterPolicy::RoundRobin => {
+                (0..n).map(|i| (self.rr_next + i) % n).find(|&w| self.loads[w] < self.capacity[w])
+            }
+            RouterPolicy::LeastLoaded => (0..n)
+                .filter(|&w| self.loads[w] < self.capacity[w])
+                .min_by_key(|&w| self.loads[w]),
+        };
+        match pick {
+            Some(w) => {
+                self.loads[w] += 1;
+                self.admitted += 1;
+                if self.policy == RouterPolicy::RoundRobin {
+                    self.rr_next = (w + 1) % n;
+                }
+                Some(w)
+            }
+            None => {
+                self.rejected += 1;
+                None
+            }
+        }
+    }
+
+    /// Session finished on worker `w`.
+    pub fn complete(&mut self, w: usize) {
+        assert!(self.loads[w] > 0, "completion without admission on worker {w}");
+        self.loads[w] -= 1;
+    }
+
+    /// Max/min load imbalance (diagnostics + tests).
+    pub fn imbalance(&self) -> usize {
+        let max = self.loads.iter().max().copied().unwrap_or(0);
+        let min = self.loads.iter().min().copied().unwrap_or(0);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 4, 8);
+        for _ in 0..16 {
+            r.route().unwrap();
+        }
+        assert_eq!(r.imbalance(), 0);
+        assert_eq!(r.admitted, 16);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 3, 10);
+        let seq: Vec<usize> = (0..6).map(|_| r.route().unwrap()).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 2, 1);
+        assert!(r.route().is_some());
+        assert!(r.route().is_some());
+        assert!(r.route().is_none());
+        assert_eq!(r.rejected, 1);
+        r.complete(0);
+        assert_eq!(r.route(), Some(0));
+    }
+
+    #[test]
+    fn least_loaded_prefers_freed_worker() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 3, 4);
+        for _ in 0..9 {
+            r.route();
+        }
+        r.complete(1);
+        r.complete(1);
+        assert_eq!(r.route(), Some(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn completion_underflow_panics() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 1, 1);
+        r.complete(0);
+    }
+}

@@ -1,0 +1,404 @@
+//! The serving node: N worker threads (each owning a cache hierarchy and
+//! its admitted sessions) + one predictor service thread (owning the PJRT
+//! executables) + the main thread driving arrivals through the [`Router`].
+//!
+//! Dataflow per decoded token (all rust, no Python):
+//!
+//! ```text
+//!   main ──admit──▶ worker_i ──PredictReq──▶ predictor service
+//!                      ▲                         │ (DynamicBatcher:
+//!                      └──────PredictResp────────┘  size/deadline)
+//! ```
+//!
+//! Workers never block on predictions: fills use the latest completed
+//! utility for the line (the async model of §3.1), and responses are
+//! drained opportunistically each loop iteration.
+
+use super::batcher::DynamicBatcher;
+use super::router::{Router, RouterPolicy};
+use crate::mem::{Hierarchy, HierarchyConfig};
+use crate::policy::AccessMeta;
+use crate::predictor::{FeatureExtractor, GeometryHints, PredictorBox, FEATURE_DIM};
+use crate::trace::{GeneratorConfig, TraceGenerator};
+use crate::util::stats::percentile;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub policy: String,
+    pub hierarchy: HierarchyConfig,
+    pub generator: GeneratorConfig,
+    /// Total sessions to admit before draining.
+    pub total_sessions: u64,
+    /// Pacing between admissions (0 = open loop).
+    pub arrival_interval: Duration,
+    pub router: RouterPolicy,
+    /// Cross-worker prediction batch + deadline.
+    pub predict_batch: usize,
+    pub predict_deadline: Duration,
+}
+
+impl ServeConfig {
+    pub fn quick(policy: &str) -> Self {
+        let mut generator = GeneratorConfig::tiny(77);
+        // Serving mode: arrivals are router-driven only.
+        generator.arrival_p_hot = 0.0;
+        generator.arrival_p_cold = 0.0;
+        Self {
+            workers: 2,
+            policy: policy.into(),
+            hierarchy: {
+                let mut h = HierarchyConfig::scaled();
+                h.prefetcher = "composite".into();
+                h
+            },
+            generator,
+            total_sessions: 24,
+            arrival_interval: Duration::from_micros(200),
+            router: RouterPolicy::LeastLoaded,
+            predict_batch: 128,
+            predict_deadline: Duration::from_millis(2),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub sessions_admitted: u64,
+    pub sessions_completed: u64,
+    pub sessions_rejected: u64,
+    pub tokens: u64,
+    pub accesses: u64,
+    pub wall_secs: f64,
+    pub tokens_per_sec_wall: f64,
+    pub l2_hit_rate: f64,
+    pub l2_pollution_ratio: f64,
+    pub session_latency_ms_p50: f64,
+    pub session_latency_ms_p95: f64,
+    pub prediction_batches: u64,
+    pub mean_batch_fill: f64,
+    pub router_imbalance_max: usize,
+}
+
+enum Event {
+    SessionDone { worker: usize },
+    Finished { stats: WorkerStats },
+}
+
+#[derive(Debug, Clone)]
+struct WorkerStats {
+    accesses: u64,
+    tokens: u64,
+    l2_hits: u64,
+    l2_accesses: u64,
+    l2_fills: u64,
+    l2_dead_prefetch: u64,
+}
+
+struct PredictReq {
+    worker: usize,
+    lines: Vec<u64>,
+    x: Vec<f32>,
+}
+
+type PredictResp = Vec<(u64, f32)>;
+
+/// Run the serving node to completion.
+///
+/// `predictor_factory` is invoked *inside* the predictor-service thread
+/// (PJRT executables are thread-affine, `!Send`); `predictor_window`
+/// must match what the factory will produce: 0 = no predictor
+/// (`PredictorBox::None`), 1 for heuristic/DNN, the TCN window otherwise.
+pub fn serve(
+    cfg: &ServeConfig,
+    predictor_window: usize,
+    predictor_factory: impl FnOnce() -> PredictorBox + Send,
+) -> ServeReport {
+    let t0 = Instant::now();
+    let done = Arc::new(AtomicBool::new(false));
+    let use_pred = predictor_window > 0;
+    let window = predictor_window.max(1);
+    let row = if predictor_window <= 1 { FEATURE_DIM } else { window * FEATURE_DIM };
+
+    let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+    let (pr_tx, pr_rx) = mpsc::channel::<PredictReq>();
+
+    std::thread::scope(|s| {
+        // ---- predictor service ------------------------------------------
+        let mut resp_txs: Vec<mpsc::Sender<PredictResp>> = Vec::new();
+        let mut resp_rxs: Vec<mpsc::Receiver<PredictResp>> = Vec::new();
+        for _ in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel::<PredictResp>();
+            resp_txs.push(tx);
+            resp_rxs.push(rx);
+        }
+        let pred_deadline = cfg.predict_deadline;
+        let pred_batch = cfg.predict_batch;
+        let pred_stats = s.spawn(move || {
+            // Construct inside the thread: PJRT handles are !Send.
+            let mut predictor = predictor_factory();
+            let mut batcher: DynamicBatcher<(usize, u64)> =
+                DynamicBatcher::new(row, pred_batch, pred_deadline);
+            let mut batches = 0u64;
+            let mut filled = 0u64;
+            let flush = |batcher: &mut DynamicBatcher<(usize, u64)>,
+                         predictor: &mut PredictorBox,
+                         by_deadline: bool,
+                         batches: &mut u64,
+                         filled: &mut u64| {
+                if batcher.is_empty() {
+                    return;
+                }
+                let (tags, x, n) = batcher.flush(by_deadline);
+                let probs = predictor.predict(&x, n);
+                *batches += 1;
+                *filled += n as u64;
+                let mut grouped: HashMap<usize, PredictResp> = HashMap::new();
+                for ((w, line), p) in tags.into_iter().zip(probs) {
+                    grouped.entry(w).or_default().push((line, p));
+                }
+                for (w, resp) in grouped {
+                    let _ = resp_txs[w].send(resp);
+                }
+            };
+            loop {
+                match pr_rx.recv_timeout(pred_deadline) {
+                    Ok(req) => {
+                        for (i, &line) in req.lines.iter().enumerate() {
+                            let full = batcher.push((req.worker, line), &req.x[i * row..(i + 1) * row]);
+                            if full {
+                                flush(&mut batcher, &mut predictor, false, &mut batches, &mut filled);
+                            }
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if batcher.deadline_expired() {
+                            flush(&mut batcher, &mut predictor, true, &mut batches, &mut filled);
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        flush(&mut batcher, &mut predictor, true, &mut batches, &mut filled);
+                        break;
+                    }
+                }
+            }
+            (batches, filled)
+        });
+
+        // ---- workers ------------------------------------------------------
+        let mut admit_txs: Vec<mpsc::Sender<()>> = Vec::new();
+        for w in 0..cfg.workers {
+            let (admit_tx, admit_rx) = mpsc::channel::<()>();
+            admit_txs.push(admit_tx);
+            let ev_tx = ev_tx.clone();
+            let pr_tx = pr_tx.clone();
+            let resp_rx = std::mem::replace(&mut resp_rxs[w], mpsc::channel().1);
+            let done = done.clone();
+            let mut gcfg = cfg.generator.clone();
+            gcfg.seed = cfg.generator.seed.wrapping_add(w as u64 * 7919);
+            let hcfg = cfg.hierarchy.clone();
+            let policy = cfg.policy.clone();
+            s.spawn(move || {
+                let mut hier = Hierarchy::new(hcfg, &policy);
+                let geom = GeometryHints::from_generator(&gcfg);
+                let mut gen = TraceGenerator::new(gcfg);
+                let mut fx = FeatureExtractor::new(window, geom);
+                let mut seq = vec![0.0f32; window * FEATURE_DIM];
+                let mut completed_seen = 0u64;
+                let mut local_lines: Vec<u64> = Vec::new();
+                let mut local_x: Vec<f32> = Vec::new();
+                const LOCAL_BATCH: usize = 32;
+
+                loop {
+                    while admit_rx.try_recv().is_ok() {
+                        gen.force_arrival();
+                    }
+                    while let Ok(resp) = resp_rx.try_recv() {
+                        for (line, p) in resp {
+                            hier.update_utility(line, p);
+                        }
+                    }
+                    if gen.has_work() {
+                        let a = gen.next_access();
+                        let line = a.line();
+                        let meta = AccessMeta {
+                            line,
+                            pc: a.pc,
+                            kind: a.kind,
+                            is_prefetch: false,
+                            predicted_utility: None, // late-bound by the hierarchy
+                            next_use: None,
+                        };
+                        hier.access(&a, &meta);
+                        if use_pred {
+                            fx.push(&a, &mut seq);
+                            let feats: &[f32] = if row == FEATURE_DIM {
+                                &seq[(window - 1) * FEATURE_DIM..]
+                            } else {
+                                &seq
+                            };
+                            local_lines.push(line);
+                            local_x.extend_from_slice(feats);
+                            if local_lines.len() >= LOCAL_BATCH {
+                                let _ = pr_tx.send(PredictReq {
+                                    worker: w,
+                                    lines: std::mem::take(&mut local_lines),
+                                    x: std::mem::take(&mut local_x),
+                                });
+                            }
+                        }
+                        let c = gen.sessions_completed();
+                        while completed_seen < c {
+                            completed_seen += 1;
+                            let _ = ev_tx.send(Event::SessionDone { worker: w });
+                        }
+                    } else if done.load(Ordering::Relaxed) {
+                        break;
+                    } else {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                }
+                let stats = WorkerStats {
+                    accesses: hier.accesses,
+                    tokens: gen.tokens_done(),
+                    l2_hits: hier.l2.stats.demand_hits,
+                    l2_accesses: hier.l2.stats.demand_accesses,
+                    l2_fills: hier.l2.stats.demand_misses + hier.l2.stats.prefetch_fills,
+                    l2_dead_prefetch: hier.l2.stats.dead_prefetch_evictions,
+                };
+                let _ = ev_tx.send(Event::Finished { stats });
+            });
+        }
+        drop(ev_tx);
+        drop(pr_tx);
+
+        // ---- main: arrivals + bookkeeping ---------------------------------
+        let mut router =
+            Router::new(cfg.router, cfg.workers, cfg.generator.max_live_sessions);
+        let mut admit_times: Vec<std::collections::VecDeque<Instant>> =
+            vec![Default::default(); cfg.workers];
+        let mut latencies_ms: Vec<f64> = Vec::new();
+        let mut completed = 0u64;
+        let mut admitted = 0u64;
+        let mut max_imbalance = 0usize;
+
+        let handle_event = |ev: Event,
+                                router: &mut Router,
+                                admit_times: &mut Vec<std::collections::VecDeque<Instant>>,
+                                latencies: &mut Vec<f64>,
+                                completed: &mut u64|
+         -> Option<WorkerStats> {
+            match ev {
+                Event::SessionDone { worker } => {
+                    router.complete(worker);
+                    if let Some(t) = admit_times[worker].pop_front() {
+                        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    *completed += 1;
+                    None
+                }
+                Event::Finished { stats, .. } => Some(stats),
+            }
+        };
+
+        while admitted < cfg.total_sessions {
+            if let Some(wkr) = router.route() {
+                let _ = admit_txs[wkr].send(());
+                admit_times[wkr].push_back(Instant::now());
+                admitted += 1;
+                max_imbalance = max_imbalance.max(router.imbalance());
+                if !cfg.arrival_interval.is_zero() {
+                    std::thread::sleep(cfg.arrival_interval);
+                }
+            } else {
+                // Full: wait for a completion.
+                if let Ok(ev) = ev_rx.recv_timeout(Duration::from_millis(50)) {
+                    handle_event(ev, &mut router, &mut admit_times, &mut latencies_ms, &mut completed);
+                }
+            }
+            while let Ok(ev) = ev_rx.try_recv() {
+                handle_event(ev, &mut router, &mut admit_times, &mut latencies_ms, &mut completed);
+            }
+        }
+        done.store(true, Ordering::Relaxed);
+        drop(admit_txs);
+
+        // Drain until all workers report Finished.
+        let mut stats: Vec<WorkerStats> = Vec::new();
+        while stats.len() < cfg.workers {
+            match ev_rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(ev) => {
+                    if let Some(st) =
+                        handle_event(ev, &mut router, &mut admit_times, &mut latencies_ms, &mut completed)
+                    {
+                        stats.push(st);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let (pred_batches, pred_filled) = pred_stats.join().unwrap_or((0, 0));
+
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: u64 = stats.iter().map(|s| s.tokens).sum();
+        let accesses: u64 = stats.iter().map(|s| s.accesses).sum();
+        let l2_hits: u64 = stats.iter().map(|s| s.l2_hits).sum();
+        let l2_acc: u64 = stats.iter().map(|s| s.l2_accesses).sum();
+        let l2_fills: u64 = stats.iter().map(|s| s.l2_fills).sum();
+        let l2_dead: u64 = stats.iter().map(|s| s.l2_dead_prefetch).sum();
+
+        ServeReport {
+            sessions_admitted: admitted,
+            sessions_completed: completed,
+            sessions_rejected: router.rejected,
+            tokens,
+            accesses,
+            wall_secs: wall,
+            tokens_per_sec_wall: tokens as f64 / wall,
+            l2_hit_rate: l2_hits as f64 / l2_acc.max(1) as f64,
+            l2_pollution_ratio: l2_dead as f64 / l2_fills.max(1) as f64,
+            session_latency_ms_p50: percentile(&latencies_ms, 50.0),
+            session_latency_ms_p95: percentile(&latencies_ms, 95.0),
+            prediction_batches: pred_batches,
+            mean_batch_fill: if pred_batches > 0 {
+                pred_filled as f64 / pred_batches as f64
+            } else {
+                0.0
+            },
+            router_imbalance_max: max_imbalance,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::HeuristicPredictor;
+
+    #[test]
+    fn serve_completes_sessions_classic_policy() {
+        let mut cfg = ServeConfig::quick("srrip");
+        cfg.total_sessions = 10;
+        let rep = serve(&cfg, 0, || PredictorBox::None);
+        assert_eq!(rep.sessions_admitted, 10);
+        assert!(rep.sessions_completed >= 9, "completed {}", rep.sessions_completed);
+        assert!(rep.tokens > 50);
+        assert!(rep.l2_hit_rate > 0.0 && rep.l2_hit_rate < 1.0);
+        assert!(rep.tokens_per_sec_wall > 0.0);
+    }
+
+    #[test]
+    fn serve_with_heuristic_predictor_batches() {
+        let mut cfg = ServeConfig::quick("acpc");
+        cfg.total_sessions = 8;
+        let rep = serve(&cfg, 1, || PredictorBox::Heuristic(HeuristicPredictor));
+        assert!(rep.prediction_batches > 0, "predictor service must run");
+        assert!(rep.mean_batch_fill > 1.0, "batching must amortize: {}", rep.mean_batch_fill);
+        assert!(rep.sessions_completed >= 7);
+    }
+}

@@ -1,0 +1,33 @@
+//! # ACPC — Adaptive Cache Pollution Control for LLM Inference Workloads
+//!
+//! Production-style reproduction of Liu, Du & Wang (CS.AR 2025): a Temporal
+//! Convolutional Network predicts per-line reuse from LLM-inference access
+//! sequences, and a Priority-Aware Replacement Module (PARM) turns those
+//! predictions into eviction/insertion priorities that suppress prefetch
+//! pollution.
+//!
+//! The crate is the L3 (rust) layer of a three-layer stack:
+//!
+//! - **L1 (Pallas kernels)** and **L2 (JAX model)** live in `python/compile/`
+//!   and are AOT-lowered once into `artifacts/*.hlo.txt`;
+//! - this crate loads those artifacts via PJRT ([`runtime`]) and runs the
+//!   *entire* evaluation substrate natively: trace synthesis ([`trace`]),
+//!   a multi-level cache simulator ([`mem`]), replacement policies
+//!   ([`policy`]), the feature/label pipeline ([`predictor`]), Rust-driven
+//!   training of the compiled model ([`training`]), a serving-style
+//!   coordinator ([`coordinator`]), and the paper's metrics ([`metrics`]).
+//!
+//! Python never executes on the simulation/serving path.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod mem;
+pub mod metrics;
+pub mod policy;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod training;
+pub mod util;

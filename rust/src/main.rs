@@ -1,0 +1,9 @@
+//! `acpc` binary — CLI front-end for the library. See `acpc help`.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = acpc::cli::run(argv)?;
+    std::process::exit(code);
+}

@@ -1,0 +1,428 @@
+//! Single-level set-associative cache with a pluggable replacement policy
+//! and prefetch-pollution accounting.
+
+use crate::policy::{AccessMeta, Policy};
+
+/// Static geometry of one cache level.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub name: String,
+    pub size_bytes: u64,
+    pub assoc: usize,
+    pub line_bytes: u64,
+}
+
+impl CacheConfig {
+    pub fn new(name: &str, size_bytes: u64, assoc: usize) -> Self {
+        Self { name: name.into(), size_bytes, assoc, line_bytes: 64 }
+    }
+
+    pub fn num_sets(&self) -> usize {
+        let sets = self.size_bytes / (self.line_bytes * self.assoc as u64);
+        assert!(sets > 0 && sets.is_power_of_two(), "sets must be a power of two: {sets}");
+        sets as usize
+    }
+}
+
+/// State of one resident line.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LineState {
+    pub line: u64,
+    pub valid: bool,
+    pub dirty: bool,
+    /// Filled by a prefetch and not yet demand-referenced.
+    pub was_prefetch: bool,
+    /// Demand-referenced at least once since fill.
+    pub referenced: bool,
+}
+
+/// What fell out of the cache on a fill.
+#[derive(Debug, Clone, Copy)]
+pub struct EvictedLine {
+    pub line: u64,
+    pub dirty: bool,
+    pub was_prefetch_dead: bool,
+    pub referenced: bool,
+}
+
+/// Counters for the paper's cache-level metrics.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub demand_accesses: u64,
+    pub demand_hits: u64,
+    pub demand_misses: u64,
+    pub writes: u64,
+    /// Fills triggered by the prefetcher.
+    pub prefetch_fills: u64,
+    /// First demand hit on a prefetched line (useful prefetch).
+    pub prefetch_useful: u64,
+    /// Prefetched lines evicted without ever being demand-referenced.
+    pub dead_prefetch_evictions: u64,
+    /// Referenced demand lines evicted to make room for a *prefetch* fill —
+    /// the direct pollution event (useful data displaced by a prefetch).
+    pub demand_evicted_by_prefetch: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.demand_accesses == 0 {
+            return f64::NAN;
+        }
+        self.demand_hits as f64 / self.demand_accesses as f64
+    }
+
+    /// Prefetch pollution ratio: share of all fills that were prefetches
+    /// evicted dead (wasted capacity + displaced victims). The paper's PPR.
+    pub fn pollution_ratio(&self) -> f64 {
+        let fills = self.demand_misses + self.prefetch_fills;
+        if fills == 0 {
+            return 0.0;
+        }
+        self.dead_prefetch_evictions as f64 / fills as f64
+    }
+
+    /// Prefetch accuracy: useful / issued-fills.
+    pub fn prefetch_accuracy(&self) -> f64 {
+        if self.prefetch_fills == 0 {
+            return f64::NAN;
+        }
+        self.prefetch_useful as f64 / self.prefetch_fills as f64
+    }
+}
+
+/// Outcome of a demand access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lookup {
+    Hit,
+    Miss,
+}
+
+pub struct Cache {
+    cfg: CacheConfig,
+    num_sets: usize,
+    set_mask: u64,
+    lines: Vec<LineState>,
+    policy: Box<dyn Policy>,
+    pub stats: CacheStats,
+    /// EWMA of dead-prefetch occupancy per set, sampled lazily; feeds the
+    /// policy's `occupancy_hint` (PARM pressure signal).
+    occupancy_sample_period: u64,
+    accesses_since_sample: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig, policy: Box<dyn Policy>) -> Self {
+        let num_sets = cfg.num_sets();
+        Self {
+            num_sets,
+            set_mask: num_sets as u64 - 1,
+            lines: vec![LineState::default(); num_sets * cfg.assoc],
+            policy,
+            stats: CacheStats::default(),
+            cfg,
+            occupancy_sample_period: 64,
+            accesses_since_sample: 0,
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    pub fn num_sets(&self) -> usize {
+        self.num_sets
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    #[inline]
+    pub fn set_of(&self, line: u64) -> usize {
+        (line & self.set_mask) as usize
+    }
+
+    #[inline]
+    fn idx(&self, set: usize, way: usize) -> usize {
+        set * self.cfg.assoc + way
+    }
+
+    /// Non-mutating presence probe.
+    pub fn probe(&self, line: u64) -> Option<usize> {
+        let set = self.set_of(line);
+        (0..self.cfg.assoc).find(|&w| {
+            let l = &self.lines[self.idx(set, w)];
+            l.valid && l.line == line
+        })
+    }
+
+    /// Demand access (read or write). Returns hit/miss; the caller fills on
+    /// miss after servicing the lower level.
+    pub fn access(&mut self, line: u64, meta: &AccessMeta, is_write: bool) -> Lookup {
+        self.stats.demand_accesses += 1;
+        if is_write {
+            self.stats.writes += 1;
+        }
+        self.maybe_sample_occupancy(line);
+        let set = self.set_of(line);
+        if let Some(way) = self.probe(line) {
+            self.stats.demand_hits += 1;
+            let l = &mut self.lines[set * self.cfg.assoc + way];
+            if l.was_prefetch {
+                l.was_prefetch = false;
+                self.stats.prefetch_useful += 1;
+            }
+            l.referenced = true;
+            if is_write {
+                l.dirty = true;
+            }
+            self.policy.on_hit(set, way, meta);
+            Lookup::Hit
+        } else {
+            self.stats.demand_misses += 1;
+            Lookup::Miss
+        }
+    }
+
+    /// Install `line`. `meta.is_prefetch` distinguishes prefetch fills.
+    /// Returns the eviction, if the set was full.
+    pub fn fill(&mut self, line: u64, meta: &AccessMeta, is_write: bool) -> Option<EvictedLine> {
+        debug_assert!(self.probe(line).is_none(), "double fill of {line:#x}");
+        let set = self.set_of(line);
+        let assoc = self.cfg.assoc;
+        // Free way if any.
+        let free = (0..assoc).find(|&w| !self.lines[set * assoc + w].valid);
+        let (way, evicted) = match free {
+            Some(w) => (w, None),
+            None => {
+                let w = self.policy.victim(set);
+                debug_assert!(w < assoc);
+                let old = self.lines[set * assoc + w];
+                self.stats.evictions += 1;
+                if old.dirty {
+                    self.stats.writebacks += 1;
+                }
+                let dead_prefetch = old.was_prefetch && !old.referenced;
+                if dead_prefetch {
+                    self.stats.dead_prefetch_evictions += 1;
+                }
+                if meta.is_prefetch && old.referenced {
+                    self.stats.demand_evicted_by_prefetch += 1;
+                }
+                (
+                    w,
+                    Some(EvictedLine {
+                        line: old.line,
+                        dirty: old.dirty,
+                        was_prefetch_dead: dead_prefetch,
+                        referenced: old.referenced,
+                    }),
+                )
+            }
+        };
+        if meta.is_prefetch {
+            self.stats.prefetch_fills += 1;
+        }
+        self.lines[set * assoc + way] = LineState {
+            line,
+            valid: true,
+            dirty: is_write,
+            was_prefetch: meta.is_prefetch,
+            referenced: !meta.is_prefetch,
+        };
+        self.policy.on_fill(set, way, meta);
+        evicted
+    }
+
+    /// Drop a line if present (KV slot recycling, coherence-ish upcalls).
+    pub fn invalidate(&mut self, line: u64) -> bool {
+        if let Some(way) = self.probe(line) {
+            let set = self.set_of(line);
+            let idx = set * self.cfg.assoc + way;
+            self.lines[idx].valid = false;
+            self.stats.invalidations += 1;
+            self.policy.on_invalidate(set, way);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Refresh the predictor's utility score for a resident line.
+    pub fn update_utility_line(&mut self, line: u64, utility: f32) -> bool {
+        if let Some(way) = self.probe(line) {
+            let set = self.set_of(line);
+            self.policy.update_utility(set, way, utility);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Valid-line occupancy in [0,1].
+    pub fn occupancy(&self) -> f64 {
+        let valid = self.lines.iter().filter(|l| l.valid).count();
+        valid as f64 / self.lines.len() as f64
+    }
+
+    /// Effective memory utilization: referenced fraction of resident lines
+    /// (the paper's EMU numerator — useful lines / occupied capacity).
+    pub fn useful_fraction(&self) -> f64 {
+        let valid = self.lines.iter().filter(|l| l.valid).count();
+        if valid == 0 {
+            return f64::NAN;
+        }
+        let useful = self.lines.iter().filter(|l| l.valid && l.referenced).count();
+        useful as f64 / valid as f64
+    }
+
+    fn maybe_sample_occupancy(&mut self, line: u64) {
+        self.accesses_since_sample += 1;
+        if self.accesses_since_sample < self.occupancy_sample_period {
+            return;
+        }
+        self.accesses_since_sample = 0;
+        let set = self.set_of(line);
+        let assoc = self.cfg.assoc;
+        let dead = (0..assoc)
+            .filter(|&w| {
+                let l = &self.lines[set * assoc + w];
+                l.valid && l.was_prefetch && !l.referenced
+            })
+            .count();
+        self.policy.occupancy_hint(set, dead as f64 / assoc as f64);
+    }
+
+    /// Iterate resident lines (diagnostics / EMU sampling).
+    pub fn resident_lines(&self) -> impl Iterator<Item = &LineState> {
+        self.lines.iter().filter(|l| l.valid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::make_policy;
+    use crate::trace::StreamKind;
+
+    fn mk(size_kb: u64, assoc: usize, policy: &str) -> Cache {
+        let cfg = CacheConfig::new("t", size_kb * 1024, assoc);
+        let p = make_policy(policy, cfg.num_sets(), assoc, 1).unwrap();
+        Cache::new(cfg, p)
+    }
+
+    fn demand(line: u64) -> AccessMeta {
+        AccessMeta::demand(line, 0x10, StreamKind::Weight)
+    }
+
+    fn prefetch(line: u64) -> AccessMeta {
+        AccessMeta::prefetch(line, 0x10, StreamKind::Weight)
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = mk(4, 4, "lru");
+        let line = 0x100;
+        assert_eq!(c.access(line, &demand(line), false), Lookup::Miss);
+        c.fill(line, &demand(line), false);
+        assert_eq!(c.access(line, &demand(line), false), Lookup::Hit);
+        assert_eq!(c.stats.demand_hits, 1);
+        assert_eq!(c.stats.demand_misses, 1);
+    }
+
+    #[test]
+    fn capacity_and_eviction() {
+        // 4 KiB, 4-way, 64B lines → 16 sets. Fill 5 lines mapping to set 0.
+        let mut c = mk(4, 4, "lru");
+        let lines: Vec<u64> = (0..5).map(|i| i * 16).collect(); // same set
+        for &l in &lines {
+            assert_eq!(c.set_of(l), 0);
+            c.access(l, &demand(l), false);
+            c.fill(l, &demand(l), false);
+        }
+        assert_eq!(c.stats.evictions, 1);
+        // LRU: first line evicted.
+        assert!(c.probe(lines[0]).is_none());
+        assert!(c.probe(lines[4]).is_some());
+    }
+
+    #[test]
+    fn writeback_on_dirty_eviction() {
+        let mut c = mk(4, 4, "lru");
+        for i in 0..5u64 {
+            let l = i * 16;
+            c.access(l, &demand(l), true);
+            c.fill(l, &demand(l), true);
+        }
+        assert_eq!(c.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn pollution_accounting() {
+        let mut c = mk(4, 4, "lru");
+        // 4 demand lines referenced, then 4 dead prefetches displace them.
+        for i in 0..4u64 {
+            let l = i * 16;
+            c.access(l, &demand(l), false);
+            c.fill(l, &demand(l), false);
+        }
+        for i in 4..8u64 {
+            let l = i * 16;
+            c.fill(l, &prefetch(l), false);
+        }
+        assert_eq!(c.stats.prefetch_fills, 4);
+        assert_eq!(c.stats.demand_evicted_by_prefetch, 4);
+        // Evict the prefetches (never referenced) with more demand fills.
+        for i in 8..12u64 {
+            let l = i * 16;
+            c.access(l, &demand(l), false);
+            c.fill(l, &demand(l), false);
+        }
+        assert_eq!(c.stats.dead_prefetch_evictions, 4);
+        assert!(c.stats.pollution_ratio() > 0.0);
+    }
+
+    #[test]
+    fn useful_prefetch_counted_once() {
+        let mut c = mk(4, 4, "lru");
+        let l = 0x40;
+        c.fill(l, &prefetch(l), false);
+        assert_eq!(c.access(l, &demand(l), false), Lookup::Hit);
+        assert_eq!(c.access(l, &demand(l), false), Lookup::Hit);
+        assert_eq!(c.stats.prefetch_useful, 1);
+        assert_eq!(c.stats.dead_prefetch_evictions, 0);
+    }
+
+    #[test]
+    fn invalidate_then_miss() {
+        let mut c = mk(4, 4, "lru");
+        let l = 0x80;
+        c.access(l, &demand(l), false);
+        c.fill(l, &demand(l), false);
+        assert!(c.invalidate(l));
+        assert!(!c.invalidate(l));
+        assert_eq!(c.access(l, &demand(l), false), Lookup::Miss);
+    }
+
+    #[test]
+    fn utility_update_only_for_resident() {
+        let mut c = mk(4, 4, "acpc");
+        let l = 0x200;
+        assert!(!c.update_utility_line(l, 0.9));
+        c.fill(l, &demand(l), false);
+        assert!(c.update_utility_line(l, 0.9));
+    }
+
+    #[test]
+    fn occupancy_and_useful_fraction() {
+        let mut c = mk(4, 4, "lru");
+        assert_eq!(c.occupancy(), 0.0);
+        c.fill(0, &demand(0), false);
+        c.fill(16, &prefetch(16), false);
+        assert!((c.occupancy() - 2.0 / 64.0).abs() < 1e-9);
+        assert!((c.useful_fraction() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,408 @@
+//! Three-level cache hierarchy with an L2-attached prefetcher and a latency
+//! model — the simulated memory system for all experiments. The replacement
+//! policy *under test* governs L2 (the level whose miss penalty Table 1
+//! reports); L1 uses LRU (small, latency-filtered) and L3 uses DRRIP (a
+//! realistic LLC default that is not the subject of the study).
+
+use super::cache::{Cache, CacheConfig, Lookup};
+use super::prefetch::{make_prefetcher, Prefetcher};
+use crate::policy::{make_policy, AccessMeta, Policy};
+use crate::trace::Access;
+use crate::util::hash::FastMap;
+
+/// Geometry + hit latency (cycles) of one level.
+#[derive(Debug, Clone)]
+pub struct LevelConfig {
+    pub size_bytes: u64,
+    pub assoc: usize,
+    pub hit_latency: u64,
+}
+
+/// Full hierarchy configuration.
+#[derive(Debug, Clone)]
+pub struct HierarchyConfig {
+    pub l1: LevelConfig,
+    pub l2: LevelConfig,
+    pub l3: LevelConfig,
+    pub dram_latency: u64,
+    /// Prefetcher attached to L2 (`none|nextline|stride|correlation|composite`).
+    pub prefetcher: String,
+    pub seed: u64,
+}
+
+impl HierarchyConfig {
+    /// Scaled-down hierarchy for fast simulation: working sets in the trace
+    /// generator are sized against these (DESIGN.md §3). Latencies follow
+    /// EPYC-7763 ratios.
+    pub fn scaled() -> Self {
+        Self {
+            l1: LevelConfig { size_bytes: 16 * 1024, assoc: 8, hit_latency: 4 },
+            l2: LevelConfig { size_bytes: 512 * 1024, assoc: 8, hit_latency: 14 },
+            l3: LevelConfig { size_bytes: 8 * 1024 * 1024, assoc: 16, hit_latency: 46 },
+            dram_latency: 220,
+            prefetcher: "composite".into(),
+            seed: 0xCAFE,
+        }
+    }
+
+    /// Paper-faithful EPYC 7763 single-core slice (L1 64 KB, L2 512 KB,
+    /// L3 64 MB shared → 4 MB per-core slice here). Slower to simulate.
+    pub fn epyc7763() -> Self {
+        Self {
+            l1: LevelConfig { size_bytes: 64 * 1024, assoc: 8, hit_latency: 4 },
+            l2: LevelConfig { size_bytes: 512 * 1024, assoc: 8, hit_latency: 14 },
+            l3: LevelConfig { size_bytes: 4 * 1024 * 1024, assoc: 16, hit_latency: 46 },
+            dram_latency: 220,
+            prefetcher: "composite".into(),
+            seed: 0xCAFE,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "scaled" => Some(Self::scaled()),
+            "epyc7763" | "epyc" => Some(Self::epyc7763()),
+            _ => None,
+        }
+    }
+}
+
+/// Which level serviced a demand access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceLevel {
+    L1,
+    L2,
+    L3,
+    Dram,
+}
+
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+    pub l3: Cache,
+    cfg: HierarchyConfig,
+    prefetcher: Box<dyn Prefetcher>,
+    pf_buf: Vec<u64>,
+    /// Latest predicted reuse utility per line (bounded). Fed by
+    /// `update_utility`; consulted for demand metas with no explicit score
+    /// and for prefetch filtering.
+    utility: FastMap<u64, f32>,
+    /// ACPC's prefetch filter (§3.1 "suppressing unnecessary prefetch
+    /// pollution"): prefetch fills whose predicted utility is below the
+    /// threshold are dropped outright. `None` disables filtering.
+    pub prefetch_filter_threshold: Option<f32>,
+    pub prefetches_dropped: u64,
+    /// Adaptive feedback (§3.4) on prefetch *sources*: per-PC (issued,
+    /// useful) counts learned from observed outcomes; PCs with proven low
+    /// accuracy get their candidates dropped. Only active when filtering is.
+    pf_accuracy: FastMap<u64, (u32, u32)>,
+    /// line → issuing PC for in-flight prefetches (outcome attribution).
+    pf_inflight: FastMap<u64, u64>,
+    /// Total latency accumulated over all demand accesses.
+    pub total_latency: u64,
+    pub accesses: u64,
+}
+
+const UTILITY_CAP: usize = 1 << 17;
+
+impl Hierarchy {
+    /// `policy` governs L2. Panics on unknown names (caller validates).
+    pub fn new(cfg: HierarchyConfig, policy: &str) -> Self {
+        let mk = |name: &str, lvl: &LevelConfig, pol: &str, seed: u64| -> Cache {
+            let ccfg = CacheConfig::new(name, lvl.size_bytes, lvl.assoc);
+            let p: Box<dyn Policy> =
+                make_policy(pol, ccfg.num_sets(), lvl.assoc, seed).unwrap_or_else(|| panic!("policy {pol}"));
+            Cache::new(ccfg, p)
+        };
+        let l1 = mk("L1", &cfg.l1, "lru", cfg.seed ^ 1);
+        let l2 = mk("L2", &cfg.l2, policy, cfg.seed ^ 2);
+        let l3 = mk("L3", &cfg.l3, "drrip", cfg.seed ^ 3);
+        let prefetcher = make_prefetcher(&cfg.prefetcher, cfg.seed ^ 4)
+            .unwrap_or_else(|| panic!("prefetcher {}", cfg.prefetcher));
+        // The prefetch filter is PARM's distinctive pollution-suppression
+        // mechanism; enable it only for the ACPC policy.
+        let prefetch_filter_threshold = if policy == "acpc" { Some(0.22) } else { None };
+        Self {
+            l1,
+            l2,
+            l3,
+            cfg,
+            prefetcher,
+            pf_buf: Vec::with_capacity(8),
+            utility: FastMap::default(),
+            prefetch_filter_threshold,
+            prefetches_dropped: 0,
+            pf_accuracy: FastMap::default(),
+            pf_inflight: FastMap::default(),
+            total_latency: 0,
+            accesses: 0,
+        }
+    }
+
+    /// Has this PC's prefetch stream proven itself (in)accurate?
+    fn pc_blacklisted(&self, pc: u64) -> bool {
+        match self.pf_accuracy.get(&pc) {
+            Some(&(issued, useful)) if issued >= 48 => (useful as f64) < 0.10 * issued as f64,
+            _ => false,
+        }
+    }
+
+    /// L2 fill with prefetch-outcome attribution: a dead-evicted prefetch
+    /// settles its issuing PC's accuracy as a miss.
+    fn l2_fill_tracked(&mut self, line: u64, meta: &AccessMeta, is_write: bool) {
+        let evicted = self.l2.fill(line, meta, is_write);
+        if self.prefetch_filter_threshold.is_some() {
+            if let Some(ev) = evicted {
+                if ev.was_prefetch_dead {
+                    if let Some(pc) = self.pf_inflight.remove(&ev.line) {
+                        self.record_pf_outcome(pc, false);
+                    }
+                }
+            }
+        }
+    }
+
+    fn record_pf_outcome(&mut self, pc: u64, useful: bool) {
+        let e = self.pf_accuracy.entry(pc).or_insert((0, 0));
+        e.0 += 1;
+        if useful {
+            e.1 += 1;
+        }
+        // Periodic halving keeps the estimate adaptive to phase changes.
+        if e.0 >= 4096 {
+            e.0 /= 2;
+            e.1 /= 2;
+        }
+    }
+
+    pub fn config(&self) -> &HierarchyConfig {
+        &self.cfg
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.l2.policy_name()
+    }
+
+    pub fn latency_of(&self, lvl: ServiceLevel) -> u64 {
+        match lvl {
+            ServiceLevel::L1 => self.cfg.l1.hit_latency,
+            ServiceLevel::L2 => self.cfg.l1.hit_latency + self.cfg.l2.hit_latency,
+            ServiceLevel::L3 => {
+                self.cfg.l1.hit_latency + self.cfg.l2.hit_latency + self.cfg.l3.hit_latency
+            }
+            ServiceLevel::Dram => {
+                self.cfg.l1.hit_latency
+                    + self.cfg.l2.hit_latency
+                    + self.cfg.l3.hit_latency
+                    + self.cfg.dram_latency
+            }
+        }
+    }
+
+    /// Service one demand access end-to-end: probe L1→L2→L3→DRAM, fill the
+    /// upper levels on the way back, run the L2 prefetcher, accumulate
+    /// latency. Returns the servicing level.
+    pub fn access(&mut self, acc: &Access, meta: &AccessMeta) -> ServiceLevel {
+        let line = acc.line();
+        let w = acc.is_write;
+        self.accesses += 1;
+
+        // Late-bind the latest completed prediction for this line.
+        let mut meta = *meta;
+        if meta.predicted_utility.is_none() && !self.utility.is_empty() {
+            meta.predicted_utility = self.utility.get(&line).copied();
+        }
+        let meta = &meta;
+
+        let lvl = if self.l1.access(line, meta, w) == Lookup::Hit {
+            ServiceLevel::L1
+        } else {
+            // Prefetch-outcome attribution: first demand touch of an
+            // in-flight prefetched line settles its issuing PC's score.
+            if self.prefetch_filter_threshold.is_some() {
+                if let Some(pc) = self.pf_inflight.remove(&line) {
+                    let useful = self.l2.probe(line).is_some();
+                    self.record_pf_outcome(pc, useful);
+                }
+            }
+            let l2_res = self.l2.access(line, meta, w);
+            // Prefetcher observes every L2 demand access.
+            self.pf_buf.clear();
+            self.prefetcher.observe(acc.pc, line, l2_res == Lookup::Hit, &mut self.pf_buf);
+
+            let lvl = if l2_res == Lookup::Hit {
+                self.l1.fill(line, meta, w);
+                ServiceLevel::L2
+            } else if self.l3.access(line, meta, w) == Lookup::Hit {
+                self.l2_fill_tracked(line, meta, w);
+                self.l1.fill(line, meta, w);
+                ServiceLevel::L3
+            } else {
+                self.l3.fill(line, meta, w);
+                self.l2_fill_tracked(line, meta, w);
+                self.l1.fill(line, meta, w);
+                ServiceLevel::Dram
+            };
+
+            // Issue prefetch fills into L2 (off the critical path; no
+            // latency charged, but pollution is real).
+            if !self.pf_buf.is_empty() {
+                let buf = std::mem::take(&mut self.pf_buf);
+                for &cand in &buf {
+                    if self.l2.probe(cand).is_some() {
+                        continue;
+                    }
+                    let pred = self.utility.get(&cand).copied();
+                    if let Some(th) = self.prefetch_filter_threshold {
+                        // ACPC prefetch filter: (a) predicted-dead lines and
+                        // (b) candidates from PCs with proven-bad accuracy
+                        // are dropped before they pollute the cache.
+                        if pred.map(|u| u < th).unwrap_or(false) || self.pc_blacklisted(acc.pc) {
+                            self.prefetches_dropped += 1;
+                            continue;
+                        }
+                        if self.pf_inflight.len() > (1 << 16) {
+                            self.pf_inflight.clear();
+                        }
+                        self.pf_inflight.insert(cand, acc.pc);
+                    }
+                    let pf_meta = AccessMeta {
+                        line: cand,
+                        pc: acc.pc,
+                        kind: meta.kind,
+                        is_prefetch: true,
+                        predicted_utility: pred,
+                        next_use: None,
+                    };
+                    self.l2_fill_tracked(cand, &pf_meta, false);
+                }
+                self.pf_buf = buf;
+            }
+            lvl
+        };
+        self.total_latency += self.latency_of(lvl);
+        lvl
+    }
+
+    /// Average memory access latency (cycles) so far.
+    pub fn amat(&self) -> f64 {
+        if self.accesses == 0 {
+            return f64::NAN;
+        }
+        self.total_latency as f64 / self.accesses as f64
+    }
+
+    /// Record a completed prediction: cache it for future fills/filtering
+    /// and refresh the resident L2 line if present (ACPC feedback path).
+    pub fn update_utility(&mut self, line: u64, utility: f32) -> bool {
+        if self.utility.len() >= UTILITY_CAP {
+            self.utility.clear(); // cheap wholesale aging
+        }
+        self.utility.insert(line, utility);
+        self.l2.update_utility_line(line, utility)
+    }
+
+    /// Latest known prediction for a line (diagnostics/tests).
+    pub fn utility_of(&self, line: u64) -> Option<f32> {
+        self.utility.get(&line).copied()
+    }
+
+    pub fn prefetches_issued(&self) -> u64 {
+        self.prefetcher.issued()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Access, StreamKind};
+
+    fn acc(addr: u64, pc: u64) -> Access {
+        Access {
+            time: 0,
+            addr,
+            pc,
+            kind: StreamKind::Weight,
+            session: 0,
+            ctx_len: 0,
+            layer: 0,
+            is_write: false,
+        }
+    }
+
+    fn meta_for(a: &Access) -> AccessMeta {
+        AccessMeta::demand(a.line(), a.pc, a.kind)
+    }
+
+    fn small() -> HierarchyConfig {
+        let mut c = HierarchyConfig::scaled();
+        c.prefetcher = "none".into();
+        c
+    }
+
+    #[test]
+    fn miss_then_hits_climb_hierarchy() {
+        let mut h = Hierarchy::new(small(), "lru");
+        let a = acc(0x1000, 1);
+        assert_eq!(h.access(&a, &meta_for(&a)), ServiceLevel::Dram);
+        assert_eq!(h.access(&a, &meta_for(&a)), ServiceLevel::L1);
+        assert_eq!(h.l1.stats.demand_hits, 1);
+    }
+
+    #[test]
+    fn l1_evict_still_hits_l2() {
+        let mut h = Hierarchy::new(small(), "lru");
+        // L1 16KiB/8w → 32 sets. 9 lines in the same L1 set evict one,
+        // but L2 (512 sets) keeps them all.
+        let lines: Vec<u64> = (0..9).map(|i| (i * 32) << 6).collect();
+        for &l in &lines {
+            let a = acc(l, 2);
+            h.access(&a, &meta_for(&a));
+        }
+        let a0 = acc(lines[0], 2);
+        let lvl = h.access(&a0, &meta_for(&a0));
+        assert_eq!(lvl, ServiceLevel::L2, "evicted from L1 but resident in L2");
+    }
+
+    #[test]
+    fn latency_accumulates_and_amat_sane() {
+        let mut h = Hierarchy::new(small(), "lru");
+        let a = acc(0x2000, 3);
+        h.access(&a, &meta_for(&a)); // DRAM
+        h.access(&a, &meta_for(&a)); // L1
+        let dram = h.latency_of(ServiceLevel::Dram);
+        let l1 = h.latency_of(ServiceLevel::L1);
+        assert_eq!(h.total_latency, dram + l1);
+        assert!((h.amat() - (dram + l1) as f64 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefetcher_fills_l2() {
+        let mut cfg = small();
+        cfg.prefetcher = "nextline".into();
+        let mut h = Hierarchy::new(cfg, "lru");
+        let a = acc(0x4000, 4);
+        h.access(&a, &meta_for(&a)); // miss → prefetch lines +1,+2
+        assert!(h.l2.stats.prefetch_fills >= 1);
+        // The next line should now hit in L2 (useful prefetch).
+        let b = acc(0x4000 + 64, 4);
+        let lvl = h.access(&b, &meta_for(&b));
+        assert_eq!(lvl, ServiceLevel::L2);
+        assert_eq!(h.l2.stats.prefetch_useful, 1);
+    }
+
+    #[test]
+    fn policy_under_test_sits_at_l2() {
+        let h = Hierarchy::new(small(), "acpc");
+        assert_eq!(h.policy_name(), "acpc");
+        assert_eq!(h.l1.policy_name(), "lru");
+        assert_eq!(h.l3.policy_name(), "drrip");
+    }
+
+    #[test]
+    fn presets_exist() {
+        assert!(HierarchyConfig::by_name("scaled").is_some());
+        assert!(HierarchyConfig::by_name("epyc7763").is_some());
+        assert!(HierarchyConfig::by_name("x").is_none());
+    }
+}

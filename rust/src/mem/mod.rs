@@ -1,0 +1,12 @@
+//! Multi-level set-associative cache simulator — the substrate standing in
+//! for the paper's Gem5 + PyTorch cache emulator (DESIGN.md §3). Models the
+//! structures the paper's metrics need: per-level hit/miss accounting,
+//! prefetch-fill tracking (pollution), write-back traffic, and a latency
+//! model for AMAT / miss-penalty / throughput derivation.
+
+pub mod cache;
+pub mod hierarchy;
+pub mod prefetch;
+
+pub use cache::{Cache, CacheConfig, CacheStats, EvictedLine};
+pub use hierarchy::{Hierarchy, HierarchyConfig, LevelConfig, ServiceLevel};

@@ -1,0 +1,296 @@
+//! Hardware prefetcher models — the pollution *source* the paper controls.
+//!
+//! LLM inference streams defeat simple prefetchers: weight-tile scans are
+//! regular (stride succeeds), but embedding lookups and cross-session KV
+//! reads are effectively random, so next-line/stride prefetches there insert
+//! dead lines — exactly the pollution ACPC is built to suppress.
+
+use crate::util::rng::Xoshiro256;
+use crate::util::hash::FastMap;
+
+/// A prefetcher observes demand accesses at a cache level and proposes
+/// candidate lines to fill.
+pub trait Prefetcher: Send {
+    fn name(&self) -> &'static str;
+
+    /// `hit`: whether the observed demand access hit. Candidates are
+    /// returned into `out` (cleared by the caller).
+    fn observe(&mut self, pc: u64, line: u64, hit: bool, out: &mut Vec<u64>);
+
+    fn issued(&self) -> u64;
+}
+
+/// No prefetching (ablation baseline).
+pub struct NoPrefetch;
+
+impl Prefetcher for NoPrefetch {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn observe(&mut self, _pc: u64, _line: u64, _hit: bool, _out: &mut Vec<u64>) {}
+
+    fn issued(&self) -> u64 {
+        0
+    }
+}
+
+/// Next-N-line prefetcher: on a miss, fetch the following `degree` lines.
+pub struct NextLine {
+    degree: usize,
+    issued: u64,
+}
+
+impl NextLine {
+    pub fn new(degree: usize) -> Self {
+        Self { degree, issued: 0 }
+    }
+}
+
+impl Prefetcher for NextLine {
+    fn name(&self) -> &'static str {
+        "nextline"
+    }
+
+    fn observe(&mut self, _pc: u64, line: u64, hit: bool, out: &mut Vec<u64>) {
+        if !hit {
+            for d in 1..=self.degree as u64 {
+                out.push(line + d);
+                self.issued += 1;
+            }
+        }
+    }
+
+    fn issued(&self) -> u64 {
+        self.issued
+    }
+}
+
+/// PC-indexed stride prefetcher (classic RPT): learns a per-PC line stride,
+/// issues `degree` strided candidates once the stride is confirmed twice.
+pub struct Stride {
+    degree: usize,
+    table: FastMap<u64, StrideEntry>,
+    capacity: usize,
+    issued: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct StrideEntry {
+    last_line: u64,
+    stride: i64,
+    confidence: u8,
+}
+
+impl Stride {
+    pub fn new(degree: usize) -> Self {
+        Self { degree, table: FastMap::default(), capacity: 4096, issued: 0 }
+    }
+}
+
+impl Prefetcher for Stride {
+    fn name(&self) -> &'static str {
+        "stride"
+    }
+
+    fn observe(&mut self, pc: u64, line: u64, _hit: bool, out: &mut Vec<u64>) {
+        if self.table.len() >= self.capacity && !self.table.contains_key(&pc) {
+            self.table.clear(); // cheap bulk aging
+        }
+        let e = self.table.entry(pc).or_default();
+        if e.last_line != 0 {
+            let s = line as i64 - e.last_line as i64;
+            if s == e.stride && s != 0 {
+                e.confidence = (e.confidence + 1).min(3);
+            } else {
+                e.stride = s;
+                e.confidence = 0;
+            }
+        }
+        e.last_line = line;
+        if e.confidence >= 2 && e.stride != 0 {
+            let stride = e.stride;
+            for d in 1..=self.degree as i64 {
+                let cand = line as i64 + stride * d;
+                if cand > 0 {
+                    out.push(cand as u64);
+                    self.issued += 1;
+                }
+            }
+        }
+    }
+
+    fn issued(&self) -> u64 {
+        self.issued
+    }
+}
+
+/// Markov / correlation prefetcher: remembers "line B followed line A" pairs
+/// observed on misses and prefetches the recorded successor. Single-successor
+/// table with bulk aging (deterministic — HashMap iteration order would leak
+/// process-level nondeterminism into the simulation) — deliberately
+/// mispredicts on LLM streams whose successors are context-dependent (a
+/// pollution generator).
+pub struct Correlation {
+    table: FastMap<u64, u64>,
+    capacity: usize,
+    last_miss: u64,
+    issued: u64,
+    _rng: Xoshiro256,
+}
+
+impl Correlation {
+    pub fn new(capacity: usize, seed: u64) -> Self {
+        Self { table: FastMap::default(), capacity, last_miss: 0, issued: 0, _rng: Xoshiro256::new(seed) }
+    }
+}
+
+impl Prefetcher for Correlation {
+    fn name(&self) -> &'static str {
+        "correlation"
+    }
+
+    fn observe(&mut self, _pc: u64, line: u64, hit: bool, out: &mut Vec<u64>) {
+        if hit {
+            return;
+        }
+        if self.last_miss != 0 {
+            if self.table.len() >= self.capacity && !self.table.contains_key(&self.last_miss) {
+                self.table.clear(); // deterministic bulk aging
+            }
+            self.table.insert(self.last_miss, line);
+        }
+        if let Some(&succ) = self.table.get(&line) {
+            out.push(succ);
+            self.issued += 1;
+        }
+        self.last_miss = line;
+    }
+
+    fn issued(&self) -> u64 {
+        self.issued
+    }
+}
+
+/// Composite: union of sub-prefetcher candidates (deduplicated) — the
+/// "aggressive multi-engine" configuration used for Table 1, which creates
+/// realistic pollution pressure.
+pub struct Composite {
+    subs: Vec<Box<dyn Prefetcher>>,
+    scratch: Vec<u64>,
+}
+
+impl Composite {
+    pub fn new(subs: Vec<Box<dyn Prefetcher>>) -> Self {
+        Self { subs, scratch: Vec::with_capacity(8) }
+    }
+}
+
+impl Prefetcher for Composite {
+    fn name(&self) -> &'static str {
+        "composite"
+    }
+
+    fn observe(&mut self, pc: u64, line: u64, hit: bool, out: &mut Vec<u64>) {
+        self.scratch.clear();
+        for s in &mut self.subs {
+            s.observe(pc, line, hit, &mut self.scratch);
+        }
+        for &c in &self.scratch {
+            if !out.contains(&c) {
+                out.push(c);
+            }
+        }
+    }
+
+    fn issued(&self) -> u64 {
+        self.subs.iter().map(|s| s.issued()).sum()
+    }
+}
+
+/// Factory: `none | nextline | stride | correlation | composite`.
+pub fn make_prefetcher(name: &str, seed: u64) -> Option<Box<dyn Prefetcher>> {
+    let p: Box<dyn Prefetcher> = match name {
+        "none" => Box::new(NoPrefetch),
+        "nextline" => Box::new(NextLine::new(2)),
+        "stride" => Box::new(Stride::new(2)),
+        "correlation" => Box::new(Correlation::new(8192, seed)),
+        "composite" => Box::new(Composite::new(vec![
+            Box::new(NextLine::new(1)),
+            Box::new(Stride::new(2)),
+            Box::new(Correlation::new(4096, seed ^ 0xC0)),
+        ])),
+        _ => return None,
+    };
+    Some(p)
+}
+
+pub const PREFETCHER_NAMES: &[&str] = &["none", "nextline", "stride", "correlation", "composite"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nextline_on_miss_only() {
+        let mut p = NextLine::new(2);
+        let mut out = Vec::new();
+        p.observe(0, 100, true, &mut out);
+        assert!(out.is_empty());
+        p.observe(0, 100, false, &mut out);
+        assert_eq!(out, vec![101, 102]);
+        assert_eq!(p.issued(), 2);
+    }
+
+    #[test]
+    fn stride_learns_and_fires() {
+        let mut p = Stride::new(2);
+        let mut out = Vec::new();
+        for i in 0..5u64 {
+            out.clear();
+            p.observe(0x7, 1000 + i * 4, false, &mut out);
+        }
+        // stride 4 confirmed → predictions 4 and 8 ahead.
+        assert_eq!(out, vec![1016 + 4, 1016 + 8]);
+    }
+
+    #[test]
+    fn stride_resets_on_irregular() {
+        let mut p = Stride::new(1);
+        let mut out = Vec::new();
+        let mut seq = vec![10u64, 14, 18, 22]; // stride 4 learns
+        seq.extend([1000, 3, 777, 12]); // chaos
+        for l in seq {
+            out.clear();
+            p.observe(0x9, l, false, &mut out);
+        }
+        assert!(out.is_empty(), "no prediction after irregular stream: {out:?}");
+    }
+
+    #[test]
+    fn correlation_remembers_successor() {
+        let mut p = Correlation::new(64, 5);
+        let mut out = Vec::new();
+        p.observe(0, 7, false, &mut out); // last_miss = 7
+        p.observe(0, 9, false, &mut out); // table[7] = 9
+        out.clear();
+        p.observe(0, 7, false, &mut out); // sees 7 again → predicts 9
+        assert_eq!(out, vec![9]);
+    }
+
+    #[test]
+    fn composite_dedups() {
+        let mut p = Composite::new(vec![Box::new(NextLine::new(1)), Box::new(NextLine::new(2))]);
+        let mut out = Vec::new();
+        p.observe(0, 50, false, &mut out);
+        assert_eq!(out, vec![51, 52]);
+    }
+
+    #[test]
+    fn factory_names() {
+        for n in PREFETCHER_NAMES {
+            assert!(make_prefetcher(n, 1).is_some(), "{n}");
+        }
+        assert!(make_prefetcher("bogus", 1).is_none());
+    }
+}

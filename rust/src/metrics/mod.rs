@@ -1,0 +1,15 @@
+//! The paper's evaluation metrics (§4.3) and table rendering.
+//!
+//! - **CHR** — cache hit rate (we report the L2 demand hit rate, the level
+//!   the policy under test governs);
+//! - **PPR** — prefetch pollution ratio (dead prefetch evictions / fills);
+//! - **MPR** — L2 miss-penalty reduction relative to the LRU baseline;
+//! - **MAL** — average memory access latency (AMAT, cycles);
+//! - **TGT** — token generation throughput from the analytic timing model;
+//! - **EMU** — effective memory utilization (useful resident lines / occupied).
+
+pub mod report;
+mod throughput;
+
+pub use report::{render_table1, MetricsReport, Row};
+pub use throughput::{ThroughputModel, TOKENS_PER_SEC_CALIBRATION};

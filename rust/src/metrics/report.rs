@@ -1,0 +1,196 @@
+//! Per-run metrics assembly and paper-style table rendering.
+
+use crate::mem::Hierarchy;
+use crate::util::json::Json;
+
+/// One evaluated configuration = one row of Table 1.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub model: String,
+    /// Cache hit rate, % (L2 demand).
+    pub chr: f64,
+    /// Prefetch pollution ratio, %.
+    pub ppr: f64,
+    /// L2 miss-penalty reduction vs the LRU anchor, %.
+    pub mpr: f64,
+    /// Token generation throughput, tokens/s.
+    pub tgt: f64,
+    /// Final training loss (BCE); NaN for rows without a trained model —
+    /// the implicit-predictor loss is substituted where defined.
+    pub final_loss: f64,
+    /// Loss-curve stability descriptor (computed from curve variance).
+    pub stability: String,
+}
+
+/// Snapshot of everything the metrics layer needs from one simulation.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub name: String,
+    pub policy: String,
+    pub accesses: u64,
+    pub tokens: u64,
+    pub l1_hit_rate: f64,
+    pub l2_hit_rate: f64,
+    pub l3_hit_rate: f64,
+    pub l2_pollution_ratio: f64,
+    pub l2_prefetch_accuracy: f64,
+    pub l2_dead_prefetch_evictions: u64,
+    pub l2_demand_evicted_by_prefetch: u64,
+    pub l2_miss_cycles: u64,
+    pub amat: f64,
+    pub emu: f64,
+    pub prefetches_issued: u64,
+    pub total_latency: u64,
+}
+
+impl MetricsReport {
+    /// Harvest from a finished hierarchy. `emu` is sampled by the simulator
+    /// during the run (time-averaged useful fraction); pass the average.
+    pub fn from_hierarchy(name: &str, h: &Hierarchy, tokens: u64, emu: f64) -> Self {
+        let l2 = &h.l2.stats;
+        // L2 miss penalty: cycles spent below L2 on L2 demand misses.
+        let l3_hit_lat = h.latency_of(crate::mem::ServiceLevel::L3)
+            - h.latency_of(crate::mem::ServiceLevel::L2);
+        let dram_lat = h.latency_of(crate::mem::ServiceLevel::Dram)
+            - h.latency_of(crate::mem::ServiceLevel::L2);
+        let l3 = &h.l3.stats;
+        let l3_hits_for_l2_misses = l3.demand_hits;
+        let dram_fills = l3.demand_misses;
+        let l2_miss_cycles = l3_hits_for_l2_misses * l3_hit_lat + dram_fills * dram_lat;
+        Self {
+            name: name.to_string(),
+            policy: h.policy_name().to_string(),
+            accesses: h.accesses,
+            tokens,
+            l1_hit_rate: h.l1.stats.hit_rate(),
+            l2_hit_rate: l2.hit_rate(),
+            l3_hit_rate: h.l3.stats.hit_rate(),
+            l2_pollution_ratio: l2.pollution_ratio(),
+            l2_prefetch_accuracy: l2.prefetch_accuracy(),
+            l2_dead_prefetch_evictions: l2.dead_prefetch_evictions,
+            l2_demand_evicted_by_prefetch: l2.demand_evicted_by_prefetch,
+            l2_miss_cycles,
+            amat: h.amat(),
+            emu,
+            prefetches_issued: h.prefetches_issued(),
+            total_latency: h.total_latency,
+        }
+    }
+
+    /// Miss-penalty reduction (%) of `self` relative to `baseline`
+    /// (both normalized per demand access).
+    pub fn miss_penalty_reduction_vs(&self, baseline: &MetricsReport) -> f64 {
+        let mine = self.l2_miss_cycles as f64 / self.accesses.max(1) as f64;
+        let base = baseline.l2_miss_cycles as f64 / baseline.accesses.max(1) as f64;
+        if base <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - mine / base) * 100.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("accesses", Json::Num(self.accesses as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("l1_hit_rate", Json::Num(self.l1_hit_rate)),
+            ("l2_hit_rate", Json::Num(self.l2_hit_rate)),
+            ("l3_hit_rate", Json::Num(self.l3_hit_rate)),
+            ("l2_pollution_ratio", Json::Num(self.l2_pollution_ratio)),
+            ("l2_prefetch_accuracy", Json::Num(self.l2_prefetch_accuracy)),
+            ("l2_miss_cycles", Json::Num(self.l2_miss_cycles as f64)),
+            ("amat", Json::Num(self.amat)),
+            ("emu", Json::Num(self.emu)),
+            ("prefetches_issued", Json::Num(self.prefetches_issued as f64)),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<18} L2-CHR={:5.1}% PPR={:5.2}% AMAT={:6.2} EMU={:4.2} pf_acc={:4.2}",
+            self.policy,
+            self.l2_hit_rate * 100.0,
+            self.l2_pollution_ratio * 100.0,
+            self.amat,
+            self.emu,
+            self.l2_prefetch_accuracy
+        )
+    }
+}
+
+/// Render rows in the paper's Table 1 layout.
+pub fn render_table1(rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "| {:<18} | {:>8} | {:>8} | {:>8} | {:>12} | {:>10} | {:<13} |\n",
+        "Model", "CHR (%)", "PPR (%)", "MPR (%)", "TGT (tok/s)", "Final Loss", "Stability"
+    ));
+    out.push_str(&format!("|{}|\n", "-".repeat(102)));
+    for r in rows {
+        let loss = if r.final_loss.is_nan() { "—".to_string() } else { format!("{:.2}", r.final_loss) };
+        out.push_str(&format!(
+            "| {:<18} | {:>8.1} | {:>8.1} | {:>8.1} | {:>12.0} | {:>10} | {:<13} |\n",
+            r.model, r.chr, r.ppr, r.mpr, r.tgt, loss, r.stability
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{Hierarchy, HierarchyConfig};
+    use crate::policy::AccessMeta;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    fn run_small(policy: &str) -> MetricsReport {
+        let mut cfg = HierarchyConfig::scaled();
+        cfg.prefetcher = "nextline".into();
+        let mut h = Hierarchy::new(cfg, policy);
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(3));
+        for _ in 0..30_000 {
+            let a = gen.next_access();
+            let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+            h.access(&a, &meta);
+        }
+        MetricsReport::from_hierarchy("test", &h, gen.tokens_done(), 0.8)
+    }
+
+    #[test]
+    fn report_fields_sane() {
+        let r = run_small("lru");
+        assert!(r.l1_hit_rate > 0.0 && r.l1_hit_rate <= 1.0);
+        assert!(r.l2_hit_rate > 0.0 && r.l2_hit_rate <= 1.0);
+        assert!(r.amat >= 4.0);
+        assert!(r.l2_miss_cycles > 0);
+        assert!(r.tokens > 0);
+        let j = r.to_json();
+        assert!(j.get("l2_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn mpr_zero_against_self_and_signed_vs_other() {
+        let lru = run_small("lru");
+        assert!(lru.miss_penalty_reduction_vs(&lru).abs() < 1e-9);
+        let srrip = run_small("srrip");
+        let mpr = srrip.miss_penalty_reduction_vs(&lru);
+        assert!(mpr.is_finite());
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = vec![Row {
+            model: "LRU Baseline".into(),
+            chr: 71.4,
+            ppr: 18.7,
+            mpr: 0.0,
+            tgt: 187.0,
+            final_loss: 0.84,
+            stability: "Moderate".into(),
+        }];
+        let t = render_table1(&rows);
+        assert!(t.contains("LRU Baseline"));
+        assert!(t.contains("71.4"));
+    }
+}

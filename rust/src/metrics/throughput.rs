@@ -1,0 +1,89 @@
+//! Token-generation throughput (TGT) model.
+//!
+//! The paper reports tokens/s measured on its serving testbed. We can't
+//! measure wall-clock tokens on a simulator, so TGT is derived analytically
+//! (DESIGN.md §3): a token's latency is a fixed compute cost plus the sum of
+//! its memory access latencies from the simulated hierarchy,
+//!
+//! ```text
+//!   token_cycles = compute_cycles + Σ_access latency(access)
+//!   TGT          = clock_hz / mean(token_cycles)
+//! ```
+//!
+//! `compute_cycles` and `clock_hz` are calibrated once so the *LRU baseline*
+//! lands near the paper's 187 tokens/s; every other policy is then mapped
+//! through the identical model, so relative improvements are driven purely
+//! by simulated memory behaviour.
+
+/// Calibration constants (see EXPERIMENTS.md §Calibration).
+#[derive(Debug, Clone, Copy)]
+pub struct ThroughputModel {
+    /// Fixed compute cycles per generated token (MACs not overlapped with
+    /// memory stalls).
+    pub compute_cycles_per_token: f64,
+    /// Simulated core clock.
+    pub clock_hz: f64,
+}
+
+pub const TOKENS_PER_SEC_CALIBRATION: f64 = 187.0;
+
+impl Default for ThroughputModel {
+    fn default() -> Self {
+        // With the scaled hierarchy + gpt3ish trace, LRU produces roughly
+        // ~280 accesses/token at ~30 cycles AMAT ⇒ ~8.4k stall cycles.
+        // compute and clock chosen so LRU ≈ 187 tok/s (paper's Table 1).
+        Self { compute_cycles_per_token: 8_000.0, clock_hz: 3.0e6 }
+    }
+}
+
+impl ThroughputModel {
+    /// Tokens/s given measured per-token memory stalls.
+    pub fn tokens_per_sec(&self, mem_cycles_per_token: f64) -> f64 {
+        let token_cycles = self.compute_cycles_per_token + mem_cycles_per_token;
+        self.clock_hz / token_cycles
+    }
+
+    /// Mean memory cycles per token from totals.
+    pub fn mem_cycles_per_token(total_latency: u64, tokens: u64) -> f64 {
+        if tokens == 0 {
+            return f64::NAN;
+        }
+        total_latency as f64 / tokens as f64
+    }
+
+    /// Re-derive the calibration: what `clock_hz` makes `baseline_mem_cycles`
+    /// hit `TOKENS_PER_SEC_CALIBRATION`? Used by the table1 bench so the
+    /// anchor row always matches the paper even if trace knobs drift.
+    pub fn calibrated(baseline_mem_cycles_per_token: f64) -> Self {
+        let d = Self::default();
+        let token_cycles = d.compute_cycles_per_token + baseline_mem_cycles_per_token;
+        Self {
+            compute_cycles_per_token: d.compute_cycles_per_token,
+            clock_hz: TOKENS_PER_SEC_CALIBRATION * token_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lower_stalls_mean_higher_throughput() {
+        let m = ThroughputModel::default();
+        assert!(m.tokens_per_sec(5_000.0) > m.tokens_per_sec(10_000.0));
+    }
+
+    #[test]
+    fn calibration_hits_anchor() {
+        let m = ThroughputModel::calibrated(9_000.0);
+        let t = m.tokens_per_sec(9_000.0);
+        assert!((t - TOKENS_PER_SEC_CALIBRATION).abs() < 1e-6, "{t}");
+    }
+
+    #[test]
+    fn mem_cycles_per_token() {
+        assert!((ThroughputModel::mem_cycles_per_token(1000, 10) - 100.0).abs() < 1e-9);
+        assert!(ThroughputModel::mem_cycles_per_token(1000, 0).is_nan());
+    }
+}

@@ -1,0 +1,331 @@
+//! ACPC's Priority-Aware Replacement Module (PARM) — the paper's §3.3.
+//!
+//! Every resident line carries a dynamic priority (eq. 3):
+//!
+//! ```text
+//!     P_i = α·U_i + (1−α)·f_i
+//! ```
+//!
+//! where `U_i` is the TCN-predicted utility (delivered at fill time via
+//! `AccessMeta::predicted_utility` and refreshed asynchronously via
+//! `update_utility` as prediction batches complete), and `f_i` is a
+//! normalized access frequency (per-line saturating hit counter, normalized
+//! by `FREQ_SAT`, with periodic decay so stale popularity fades).
+//!
+//! Pollution suppression (§3.1/§3.3): on a miss, PARM evicts the
+//! lowest-priority line; new lines insert with priority proportional to
+//! predicted reuse, and *prefetch* fills are additionally demoted by the
+//! set's pollution pressure (fraction of resident lines that are
+//! never-referenced prefetches — the "cache occupancy" signal of eq. 3's
+//! surrounding text). A low-confidence prefetch therefore lands just above
+//! eviction and dies quickly unless promptly referenced, which is exactly
+//! the paper's mechanism for suppressing redundant prefetches.
+
+use super::{AccessMeta, Policy};
+
+/// Tunables for PARM (paper defaults: α = 0.7).
+#[derive(Debug, Clone, Copy)]
+pub struct ParmConfig {
+    /// Balance coefficient α in eq. 3.
+    pub alpha: f32,
+    /// Hits at which the frequency term saturates to 1.0.
+    pub freq_sat: u32,
+    /// Decay period (fills per set) after which frequencies are halved.
+    pub decay_period: u32,
+    /// Strength of the occupancy-pressure demotion for prefetch inserts.
+    pub occupancy_penalty: f32,
+    /// Neutral utility before the predictor has scored a line.
+    pub neutral_utility: f32,
+}
+
+impl Default for ParmConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.95,
+            freq_sat: 8,
+            decay_period: 32,
+            occupancy_penalty: 0.3,
+            neutral_utility: 0.5,
+        }
+    }
+}
+
+/// Re-reference countdown resolution (3 bits, like an extended RRIP).
+const MAX_RRPV: u8 = 7;
+
+pub struct AcpcParm {
+    assoc: usize,
+    cfg: ParmConfig,
+    utility: Vec<f32>,
+    hits: Vec<u32>,
+    /// RRIP-style re-reference prediction value per line. PARM "refines
+    /// LRU/RRIP" (§3.3): the backbone is RRPV aging (scan resistance +
+    /// recency), and the priority score P_i decides both the *insertion*
+    /// RRPV (quantized 1−P) and the tie-break among max-RRPV victims.
+    rrpv: Vec<u8>,
+    /// Unreferenced-prefetch flag per line (pollution pressure input).
+    dead_prefetch: Vec<bool>,
+    /// Fills since last decay, per set.
+    fills: Vec<u32>,
+    /// Externally-provided pollution pressure (EWMA from the cache wrapper);
+    /// per set.
+    pressure: Vec<f32>,
+    clock: u64,
+    stamp: Vec<u64>,
+}
+
+impl AcpcParm {
+    pub fn new(sets: usize, assoc: usize, cfg: ParmConfig) -> Self {
+        Self {
+            assoc,
+            cfg,
+            utility: vec![cfg.neutral_utility; sets * assoc],
+            hits: vec![0; sets * assoc],
+            rrpv: vec![MAX_RRPV; sets * assoc],
+            dead_prefetch: vec![false; sets * assoc],
+            fills: vec![0; sets],
+            pressure: vec![0.0; sets],
+            clock: 0,
+            stamp: vec![0; sets * assoc],
+        }
+    }
+
+    #[inline]
+    fn quantize(&self, set: usize, way: usize) -> u8 {
+        let p = self.priority(set, way).clamp(0.0, 1.0);
+        // High priority → near re-reference (low RRPV); insertions never get
+        // RRPV 7 outright (that is reserved for aged-out lines) unless the
+        // priority is rock-bottom.
+        ((1.0 - p) * (MAX_RRPV as f32 - 1.0)).round() as u8
+    }
+
+    /// Priority of a way (eq. 3). Public for tests and for the implicit-
+    /// predictor loss evaluation.
+    pub fn priority(&self, set: usize, way: usize) -> f32 {
+        let idx = set * self.assoc + way;
+        let f = (self.hits[idx] as f32 / self.cfg.freq_sat as f32).min(1.0);
+        self.cfg.alpha * self.utility[idx] + (1.0 - self.cfg.alpha) * f
+    }
+
+    fn decay_set(&mut self, set: usize) {
+        let base = set * self.assoc;
+        for w in 0..self.assoc {
+            self.hits[base + w] /= 2;
+        }
+    }
+
+    /// Measured fraction of this set's ways that hold never-referenced
+    /// prefetches.
+    fn dead_prefetch_frac(&self, set: usize) -> f32 {
+        let base = set * self.assoc;
+        let n = (0..self.assoc).filter(|&w| self.dead_prefetch[base + w]).count();
+        n as f32 / self.assoc as f32
+    }
+}
+
+impl Policy for AcpcParm {
+    fn name(&self) -> &'static str {
+        "acpc"
+    }
+
+    fn on_hit(&mut self, set: usize, way: usize, meta: &AccessMeta) {
+        let idx = set * self.assoc + way;
+        self.hits[idx] = self.hits[idx].saturating_add(1);
+        self.dead_prefetch[idx] = false;
+        self.clock += 1;
+        self.stamp[idx] = self.clock;
+        if let Some(u) = meta.predicted_utility {
+            self.utility[idx] = u;
+        }
+        // Near-immediate re-reference expected after a hit.
+        self.rrpv[idx] = 0;
+    }
+
+    fn on_fill(&mut self, set: usize, way: usize, meta: &AccessMeta) {
+        let idx = set * self.assoc + way;
+        // Periodic frequency decay keeps f_i a *recent* popularity signal.
+        self.fills[set] += 1;
+        if self.fills[set] >= self.cfg.decay_period {
+            self.fills[set] = 0;
+            self.decay_set(set);
+        }
+
+        let u = meta.predicted_utility.unwrap_or(self.cfg.neutral_utility);
+        // Pollution pressure: blend the measured dead-prefetch occupancy of
+        // this set with the cache-level EWMA hint.
+        let pressure = 0.5 * self.dead_prefetch_frac(set) + 0.5 * self.pressure[set];
+        let u = if meta.is_prefetch {
+            (u * (1.0 - self.cfg.occupancy_penalty * pressure)).max(0.0)
+        } else {
+            u
+        };
+        self.utility[idx] = u;
+        // Insertion grace for demand fills: without it, f_i = 0 makes every
+        // new line the instant victim (the classic LFU pathology on
+        // streaming workloads). Prefetch fills get no grace — they must
+        // earn residency via a demand hit (pollution suppression).
+        self.hits[idx] = if meta.is_prefetch { 0 } else { self.cfg.freq_sat / 2 };
+        self.dead_prefetch[idx] = meta.is_prefetch;
+        self.clock += 1;
+        self.stamp[idx] = self.clock;
+        // Insertion RRPV from the blended priority (eq. 3): confident-reuse
+        // lines insert near, predicted-dead prefetches insert at the brink.
+        self.rrpv[idx] = self.quantize(set, way);
+    }
+
+    fn victim(&mut self, set: usize) -> usize {
+        let base = set * self.assoc;
+        loop {
+            // All lines at max RRPV are candidates; the blended priority
+            // breaks the tie (lowest P evicted), then older stamp.
+            let mut best: Option<usize> = None;
+            let mut best_key = (f32::INFINITY, u64::MAX);
+            for w in 0..self.assoc {
+                if self.rrpv[base + w] >= MAX_RRPV {
+                    let key = (self.priority(set, w), self.stamp[base + w]);
+                    if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1) {
+                        best_key = key;
+                        best = Some(w);
+                    }
+                }
+            }
+            if let Some(w) = best {
+                return w;
+            }
+            for w in 0..self.assoc {
+                self.rrpv[base + w] += 1;
+            }
+        }
+    }
+
+    fn update_utility(&mut self, set: usize, way: usize, utility: f32) {
+        self.utility[set * self.assoc + way] = utility.clamp(0.0, 1.0);
+        // Re-quantize: a prediction downgrade (e.g. KV entry slid out of the
+        // attention window) pushes the line toward eviction immediately; an
+        // upgrade rescues it.
+        self.rrpv[set * self.assoc + way] = self.quantize(set, way);
+    }
+
+    fn occupancy_hint(&mut self, set: usize, frac_dead_prefetch: f64) {
+        // EWMA so a single noisy sample does not whipsaw insert priorities.
+        let p = &mut self.pressure[set];
+        *p = 0.75 * *p + 0.25 * frac_dead_prefetch as f32;
+    }
+
+    fn on_invalidate(&mut self, set: usize, way: usize) {
+        let idx = set * self.assoc + way;
+        self.utility[idx] = self.cfg.neutral_utility;
+        self.hits[idx] = 0;
+        self.rrpv[idx] = MAX_RRPV;
+        self.dead_prefetch[idx] = false;
+        self.stamp[idx] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::StreamKind;
+
+    fn meta_p(p: Option<f32>) -> AccessMeta {
+        let mut m = AccessMeta::demand(0, 0, StreamKind::KvRead);
+        m.predicted_utility = p;
+        m
+    }
+
+    fn pf_p(p: Option<f32>) -> AccessMeta {
+        let mut m = AccessMeta::prefetch(0, 0, StreamKind::Weight);
+        m.predicted_utility = p;
+        m
+    }
+
+    #[test]
+    fn priority_blends_utility_and_frequency() {
+        let cfg = ParmConfig { alpha: 0.5, ..Default::default() };
+        let mut p = AcpcParm::new(1, 2, cfg);
+        p.on_fill(0, 0, &meta_p(Some(1.0))); // U=1, grace f=0.5 → P=0.75
+        p.on_fill(0, 1, &meta_p(Some(0.0))); // U=0, grace f=0.5 → P=0.25
+        assert!((p.priority(0, 0) - 0.75).abs() < 1e-6);
+        assert!((p.priority(0, 1) - 0.25).abs() < 1e-6);
+        for _ in 0..8 {
+            p.on_hit(0, 1, &meta_p(None)); // f saturates → P=0.5
+        }
+        assert!((p.priority(0, 1) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn evicts_lowest_priority() {
+        let mut p = AcpcParm::new(1, 4, ParmConfig::default());
+        p.on_fill(0, 0, &meta_p(Some(0.9)));
+        p.on_fill(0, 1, &meta_p(Some(0.2)));
+        p.on_fill(0, 2, &meta_p(Some(0.7)));
+        p.on_fill(0, 3, &meta_p(Some(0.5)));
+        assert_eq!(p.victim(0), 1);
+        p.update_utility(0, 1, 0.95);
+        assert_ne!(p.victim(0), 1);
+    }
+
+    #[test]
+    fn prefetch_demoted_under_pressure() {
+        let mut p = AcpcParm::new(1, 4, ParmConfig::default());
+        // Build pollution pressure: dead prefetches resident + hint.
+        p.on_fill(0, 0, &pf_p(Some(0.4)));
+        p.on_fill(0, 1, &pf_p(Some(0.4)));
+        for _ in 0..8 {
+            p.occupancy_hint(0, 0.8);
+        }
+        // Same predicted utility: prefetch insert lands lower than demand.
+        p.on_fill(0, 2, &pf_p(Some(0.6)));
+        p.on_fill(0, 3, &meta_p(Some(0.6)));
+        assert!(
+            p.priority(0, 2) < p.priority(0, 3),
+            "prefetch {} vs demand {}",
+            p.priority(0, 2),
+            p.priority(0, 3)
+        );
+    }
+
+    #[test]
+    fn hit_clears_dead_prefetch_flag() {
+        let mut p = AcpcParm::new(1, 2, ParmConfig::default());
+        p.on_fill(0, 0, &pf_p(Some(0.5)));
+        assert!(p.dead_prefetch[0]);
+        p.on_hit(0, 0, &meta_p(None));
+        assert!(!p.dead_prefetch[0]);
+    }
+
+    #[test]
+    fn frequency_decays() {
+        let cfg = ParmConfig { decay_period: 4, ..Default::default() };
+        let mut p = AcpcParm::new(1, 2, cfg);
+        p.on_fill(0, 0, &meta_p(Some(0.5)));
+        for _ in 0..8 {
+            p.on_hit(0, 0, &meta_p(None));
+        }
+        let before = p.priority(0, 0);
+        // 4 fills into way 1 trigger a decay.
+        for _ in 0..4 {
+            p.on_fill(0, 1, &meta_p(Some(0.5)));
+        }
+        assert!(p.priority(0, 0) < before);
+    }
+
+    #[test]
+    fn alpha_extremes() {
+        // α=1: pure prediction — with equal recency, the low-utility line
+        // inserts deeper and ages out first.
+        let mut pred = AcpcParm::new(1, 2, ParmConfig { alpha: 1.0, ..Default::default() });
+        pred.on_fill(0, 0, &meta_p(Some(0.9)));
+        pred.on_fill(0, 1, &meta_p(Some(0.1)));
+        assert_eq!(pred.victim(0), 1, "alpha=1 follows prediction");
+
+        // α=0: pure frequency — predictions flipped, victim driven by f_i.
+        let mut freq = AcpcParm::new(1, 2, ParmConfig { alpha: 0.0, ..Default::default() });
+        freq.on_fill(0, 0, &meta_p(Some(0.9)));
+        freq.on_fill(0, 1, &meta_p(Some(0.1)));
+        for _ in 0..8 {
+            freq.on_hit(0, 1, &meta_p(None)); // way1 becomes frequent
+        }
+        assert_eq!(freq.victim(0), 0, "alpha=0 ignores prediction");
+    }
+}

@@ -1,0 +1,46 @@
+//! Random replacement (related work [3]) — the zero-state baseline.
+
+use super::{AccessMeta, Policy};
+use crate::util::rng::Xoshiro256;
+
+pub struct RandomPolicy {
+    assoc: usize,
+    rng: Xoshiro256,
+}
+
+impl RandomPolicy {
+    pub fn new(_sets: usize, assoc: usize, seed: u64) -> Self {
+        Self { assoc, rng: Xoshiro256::new(seed) }
+    }
+}
+
+impl Policy for RandomPolicy {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn on_hit(&mut self, _set: usize, _way: usize, _meta: &AccessMeta) {}
+
+    fn on_fill(&mut self, _set: usize, _way: usize, _meta: &AccessMeta) {}
+
+    fn victim(&mut self, _set: usize) -> usize {
+        self.rng.range_usize(0, self.assoc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_victims() {
+        let mut p = RandomPolicy::new(4, 8, 7);
+        let mut counts = [0usize; 8];
+        for _ in 0..8000 {
+            counts[p.victim(0)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 250.0, "counts {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Training dataset assembly: stream a trace through the [`FeatureExtractor`]
+//! and the labeler, materialize `(window × F)` sequences + labels, and split
+//! 70/15/15 (paper §4.1) with a seeded shuffle.
+
+use super::feature::{FeatureExtractor, GeometryHints, FEATURE_DIM};
+use super::labeler::{annotate, DEFAULT_HORIZON};
+use crate::trace::Access;
+use crate::util::rng::Xoshiro256;
+
+/// Materialized dataset: `x` is `[n, window, F]` row-major; `x_cur` is the
+/// last row of each sequence (`[n, F]`, the DNN baseline's input); `y` are
+/// the {0,1} labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub window: usize,
+    pub n: usize,
+    pub x: Vec<f32>,
+    pub x_cur: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+/// Index-based view of a train/val/test split.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl Dataset {
+    /// Build from a trace. `sample_every` keeps 1/k of accesses (the paper's
+    /// 2.3B records are profiled, not exhaustive) — it also decorrelates
+    /// consecutive samples.
+    pub fn build(
+        trace: &[Access],
+        window: usize,
+        geom: GeometryHints,
+        horizon: usize,
+        sample_every: usize,
+    ) -> Dataset {
+        let ann = annotate(trace, if horizon == 0 { DEFAULT_HORIZON } else { horizon });
+        let mut fx = FeatureExtractor::new(window, geom);
+        let mut seq = vec![0.0f32; window * FEATURE_DIM];
+        let mut x = Vec::new();
+        let mut x_cur = Vec::new();
+        let mut y = Vec::new();
+        let stride = sample_every.max(1);
+        for (i, a) in trace.iter().enumerate() {
+            fx.push(a, &mut seq);
+            if i % stride == 0 {
+                x.extend_from_slice(&seq);
+                x_cur.extend_from_slice(&seq[(window - 1) * FEATURE_DIM..]);
+                y.push(ann[i].label as u8 as f32);
+            }
+        }
+        let n = y.len();
+        Dataset { window, n, x, x_cur, y }
+    }
+
+    /// Seeded 70/15/15 split (paper §4.1).
+    pub fn split(&self, seed: u64) -> Split {
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        let mut rng = Xoshiro256::new(seed ^ 0x5EED);
+        rng.shuffle(&mut idx);
+        let n_train = self.n * 70 / 100;
+        let n_val = self.n * 15 / 100;
+        Split {
+            train: idx[..n_train].to_vec(),
+            val: idx[n_train..n_train + n_val].to_vec(),
+            test: idx[n_train + n_val..].to_vec(),
+        }
+    }
+
+    pub fn positive_rate(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        self.y.iter().sum::<f32>() as f64 / self.n as f64
+    }
+
+    /// Gather a batch of sequences into `[batch, window, F]`, padding by
+    /// repeating the last index (AOT shapes are fixed).
+    pub fn gather_seq(&self, idx: &[usize], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let row = self.window * FEATURE_DIM;
+        let mut x = Vec::with_capacity(batch * row);
+        let mut y = Vec::with_capacity(batch);
+        for bi in 0..batch {
+            let i = idx[bi.min(idx.len() - 1)];
+            x.extend_from_slice(&self.x[i * row..(i + 1) * row]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Gather current-feature rows into `[batch, F]` (DNN input).
+    pub fn gather_cur(&self, idx: &[usize], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(batch * FEATURE_DIM);
+        let mut y = Vec::with_capacity(batch);
+        for bi in 0..batch {
+            let i = idx[bi.min(idx.len() - 1)];
+            x.extend_from_slice(&self.x_cur[i * FEATURE_DIM..(i + 1) * FEATURE_DIM]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    fn build_small() -> Dataset {
+        let cfg = GeneratorConfig::tiny(11);
+        let geom = GeometryHints::from_generator(&cfg);
+        let trace = TraceGenerator::new(cfg).generate(30_000);
+        Dataset::build(&trace, 8, geom, 2048, 4)
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let ds = build_small();
+        assert_eq!(ds.x.len(), ds.n * 8 * FEATURE_DIM);
+        assert_eq!(ds.x_cur.len(), ds.n * FEATURE_DIM);
+        assert_eq!(ds.y.len(), ds.n);
+        assert!(ds.n >= 7000, "{}", ds.n);
+        let rate = ds.positive_rate();
+        assert!(rate > 0.1 && rate < 0.95, "{rate}");
+    }
+
+    #[test]
+    fn split_is_70_15_15_partition() {
+        let ds = build_small();
+        let sp = ds.split(9);
+        assert_eq!(sp.train.len() + sp.val.len() + sp.test.len(), ds.n);
+        let frac = sp.train.len() as f64 / ds.n as f64;
+        assert!((frac - 0.7).abs() < 0.01, "{frac}");
+        // Disjoint.
+        let mut all: Vec<usize> =
+            sp.train.iter().chain(&sp.val).chain(&sp.test).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), ds.n);
+        // Seed-deterministic.
+        let sp2 = ds.split(9);
+        assert_eq!(sp.train, sp2.train);
+    }
+
+    #[test]
+    fn x_cur_is_last_row_of_x() {
+        let ds = build_small();
+        let row = ds.window * FEATURE_DIM;
+        for i in (0..ds.n).step_by(97) {
+            let last = &ds.x[i * row + (ds.window - 1) * FEATURE_DIM..(i + 1) * row];
+            let cur = &ds.x_cur[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+            assert_eq!(last, cur, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn gather_pads_with_repeats() {
+        let ds = build_small();
+        let idx = vec![0usize, 1, 2];
+        let (x, y) = ds.gather_seq(&idx, 8);
+        assert_eq!(x.len(), 8 * ds.window * FEATURE_DIM);
+        assert_eq!(y.len(), 8);
+        // Padded rows repeat the last real sample.
+        let row = ds.window * FEATURE_DIM;
+        assert_eq!(x[2 * row..3 * row], x[7 * row..8 * row]);
+        let (xc, _) = ds.gather_cur(&idx, 8);
+        assert_eq!(xc.len(), 8 * FEATURE_DIM);
+    }
+}

@@ -1,0 +1,283 @@
+//! Per-access feature extraction — the runtime realization of the paper's
+//! record tuple (eq. 5): address tag, instruction type, temporal locality,
+//! historical reuse distance, context length — plus the engineered temporal
+//! and semantic features of §4.1 (inter-access interval, burst regularity,
+//! access periodicity, attention/layer locality, KV staleness).
+//!
+//! The extractor is *stateful*: for every cache line it maintains a bounded
+//! history of its recent feature vectors, which is exactly the `(T, F)`
+//! sequence the TCN consumes. The same extractor code feeds training-set
+//! construction and the online simulation, so train/serve skew is
+//! impossible by construction.
+
+use crate::trace::{region, Access, StreamKind};
+use crate::util::hash::FastMap;
+
+pub const FEATURE_DIM: usize = 12;
+
+/// Address-space geometry the extractor needs to derive the KV staleness
+/// feature (position-in-attention-window). Comes from the generator config;
+/// a deployment would obtain it from the serving runtime's allocator.
+#[derive(Debug, Clone, Copy)]
+pub struct GeometryHints {
+    pub kv_layer_bytes: u64,
+    pub kv_bytes_per_token: u64,
+    pub attn_window: u32,
+}
+
+impl GeometryHints {
+    pub fn from_generator(cfg: &crate::trace::GeneratorConfig) -> Self {
+        Self {
+            kv_layer_bytes: cfg.max_ctx as u64 * cfg.profile.kv_bytes_per_token,
+            kv_bytes_per_token: cfg.profile.kv_bytes_per_token,
+            attn_window: cfg.profile.attn_window,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct LineHist {
+    /// Ring of the last `window` feature vectors (row-major).
+    ring: Vec<f32>,
+    /// Number of vectors written (saturates at window).
+    filled: usize,
+    /// Ring head (next write slot).
+    head: usize,
+    last_time: u64,
+    last_gap: f64,
+    count: u32,
+    ewma_gap: f64,
+}
+
+/// Stateful extractor. `window` = TCN history length (from the manifest).
+pub struct FeatureExtractor {
+    window: usize,
+    geom: GeometryHints,
+    lines: FastMap<u64, LineHist>,
+    /// Bound on tracked lines; on overflow, stale entries are swept.
+    capacity: usize,
+    now: u64,
+}
+
+impl FeatureExtractor {
+    pub fn new(window: usize, geom: GeometryHints) -> Self {
+        Self { window, geom, lines: FastMap::default(), capacity: 1 << 17, now: 0 }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn tracked_lines(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// Compute the current access's feature vector, append it to the line's
+    /// history, and return the full `(window, FEATURE_DIM)` sequence
+    /// (zero-padded at the *front* for young lines) into `out`.
+    /// `out.len()` must be `window * FEATURE_DIM`.
+    pub fn push(&mut self, a: &Access, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.window * FEATURE_DIM);
+        self.now = a.time;
+        if self.lines.len() >= self.capacity {
+            self.sweep();
+        }
+        let feat = self.features_of(a);
+        let window = self.window;
+        let h = self.lines.entry(a.line()).or_insert_with(|| LineHist {
+            ring: vec![0.0; window * FEATURE_DIM],
+            filled: 0,
+            head: 0,
+            last_time: 0,
+            last_gap: 0.0,
+            count: 0,
+            ewma_gap: 0.0,
+        });
+        // Append to ring.
+        let base = h.head * FEATURE_DIM;
+        h.ring[base..base + FEATURE_DIM].copy_from_slice(&feat);
+        h.head = (h.head + 1) % window;
+        h.filled = (h.filled + 1).min(window);
+        // Update line dynamics.
+        let gap = if h.last_time == 0 { 0.0 } else { (a.time - h.last_time) as f64 };
+        h.ewma_gap = if h.count == 0 { gap } else { 0.7 * h.ewma_gap + 0.3 * gap };
+        h.last_gap = gap;
+        h.last_time = a.time;
+        h.count = h.count.saturating_add(1);
+
+        // Copy out the chronologically-ordered window, front-padded.
+        out.fill(0.0);
+        let pad = window - h.filled;
+        for i in 0..h.filled {
+            // Oldest-first: element i is ring slot (head - filled + i) mod w.
+            let slot = (h.head + window - h.filled + i) % window;
+            let src = slot * FEATURE_DIM;
+            let dst = (pad + i) * FEATURE_DIM;
+            out[dst..dst + FEATURE_DIM].copy_from_slice(&h.ring[src..src + FEATURE_DIM]);
+        }
+    }
+
+    /// The current-access feature vector only (DNN baseline input). Uses
+    /// line state *before* this access is applied — callers should use
+    /// `push` + take the last row instead when both are needed.
+    pub fn features_of(&self, a: &Access) -> [f32; FEATURE_DIM] {
+        let mut f = [0.0f32; FEATURE_DIM];
+        match a.kind {
+            StreamKind::Embedding => f[0] = 1.0,
+            StreamKind::KvRead => f[1] = 1.0,
+            StreamKind::KvWrite => f[2] = 1.0,
+            StreamKind::Weight => f[3] = 1.0,
+            StreamKind::Scratch => {}
+        }
+        let (gap, count, ewma, last_gap) = match self.lines.get(&a.line()) {
+            Some(h) => (
+                if h.last_time == 0 { 0.0 } else { (a.time - h.last_time) as f64 },
+                h.count as f64,
+                h.ewma_gap,
+                h.last_gap,
+            ),
+            None => (0.0, 0.0, 0.0, 0.0),
+        };
+        f[4] = (log2p1(gap) / 20.0) as f32; // temporal locality (reuse distance)
+        f[5] = (log2p1(count) / 16.0) as f32; // access frequency
+        f[6] = (a.ctx_len as f32 / 512.0).min(2.0); // context length S_i
+        f[7] = self.kv_staleness(a); // position vs attention window
+        f[8] = (log2p1((gap - last_gap).abs()) / 20.0) as f32; // periodicity / regularity
+        f[9] = (log2p1(ewma) / 20.0) as f32; // burst scale
+        f[10] = a.layer as f32 / 16.0; // layer locality
+        f[11] = a.is_write as u8 as f32;
+        f
+    }
+
+    /// For KV lines: how far behind the head of the context this entry sits,
+    /// in units of the attention window. > 1 ⇒ outside the window ⇒ likely
+    /// dead. 0 for non-KV lines.
+    fn kv_staleness(&self, a: &Access) -> f32 {
+        if region::of(a.addr) != region::of(region::KV) {
+            return 0.0;
+        }
+        let rel = (a.addr - region::KV) % self.geom.kv_layer_bytes;
+        let pos = (rel / self.geom.kv_bytes_per_token) as u32;
+        if a.ctx_len <= pos {
+            return 0.0;
+        }
+        let staleness = (a.ctx_len - pos) as f32 / self.geom.attn_window.max(1) as f32;
+        (staleness / 2.0).min(1.0)
+    }
+
+    /// Drop lines not touched in the most recent half of observed time.
+    fn sweep(&mut self) {
+        let horizon = self.now.saturating_sub(self.now / 2);
+        self.lines.retain(|_, h| h.last_time >= horizon);
+        // Pathological case: everything recent — drop arbitrary half.
+        if self.lines.len() >= self.capacity {
+            let mut i = 0usize;
+            self.lines.retain(|_, _| {
+                i += 1;
+                i % 2 == 0
+            });
+        }
+    }
+}
+
+fn log2p1(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    fn geom() -> GeometryHints {
+        GeometryHints::from_generator(&GeneratorConfig::tiny(1))
+    }
+
+    fn mk_access(time: u64, addr: u64, kind: StreamKind, ctx: u32) -> Access {
+        Access { time, addr, pc: 1, kind, session: 0, ctx_len: ctx, layer: 2, is_write: false }
+    }
+
+    #[test]
+    fn feature_vector_basics() {
+        let fx = FeatureExtractor::new(4, geom());
+        let a = mk_access(10, region::EMBED + 128, StreamKind::Embedding, 7);
+        let f = fx.features_of(&a);
+        assert_eq!(f[0], 1.0); // embedding one-hot
+        assert_eq!(f[1], 0.0);
+        assert!((f[6] - 7.0 / 512.0).abs() < 1e-6);
+        assert_eq!(f[11], 0.0);
+    }
+
+    #[test]
+    fn history_window_padding_and_order() {
+        let mut fx = FeatureExtractor::new(3, geom());
+        let mut out = vec![0.0; 3 * FEATURE_DIM];
+        let line = region::WEIGHT + 0x40;
+        // First touch: rows 0..2 padded, last row live.
+        fx.push(&mk_access(1, line, StreamKind::Weight, 0), &mut out);
+        assert!(out[..2 * FEATURE_DIM].iter().all(|&v| v == 0.0));
+        assert_eq!(out[2 * FEATURE_DIM + 3], 1.0); // weight one-hot in last row
+        // Three more touches: ring wraps, all rows populated.
+        for t in [5, 9, 13] {
+            fx.push(&mk_access(t, line, StreamKind::Weight, 0), &mut out);
+        }
+        for row in 0..3 {
+            assert_eq!(out[row * FEATURE_DIM + 3], 1.0, "row {row}");
+        }
+        // Chronological: gap feature (idx 4) of last row reflects gap of 4.
+        let g_last = out[2 * FEATURE_DIM + 4];
+        assert!(g_last > 0.0);
+    }
+
+    #[test]
+    fn kv_staleness_grows_out_of_window() {
+        let g = geom();
+        let fx = FeatureExtractor::new(2, g);
+        // KV line at position 0, context head far beyond the window.
+        let addr = region::KV; // slot 0, layer 0, pos 0
+        let fresh = mk_access(1, addr, StreamKind::KvRead, 4);
+        let stale = mk_access(2, addr, StreamKind::KvRead, g.attn_window * 3);
+        assert!(fx.features_of(&fresh)[7] < fx.features_of(&stale)[7]);
+        assert!(fx.features_of(&stale)[7] >= 1.0);
+    }
+
+    #[test]
+    fn frequency_feature_increases() {
+        let mut fx = FeatureExtractor::new(2, geom());
+        let mut out = vec![0.0; 2 * FEATURE_DIM];
+        let line = region::EMBED;
+        let f0 = fx.features_of(&mk_access(1, line, StreamKind::Embedding, 0))[5];
+        for t in 1..20 {
+            fx.push(&mk_access(t, line, StreamKind::Embedding, 0), &mut out);
+        }
+        let f1 = fx.features_of(&mk_access(21, line, StreamKind::Embedding, 0))[5];
+        assert!(f1 > f0);
+    }
+
+    #[test]
+    fn capacity_sweep_keeps_extractor_bounded() {
+        let mut fx = FeatureExtractor::new(2, geom());
+        fx.capacity = 1000;
+        let mut out = vec![0.0; 2 * FEATURE_DIM];
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(3));
+        for _ in 0..50_000 {
+            let a = gen.next_access();
+            fx.push(&a, &mut out);
+        }
+        assert!(fx.tracked_lines() <= 1000, "{}", fx.tracked_lines());
+    }
+
+    #[test]
+    fn all_features_bounded() {
+        let mut fx = FeatureExtractor::new(4, geom());
+        let mut out = vec![0.0; 4 * FEATURE_DIM];
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(9));
+        for _ in 0..20_000 {
+            let a = gen.next_access();
+            fx.push(&a, &mut out);
+            for (i, &v) in out.iter().enumerate() {
+                assert!((0.0..=2.5).contains(&v), "feature {} = {v}", i % FEATURE_DIM);
+            }
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Heuristic reuse predictor: a hand-tuned function of the current feature
+//! vector (frequency up, staleness down, scratch dead). Serves three roles:
+//! a no-artifacts fallback for tests, the `predictor=heuristic` ablation
+//! (how much of ACPC's win is the *learned* part?), and a sanity anchor —
+//! the TCN must beat it on held-out BCE.
+
+use super::feature::FEATURE_DIM;
+use super::ReusePredictor;
+
+pub struct HeuristicPredictor;
+
+impl HeuristicPredictor {
+    pub fn score(f: &[f32]) -> f32 {
+        debug_assert!(f.len() >= FEATURE_DIM);
+        let is_kv = f[1] + f[2];
+        let is_weight = f[3];
+        let freq = f[5];
+        let staleness = f[7]; // 0.5 = at the attention-window boundary
+        let is_scratch = 1.0 - (f[0] + f[1] + f[2] + f[3]).min(1.0);
+        // In-window KV entries are hot regardless of per-line frequency
+        // (the window slides over them); beyond the window they are dead.
+        let in_window = (1.0 - 2.0 * staleness).clamp(0.0, 1.0);
+        let mut p = 0.2 + 0.7 * freq + 0.5 * is_weight + 0.55 * is_kv * in_window;
+        p -= 0.9 * staleness * is_kv;
+        p -= 0.5 * is_scratch;
+        p.clamp(0.01, 0.99)
+    }
+}
+
+impl ReusePredictor for HeuristicPredictor {
+    fn name(&self) -> String {
+        "heuristic".into()
+    }
+
+    fn window(&self) -> usize {
+        1
+    }
+
+    fn predict(&mut self, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(x.len(), n * FEATURE_DIM);
+        (0..n).map(|i| Self::score(&x[i * FEATURE_DIM..(i + 1) * FEATURE_DIM])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_obvious_cases() {
+        let mut hot_weight = [0.0f32; FEATURE_DIM];
+        hot_weight[3] = 1.0; // weight
+        hot_weight[5] = 0.6; // frequent
+        let mut stale_kv = [0.0f32; FEATURE_DIM];
+        stale_kv[1] = 1.0; // kv read
+        stale_kv[7] = 1.0; // way out of window
+        let mut scratch = [0.0f32; FEATURE_DIM];
+        scratch[11] = 1.0;
+        let mut p = HeuristicPredictor;
+        let probs = p.predict(
+            &[hot_weight, stale_kv, scratch].concat(),
+            3,
+        );
+        assert!(probs[0] > probs[1], "{probs:?}");
+        assert!(probs[0] > probs[2], "{probs:?}");
+        for &x in &probs {
+            assert!((0.0..=1.0).contains(&x));
+        }
+    }
+}

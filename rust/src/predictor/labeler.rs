@@ -1,0 +1,104 @@
+//! Ground-truth reuse labeling (the paper's `L_i ∈ {0,1}` — eq. 5): a
+//! backward pass over the trace annotates every access with (a) whether its
+//! line is touched again within the next `horizon` accesses (the supervised
+//! label) and (b) the absolute index of that next touch (`next_use`, feeding
+//! the Belady oracle).
+
+use crate::trace::Access;
+use crate::util::hash::FastMap;
+
+/// Default forward window: "reused within the next prediction window".
+pub const DEFAULT_HORIZON: usize = 4096;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Annotation {
+    /// Reused within `horizon` future accesses?
+    pub label: bool,
+    /// Index (into the trace) of the next access to the same line, if any.
+    pub next_use: Option<u64>,
+}
+
+/// Annotate every access. O(n) backward sweep with a line → next-index map.
+pub fn annotate(trace: &[Access], horizon: usize) -> Vec<Annotation> {
+    let mut next: FastMap<u64, usize> = FastMap::default();
+    let mut out = vec![Annotation { label: false, next_use: None }; trace.len()];
+    for i in (0..trace.len()).rev() {
+        let line = trace[i].line();
+        let nu = next.get(&line).copied();
+        out[i] = Annotation {
+            label: matches!(nu, Some(j) if j - i <= horizon),
+            next_use: nu.map(|j| j as u64),
+        };
+        next.insert(line, i);
+    }
+    out
+}
+
+/// Label base rate — used by tests and dataset balance checks.
+pub fn positive_rate(ann: &[Annotation]) -> f64 {
+    if ann.is_empty() {
+        return f64::NAN;
+    }
+    ann.iter().filter(|a| a.label).count() as f64 / ann.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{GeneratorConfig, StreamKind, TraceGenerator};
+
+    fn acc(time: u64, addr: u64) -> Access {
+        Access {
+            time,
+            addr,
+            pc: 0,
+            kind: StreamKind::Weight,
+            session: 0,
+            ctx_len: 0,
+            layer: 0,
+            is_write: false,
+        }
+    }
+
+    #[test]
+    fn labels_within_horizon() {
+        // lines: A B A C B ... horizon 2: A@0 reused at 2 (≤2) → true;
+        // B@1 reused at 4 (gap 3 > 2) → false.
+        let trace =
+            vec![acc(0, 0), acc(1, 64), acc(2, 0), acc(3, 128), acc(4, 64)];
+        let ann = annotate(&trace, 2);
+        assert!(ann[0].label);
+        assert!(!ann[1].label);
+        assert!(!ann[2].label, "A never reused after idx 2");
+        assert_eq!(ann[0].next_use, Some(2));
+        assert_eq!(ann[1].next_use, Some(4));
+        assert_eq!(ann[4].next_use, None);
+    }
+
+    #[test]
+    fn horizon_extremes() {
+        let trace = vec![acc(0, 0), acc(1, 64), acc(2, 0)];
+        let zero = annotate(&trace, 0);
+        assert!(zero.iter().all(|a| !a.label));
+        let inf = annotate(&trace, usize::MAX);
+        assert!(inf[0].label);
+        assert!(!inf[1].label);
+    }
+
+    #[test]
+    fn generated_trace_has_mixed_labels() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(5)).generate(50_000);
+        let ann = annotate(&trace, DEFAULT_HORIZON);
+        let rate = positive_rate(&ann);
+        // LLM traces must contain both hot reuse and dead lines — the whole
+        // premise of pollution control.
+        assert!(rate > 0.2 && rate < 0.95, "positive rate {rate}");
+        // next_use is consistent: trace[next_use] touches the same line.
+        for (i, a) in ann.iter().enumerate().take(1000) {
+            if let Some(j) = a.next_use {
+                assert_eq!(trace[j as usize].line(), trace[i].line());
+                assert!(j as usize > i);
+            }
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Reuse prediction pipeline: per-access feature extraction (the paper's
+//! eq. 5 tuple), forward-window reuse labeling, dataset assembly, and the
+//! runtime wrappers that execute the AOT-compiled TCN / DNN predictors.
+
+pub mod dataset;
+pub mod feature;
+pub mod heuristic;
+pub mod labeler;
+pub mod model;
+
+pub use dataset::{Dataset, Split};
+pub use feature::{FeatureExtractor, GeometryHints, FEATURE_DIM};
+pub use heuristic::HeuristicPredictor;
+pub use labeler::{annotate, Annotation};
+pub use model::ModelRuntime;
+
+/// A batched reuse predictor: maps per-line feature sequences to reuse
+/// probabilities in [0,1]. `window() == 1` means the model consumes only the
+/// current feature vector (the DNN baseline).
+///
+/// Deliberately *not* `Send`: PJRT executables hold thread-affine handles,
+/// so learned predictors are constructed inside the thread that runs them
+/// (see `coordinator::server::serve`'s factory parameter).
+pub trait ReusePredictor {
+    fn name(&self) -> String;
+
+    fn window(&self) -> usize;
+
+    /// `x` is row-major `[n, window(), FEATURE_DIM]` (or `[n, FEATURE_DIM]`
+    /// when `window() == 1`). Returns `n` probabilities.
+    fn predict(&mut self, x: &[f32], n: usize) -> Vec<f32>;
+}
+
+/// Concrete predictor dispatch for the simulator/coordinator: keeps the
+/// learned runtime accessible for the online-learning feedback path (which
+/// needs `train_step`, not just `predict`).
+pub enum PredictorBox {
+    None,
+    Heuristic(HeuristicPredictor),
+    Model(Box<ModelRuntime>),
+}
+
+impl PredictorBox {
+    pub fn is_some(&self) -> bool {
+        !matches!(self, PredictorBox::None)
+    }
+
+    pub fn window(&self) -> usize {
+        match self {
+            PredictorBox::None => 1,
+            PredictorBox::Heuristic(p) => p.window(),
+            PredictorBox::Model(m) => m.window(),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PredictorBox::None => "none".into(),
+            PredictorBox::Heuristic(p) => p.name(),
+            PredictorBox::Model(m) => ReusePredictor::name(&**m),
+        }
+    }
+
+    pub fn predict(&mut self, x: &[f32], n: usize) -> Vec<f32> {
+        match self {
+            PredictorBox::None => vec![0.5; n],
+            PredictorBox::Heuristic(p) => p.predict(x, n),
+            PredictorBox::Model(m) => m.predict(x, n),
+        }
+    }
+
+    /// Online-learning hook; `None` for non-trainable predictors.
+    pub fn model_mut(&mut self) -> Option<&mut ModelRuntime> {
+        match self {
+            PredictorBox::Model(m) => Some(m),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Runtime wrapper around one AOT-compiled predictor (TCN or DNN): owns the
+//! compiled infer/train/eval executables plus the parameter store, and
+//! implements [`ReusePredictor`] for the simulator/coordinator.
+
+use super::feature::FEATURE_DIM;
+use super::ReusePredictor;
+use crate::runtime::{Engine, Executable, Manifest, ModelManifest, ParamStore, Tensor};
+use anyhow::Result;
+
+pub struct ModelRuntime {
+    pub mm: ModelManifest,
+    pub store: ParamStore,
+    infer: Executable,
+    train: Executable,
+    eval: Executable,
+    /// Inference batch (from the manifest; AOT shape is fixed).
+    pub infer_batch: usize,
+    /// Total predictions served (telemetry).
+    pub predictions: u64,
+    /// Train steps executed.
+    pub train_steps: u64,
+}
+
+impl ModelRuntime {
+    pub fn load(engine: &Engine, manifest: &Manifest, model: &str) -> Result<ModelRuntime> {
+        let mm = manifest.model(model)?.clone();
+        let infer = engine.load_hlo(&manifest.hlo_path(&mm.infer.hlo))?;
+        let train = engine.load_hlo(&manifest.hlo_path(&mm.train.hlo))?;
+        let eval = engine.load_hlo(&manifest.hlo_path(&mm.eval.hlo))?;
+        let store = ParamStore::load(manifest, model)?;
+        let infer_batch = mm.infer.batch;
+        Ok(ModelRuntime {
+            mm,
+            store,
+            infer,
+            train,
+            eval,
+            infer_batch,
+            predictions: 0,
+            train_steps: 0,
+        })
+    }
+
+    /// Input row width: window*F for sequence models, F for the DNN.
+    pub fn row_elems(&self) -> usize {
+        if self.mm.kind == "tcn" {
+            self.mm.window * FEATURE_DIM
+        } else {
+            FEATURE_DIM
+        }
+    }
+
+    fn x_shape(&self, batch: usize) -> Vec<usize> {
+        if self.mm.kind == "tcn" {
+            vec![batch, self.mm.window, FEATURE_DIM]
+        } else {
+            vec![batch, FEATURE_DIM]
+        }
+    }
+
+    /// One Adam step on a `[train_batch]` batch; returns the loss.
+    pub fn train_step(&mut self, x: Vec<f32>, y: Vec<f32>) -> Result<f32> {
+        let b = self.mm.train.batch;
+        assert_eq!(x.len(), b * self.row_elems());
+        assert_eq!(y.len(), b);
+        let xt = Tensor::new(self.x_shape(b), x);
+        let yt = Tensor::new(vec![b], y);
+        let inputs = self.store.train_inputs(xt, yt);
+        let out = self.train.run(&inputs)?;
+        self.train_steps += 1;
+        self.store.absorb_train_output(out)
+    }
+
+    /// Evaluation loss (no dropout) on a `[eval_batch]` batch.
+    pub fn eval_loss(&self, x: Vec<f32>, y: Vec<f32>) -> Result<f32> {
+        let b = self.mm.eval.batch;
+        assert_eq!(x.len(), b * self.row_elems());
+        let xt = Tensor::new(self.x_shape(b), x);
+        let yt = Tensor::new(vec![b], y);
+        let out = self.eval.run(&self.store.eval_inputs(xt, yt))?;
+        Ok(out[0].data[0])
+    }
+
+    /// Raw batched inference at the fixed AOT batch size.
+    fn infer_fixed(&mut self, x: Vec<f32>) -> Result<Vec<f32>> {
+        let b = self.infer_batch;
+        let xt = Tensor::new(self.x_shape(b), x);
+        let out = self.infer.run(&self.store.infer_inputs(xt))?;
+        Ok(out[0].data.clone())
+    }
+}
+
+impl ReusePredictor for ModelRuntime {
+    fn name(&self) -> String {
+        self.mm.name.clone()
+    }
+
+    fn window(&self) -> usize {
+        if self.mm.kind == "tcn" {
+            self.mm.window
+        } else {
+            1
+        }
+    }
+
+    /// Arbitrary-n prediction: chunks into the fixed AOT batch, zero-padding
+    /// the tail. Panics on malformed input length (programmer error).
+    fn predict(&mut self, x: &[f32], n: usize) -> Vec<f32> {
+        let row = self.row_elems();
+        assert_eq!(x.len(), n * row, "predict input length");
+        let b = self.infer_batch;
+        let mut out = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(b);
+            let mut chunk = vec![0.0f32; b * row];
+            chunk[..take * row].copy_from_slice(&x[i * row..(i + take) * row]);
+            let probs = self.infer_fixed(chunk).expect("inference failed");
+            out.extend_from_slice(&probs[..take]);
+            i += take;
+        }
+        self.predictions += n as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load_tcn() -> Option<ModelRuntime> {
+        let dir = crate::runtime::artifacts_dir()?;
+        let manifest = Manifest::load(&dir).ok()?;
+        let engine = Engine::cpu().ok()?;
+        ModelRuntime::load(&engine, &manifest, "tcn").ok()
+    }
+
+    #[test]
+    fn predict_chunks_and_pads() {
+        let Some(mut rt) = load_tcn() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let row = rt.row_elems();
+        // n = 1.5 × batch forces a padded tail chunk.
+        let n = rt.infer_batch * 3 / 2;
+        let x = vec![0.1f32; n * row];
+        let probs = rt.predict(&x, n);
+        assert_eq!(probs.len(), n);
+        for &p in &probs {
+            assert!((0.0..=1.0).contains(&p));
+        }
+        // All-identical inputs ⇒ all-identical outputs (batch-position
+        // independence of the lowered model).
+        let spread = probs.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+            - probs.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(spread < 1e-5, "spread {spread}");
+    }
+
+    #[test]
+    fn train_step_runs_and_loss_finite() {
+        let Some(mut rt) = load_tcn() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let b = rt.mm.train.batch;
+        let row = rt.row_elems();
+        let mut x = vec![0.0f32; b * row];
+        // Make labels learnable: label 1 iff feature[4] of last step > 0.5.
+        let mut y = vec![0.0f32; b];
+        for i in 0..b {
+            let v = if i % 2 == 0 { 0.9 } else { 0.1 };
+            x[i * row + row - FEATURE_DIM + 4] = v;
+            y[i] = (v > 0.5) as u8 as f32;
+        }
+        let l0 = rt.train_step(x.clone(), y.clone()).unwrap();
+        assert!(l0.is_finite());
+        let mut last = l0;
+        for _ in 0..10 {
+            last = rt.train_step(x.clone(), y.clone()).unwrap();
+        }
+        assert!(last <= l0 + 1e-3, "loss should not explode: {l0} -> {last}");
+        assert_eq!(rt.train_steps, 11);
+    }
+}

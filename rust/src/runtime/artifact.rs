@@ -1,0 +1,191 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` and the
+//! rust runtime. Field names/ordering must stay in lock-step with
+//! `python/compile/aot.py::lower_model`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered entry point (infer / train / eval).
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub hlo: String,
+    pub batch: usize,
+}
+
+/// One parameter tensor's name + shape (ordering = binary layout).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model (tcn, tcn_flat, tcn_short, dnn).
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    /// "tcn" (sequence input B,T,F) or "dnn" (current features B,F).
+    pub kind: String,
+    pub window: usize,
+    pub feature_dim: usize,
+    pub dilations: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub params_bin: String,
+    pub infer: EntryPoint,
+    pub train: EntryPoint,
+    pub eval: EntryPoint,
+    pub n_params: usize,
+}
+
+impl ModelManifest {
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+/// The whole bundle.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub adam_lr: f64,
+    pub dropout_p: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let version = j.req("version").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let adam = j.get("adam").ok_or_else(|| anyhow!("missing adam"))?;
+        let adam_lr = adam.get("lr").and_then(|v| v.as_f64()).unwrap_or(1e-4);
+        let dropout_p = j.get("dropout_p").and_then(|v| v.as_f64()).unwrap_or(0.3);
+
+        let models_j = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("missing models object"))?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in models_j {
+            models.insert(name.clone(), Self::parse_model(name, mj)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, adam_lr, dropout_p })
+    }
+
+    fn parse_model(name: &str, j: &Json) -> Result<ModelManifest> {
+        let entry = |key: &str| -> Result<EntryPoint> {
+            let e = j.get(key).ok_or_else(|| anyhow!("model {name}: missing {key}"))?;
+            Ok(EntryPoint {
+                hlo: e
+                    .get("hlo")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("{name}.{key}.hlo"))?
+                    .to_string(),
+                batch: e.get("batch").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("{name}.{key}.batch"))?,
+            })
+        };
+        let params_j = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("model {name}: params"))?;
+        let mut params = Vec::new();
+        for p in params_j {
+            params.push(ParamSpec {
+                name: p
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("param name"))?
+                    .to_string(),
+                shape: p.usize_array("shape").map_err(|e| anyhow!("param shape: {e}"))?,
+            });
+        }
+        let train = entry("train")?;
+        let n_params = j
+            .get("train")
+            .and_then(|t| t.get("n_params"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(params.len());
+        if n_params != params.len() {
+            bail!("model {name}: n_params {} != params len {}", n_params, params.len());
+        }
+        Ok(ModelManifest {
+            name: name.to_string(),
+            kind: j
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("{name}.kind"))?
+                .to_string(),
+            window: j.get("window").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("{name}.window"))?,
+            feature_dim: j
+                .get("feature_dim")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("{name}.feature_dim"))?,
+            dilations: j.usize_array("dilations").unwrap_or_default(),
+            params,
+            params_bin: j
+                .get("params_bin")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("{name}.params_bin"))?
+                .to_string(),
+            infer: entry("infer")?,
+            train,
+            eval: entry("eval")?,
+            n_params,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let Some(dir) = crate::runtime::artifacts_dir() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("tcn"), "models: {:?}", m.models.keys());
+        let tcn = m.model("tcn").unwrap();
+        assert_eq!(tcn.kind, "tcn");
+        assert_eq!(tcn.params.len(), 10);
+        assert_eq!(tcn.n_params, 10);
+        assert!(tcn.window >= 8);
+        assert_eq!(tcn.dilations, vec![1, 2, 4]);
+        // params bin size must equal total elems * 4 bytes.
+        let bin = dir.join(&tcn.params_bin);
+        let len = std::fs::metadata(bin).unwrap().len() as usize;
+        assert_eq!(len, tcn.total_param_elems() * 4);
+        let dnn = m.model("dnn").unwrap();
+        assert_eq!(dnn.kind, "dnn");
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("acpc_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 99, "models": {}}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the simulation / serving
+//! hot path. Python never runs here — the HLO text + params binary are the
+//! only interface (see `artifacts/manifest.json`).
+
+mod artifact;
+mod engine;
+mod params;
+mod tensor;
+
+pub use artifact::{EntryPoint, Manifest, ModelManifest, ParamSpec};
+pub use engine::{Engine, Executable};
+pub use params::ParamStore;
+pub use tensor::Tensor;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$ACPC_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walks up from cwd so tests/benches work
+/// from any target dir).
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("ACPC_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// True when the AOT bundle is present (integration tests skip otherwise
+/// with a loud message rather than failing).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().is_some()
+}
+
+/// Convenience: manifest path inside the artifacts dir.
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest.json")
+}

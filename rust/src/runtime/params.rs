@@ -1,0 +1,239 @@
+//! Parameter store: loads `params_<model>.bin` (f32 LE, manifest order),
+//! tracks Adam state, and checkpoints to disk so trained predictors can be
+//! reused across runs (`acpc train --save`).
+
+use super::artifact::{Manifest, ModelManifest};
+use super::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Model parameters + optimizer state, in manifest order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub model: String,
+    params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// Adam step count (f32 to match the train-step scalar input).
+    pub step: f32,
+}
+
+impl ParamStore {
+    /// Load initial parameters from the AOT bundle.
+    pub fn load(manifest: &Manifest, model: &str) -> Result<ParamStore> {
+        let mm = manifest.model(model)?;
+        let path = manifest.dir.join(&mm.params_bin);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        Self::from_bytes(mm, &bytes)
+    }
+
+    pub fn from_bytes(mm: &ModelManifest, bytes: &[u8]) -> Result<ParamStore> {
+        let want = mm.total_param_elems() * 4;
+        if bytes.len() != want {
+            bail!("params bin for {}: {} bytes, expected {want}", mm.name, bytes.len());
+        }
+        let mut params = Vec::with_capacity(mm.params.len());
+        let mut off = 0;
+        for spec in &mm.params {
+            let n = spec.numel();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + i * 4..off + i * 4 + 4];
+                data.push(f32::from_le_bytes(b.try_into().unwrap()));
+            }
+            off += n * 4;
+            params.push(Tensor::new(spec.shape.clone(), data));
+        }
+        let m = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let v = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        Ok(ParamStore { model: mm.name.clone(), params, m, v, step: 0.0 })
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    /// Replace params + Adam state from a train-step output
+    /// (layout: params' ++ m' ++ v' ++ loss).
+    pub fn absorb_train_output(&mut self, outputs: Vec<Tensor>) -> Result<f32> {
+        let n = self.params.len();
+        if outputs.len() != 3 * n + 1 {
+            bail!("train output arity {} != {}", outputs.len(), 3 * n + 1);
+        }
+        let mut it = outputs.into_iter();
+        for p in self.params.iter_mut() {
+            *p = it.next().unwrap();
+        }
+        for m in self.m.iter_mut() {
+            *m = it.next().unwrap();
+        }
+        for v in self.v.iter_mut() {
+            *v = it.next().unwrap();
+        }
+        let loss = it.next().unwrap();
+        self.step += 1.0;
+        Ok(loss.data[0])
+    }
+
+    /// Assemble the train-step input list: params ++ m ++ v ++ step ++ x ++ y.
+    pub fn train_inputs(&self, x: Tensor, y: Tensor) -> Vec<Tensor> {
+        let mut v: Vec<Tensor> = Vec::with_capacity(3 * self.params.len() + 3);
+        v.extend(self.params.iter().cloned());
+        v.extend(self.m.iter().cloned());
+        v.extend(self.v.iter().cloned());
+        v.push(Tensor::scalar(self.step));
+        v.push(x);
+        v.push(y);
+        v
+    }
+
+    /// Inference inputs: params ++ x.
+    pub fn infer_inputs(&self, x: Tensor) -> Vec<Tensor> {
+        let mut v = self.params.clone();
+        v.push(x);
+        v
+    }
+
+    /// Eval inputs: params ++ x ++ y.
+    pub fn eval_inputs(&self, x: Tensor, y: Tensor) -> Vec<Tensor> {
+        let mut v = self.params.clone();
+        v.push(x);
+        v.push(y);
+        v
+    }
+
+    // ---- checkpointing ----------------------------------------------------
+
+    const MAGIC: u64 = 0x4143_5043_434B_5031; // "ACPCCKP1"
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(&Self::MAGIC.to_le_bytes())?;
+        w.write_all(&(self.step as f64).to_le_bytes())?;
+        w.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        for group in [&self.params, &self.m, &self.v] {
+            for t in group.iter() {
+                for &x in &t.data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Restore params (+Adam state) from a checkpoint; shapes come from the
+    /// manifest, so the checkpoint must match the model.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = std::io::BufReader::new(f);
+        let mut hdr = [0u8; 24];
+        r.read_exact(&mut hdr)?;
+        if u64::from_le_bytes(hdr[0..8].try_into().unwrap()) != Self::MAGIC {
+            bail!("not an acpc checkpoint");
+        }
+        let step = f64::from_le_bytes(hdr[8..16].try_into().unwrap()) as f32;
+        let n = u64::from_le_bytes(hdr[16..24].try_into().unwrap()) as usize;
+        if n != self.params.len() {
+            bail!("checkpoint has {n} tensors, model has {}", self.params.len());
+        }
+        // Borrow-friendly: collect shapes then read groups sequentially.
+        for group_idx in 0..3 {
+            for ti in 0..n {
+                let len = self.params[ti].len();
+                let mut buf = vec![0u8; len * 4];
+                r.read_exact(&mut buf)?;
+                let data: Vec<f32> = buf
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let tgt = match group_idx {
+                    0 => &mut self.params[ti],
+                    1 => &mut self.m[ti],
+                    _ => &mut self.v[ti],
+                };
+                tgt.data = data;
+            }
+        }
+        self.step = step;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{EntryPoint, ParamSpec};
+
+    fn tiny_manifest_model() -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            kind: "dnn".into(),
+            window: 1,
+            feature_dim: 2,
+            dilations: vec![],
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![2, 3] },
+                ParamSpec { name: "b".into(), shape: vec![3] },
+            ],
+            params_bin: "x.bin".into(),
+            infer: EntryPoint { hlo: "i".into(), batch: 4 },
+            train: EntryPoint { hlo: "t".into(), batch: 4 },
+            eval: EntryPoint { hlo: "e".into(), batch: 4 },
+            n_params: 2,
+        }
+    }
+
+    #[test]
+    fn from_bytes_layout() {
+        let mm = tiny_manifest_model();
+        let vals: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let ps = ParamStore::from_bytes(&mm, &bytes).unwrap();
+        assert_eq!(ps.tensors()[0].shape, vec![2, 3]);
+        assert_eq!(ps.tensors()[0].data, vals[..6]);
+        assert_eq!(ps.tensors()[1].data, vals[6..]);
+        assert!(ParamStore::from_bytes(&mm, &bytes[..8]).is_err());
+    }
+
+    #[test]
+    fn train_io_roundtrip() {
+        let mm = tiny_manifest_model();
+        let bytes = vec![0u8; 9 * 4];
+        let mut ps = ParamStore::from_bytes(&mm, &bytes).unwrap();
+        let x = Tensor::zeros(&[4, 2]);
+        let y = Tensor::zeros(&[4]);
+        let inputs = ps.train_inputs(x, y);
+        assert_eq!(inputs.len(), 2 * 3 + 3);
+        // Simulate a train-step output.
+        let mut out: Vec<Tensor> = Vec::new();
+        for _ in 0..3 {
+            out.push(Tensor::new(vec![2, 3], vec![1.0; 6]));
+            out.push(Tensor::new(vec![3], vec![2.0; 3]));
+        }
+        out.push(Tensor::scalar(0.42));
+        let loss = ps.absorb_train_output(out).unwrap();
+        assert!((loss - 0.42).abs() < 1e-6);
+        assert_eq!(ps.step, 1.0);
+        assert_eq!(ps.tensors()[0].data, vec![1.0; 6]);
+        assert_eq!(ps.m[1].data, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mm = tiny_manifest_model();
+        let mut ps = ParamStore::from_bytes(&mm, &vec![0u8; 36]).unwrap();
+        ps.step = 17.0;
+        let dir = std::env::temp_dir().join("acpc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.ckpt");
+        ps.save_checkpoint(&path).unwrap();
+        let mut ps2 = ParamStore::from_bytes(&mm, &vec![1u8; 36]).unwrap();
+        ps2.load_checkpoint(&path).unwrap();
+        assert_eq!(ps2.step, 17.0);
+        assert_eq!(ps2.tensors()[0].data, ps.tensors()[0].data);
+        std::fs::remove_file(path).unwrap();
+    }
+}

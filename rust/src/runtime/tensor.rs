@@ -1,0 +1,98 @@
+//! Host-side f32 tensor + conversions to/from `xla::Literal`.
+
+use anyhow::{bail, Context, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an XLA literal of matching shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data).reshape(&dims).context("reshape literal")
+    }
+
+    /// Read back from an XLA literal (f32 arrays only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal to_vec<f32>")?;
+        if data.len() != dims.iter().product::<usize>() {
+            bail!("literal size {} != shape {:?}", data.len(), dims);
+        }
+        Ok(Tensor { shape: dims, data })
+    }
+
+    /// Flat offset of a multi-index (debug/tests).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(x < d, "index {x} out of dim {d} at axis {i}");
+            off = off * d + x;
+        }
+        self.data[off]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_literal() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = Tensor::scalar(2.5);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn indexing() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

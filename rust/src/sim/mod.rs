@@ -1,0 +1,11 @@
+//! End-to-end experiment driver: trace generator → feature extractor →
+//! (batched) predictor → cache hierarchy (+prefetcher) → metrics. This is
+//! the module the CLI, benches and examples call into.
+
+mod oracle;
+mod simulator;
+pub mod table1;
+
+pub use oracle::annotate_next_use;
+pub use simulator::{run_experiment, OnlineLearner, SimResult};
+pub use table1::{run_table1, Table1Output, Table1Scale};

@@ -1,0 +1,29 @@
+//! Belady-oracle support: materialize the trace and annotate each access
+//! with its line's next-use index so the `belady` policy can evict the
+//! farthest-future line. Used only for upper-bound runs.
+
+use crate::predictor::labeler;
+use crate::trace::Access;
+
+/// Per-access next-use time (u64::MAX = never reused).
+pub fn annotate_next_use(trace: &[Access]) -> Vec<u64> {
+    labeler::annotate(trace, 0).iter().map(|a| a.next_use.unwrap_or(u64::MAX)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    #[test]
+    fn next_use_points_to_same_line() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(2)).generate(5_000);
+        let nu = annotate_next_use(&trace);
+        for (i, &j) in nu.iter().enumerate() {
+            if j != u64::MAX {
+                assert!(j as usize > i);
+                assert_eq!(trace[j as usize].line(), trace[i].line());
+            }
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! The simulation loop binding everything together.
+//!
+//! Prediction is *asynchronous and batched*, mirroring the paper's pipeline
+//! (§3.1): every L2-relevant access enqueues a prediction request; when
+//! `predict_batch` requests have accumulated, the predictor runs once and
+//! the resulting utilities update (a) a bounded line→utility cache consulted
+//! at fill time and (b) the utilities of still-resident L2 lines. A fill
+//! therefore uses the *most recent completed* prediction for its line —
+//! never a same-cycle oracle.
+//!
+//! The optional [`OnlineLearner`] implements §3.4: observed outcomes (was
+//! the line actually reused within the horizon?) are turned into labeled
+//! samples, and every `feedback_interval` accesses a few Adam steps run on
+//! a replay buffer — the compiled train-step HLO, from rust.
+
+use crate::config::ExperimentConfig;
+use crate::mem::Hierarchy;
+use crate::metrics::MetricsReport;
+use crate::policy::AccessMeta;
+use crate::predictor::{FeatureExtractor, GeometryHints, PredictorBox, FEATURE_DIM};
+use crate::trace::TraceGenerator;
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Outcome of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub report: MetricsReport,
+    pub tokens: u64,
+    pub emu: f64,
+    pub predictor: String,
+    pub prediction_batches: u64,
+    pub online_train_steps: u64,
+    pub wall_secs: f64,
+    /// Accesses simulated per wall-clock second (L3 perf metric).
+    pub accesses_per_sec: f64,
+}
+
+/// Replay-buffer online learner (§3.4).
+pub struct OnlineLearner {
+    /// (features, label) samples awaiting training.
+    buf_x: Vec<f32>,
+    buf_y: Vec<f32>,
+    row: usize,
+    capacity: usize,
+    /// In-flight observations: line → (enqueue position, features start).
+    pending: VecDeque<(u64, u64, usize)>,
+    /// Lines touched recently (for labeling): line → last touch position.
+    last_touch: HashMap<u64, u64>,
+    horizon: u64,
+    pub steps_run: u64,
+    rng: Xoshiro256,
+}
+
+impl OnlineLearner {
+    pub fn new(row: usize, horizon: u64, seed: u64) -> Self {
+        Self {
+            buf_x: Vec::new(),
+            buf_y: Vec::new(),
+            row,
+            capacity: 1 << 15,
+            pending: VecDeque::new(),
+            last_touch: HashMap::new(),
+            horizon,
+            steps_run: 0,
+            rng: Xoshiro256::new(seed ^ 0xFEED),
+        }
+    }
+
+    /// Record a touch and enqueue the access as a future training sample.
+    pub fn observe(&mut self, pos: u64, line: u64, features: &[f32]) {
+        self.last_touch.insert(line, pos);
+        if self.buf_x.len() / self.row < self.capacity {
+            let start = self.buf_x.len();
+            self.buf_x.extend_from_slice(features);
+            self.buf_y.push(f32::NAN); // resolved later
+            self.pending.push_back((line, pos, start / self.row));
+        }
+        // Resolve matured observations.
+        while let Some(&(l, p, idx)) = self.pending.front() {
+            if pos.saturating_sub(p) < self.horizon {
+                break;
+            }
+            let reused = self.last_touch.get(&l).map(|&t| t > p && t - p <= self.horizon).unwrap_or(false);
+            self.buf_y[idx] = reused as u8 as f32;
+            self.pending.pop_front();
+        }
+    }
+
+    /// Run up to `steps` Adam steps on resolved samples. Returns mean loss.
+    pub fn train(&mut self, model: &mut crate::predictor::ModelRuntime, steps: usize) -> Option<f32> {
+        let b = model.mm.train.batch;
+        let resolved: Vec<usize> =
+            (0..self.buf_y.len()).filter(|&i| !self.buf_y[i].is_nan()).collect();
+        if resolved.len() < b {
+            return None;
+        }
+        let mut total = 0.0;
+        for _ in 0..steps {
+            let mut x = Vec::with_capacity(b * self.row);
+            let mut y = Vec::with_capacity(b);
+            for _ in 0..b {
+                let i = *self.rng.choose(&resolved);
+                x.extend_from_slice(&self.buf_x[i * self.row..(i + 1) * self.row]);
+                y.push(self.buf_y[i]);
+            }
+            total += model.train_step(x, y).expect("online train step");
+            self.steps_run += 1;
+        }
+        // Keep the buffer fresh: drop the oldest half when full.
+        if self.buf_y.len() >= self.capacity {
+            let keep = self.capacity / 2;
+            let drop_n = self.buf_y.len() - keep;
+            self.buf_x.drain(..drop_n * self.row);
+            self.buf_y.drain(..drop_n);
+            self.pending.clear(); // positions invalidated; restart labeling
+        }
+        Some(total / steps as f32)
+    }
+}
+
+/// Run one experiment. The predictor is taken by value inside `PredictorBox`
+/// so learned runs can feed the online learner.
+pub fn run_experiment(cfg: &ExperimentConfig, predictor: &mut PredictorBox) -> SimResult {
+    let t0 = Instant::now();
+    let mut hier = Hierarchy::new(cfg.hierarchy.clone(), &cfg.policy);
+    let geom = GeometryHints::from_generator(&cfg.generator);
+    let window = predictor.window();
+    let row = if window == 1 { FEATURE_DIM } else { window * FEATURE_DIM };
+    let mut fx = FeatureExtractor::new(window.max(1), geom);
+    let mut seq = vec![0.0f32; window.max(1) * FEATURE_DIM];
+
+    // Oracle mode pre-materializes the trace for next-use annotation.
+    let oracle = cfg.policy == "belady";
+    let (trace_vec, next_use) = if oracle {
+        let mut gen = TraceGenerator::new(cfg.generator.clone());
+        let tv = gen.generate(cfg.accesses);
+        let nu = super::oracle::annotate_next_use(&tv);
+        (Some((tv, gen.tokens_done())), Some(nu))
+    } else {
+        (None, None)
+    };
+    let mut gen = TraceGenerator::new(cfg.generator.clone());
+
+    // Pending prediction batch.
+    let mut pend_x: Vec<f32> = Vec::with_capacity(cfg.predict_batch * row);
+    let mut pend_lines: Vec<u64> = Vec::with_capacity(cfg.predict_batch);
+    let mut prediction_batches = 0u64;
+
+    let mut learner = if cfg.feedback_interval > 0 && predictor.model_mut().is_some() {
+        Some(OnlineLearner::new(row, 4096, cfg.seed))
+    } else {
+        None
+    };
+
+    let mut emu_acc = 0.0;
+    let mut emu_samples = 0u64;
+
+    for i in 0..cfg.accesses {
+        let a = match &trace_vec {
+            Some((tv, _)) => tv[i],
+            None => gen.next_access(),
+        };
+        let line = a.line();
+
+        let mut meta = AccessMeta {
+            line,
+            pc: a.pc,
+            kind: a.kind,
+            is_prefetch: false,
+            predicted_utility: None, // late-bound by the hierarchy's cache
+            next_use: next_use.as_ref().map(|nu| nu[i]),
+        };
+        // Belady encoding: u64::MAX means "never" — keep as None.
+        if meta.next_use == Some(u64::MAX) {
+            meta.next_use = None;
+        }
+
+        hier.access(&a, &meta);
+
+        if predictor.is_some() {
+            fx.push(&a, &mut seq);
+            let feats: &[f32] =
+                if window == 1 { &seq[(fx.window() - 1) * FEATURE_DIM..] } else { &seq };
+            pend_x.extend_from_slice(feats);
+            pend_lines.push(line);
+            if let Some(l) = learner.as_mut() {
+                l.observe(i as u64, line, feats);
+            }
+            if pend_lines.len() >= cfg.predict_batch {
+                let probs = predictor.predict(&pend_x, pend_lines.len());
+                prediction_batches += 1;
+                for (&l, &p) in pend_lines.iter().zip(&probs) {
+                    hier.update_utility(l, p);
+                }
+                pend_x.clear();
+                pend_lines.clear();
+            }
+        }
+
+        // Online feedback (§3.4).
+        if let (Some(l), true) =
+            (learner.as_mut(), cfg.feedback_interval > 0 && i > 0 && i % cfg.feedback_interval == 0)
+        {
+            if let Some(model) = predictor.model_mut() {
+                l.train(model, 2);
+            }
+        }
+
+        // EMU sampling.
+        if i % 8192 == 0 && i > 0 {
+            let f = hier.l2.useful_fraction();
+            if f.is_finite() {
+                emu_acc += f;
+                emu_samples += 1;
+            }
+        }
+    }
+
+    let tokens = match &trace_vec {
+        Some((_, t)) => *t,
+        None => gen.tokens_done(),
+    };
+    let emu = if emu_samples > 0 { emu_acc / emu_samples as f64 } else { f64::NAN };
+    let report = MetricsReport::from_hierarchy(&cfg.name, &hier, tokens, emu);
+    let wall = t0.elapsed().as_secs_f64();
+    SimResult {
+        report,
+        tokens,
+        emu,
+        predictor: predictor.name(),
+        prediction_batches,
+        online_train_steps: learner.map(|l| l.steps_run).unwrap_or(0),
+        wall_secs: wall,
+        accesses_per_sec: cfg.accesses as f64 / wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::predictor::HeuristicPredictor;
+
+    #[test]
+    fn smoke_run_all_classic_policies() {
+        for policy in ["lru", "srrip", "dip", "ship", "plru", "random"] {
+            let cfg = ExperimentConfig::smoke(policy);
+            let mut p = PredictorBox::None;
+            let r = run_experiment(&cfg, &mut p);
+            assert_eq!(r.report.accesses as usize, cfg.accesses, "{policy}");
+            assert!(r.report.l2_hit_rate > 0.0 && r.report.l2_hit_rate < 1.0, "{policy}");
+            assert!(r.tokens > 0);
+            assert!(r.emu > 0.0 && r.emu <= 1.0, "{policy}: emu {}", r.emu);
+        }
+    }
+
+    #[test]
+    fn belady_upper_bounds_lru() {
+        let lru = run_experiment(&ExperimentConfig::smoke("lru"), &mut PredictorBox::None);
+        let bel = run_experiment(&ExperimentConfig::smoke("belady"), &mut PredictorBox::None);
+        assert!(
+            bel.report.l2_hit_rate >= lru.report.l2_hit_rate - 0.005,
+            "belady {:.4} must dominate lru {:.4}",
+            bel.report.l2_hit_rate,
+            lru.report.l2_hit_rate
+        );
+    }
+
+    #[test]
+    fn heuristic_acpc_beats_lru_and_cuts_pollution() {
+        let mut cfg = ExperimentConfig::smoke("acpc");
+        cfg.accesses = 120_000;
+        let mut p = PredictorBox::Heuristic(HeuristicPredictor);
+        let acpc = run_experiment(&cfg, &mut p);
+
+        let mut cfg_lru = ExperimentConfig::smoke("lru");
+        cfg_lru.accesses = 120_000;
+        let lru = run_experiment(&cfg_lru, &mut PredictorBox::None);
+
+        assert!(acpc.prediction_batches > 0);
+        assert!(
+            acpc.report.l2_hit_rate > lru.report.l2_hit_rate,
+            "acpc {:.4} vs lru {:.4}",
+            acpc.report.l2_hit_rate,
+            lru.report.l2_hit_rate
+        );
+        assert!(
+            acpc.report.l2_pollution_ratio < lru.report.l2_pollution_ratio,
+            "pollution acpc {:.4} vs lru {:.4}",
+            acpc.report.l2_pollution_ratio,
+            lru.report.l2_pollution_ratio
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = ExperimentConfig::smoke("srrip");
+        let a = run_experiment(&cfg, &mut PredictorBox::None);
+        let b = run_experiment(&cfg, &mut PredictorBox::None);
+        assert_eq!(a.report.l2_hit_rate, b.report.l2_hit_rate);
+        assert_eq!(a.report.l2_miss_cycles, b.report.l2_miss_cycles);
+    }
+}

@@ -1,0 +1,117 @@
+//! Binary trace file format (`.acpctrace`): persist generated traces so the
+//! same workload can be replayed across policies, benches, and the Python
+//! side if ever needed. Little-endian, fixed 40-byte records, versioned
+//! header with a record-count for integrity checking.
+//!
+//! Layout:
+//! ```text
+//! magic  u64  = 0x4143_5043_5452_4331  ("ACPCTRC1")
+//! count  u64
+//! record × count:
+//!   time u64 | addr u64 | pc u64 | session u32 | ctx_len u32 |
+//!   layer u16 | kind u8 | is_write u8 | pad u32
+//! ```
+
+use super::{Access, StreamKind};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: u64 = 0x4143_5043_5452_4331;
+pub const RECORD_BYTES: usize = 40;
+
+pub fn write_trace(path: &Path, trace: &[Access]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&(trace.len() as u64).to_le_bytes())?;
+    let mut rec = [0u8; RECORD_BYTES];
+    for a in trace {
+        rec[0..8].copy_from_slice(&a.time.to_le_bytes());
+        rec[8..16].copy_from_slice(&a.addr.to_le_bytes());
+        rec[16..24].copy_from_slice(&a.pc.to_le_bytes());
+        rec[24..28].copy_from_slice(&a.session.to_le_bytes());
+        rec[28..32].copy_from_slice(&a.ctx_len.to_le_bytes());
+        rec[32..34].copy_from_slice(&a.layer.to_le_bytes());
+        rec[34] = a.kind as u8;
+        rec[35] = a.is_write as u8;
+        rec[36..40].fill(0);
+        w.write_all(&rec)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_trace(path: &Path) -> Result<Vec<Access>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut hdr = [0u8; 16];
+    r.read_exact(&mut hdr).context("trace header")?;
+    let magic = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("not an acpc trace file (bad magic {magic:#x})");
+    }
+    let count = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(count);
+    let mut rec = [0u8; RECORD_BYTES];
+    for i in 0..count {
+        r.read_exact(&mut rec).with_context(|| format!("record {i}/{count}"))?;
+        out.push(Access {
+            time: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+            addr: u64::from_le_bytes(rec[8..16].try_into().unwrap()),
+            pc: u64::from_le_bytes(rec[16..24].try_into().unwrap()),
+            session: u32::from_le_bytes(rec[24..28].try_into().unwrap()),
+            ctx_len: u32::from_le_bytes(rec[28..32].try_into().unwrap()),
+            layer: u16::from_le_bytes(rec[32..34].try_into().unwrap()),
+            kind: StreamKind::from_u8(rec[34]),
+            is_write: rec[35] != 0,
+        });
+    }
+    // Must be exactly at EOF.
+    let mut extra = [0u8; 1];
+    if r.read(&mut extra)? != 0 {
+        bail!("trailing bytes after {count} records");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    #[test]
+    fn roundtrip() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(21)).generate(10_000);
+        let dir = std::env::temp_dir().join("acpc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.acpctrace");
+        write_trace(&path, &trace).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(trace, back);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("acpc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.acpctrace");
+        std::fs::write(&path, b"definitely not a trace file....").unwrap();
+        assert!(read_trace(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(2)).generate(100);
+        let dir = std::env::temp_dir().join("acpc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.acpctrace");
+        write_trace(&path, &trace).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 13]).unwrap();
+        assert!(read_trace(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,473 @@
+//! Synthetic LLM-inference access-trace generator (substitution for the
+//! paper's unreleased 2.3B-record profiling dataset; see DESIGN.md §3).
+//!
+//! The generator simulates a serving node: sessions arrive in bursts (a
+//! two-state MMPP), each session runs prefill (prompt KV writes) and then
+//! autoregressive decode. Every decoded token emits the memory streams a
+//! transformer actually touches — embedding rows, per-layer weight-tile
+//! scans, attention-window KV reads (plus rare long-range reads), a KV
+//! append, and activation scratch. Token popularity is Zipfian with a
+//! rotating head ("phase drift") so reuse statistics are non-stationary.
+
+use super::profile::ModelProfile;
+use super::{region, Access, StreamKind};
+use crate::util::rng::{Xoshiro256, Zipf};
+use std::collections::VecDeque;
+
+/// Line size is fixed at 64 B across the project.
+pub const LINE: u64 = 64;
+
+/// Generator configuration. All randomness derives from `seed`.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    pub profile: ModelProfile,
+    pub seed: u64,
+    /// Maximum concurrently-live sessions (KV slot count).
+    pub max_live_sessions: usize,
+    /// MMPP arrival probabilities per decode step (hot/cold states).
+    pub arrival_p_hot: f64,
+    pub arrival_p_cold: f64,
+    /// Per-step probability of switching MMPP state.
+    pub burst_switch_p: f64,
+    /// Tokens between Zipf-head rotations (0 disables phase drift).
+    pub phase_period: u64,
+    /// Maximum context length (KV slot capacity in tokens).
+    pub max_ctx: u32,
+    /// Lines emitted per weight tile scan (the L2-visible residue of a
+    /// tile after L1 filtering).
+    pub weight_lines_per_tile: u64,
+    /// Scratch ring size in lines (large ⇒ scratch lines are ~never reused).
+    pub scratch_ring_lines: u64,
+}
+
+impl GeneratorConfig {
+    pub fn new(profile: ModelProfile, seed: u64) -> Self {
+        Self {
+            profile,
+            seed,
+            max_live_sessions: 10,
+            arrival_p_hot: 0.25,
+            arrival_p_cold: 0.02,
+            burst_switch_p: 0.004,
+            phase_period: 20_000,
+            max_ctx: 512,
+            weight_lines_per_tile: 2,
+            scratch_ring_lines: 1 << 16,
+        }
+    }
+
+    /// Small config for unit tests.
+    pub fn tiny(seed: u64) -> Self {
+        let mut p = ModelProfile::gpt3ish();
+        p.layers = 4;
+        p.weight_tiles_per_layer = 16;
+        p.weight_tiles_hot = 6;
+        p.prompt_len_mean = 8.0;
+        p.gen_len_mean = 16.0;
+        let mut c = Self::new(p, seed);
+        c.max_live_sessions = 4;
+        c.max_ctx = 64;
+        c
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Session {
+    id: u32,
+    slot: usize,
+    ctx_len: u32,
+    tokens_left: u32,
+}
+
+/// Streaming trace generator. `next_access` yields one access at a time;
+/// `generate(n)` collects a vector. Deterministic for a given config.
+pub struct TraceGenerator {
+    cfg: GeneratorConfig,
+    rng: Xoshiro256,
+    zipf: Zipf,
+    time: u64,
+    phase: u64,
+    tokens_done: u64,
+    sessions_started: u32,
+    sessions_completed: u64,
+    live: Vec<Session>,
+    free_slots: Vec<usize>,
+    burst_hot: bool,
+    scratch_head: u64,
+    /// Accesses already produced for the in-flight token / prefill.
+    pending: VecDeque<Access>,
+    /// Per-slot-layer KV region stride.
+    kv_layer_bytes: u64,
+    kv_slot_bytes: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: GeneratorConfig) -> Self {
+        let rng = Xoshiro256::new(cfg.seed);
+        let zipf = Zipf::new(cfg.profile.vocab, cfg.profile.zipf_theta);
+        let kv_layer_bytes = cfg.max_ctx as u64 * cfg.profile.kv_bytes_per_token;
+        let kv_slot_bytes = kv_layer_bytes * cfg.profile.layers as u64;
+        let free_slots = (0..cfg.max_live_sessions).rev().collect();
+        Self {
+            cfg,
+            rng,
+            zipf,
+            time: 0,
+            phase: 0,
+            tokens_done: 0,
+            sessions_started: 0,
+            sessions_completed: 0,
+            live: Vec::new(),
+            free_slots,
+            burst_hot: false,
+            scratch_head: 0,
+            pending: VecDeque::new(),
+            kv_layer_bytes,
+            kv_slot_bytes,
+        }
+    }
+
+    pub fn tokens_done(&self) -> u64 {
+        self.tokens_done
+    }
+
+    pub fn sessions_completed(&self) -> u64 {
+        self.sessions_completed
+    }
+
+    pub fn live_sessions(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free_slots.len()
+    }
+
+    /// True when a `next_access` call will produce session-driven work
+    /// without needing an autonomous arrival (serving mode drains on this).
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.live.is_empty()
+    }
+
+    // ---- address helpers -------------------------------------------------
+
+    fn embed_addr(&self, token_id: u64, line_idx: u64) -> u64 {
+        region::EMBED + token_id * self.cfg.profile.embed_row_bytes + line_idx * LINE
+    }
+
+    fn kv_addr(&self, slot: usize, layer: u16, pos: u32) -> u64 {
+        region::KV
+            + slot as u64 * self.kv_slot_bytes
+            + layer as u64 * self.kv_layer_bytes
+            + pos as u64 * self.cfg.profile.kv_bytes_per_token
+    }
+
+    fn weight_addr(&self, layer: u16, tile: u64, line_idx: u64) -> u64 {
+        region::WEIGHT
+            + layer as u64 * self.cfg.profile.weight_tiles_per_layer * self.cfg.profile.weight_tile_bytes
+            + tile * self.cfg.profile.weight_tile_bytes
+            + line_idx * LINE * 8 // spread emitted lines across the tile
+    }
+
+    fn scratch_addr(&mut self) -> u64 {
+        let a = region::SCRATCH + (self.scratch_head % self.cfg.scratch_ring_lines) * LINE;
+        self.scratch_head += 1;
+        a
+    }
+
+    fn pc(kind: StreamKind, layer: u16, site: u32) -> u64 {
+        ((kind as u64) << 32) | ((layer as u64) << 16) | site as u64
+    }
+
+    /// Zipf rank → token id with phase rotation (the head of the
+    /// distribution moves every `phase_period` tokens).
+    fn sample_token(&mut self) -> u64 {
+        let rank = self.zipf.sample(&mut self.rng);
+        (rank + self.phase * 9973) % self.cfg.profile.vocab
+    }
+
+    // ---- event production --------------------------------------------------
+
+    fn push(&mut self, kind: StreamKind, addr: u64, pc: u64, sess: &Session, is_write: bool) {
+        self.time += 1;
+        self.pending.push_back(Access {
+            time: self.time,
+            addr,
+            pc,
+            kind,
+            session: sess.id,
+            ctx_len: sess.ctx_len,
+            layer: ((pc >> 16) & 0xFFFF) as u16,
+            is_write,
+        });
+    }
+
+    fn maybe_arrive(&mut self) {
+        if self.rng.chance(self.cfg.burst_switch_p) {
+            self.burst_hot = !self.burst_hot;
+        }
+        let p = if self.burst_hot { self.cfg.arrival_p_hot } else { self.cfg.arrival_p_cold };
+        if self.rng.chance(p) {
+            self.force_arrival();
+        }
+    }
+
+    /// Externally-driven session admission (the serving coordinator's
+    /// router calls this; `arrival_p_* = 0` turns off autonomous arrivals).
+    /// Returns false when all KV slots are occupied.
+    pub fn force_arrival(&mut self) -> bool {
+        if !self.free_slots.is_empty() {
+            let slot = self.free_slots.pop().unwrap();
+            let id = self.sessions_started;
+            self.sessions_started += 1;
+            let prof = &self.cfg.profile;
+            let prompt =
+                (self.rng.next_exp(1.0 / prof.prompt_len_mean).round() as u32).clamp(4, self.cfg.max_ctx / 2);
+            let gen = (self.rng.next_exp(1.0 / prof.gen_len_mean).round() as u32)
+                .clamp(4, self.cfg.max_ctx - prompt - 1);
+            let mut sess = Session { id, slot, ctx_len: 0, tokens_left: gen };
+            // Prefill: batched KV writes for the prompt (a real write burst),
+            // plus one embedding lookup per prompt token.
+            for pos in 0..prompt {
+                sess.ctx_len = pos;
+                let tok = self.sample_token();
+                for li in 0..self.cfg.profile.embed_lines_per_lookup {
+                    let a = self.embed_addr(tok, li);
+                    self.push(StreamKind::Embedding, a, Self::pc(StreamKind::Embedding, 0, 1), &sess, false);
+                }
+                for layer in 0..self.cfg.profile.layers {
+                    let a = self.kv_addr(slot, layer, pos);
+                    self.push(StreamKind::KvWrite, a, Self::pc(StreamKind::KvWrite, layer, 2), &sess, true);
+                }
+            }
+            sess.ctx_len = prompt;
+            self.live.push(sess);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Emit all accesses for one decoded token of session index `si`.
+    fn decode_token(&mut self, si: usize) {
+        let sess = self.live[si].clone();
+        let prof = self.cfg.profile.clone();
+        let slot = sess.slot;
+
+        // 1. Input embedding lookup.
+        let tok = self.sample_token();
+        for li in 0..prof.embed_lines_per_lookup {
+            let a = self.embed_addr(tok, li);
+            self.push(StreamKind::Embedding, a, Self::pc(StreamKind::Embedding, 0, 1), &sess, false);
+        }
+
+        // 2. Per-layer work.
+        for layer in 0..prof.layers {
+            // 2a. Weight tile scan — cyclic subset, deterministic stride, so
+            // the same lines recur each token (a scanning/streaming pattern).
+            let base_tile = (self.tokens_done % prof.weight_tiles_per_layer.max(1)) as u64;
+            for t in 0..prof.weight_tiles_hot {
+                let tile = (base_tile + t) % prof.weight_tiles_per_layer;
+                for li in 0..self.cfg.weight_lines_per_tile {
+                    let a = self.weight_addr(layer, tile, li);
+                    self.push(StreamKind::Weight, a, Self::pc(StreamKind::Weight, layer, 3), &sess, false);
+                }
+            }
+
+            // 2b. KV reads — attention window sample + rare long-range reads.
+            let ctx = sess.ctx_len;
+            if ctx > 0 {
+                let w = prof.attn_window.min(ctx);
+                for _ in 0..prof.kv_reads_per_token {
+                    let pos = if ctx > w && self.rng.chance(prof.kv_longrange_p) {
+                        self.rng.gen_range((ctx - w) as u64) as u32
+                    } else {
+                        ctx - 1 - self.rng.gen_range(w as u64) as u32
+                    };
+                    let a = self.kv_addr(slot, layer, pos);
+                    self.push(StreamKind::KvRead, a, Self::pc(StreamKind::KvRead, layer, 4), &sess, false);
+                }
+            }
+
+            // 2c. KV append for this token.
+            let a = self.kv_addr(slot, layer, sess.ctx_len);
+            self.push(StreamKind::KvWrite, a, Self::pc(StreamKind::KvWrite, layer, 2), &sess, true);
+
+            // 2d. Scratch traffic.
+            for _ in 0..prof.scratch_lines_per_token {
+                let a = self.scratch_addr();
+                self.push(StreamKind::Scratch, a, Self::pc(StreamKind::Scratch, layer, 5), &sess, true);
+            }
+        }
+
+        // 3. Output embedding (logit head row for the produced token).
+        let out_tok = self.sample_token();
+        let a = self.embed_addr(out_tok, 0);
+        self.push(StreamKind::Embedding, a, Self::pc(StreamKind::Embedding, prof.layers, 6), &sess, false);
+
+        // Book-keeping.
+        self.tokens_done += 1;
+        if self.cfg.phase_period > 0 && self.tokens_done % self.cfg.phase_period == 0 {
+            self.phase += 1;
+        }
+        let s = &mut self.live[si];
+        s.ctx_len = (s.ctx_len + 1).min(self.cfg.max_ctx - 1);
+        s.tokens_left -= 1;
+        if s.tokens_left == 0 {
+            let done = self.live.swap_remove(si);
+            self.free_slots.push(done.slot);
+            self.sessions_completed += 1;
+        }
+    }
+
+    /// Advance the serving loop until at least one access is pending.
+    fn refill(&mut self) {
+        let mut guard = 0;
+        while self.pending.is_empty() {
+            self.maybe_arrive();
+            if self.live.is_empty() {
+                // Force an arrival so the stream never stalls.
+                self.burst_hot = true;
+                guard += 1;
+                if guard > 10_000 {
+                    // Pathological config (no slots) — emit scratch filler.
+                    let dummy = Session { id: u32::MAX, slot: 0, ctx_len: 0, tokens_left: 1 };
+                    let a = self.scratch_addr();
+                    self.push(StreamKind::Scratch, a, Self::pc(StreamKind::Scratch, 0, 5), &dummy, true);
+                    return;
+                }
+                continue;
+            }
+            let si = self.rng.range_usize(0, self.live.len());
+            self.decode_token(si);
+        }
+    }
+
+    pub fn next_access(&mut self) -> Access {
+        if self.pending.is_empty() {
+            self.refill();
+        }
+        self.pending.pop_front().expect("refill produced no access")
+    }
+
+    /// Collect `n` accesses.
+    pub fn generate(&mut self, n: usize) -> Vec<Access> {
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.next_access());
+        }
+        v
+    }
+}
+
+impl Iterator for TraceGenerator {
+    type Item = Access;
+
+    fn next(&mut self) -> Option<Access> {
+        Some(self.next_access())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<Access> = TraceGenerator::new(GeneratorConfig::tiny(7)).generate(5_000);
+        let b: Vec<Access> = TraceGenerator::new(GeneratorConfig::tiny(7)).generate(5_000);
+        let c: Vec<Access> = TraceGenerator::new(GeneratorConfig::tiny(8)).generate(5_000);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn time_monotonic_and_all_streams_present() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(1)).generate(20_000);
+        let mut counts: HashMap<StreamKind, usize> = HashMap::new();
+        let mut last = 0;
+        for a in &trace {
+            assert!(a.time > last, "time must strictly increase");
+            last = a.time;
+            *counts.entry(a.kind).or_default() += 1;
+        }
+        for k in StreamKind::ALL {
+            assert!(counts.get(&k).copied().unwrap_or(0) > 0, "missing stream {k:?}");
+        }
+        // Weights dominate (per-layer scans), scratch nontrivial.
+        assert!(counts[&StreamKind::Weight] > counts[&StreamKind::Embedding]);
+    }
+
+    #[test]
+    fn addresses_stay_in_their_regions() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(3)).generate(20_000);
+        for a in &trace {
+            let want = match a.kind {
+                StreamKind::Embedding => region::of(region::EMBED),
+                StreamKind::KvRead | StreamKind::KvWrite => region::of(region::KV),
+                StreamKind::Weight => region::of(region::WEIGHT),
+                StreamKind::Scratch => region::of(region::SCRATCH),
+            };
+            assert_eq!(region::of(a.addr), want, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn kv_reads_concentrate_in_window() {
+        let cfg = GeneratorConfig::tiny(11);
+        let window = cfg.profile.attn_window;
+        let kv_per_tok = cfg.profile.kv_bytes_per_token;
+        let gen = TraceGenerator::new(cfg);
+        let mut in_window = 0usize;
+        let mut total = 0usize;
+        let mut g = gen;
+        for _ in 0..50_000 {
+            let a = g.next_access();
+            if a.kind == StreamKind::KvRead && a.ctx_len > 0 {
+                let layer_off = a.addr & ((g.kv_layer_bytes) - 1).next_power_of_two().wrapping_sub(1);
+                let _ = layer_off;
+                // Recover position from address arithmetic.
+                let rel = (a.addr - region::KV) % g.kv_layer_bytes;
+                let pos = (rel / kv_per_tok) as u32;
+                total += 1;
+                if a.ctx_len >= pos && a.ctx_len - pos <= window {
+                    in_window += 1;
+                }
+            }
+        }
+        assert!(total > 100);
+        let frac = in_window as f64 / total as f64;
+        assert!(frac > 0.85, "in-window fraction {frac}");
+    }
+
+    #[test]
+    fn sessions_cycle_and_slots_recycle() {
+        let mut g = TraceGenerator::new(GeneratorConfig::tiny(5));
+        let _ = g.generate(200_000);
+        assert!(g.sessions_completed() > 5, "sessions completed {}", g.sessions_completed());
+        assert!(g.live_sessions() <= 4);
+        assert!(g.tokens_done() > 100);
+    }
+
+    #[test]
+    fn embedding_reuse_is_zipf_skewed() {
+        let mut g = TraceGenerator::new(GeneratorConfig::tiny(13));
+        let mut line_counts: HashMap<u64, usize> = HashMap::new();
+        for _ in 0..100_000 {
+            let a = g.next_access();
+            if a.kind == StreamKind::Embedding {
+                *line_counts.entry(a.line()).or_default() += 1;
+            }
+        }
+        let mut counts: Vec<usize> = line_counts.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = counts.iter().sum();
+        let decile = counts.len() / 10 + 1;
+        let top10: usize = counts.iter().take(decile).sum();
+        let bot10: usize = counts.iter().rev().take(decile).sum();
+        let top_frac = top10 as f64 / total as f64;
+        assert!(top_frac > 0.25, "top-decile embedding lines should dominate: {top_frac}");
+        assert!(top10 > bot10 * 3, "head/tail skew too weak: {top10} vs {bot10}");
+    }
+}

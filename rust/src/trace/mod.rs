@@ -1,0 +1,158 @@
+//! LLM-inference memory access trace substrate.
+//!
+//! The paper evaluates ACPC on cache access traces profiled from GPT-3 /
+//! LLaMA-2 / T5 serving (2.3B records — not released). This module is the
+//! documented substitution (DESIGN.md §3): a synthetic generator that
+//! reproduces the *mechanisms* behind those traces:
+//!
+//! - **embedding lookups** — Zipf-distributed token ids over a large
+//!   embedding table: a hot head with heavy reuse, a long cold tail that
+//!   pollutes when prefetched;
+//! - **KV-cache traffic** — per (session, layer) append-on-write streams
+//!   whose reads concentrate in a sliding attention window plus sparse
+//!   long-range re-reads: a line is hot while in-window and *provably dead*
+//!   afterwards (the signal the TCN predictor can exploit);
+//! - **weight streaming** — cyclic per-layer tile scans each token: a
+//!   scanning pattern that thrashes LRU and motivates RRIP-style policies;
+//! - **bursty session arrivals** — a two-state MMPP (hot/cold arrival
+//!   rates) producing the bursty, non-uniform interleaving the paper
+//!   describes;
+//! - **phase drift** — the Zipf head rotates periodically, so a predictor
+//!   trained once goes stale (exercises the online-learning loop, §3.4).
+
+pub mod file;
+pub mod generator;
+pub mod profile;
+pub mod stats;
+
+pub use generator::{GeneratorConfig, TraceGenerator};
+pub use profile::ModelProfile;
+
+/// Memory stream kind — the coarse "instruction type" feature of the paper's
+/// record tuple (eq. 5). Encoded into addresses (region) and features.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum StreamKind {
+    /// Input/output embedding row read (token id → row).
+    Embedding = 0,
+    /// Attention KV-cache read within the context window.
+    KvRead = 1,
+    /// KV-cache append for the newly generated token.
+    KvWrite = 2,
+    /// Model weight tile read (cyclic per-layer scan).
+    Weight = 3,
+    /// Activation scratch traffic (low reuse filler).
+    Scratch = 4,
+}
+
+impl StreamKind {
+    pub fn from_u8(v: u8) -> StreamKind {
+        match v {
+            0 => StreamKind::Embedding,
+            1 => StreamKind::KvRead,
+            2 => StreamKind::KvWrite,
+            3 => StreamKind::Weight,
+            _ => StreamKind::Scratch,
+        }
+    }
+
+    pub const ALL: [StreamKind; 5] = [
+        StreamKind::Embedding,
+        StreamKind::KvRead,
+        StreamKind::KvWrite,
+        StreamKind::Weight,
+        StreamKind::Scratch,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            StreamKind::Embedding => "embed",
+            StreamKind::KvRead => "kv_rd",
+            StreamKind::KvWrite => "kv_wr",
+            StreamKind::Weight => "weight",
+            StreamKind::Scratch => "scratch",
+        }
+    }
+}
+
+/// One memory access event — the in-memory form of the paper's record tuple
+/// `D_i = {T_i, A_i, F_i, S_i, H_i, L_i}` (timestamp, address, feature hash,
+/// context length, history reuse distance, reuse label). The reuse label is
+/// *not* stored here; it is derived by `predictor::labeler` with a forward
+/// pass over the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Access {
+    /// Logical timestamp (cycle-ish; monotonically increasing).
+    pub time: u64,
+    /// Byte address; cache line = `addr >> 6`.
+    pub addr: u64,
+    /// Synthetic program counter (stream kind × layer site) for PC-indexed
+    /// policies (SHiP) and the stride prefetcher.
+    pub pc: u64,
+    /// Stream kind (the paper's "instruction type" feature).
+    pub kind: StreamKind,
+    /// Serving session id.
+    pub session: u32,
+    /// Context length (token position) at the time of access — the paper's
+    /// `S_i` feature.
+    pub ctx_len: u32,
+    /// Transformer layer index.
+    pub layer: u16,
+    /// Write (KV append) vs read.
+    pub is_write: bool,
+}
+
+impl Access {
+    #[inline]
+    pub fn line(&self) -> u64 {
+        self.addr >> 6
+    }
+}
+
+/// Address-space regions. Region tag lives in bits 40..44 so realistic
+/// offsets never collide across regions.
+pub mod region {
+    pub const SHIFT: u64 = 40;
+    pub const EMBED: u64 = 1 << SHIFT;
+    pub const KV: u64 = 2 << SHIFT;
+    pub const WEIGHT: u64 = 3 << SHIFT;
+    pub const SCRATCH: u64 = 4 << SHIFT;
+
+    pub fn of(addr: u64) -> u64 {
+        addr >> SHIFT
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_kind_roundtrip() {
+        for k in StreamKind::ALL {
+            assert_eq!(StreamKind::from_u8(k as u8), k);
+        }
+    }
+
+    #[test]
+    fn regions_disjoint() {
+        let e = region::EMBED + 0xFFFF_FFFF;
+        let k = region::KV;
+        assert_ne!(region::of(e), region::of(k));
+    }
+
+    #[test]
+    fn line_granularity() {
+        let a = Access {
+            time: 0,
+            addr: 0x1234,
+            pc: 0,
+            kind: StreamKind::Embedding,
+            session: 0,
+            ctx_len: 0,
+            layer: 0,
+            is_write: false,
+        };
+        assert_eq!(a.line(), 0x1234 >> 6);
+    }
+}

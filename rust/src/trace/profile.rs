@@ -1,0 +1,153 @@
+//! Model profiles: the knobs that shape a synthetic inference trace for a
+//! given transformer family. Values are *scaled-down* analogues (DESIGN.md
+//! §3): the cache hierarchy in the simulator is also scaled, so what matters
+//! is the ratio of working-set sizes to cache sizes, not absolute bytes.
+
+/// Shape of the simulated transformer + serving stack.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// Vocabulary size (embedding table rows).
+    pub vocab: u64,
+    /// Bytes per embedding row (row → contiguous cache lines).
+    pub embed_row_bytes: u64,
+    /// Lines touched per embedding lookup (head of the row).
+    pub embed_lines_per_lookup: u64,
+    /// Zipf exponent for token popularity.
+    pub zipf_theta: f64,
+    /// Number of transformer layers.
+    pub layers: u16,
+    /// KV bytes appended per token per layer.
+    pub kv_bytes_per_token: u64,
+    /// Sliding attention window (tokens) that dominates KV reads.
+    pub attn_window: u32,
+    /// KV read fan-in per generated token per layer (how many window
+    /// positions are touched — a sparse sample of the window).
+    pub kv_reads_per_token: u32,
+    /// Probability that a KV read goes *outside* the window (long-range
+    /// attention head) — these accesses look random and mislead prefetchers.
+    pub kv_longrange_p: f64,
+    /// Weight tiles per layer and bytes per tile; each token scans
+    /// `weight_tiles_hot` of them cyclically.
+    pub weight_tiles_per_layer: u64,
+    pub weight_tile_bytes: u64,
+    pub weight_tiles_hot: u64,
+    /// Scratch (activation) lines per token per layer — near-zero reuse.
+    pub scratch_lines_per_token: u64,
+    /// Mean prompt length / generation length (tokens).
+    pub prompt_len_mean: f64,
+    pub gen_len_mean: f64,
+}
+
+impl ModelProfile {
+    /// GPT-style decoder-only profile (the paper's primary workload):
+    /// large vocabulary, deep, long generations.
+    pub fn gpt3ish() -> Self {
+        Self {
+            name: "gpt3ish".into(),
+            vocab: 50_000,
+            embed_row_bytes: 512,
+            embed_lines_per_lookup: 2,
+            zipf_theta: 0.9,
+            layers: 8,
+            kv_bytes_per_token: 128,
+            attn_window: 48,
+            kv_reads_per_token: 10,
+            kv_longrange_p: 0.08,
+            weight_tiles_per_layer: 96,
+            weight_tile_bytes: 4096,
+            weight_tiles_hot: 16,
+            scratch_lines_per_token: 2,
+            prompt_len_mean: 64.0,
+            gen_len_mean: 96.0,
+        }
+    }
+
+    /// LLaMA-style profile: grouped-query attention → smaller KV per token,
+    /// slightly flatter token distribution, shorter generations.
+    pub fn llama2ish() -> Self {
+        Self {
+            name: "llama2ish".into(),
+            vocab: 32_000,
+            embed_row_bytes: 512,
+            embed_lines_per_lookup: 2,
+            zipf_theta: 0.8,
+            layers: 16,
+            kv_bytes_per_token: 128,
+            attn_window: 96,
+            kv_reads_per_token: 10,
+            kv_longrange_p: 0.05,
+            weight_tiles_per_layer: 128,
+            weight_tile_bytes: 4096,
+            weight_tiles_hot: 20,
+            scratch_lines_per_token: 3,
+            prompt_len_mean: 96.0,
+            gen_len_mean: 64.0,
+        }
+    }
+
+    /// T5-style encoder-decoder profile: shorter decode, heavier embedding
+    /// traffic (shared input/output embeddings), smaller depth.
+    pub fn t5ish() -> Self {
+        Self {
+            name: "t5ish".into(),
+            vocab: 32_128,
+            embed_row_bytes: 768,
+            embed_lines_per_lookup: 3,
+            zipf_theta: 0.9,
+            layers: 8,
+            kv_bytes_per_token: 192,
+            attn_window: 48,
+            kv_reads_per_token: 8,
+            kv_longrange_p: 0.10,
+            weight_tiles_per_layer: 64,
+            weight_tile_bytes: 4096,
+            weight_tiles_hot: 16,
+            scratch_lines_per_token: 5,
+            prompt_len_mean: 48.0,
+            gen_len_mean: 32.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "gpt3ish" | "gpt3" | "gpt" => Some(Self::gpt3ish()),
+            "llama2ish" | "llama2" | "llama" => Some(Self::llama2ish()),
+            "t5ish" | "t5" => Some(Self::t5ish()),
+            _ => None,
+        }
+    }
+
+    /// Total embedding table bytes (for working-set sanity checks).
+    pub fn embed_table_bytes(&self) -> u64 {
+        self.vocab * self.embed_row_bytes
+    }
+
+    /// Hot weight working set per token (bytes, all layers).
+    pub fn weight_hot_bytes(&self) -> u64 {
+        self.layers as u64 * self.weight_tiles_hot * self.weight_tile_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolvable() {
+        for n in ["gpt3ish", "llama2ish", "t5ish", "gpt", "llama", "t5"] {
+            assert!(ModelProfile::by_name(n).is_some(), "{n}");
+        }
+        assert!(ModelProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn working_sets_exceed_l2_scale() {
+        // The profiles must stress a few-hundred-KB L2: hot weights alone
+        // should exceed 256 KiB so replacement policy quality matters.
+        for p in [ModelProfile::gpt3ish(), ModelProfile::llama2ish(), ModelProfile::t5ish()] {
+            assert!(p.weight_hot_bytes() > 256 * 1024, "{}: {}", p.name, p.weight_hot_bytes());
+            assert!(p.embed_table_bytes() > 4 * 1024 * 1024, "{}", p.name);
+        }
+    }
+}

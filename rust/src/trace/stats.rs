@@ -1,0 +1,131 @@
+//! Trace characterization: stream mix, line-level reuse-distance profile,
+//! burstiness. Used by `acpc trace-stats`, by tests that validate the
+//! generator actually produces the irregular/bursty patterns the paper
+//! describes, and by EXPERIMENTS.md workload documentation.
+
+use super::{Access, StreamKind};
+use crate::util::stats::{cv, Histogram};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub accesses: usize,
+    pub unique_lines: usize,
+    pub per_stream: Vec<(StreamKind, usize)>,
+    /// Reuse distance (unique-lines-between-reuses) histogram, log2 buckets
+    /// in `[2^0, 2^20)`, plus cold (first-touch) count.
+    pub reuse_hist: Histogram,
+    pub cold_misses: usize,
+    /// Fraction of lines touched exactly once (one-shot / pollution bait).
+    pub one_shot_frac: f64,
+    /// Coefficient of variation of inter-access times per session (>1 = bursty).
+    pub session_burstiness_cv: f64,
+    pub write_frac: f64,
+}
+
+/// Compute stats with an exact (hash-set stack distance via ordered set
+/// approximation) reuse-distance pass. We use the *temporal* reuse distance
+/// (accesses since last touch) rather than full stack distance for O(n).
+pub fn analyze(trace: &[Access]) -> TraceStats {
+    let mut last_touch: HashMap<u64, usize> = HashMap::new();
+    let mut touch_count: HashMap<u64, u32> = HashMap::new();
+    let mut reuse_hist = Histogram::new(0.0, 20.0, 20); // log2 buckets
+    let mut cold = 0usize;
+    let mut per_stream: HashMap<StreamKind, usize> = HashMap::new();
+    let mut session_times: HashMap<u32, Vec<f64>> = HashMap::new();
+    let mut writes = 0usize;
+
+    for (i, a) in trace.iter().enumerate() {
+        *per_stream.entry(a.kind).or_default() += 1;
+        if a.is_write {
+            writes += 1;
+        }
+        let line = a.line();
+        match last_touch.insert(line, i) {
+            Some(prev) => {
+                let d = (i - prev) as f64;
+                reuse_hist.push(d.log2().max(0.0));
+            }
+            None => cold += 1,
+        }
+        *touch_count.entry(line).or_default() += 1;
+        session_times.entry(a.session).or_default().push(a.time as f64);
+    }
+
+    let one_shot = touch_count.values().filter(|&&c| c == 1).count();
+    // Burstiness: CV of inter-access gaps within each session, averaged.
+    let mut cvs = Vec::new();
+    for times in session_times.values() {
+        if times.len() > 16 {
+            let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+            let c = cv(&gaps);
+            if c.is_finite() {
+                cvs.push(c);
+            }
+        }
+    }
+    let burst = if cvs.is_empty() { f64::NAN } else { cvs.iter().sum::<f64>() / cvs.len() as f64 };
+
+    let mut per_stream: Vec<(StreamKind, usize)> = per_stream.into_iter().collect();
+    per_stream.sort_by_key(|(k, _)| *k as u8);
+
+    TraceStats {
+        accesses: trace.len(),
+        unique_lines: touch_count.len(),
+        per_stream,
+        reuse_hist,
+        cold_misses: cold,
+        one_shot_frac: one_shot as f64 / touch_count.len().max(1) as f64,
+        session_burstiness_cv: burst,
+        write_frac: writes as f64 / trace.len().max(1) as f64,
+    }
+}
+
+impl TraceStats {
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "accesses={} unique_lines={} cold={} one_shot={:.1}% writes={:.1}% burstiness_cv={:.2}\n",
+            self.accesses,
+            self.unique_lines,
+            self.cold_misses,
+            self.one_shot_frac * 100.0,
+            self.write_frac * 100.0,
+            self.session_burstiness_cv
+        ));
+        s.push_str("stream mix: ");
+        for (k, c) in &self.per_stream {
+            s.push_str(&format!("{}={:.1}% ", k.label(), *c as f64 / self.accesses as f64 * 100.0));
+        }
+        s.push('\n');
+        s.push_str("reuse-distance log2 histogram: ");
+        for (i, b) in self.reuse_hist.buckets().iter().enumerate() {
+            if *b > 0 {
+                s.push_str(&format!("2^{i}:{b} "));
+            }
+        }
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    #[test]
+    fn trace_is_bursty_and_irregular() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(31)).generate(100_000);
+        let st = analyze(&trace);
+        assert_eq!(st.accesses, 100_000);
+        assert!(st.unique_lines > 500);
+        // The paper's premise: mixed reuse distances (irregular), a real
+        // one-shot population (pollution bait), and bursty sessions.
+        assert!(st.one_shot_frac > 0.05, "one-shot {:.3}", st.one_shot_frac);
+        assert!(st.session_burstiness_cv > 1.0, "cv {:.2}", st.session_burstiness_cv);
+        assert!(st.reuse_hist.count() > 0);
+        let rep = st.report();
+        assert!(rep.contains("stream mix"));
+    }
+}

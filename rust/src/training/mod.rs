@@ -1,0 +1,10 @@
+//! Rust-driven training of the AOT-compiled predictors (§3.4 + §4.2): the
+//! compiled `train_step` HLO (BCE + Adam, lr 1e-4, batch 512) is replayed
+//! from rust over the labeled dataset — Python never runs. Reproduces the
+//! paper's Figure 2 loss curve and the "final loss" column of Table 1.
+
+mod implicit;
+mod trainer;
+
+pub use implicit::{bce, implicit_loss, ImplicitKind};
+pub use trainer::{eval_split, train, TrainConfig, TrainResult};

@@ -1,0 +1,194 @@
+//! Epoch loop: minibatch the train split, drive the compiled Adam step,
+//! track train/val curves, early-stop on validation loss (§4.2).
+
+use crate::predictor::{Dataset, ModelRuntime, Split};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::Welford;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    /// Early stopping: stop after this many epochs without val improvement
+    /// (0 disables).
+    pub patience: usize,
+    /// Cap on train minibatches per epoch (0 = full epoch) — keeps smoke
+    /// tests and benches fast while the full run uses everything.
+    pub max_batches_per_epoch: usize,
+    pub seed: u64,
+    /// Print progress every N epochs (0 = silent).
+    pub verbose_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { epochs: 80, patience: 10, max_batches_per_epoch: 0, seed: 1, verbose_every: 10 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub model: String,
+    pub train_curve: Vec<f64>,
+    pub val_curve: Vec<f64>,
+    pub final_train_loss: f64,
+    pub final_val_loss: f64,
+    pub best_val_loss: f64,
+    pub epochs_run: usize,
+    pub stopped_early: bool,
+}
+
+impl TrainResult {
+    /// Convergence-stability descriptor for Table 1: the standard deviation
+    /// of the last quarter of the training curve, bucketed.
+    pub fn stability(&self) -> String {
+        let tail = &self.train_curve[self.train_curve.len() * 3 / 4..];
+        if tail.len() < 2 {
+            return "n/a".into();
+        }
+        let mut w = Welford::new();
+        for &x in tail {
+            w.push(x);
+        }
+        let cv = w.stddev() / w.mean().abs().max(1e-9);
+        if cv < 0.02 {
+            "Highly Stable".into()
+        } else if cv < 0.06 {
+            "Stable".into()
+        } else {
+            "Moderate".into()
+        }
+    }
+}
+
+/// Evaluate mean loss over a split using the compiled eval entry point.
+pub fn eval_split(rt: &ModelRuntime, ds: &Dataset, idx: &[usize]) -> f64 {
+    if idx.is_empty() {
+        return f64::NAN;
+    }
+    let b = rt.mm.eval.batch;
+    let mut total = 0.0;
+    let mut batches = 0usize;
+    let mut i = 0;
+    while i < idx.len() {
+        let end = (i + b).min(idx.len());
+        let chunk = &idx[i..end];
+        let (x, y) = if rt.mm.kind == "tcn" {
+            ds.gather_seq(chunk, b)
+        } else {
+            ds.gather_cur(chunk, b)
+        };
+        total += rt.eval_loss(x, y).expect("eval failed") as f64;
+        batches += 1;
+        i = end;
+    }
+    total / batches as f64
+}
+
+/// Full training run; mutates the runtime's parameters in place.
+pub fn train(rt: &mut ModelRuntime, ds: &Dataset, split: &Split, cfg: &TrainConfig) -> TrainResult {
+    let b = rt.mm.train.batch;
+    let mut order: Vec<usize> = split.train.clone();
+    let mut rng = Xoshiro256::new(cfg.seed ^ 0x7241_494E);
+    let mut train_curve = Vec::with_capacity(cfg.epochs);
+    let mut val_curve = Vec::with_capacity(cfg.epochs);
+    let mut best_val = f64::INFINITY;
+    let mut since_best = 0usize;
+    let mut stopped_early = false;
+
+    for epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0;
+        let mut nb = 0usize;
+        let max_b = if cfg.max_batches_per_epoch == 0 {
+            usize::MAX
+        } else {
+            cfg.max_batches_per_epoch
+        };
+        let mut i = 0;
+        while i < order.len() && nb < max_b {
+            let end = (i + b).min(order.len());
+            let chunk = &order[i..end];
+            let (x, y) = if rt.mm.kind == "tcn" {
+                ds.gather_seq(chunk, b)
+            } else {
+                ds.gather_cur(chunk, b)
+            };
+            epoch_loss += rt.train_step(x, y).expect("train step failed") as f64;
+            nb += 1;
+            i = end;
+        }
+        let tl = epoch_loss / nb.max(1) as f64;
+        let vl = eval_split(rt, ds, &split.val);
+        train_curve.push(tl);
+        val_curve.push(vl);
+        if cfg.verbose_every > 0 && (epoch + 1) % cfg.verbose_every == 0 {
+            crate::log_info!(
+                "train[{}] epoch {:>3}/{}: train={:.4} val={:.4}",
+                rt.mm.name,
+                epoch + 1,
+                cfg.epochs,
+                tl,
+                vl
+            );
+        }
+        if vl < best_val - 1e-5 {
+            best_val = vl;
+            since_best = 0;
+        } else {
+            since_best += 1;
+            if cfg.patience > 0 && since_best >= cfg.patience {
+                stopped_early = true;
+                break;
+            }
+        }
+    }
+
+    TrainResult {
+        model: rt.mm.name.clone(),
+        final_train_loss: *train_curve.last().unwrap_or(&f64::NAN),
+        final_val_loss: *val_curve.last().unwrap_or(&f64::NAN),
+        best_val_loss: best_val,
+        epochs_run: train_curve.len(),
+        stopped_early,
+        train_curve,
+        val_curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::{Dataset, GeometryHints, ModelRuntime};
+    use crate::runtime::{Engine, Manifest};
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    #[test]
+    fn short_training_reduces_loss_on_real_trace() {
+        let Some(dir) = crate::runtime::artifacts_dir() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let mut rt = ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+
+        let gcfg = GeneratorConfig::tiny(42);
+        let geom = GeometryHints::from_generator(&gcfg);
+        let trace = TraceGenerator::new(gcfg).generate(60_000);
+        let ds = Dataset::build(&trace, rt.mm.window, geom, 2048, 4);
+        let split = ds.split(3);
+
+        let cfg = TrainConfig {
+            epochs: 5,
+            patience: 0,
+            max_batches_per_epoch: 6,
+            seed: 1,
+            verbose_every: 0,
+        };
+        let res = train(&mut rt, &ds, &split, &cfg);
+        assert_eq!(res.epochs_run, 5);
+        assert!(res.train_curve[4] < res.train_curve[0], "curve: {:?}", res.train_curve);
+        assert!(res.final_val_loss.is_finite());
+        assert!(!res.stability().is_empty());
+    }
+}

@@ -1,0 +1,150 @@
+//! Bench timing harness. `criterion` is not present in the offline registry,
+//! so `cargo bench` targets (declared `harness = false`) use this module:
+//! warmup + repeated timed runs, reporting mean ± 95% CI, min, and throughput.
+
+use super::stats::Welford;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub ci95_ns: f64,
+    pub min_ns: f64,
+    /// items/sec if `items_per_iter` was set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let t = fmt_ns(self.mean_ns);
+        let ci = fmt_ns(self.ci95_ns);
+        let min = fmt_ns(self.min_ns);
+        match self.throughput {
+            Some(tp) => format!(
+                "{:<44} {:>12}/iter ±{:>9} (min {:>9}) {:>14.0} items/s",
+                self.name, t, ci, min, tp
+            ),
+            None => format!("{:<44} {:>12}/iter ±{:>9} (min {:>9})", self.name, t, ci, min),
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner: fixed warmup iterations then `iters` timed iterations.
+pub struct Bench {
+    pub warmup: u64,
+    pub iters: u64,
+    pub items_per_iter: Option<u64>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 10, items_per_iter: None }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: u64, iters: u64) -> Self {
+        Self { warmup, iters, items_per_iter: None }
+    }
+
+    pub fn throughput(mut self, items: u64) -> Self {
+        self.items_per_iter = Some(items);
+        self
+    }
+
+    /// Time `f`, which should perform one full iteration of the workload.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut w = Welford::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            w.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: w.mean(),
+            ci95_ns: w.ci95(),
+            min_ns: w.min(),
+            throughput: self.items_per_iter.map(|n| n as f64 / (w.mean() / 1e9)),
+        };
+        println!("{}", res.report());
+        res
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a markdown-ish table: `header` then rows; used by the table1 and
+/// ablation benches to print paper-style tables.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line: Vec<String> =
+        header.iter().zip(&widths).map(|(h, w)| format!("{h:<w$}", w = w)).collect();
+    println!("| {} |", line.join(" | "));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("|-{}-|", sep.join("-|-"));
+    for row in rows {
+        let cells: Vec<String> =
+            row.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}", w = w)).collect();
+        println!("| {} |", cells.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let b = Bench::new(1, 5).throughput(1000);
+        let mut acc = 0u64;
+        let res = b.run("noop-ish", || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(res.mean_ns > 0.0);
+        assert!(res.throughput.unwrap() > 0.0);
+        assert_eq!(res.iters, 5);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(5e2).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e10).contains('s'));
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utility substrate: RNG, stats, JSON, logging, thread pool,
+//! bench timing, and a property-test harness. The offline crate registry on
+//! this image lacks `rand`/`serde`/`criterion`/`proptest`/`tokio`, so these
+//! are first-class parts of the library rather than dev conveniences.
+
+pub mod bench;
+pub mod hash;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,88 @@
+//! Scoped thread pool for parameter sweeps (no tokio/rayon in the offline
+//! registry). Work items are closures producing a value; `run_parallel`
+//! fans them out over `nthreads` OS threads and returns results in input
+//! order. Built on `std::thread::scope`, so borrowed data works.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Execute `jobs` on up to `nthreads` threads; returns outputs in order.
+pub fn run_parallel<T, F>(nthreads: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let nthreads = nthreads.max(1).min(n);
+    if nthreads == 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+
+    // Jobs behind a mutex-protected queue of (index, job); results into slots.
+    let queue: Mutex<Vec<(usize, F)>> = Mutex::new(jobs.into_iter().enumerate().rev().collect());
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let active = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            s.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((idx, f)) => {
+                        active.fetch_add(1, Ordering::Relaxed);
+                        let out = f();
+                        *results[idx].lock().unwrap() = Some(out);
+                        active.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("job did not complete")).collect()
+}
+
+/// Number of worker threads to use by default: physical parallelism minus
+/// one (leave a core for the coordinator), at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = run_parallel(8, jobs);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrows_from_scope() {
+        let data: Vec<u64> = (0..100).collect();
+        let jobs: Vec<_> = (0..10)
+            .map(|i| {
+                let slice = &data[i * 10..(i + 1) * 10];
+                move || slice.iter().sum::<u64>()
+            })
+            .collect();
+        let out = run_parallel(4, jobs);
+        assert_eq!(out.iter().sum::<u64>(), (0..100).sum::<u64>());
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        let out: Vec<u32> = run_parallel(4, Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+        let out = run_parallel(1, vec![|| 7u32]);
+        assert_eq!(out, vec![7]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Integration tests over the serving coordinator: multi-worker runs with
+//! router policies, batched prediction service, and (artifact-gated) the
+//! real TCN behind the service thread.
+
+use acpc::coordinator::{serve, RouterPolicy, ServeConfig};
+use acpc::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
+use acpc::runtime::{artifacts_dir, Engine, Manifest};
+use std::time::Duration;
+
+#[test]
+fn four_workers_complete_all_sessions() {
+    let mut cfg = ServeConfig::quick("srrip");
+    cfg.workers = 4;
+    cfg.total_sessions = 32;
+    cfg.arrival_interval = Duration::from_micros(50);
+    let rep = serve(&cfg, 0, || PredictorBox::None);
+    assert_eq!(rep.sessions_admitted, 32);
+    assert!(rep.sessions_completed >= 31, "completed {}", rep.sessions_completed);
+    assert!(rep.tokens > 100);
+    assert!(rep.session_latency_ms_p95 >= rep.session_latency_ms_p50);
+}
+
+#[test]
+fn round_robin_and_least_loaded_both_work() {
+    for router in [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded] {
+        let mut cfg = ServeConfig::quick("lru");
+        cfg.router = router;
+        cfg.total_sessions = 12;
+        let rep = serve(&cfg, 0, || PredictorBox::None);
+        assert!(rep.sessions_completed >= 11, "{router:?}: {}", rep.sessions_completed);
+    }
+}
+
+#[test]
+fn predictor_service_feeds_acpc_policy() {
+    let mut cfg = ServeConfig::quick("acpc");
+    cfg.total_sessions = 16;
+    cfg.predict_batch = 64;
+    let rep = serve(&cfg, 1, || PredictorBox::Heuristic(HeuristicPredictor));
+    assert!(rep.prediction_batches > 0);
+    assert!(rep.mean_batch_fill >= 1.0);
+    assert!(rep.l2_hit_rate > 0.2);
+}
+
+#[test]
+fn single_worker_degenerate_case() {
+    let mut cfg = ServeConfig::quick("acpc");
+    cfg.workers = 1;
+    cfg.total_sessions = 6;
+    let rep = serve(&cfg, 1, || PredictorBox::Heuristic(HeuristicPredictor));
+    assert!(rep.sessions_completed >= 5);
+    assert_eq!(rep.router_imbalance_max, 0, "one worker → max-min load is always 0");
+}
+
+/// Real TCN behind the prediction service — the serving-paper configuration
+/// (artifact-gated).
+#[test]
+fn serve_with_real_tcn_artifact() {
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let manifest = Manifest::load(&artifacts_dir().unwrap()).unwrap();
+    let window = manifest.model("tcn").unwrap().window;
+    let mut cfg = ServeConfig::quick("acpc");
+    cfg.total_sessions = 12;
+    cfg.predict_batch = 128;
+    cfg.predict_deadline = Duration::from_millis(5);
+    let rep = serve(&cfg, window, || {
+        let dir = artifacts_dir().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let rt = ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+        PredictorBox::Model(Box::new(rt))
+    });
+    assert!(rep.sessions_completed >= 11, "completed {}", rep.sessions_completed);
+    assert!(rep.prediction_batches > 0, "TCN service must have run");
+}

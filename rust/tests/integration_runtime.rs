@@ -1,0 +1,164 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: numerical
+//! contracts between the compiled HLO and the rust data pipeline. These
+//! tests skip (loudly) when `make artifacts` has not run.
+
+use acpc::predictor::{Dataset, GeometryHints, ModelRuntime, PredictorBox, ReusePredictor};
+use acpc::runtime::{artifacts_dir, Engine, Manifest};
+use acpc::trace::{GeneratorConfig, TraceGenerator};
+use acpc::training::{bce, eval_split, implicit_loss, train, ImplicitKind, TrainConfig};
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ not built");
+                return;
+            }
+        }
+    };
+}
+
+fn mk_dataset(window: usize, n: usize, seed: u64) -> (Dataset, acpc::predictor::Split) {
+    let gcfg = GeneratorConfig::tiny(seed);
+    let geom = GeometryHints::from_generator(&gcfg);
+    let trace = TraceGenerator::new(gcfg).generate(n);
+    let ds = Dataset::build(&trace, window, geom, 2048, 4);
+    let split = ds.split(seed);
+    (ds, split)
+}
+
+/// All four models load, infer with valid probabilities, and train with
+/// finite loss.
+#[test]
+fn all_artifact_models_roundtrip() {
+    let dir = need_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    for name in ["tcn", "tcn_flat", "tcn_short", "dnn"] {
+        let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
+        let row = rt.row_elems();
+        let probs = rt.predict(&vec![0.2; 8 * row], 8);
+        assert_eq!(probs.len(), 8, "{name}");
+        for &p in &probs {
+            assert!((0.0..=1.0).contains(&p), "{name}: {p}");
+        }
+        let b = rt.mm.train.batch;
+        let loss = rt.train_step(vec![0.2; b * row], vec![1.0; b]).unwrap();
+        assert!(loss.is_finite(), "{name}");
+    }
+}
+
+/// The compiled eval loss must agree with a rust-side BCE computed from the
+/// compiled inference probabilities (two independent paths through the HLO).
+#[test]
+fn eval_loss_consistent_with_infer_plus_bce() {
+    let dir = need_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut rt = ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+    let (ds, split) = mk_dataset(rt.mm.window, 40_000, 11);
+
+    let idx: Vec<usize> = split.test.iter().copied().take(rt.mm.eval.batch).collect();
+    let b = rt.mm.eval.batch;
+    let (x, y) = ds.gather_seq(&idx, b);
+    let compiled = rt.eval_loss(x.clone(), y.clone()).unwrap() as f64;
+
+    let probs = rt.predict(&x, b);
+    let manual = bce(&probs, &y);
+    assert!(
+        (compiled - manual).abs() < 1e-3,
+        "compiled eval {compiled:.6} vs infer+bce {manual:.6}"
+    );
+}
+
+/// Training on a real labeled trace must beat the implicit LRU/RRIP
+/// predictors on held-out data — the Table 1 "final loss" ordering.
+#[test]
+fn trained_tcn_beats_implicit_predictors() {
+    let dir = need_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut rt = ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+    let (ds, split) = mk_dataset(rt.mm.window, 80_000, 23);
+    let cfg = TrainConfig {
+        epochs: 10,
+        patience: 0,
+        max_batches_per_epoch: 25,
+        seed: 5,
+        verbose_every: 0,
+    };
+    let res = train(&mut rt, &ds, &split, &cfg);
+    let tcn_test = eval_split(&rt, &ds, &split.test);
+    let lru = implicit_loss(ImplicitKind::Lru, &ds, &split.test);
+    let rrip = implicit_loss(ImplicitKind::Rrip, &ds, &split.test);
+    assert!(
+        tcn_test < rrip && rrip < lru,
+        "ordering: tcn {tcn_test:.3} < rrip {rrip:.3} < lru {lru:.3}"
+    );
+    assert!(res.final_train_loss < res.train_curve[0], "training must reduce loss");
+}
+
+/// Checkpoint round-trip through a *fresh* runtime instance: predictions
+/// identical before/after save+load.
+#[test]
+fn checkpoint_restores_predictions() {
+    let dir = need_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut rt = ModelRuntime::load(&engine, &manifest, "dnn").unwrap();
+    // Perturb weights with a couple of train steps.
+    let b = rt.mm.train.batch;
+    let row = rt.row_elems();
+    rt.train_step(vec![0.4; b * row], vec![0.0; b]).unwrap();
+    let x = vec![0.7f32; 16 * row];
+    let before = rt.predict(&x, 16);
+    let path = std::env::temp_dir().join("acpc_integration_ckpt.ckpt");
+    rt.store.save_checkpoint(&path).unwrap();
+
+    let mut rt2 = ModelRuntime::load(&engine, &manifest, "dnn").unwrap();
+    let fresh = rt2.predict(&x, 16);
+    rt2.store.load_checkpoint(&path).unwrap();
+    let after = rt2.predict(&x, 16);
+    assert_ne!(before, fresh, "training must have changed the model");
+    assert_eq!(before, after, "checkpoint must restore predictions exactly");
+    std::fs::remove_file(path).ok();
+}
+
+/// The trained TCN drives the full ACPC simulation and beats LRU — the
+/// complete three-layer stack, end to end (trace → features → compiled TCN
+/// via PJRT → PARM → metrics).
+#[test]
+fn full_stack_tcn_simulation_beats_lru() {
+    let dir = need_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let mut rt = ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+    let (ds, split) = mk_dataset(rt.mm.window, 80_000, 31);
+    train(
+        &mut rt,
+        &ds,
+        &split,
+        &TrainConfig { epochs: 8, patience: 0, max_batches_per_epoch: 20, seed: 2, verbose_every: 0 },
+    );
+
+    use acpc::config::{ExperimentConfig, PredictorKind};
+    let mut acpc_cfg = ExperimentConfig::smoke("acpc");
+    acpc_cfg.accesses = 120_000;
+    acpc_cfg.predictor = PredictorKind::Tcn;
+    let mut tcn_box = PredictorBox::Model(Box::new(rt));
+    let acpc_run = acpc::sim::run_experiment(&acpc_cfg, &mut tcn_box);
+
+    let mut lru_cfg = ExperimentConfig::smoke("lru");
+    lru_cfg.accesses = 120_000;
+    let lru_run = acpc::sim::run_experiment(&lru_cfg, &mut PredictorBox::None);
+
+    assert!(acpc_run.prediction_batches > 0);
+    assert!(
+        acpc_run.report.l2_hit_rate > lru_run.report.l2_hit_rate,
+        "tcn-acpc {:.4} vs lru {:.4}",
+        acpc_run.report.l2_hit_rate,
+        lru_run.report.l2_hit_rate
+    );
+    assert!(acpc_run.report.l2_pollution_ratio < lru_run.report.l2_pollution_ratio);
+}

@@ -1,0 +1,181 @@
+//! Property-based tests over replacement policies and the cache simulator:
+//! structural invariants that must hold for ANY access stream.
+
+use acpc::mem::{Cache, CacheConfig, Hierarchy, HierarchyConfig};
+use acpc::policy::{make_policy, AccessMeta, POLICY_NAMES};
+use acpc::trace::{GeneratorConfig, StreamKind, TraceGenerator};
+use acpc::util::proptest::prop_check;
+
+/// Drive a single cache with a random access/fill/invalidate stream and
+/// check bookkeeping invariants afterwards.
+#[test]
+fn prop_cache_bookkeeping_invariants() {
+    prop_check("cache bookkeeping", 60, |g| {
+        let assoc = *g.pick(&[2usize, 4, 8]);
+        let size_kb = *g.pick(&[4u64, 8, 16]);
+        let policy_name = *g.pick(POLICY_NAMES);
+        let cfg = CacheConfig::new("t", size_kb * 1024, assoc);
+        let policy = make_policy(policy_name, cfg.num_sets(), assoc, g.u64(0, 1 << 30)).unwrap();
+        let mut c = Cache::new(cfg, policy);
+
+        let lines = g.vec_u64(200, 3000, 0, 4096);
+        let mut fills = 0u64;
+        for (i, &line) in lines.iter().enumerate() {
+            let mut meta = AccessMeta::demand(line, line % 13, StreamKind::Weight);
+            meta.next_use = Some(i as u64 + 1 + line % 97); // keep belady fed
+            let is_pf = i % 7 == 0;
+            if is_pf {
+                if c.probe(line).is_none() {
+                    let mut m = meta;
+                    m.is_prefetch = true;
+                    c.fill(line, &m, false);
+                    fills += 1;
+                }
+            } else if c.access(line, &meta, i % 5 == 0) == acpc::mem::cache::Lookup::Miss {
+                c.fill(line, &meta, i % 5 == 0);
+                fills += 1;
+            }
+            if i % 31 == 0 {
+                c.invalidate(line);
+            }
+        }
+        let st = &c.stats;
+        // Conservation: hits + misses = demand accesses.
+        if st.demand_hits + st.demand_misses != st.demand_accesses {
+            return Err(format!(
+                "hits {} + misses {} != accesses {}",
+                st.demand_hits, st.demand_misses, st.demand_accesses
+            ));
+        }
+        // Evictions can never exceed fills.
+        if st.evictions > fills {
+            return Err(format!("evictions {} > fills {fills}", st.evictions));
+        }
+        // Dead prefetch evictions bounded by prefetch fills.
+        if st.dead_prefetch_evictions > st.prefetch_fills {
+            return Err(format!(
+                "dead pf {} > pf fills {}",
+                st.dead_prefetch_evictions, st.prefetch_fills
+            ));
+        }
+        // Useful prefetches bounded by prefetch fills.
+        if st.prefetch_useful > st.prefetch_fills {
+            return Err("useful > issued".into());
+        }
+        // Occupancy within capacity.
+        if !(0.0..=1.0).contains(&c.occupancy()) {
+            return Err(format!("occupancy {}", c.occupancy()));
+        }
+        Ok(())
+    });
+}
+
+/// A line that was just filled must be resident; a hit immediately after a
+/// fill must be a hit — for every policy.
+#[test]
+fn prop_fill_then_hit() {
+    prop_check("fill-then-hit", 40, |g| {
+        let policy_name = *g.pick(POLICY_NAMES);
+        let cfg = CacheConfig::new("t", 8 * 1024, 4);
+        let policy = make_policy(policy_name, cfg.num_sets(), 4, 7).unwrap();
+        let mut c = Cache::new(cfg, policy);
+        for _ in 0..300 {
+            let line = g.u64(0, 1 << 14);
+            let mut meta = AccessMeta::demand(line, 3, StreamKind::KvRead);
+            meta.next_use = Some(1);
+            if c.access(line, &meta, false) == acpc::mem::cache::Lookup::Miss {
+                c.fill(line, &meta, false);
+            }
+            if c.access(line, &meta, false) != acpc::mem::cache::Lookup::Hit {
+                return Err(format!("{policy_name}: just-filled line {line:#x} missed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Larger caches never hit less than smaller ones under LRU (inclusion
+/// property transferred to full-cache granularity, same assoc scaling).
+#[test]
+fn prop_lru_monotone_in_capacity() {
+    prop_check("lru capacity monotonicity", 15, |g| {
+        let seed = g.u64(0, 1 << 40);
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(seed)).generate(30_000);
+        let mut rates = Vec::new();
+        for kb in [8u64, 32, 128] {
+            let cfg = CacheConfig::new("t", kb * 1024, 8);
+            let policy = make_policy("lru", cfg.num_sets(), 8, 1).unwrap();
+            let mut c = Cache::new(cfg, policy);
+            for a in &trace {
+                let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+                if c.access(a.line(), &meta, a.is_write) == acpc::mem::cache::Lookup::Miss {
+                    c.fill(a.line(), &meta, a.is_write);
+                }
+            }
+            rates.push(c.stats.hit_rate());
+        }
+        if !(rates[0] <= rates[1] + 1e-9 && rates[1] <= rates[2] + 1e-9) {
+            return Err(format!("hit rates not monotone in capacity: {rates:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// The full hierarchy never loses accesses, and AMAT stays within the
+/// physically possible [L1 latency, DRAM latency] band — any policy, any
+/// prefetcher, any profile knob combination.
+#[test]
+fn prop_hierarchy_amat_bounds() {
+    prop_check("hierarchy amat bounds", 25, |g| {
+        let policy = *g.pick(&["lru", "srrip", "dip", "ship", "acpc", "mlpredict"]);
+        let prefetcher = *g.pick(&["none", "nextline", "stride", "correlation", "composite"]);
+        let mut hcfg = HierarchyConfig::scaled();
+        hcfg.prefetcher = prefetcher.to_string();
+        let mut h = Hierarchy::new(hcfg, policy);
+        let seed = g.u64(0, 1 << 40);
+        let n = g.usize(5_000, 30_000);
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(seed));
+        for _ in 0..n {
+            let a = gen.next_access();
+            let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+            h.access(&a, &meta);
+        }
+        if h.accesses != n as u64 {
+            return Err(format!("lost accesses: {} != {n}", h.accesses));
+        }
+        let amat = h.amat();
+        let lo = h.latency_of(acpc::mem::ServiceLevel::L1) as f64;
+        let hi = h.latency_of(acpc::mem::ServiceLevel::Dram) as f64;
+        if !(lo..=hi).contains(&amat) {
+            return Err(format!("{policy}/{prefetcher}: AMAT {amat} outside [{lo}, {hi}]"));
+        }
+        Ok(())
+    });
+}
+
+/// Utility updates must never corrupt residency: after update_utility on a
+/// random line, probes still find exactly the lines that were resident.
+#[test]
+fn prop_utility_updates_preserve_residency() {
+    prop_check("utility updates preserve residency", 30, |g| {
+        let mut hcfg = HierarchyConfig::scaled();
+        hcfg.prefetcher = "none".into();
+        let mut h = Hierarchy::new(hcfg, "acpc");
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(g.u64(0, 1 << 30)));
+        let mut resident_checks = Vec::new();
+        for i in 0..5_000 {
+            let a = gen.next_access();
+            let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+            h.access(&a, &meta);
+            h.update_utility(a.line(), g.f64(0.0, 1.0) as f32);
+            if i % 500 == 0 {
+                resident_checks.push(a.line());
+                // Just accessed → must be resident in L1 (and thus findable).
+                if h.l1.probe(a.line()).is_none() {
+                    return Err(format!("line {:#x} vanished from L1", a.line()));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,172 @@
+//! Property-based tests over the trace generator, labeler, feature
+//! extractor and dataset pipeline: structural invariants for any seed/knob
+//! combination.
+
+use acpc::predictor::{labeler, Dataset, FeatureExtractor, GeometryHints, FEATURE_DIM};
+use acpc::trace::{region, GeneratorConfig, ModelProfile, StreamKind, TraceGenerator};
+use acpc::util::proptest::prop_check;
+
+fn random_config(g: &mut acpc::util::proptest::Gen) -> GeneratorConfig {
+    let profile = match g.usize(0, 2) {
+        0 => ModelProfile::gpt3ish(),
+        1 => ModelProfile::llama2ish(),
+        _ => ModelProfile::t5ish(),
+    };
+    let mut cfg = GeneratorConfig::new(profile, g.u64(0, 1 << 40));
+    cfg.max_live_sessions = g.usize(1, 12);
+    cfg.max_ctx = *g.pick(&[64u32, 128, 256]) as u32;
+    cfg.phase_period = *g.pick(&[0u64, 1000, 50_000]);
+    cfg.profile.layers = g.usize(1, 12) as u16;
+    cfg
+}
+
+/// Generator invariants: strictly increasing time, valid regions, ctx_len
+/// within bounds, KV addresses inside their slot, deterministic per seed.
+#[test]
+fn prop_generator_invariants() {
+    prop_check("generator invariants", 25, |g| {
+        let cfg = random_config(g);
+        let n = g.usize(2_000, 20_000);
+        let kv_layer_bytes = cfg.max_ctx as u64 * cfg.profile.kv_bytes_per_token;
+        let kv_slot_bytes = kv_layer_bytes * cfg.profile.layers as u64;
+        let kv_total = kv_slot_bytes * cfg.max_live_sessions as u64;
+        let trace = TraceGenerator::new(cfg.clone()).generate(n);
+        let trace2 = TraceGenerator::new(cfg.clone()).generate(n);
+        if trace != trace2 {
+            return Err("non-deterministic for identical config".into());
+        }
+        let mut last_t = 0;
+        for a in &trace {
+            if a.time <= last_t {
+                return Err(format!("time not strictly increasing at {}", a.time));
+            }
+            last_t = a.time;
+            if a.ctx_len >= cfg.max_ctx {
+                return Err(format!("ctx_len {} >= max_ctx {}", a.ctx_len, cfg.max_ctx));
+            }
+            match a.kind {
+                StreamKind::KvRead | StreamKind::KvWrite => {
+                    let off = a.addr - region::KV;
+                    if off >= kv_total {
+                        return Err(format!("KV address outside slot space: {off} >= {kv_total}"));
+                    }
+                    if a.kind == StreamKind::KvWrite && !a.is_write {
+                        return Err("KvWrite not marked as write".into());
+                    }
+                }
+                StreamKind::Embedding => {
+                    let off = a.addr - region::EMBED;
+                    let max = cfg.profile.vocab * cfg.profile.embed_row_bytes;
+                    if off >= max {
+                        return Err(format!("embedding address beyond table: {off}"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Labeler invariants: labels consistent with next_use, and next_use always
+/// points forward to the same line.
+#[test]
+fn prop_labeler_consistency() {
+    prop_check("labeler consistency", 20, |g| {
+        let cfg = random_config(g);
+        let horizon = g.usize(16, 4096);
+        let trace = TraceGenerator::new(cfg).generate(g.usize(1_000, 10_000));
+        let ann = labeler::annotate(&trace, horizon);
+        for (i, a) in ann.iter().enumerate() {
+            match a.next_use {
+                Some(j) => {
+                    let j = j as usize;
+                    if j <= i {
+                        return Err(format!("next_use {j} <= {i}"));
+                    }
+                    if trace[j].line() != trace[i].line() {
+                        return Err("next_use crosses lines".into());
+                    }
+                    let within = j - i <= horizon;
+                    if a.label != within {
+                        return Err(format!("label {} but gap {} horizon {horizon}", a.label, j - i));
+                    }
+                }
+                None => {
+                    if a.label {
+                        return Err("label true without next use".into());
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Feature extractor: all outputs bounded, window sequences chronological
+/// (last row equals features_of the current access modulo the pre-update
+/// state), and bounded memory.
+#[test]
+fn prop_feature_extractor_bounded() {
+    prop_check("feature extractor bounded", 15, |g| {
+        let cfg = random_config(g);
+        let geom = GeometryHints::from_generator(&cfg);
+        let window = g.usize(2, 16);
+        let mut fx = FeatureExtractor::new(window, geom);
+        let mut out = vec![0.0f32; window * FEATURE_DIM];
+        let mut gen = TraceGenerator::new(cfg);
+        for _ in 0..g.usize(2_000, 15_000) {
+            let a = gen.next_access();
+            fx.push(&a, &mut out);
+            for (k, &v) in out.iter().enumerate() {
+                if !(0.0..=2.5).contains(&v) || !v.is_finite() {
+                    return Err(format!("feature {} out of bounds: {v}", k % FEATURE_DIM));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Dataset pipeline: split fractions, disjointness, x/x_cur coherence for
+/// any window and sampling stride.
+#[test]
+fn prop_dataset_split_partition() {
+    prop_check("dataset split partition", 10, |g| {
+        let cfg = random_config(g);
+        let geom = GeometryHints::from_generator(&cfg);
+        let window = g.usize(2, 16);
+        let stride = g.usize(1, 8);
+        let trace = TraceGenerator::new(cfg).generate(20_000);
+        let ds = Dataset::build(&trace, window, geom, 1024, stride);
+        if ds.n == 0 {
+            return Err("empty dataset".into());
+        }
+        let split = ds.split(g.u64(0, 1 << 30));
+        let total = split.train.len() + split.val.len() + split.test.len();
+        if total != ds.n {
+            return Err(format!("split loses samples: {total} != {}", ds.n));
+        }
+        let mut seen = vec![false; ds.n];
+        for &i in split.train.iter().chain(&split.val).chain(&split.test) {
+            if seen[i] {
+                return Err(format!("index {i} appears twice"));
+            }
+            seen[i] = true;
+        }
+        let frac = split.train.len() as f64 / ds.n as f64;
+        if (frac - 0.7).abs() > 0.02 {
+            return Err(format!("train fraction {frac}"));
+        }
+        // x_cur is the last row of x.
+        let row = window * FEATURE_DIM;
+        for i in (0..ds.n).step_by((ds.n / 13).max(1)) {
+            let last = &ds.x[i * row + (window - 1) * FEATURE_DIM..(i + 1) * row];
+            let cur = &ds.x_cur[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+            if last != cur {
+                return Err(format!("x_cur mismatch at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
