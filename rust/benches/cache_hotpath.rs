@@ -1,16 +1,22 @@
-//! µbench: the simulator hot path — hierarchy accesses/second per policy,
+//! µbench: the simulator hot path — engine accesses/second per policy,
 //! plus the raw trace-generation rate. This is the L3 perf target from
 //! DESIGN.md §8 (≥10M LRU accesses/s single-thread) and feeds
 //! EXPERIMENTS.md §Perf.
+//!
+//! Accesses are driven through the shared `sim::Engine` (the same loop the
+//! CLI, sweep runner and coordinator use), so the numbers here are the real
+//! end-to-end per-access cost, not a bench-only replica of it.
 
-use acpc::mem::{Hierarchy, HierarchyConfig};
-use acpc::policy::AccessMeta;
+use acpc::mem::HierarchyConfig;
+use acpc::predictor::GeometryHints;
+use acpc::sim::Engine;
 use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
 use acpc::util::bench::{black_box, Bench};
 
 fn main() {
     let n = 1_000_000usize;
     let gcfg = GeneratorConfig::new(ModelProfile::gpt3ish(), 42);
+    let geom = GeometryHints::from_generator(&gcfg);
 
     // Raw generator rate (upper bound for streaming mode).
     let bench = Bench::new(1, 5).throughput(n as u64);
@@ -21,28 +27,36 @@ fn main() {
         }
     });
 
-    // Pre-materialized trace → pure cache-simulator rate per policy.
+    // Pre-materialized trace → pure engine rate per policy.
     let trace = TraceGenerator::new(gcfg.clone()).generate(n);
     for policy in ["lru", "plru", "srrip", "drrip", "dip", "ship", "acpc", "mlpredict"] {
         let mut hcfg = HierarchyConfig::scaled();
         hcfg.prefetcher = "composite".into();
-        bench.run(&format!("hierarchy[{policy}]"), || {
-            let mut h = Hierarchy::new(hcfg.clone(), policy);
+        bench.run(&format!("engine[{policy}]"), || {
+            let mut eng = Engine::new(hcfg.clone(), policy, geom, 0);
             for a in &trace {
-                let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
-                black_box(h.access(a, &meta));
+                black_box(eng.step(a, None));
             }
         });
     }
 
+    // Feature extraction enabled (window 1) isolates the predictor-feed cost.
+    let mut hcfg = HierarchyConfig::scaled();
+    hcfg.prefetcher = "composite".into();
+    bench.run("engine[acpc,features]", || {
+        let mut eng = Engine::new(hcfg.clone(), "acpc", geom, 1);
+        for a in &trace {
+            black_box(eng.step(a, None));
+        }
+    });
+
     // No-prefetcher variant isolates prefetch-machinery cost.
     let mut hcfg = HierarchyConfig::scaled();
     hcfg.prefetcher = "none".into();
-    bench.run("hierarchy[lru,no-prefetch]", || {
-        let mut h = Hierarchy::new(hcfg.clone(), "lru");
+    bench.run("engine[lru,no-prefetch]", || {
+        let mut eng = Engine::new(hcfg.clone(), "lru", geom, 0);
         for a in &trace {
-            let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
-            black_box(h.access(a, &meta));
+            black_box(eng.step(a, None));
         }
     });
 }

@@ -1,0 +1,32 @@
+//! Bench: the parallel policy×scenario sweep — aggregate simulated
+//! accesses/second as `-j` scales, over the full scenario registry.
+//!
+//! `ACPC_BENCH_SCALE=smoke` shrinks the per-cell trace.
+
+use acpc::sim::sweep::{render_cells, run_sweep, SweepConfig};
+use acpc::util::pool::default_threads;
+
+fn main() {
+    let smoke = matches!(std::env::var("ACPC_BENCH_SCALE").as_deref(), Ok("smoke"));
+    let accesses = if smoke { 40_000 } else { 400_000 };
+
+    for threads in [1, 2, default_threads()] {
+        let mut cfg = SweepConfig::default_grid();
+        cfg.accesses = accesses;
+        cfg.threads = threads;
+        let t0 = std::time::Instant::now();
+        let cells = run_sweep(&cfg).expect("sweep");
+        let wall = t0.elapsed().as_secs_f64();
+        let total: u64 = cells.iter().map(|c| c.result.report.accesses).sum();
+        println!(
+            "-j {:>2}: {} cells, {:.2}s wall, {:.2}M acc/s aggregate",
+            threads,
+            cells.len(),
+            wall,
+            total as f64 / wall / 1e6
+        );
+        if threads == default_threads() {
+            println!("\n{}", render_cells(&cells));
+        }
+    }
+}

@@ -1,4 +1,5 @@
-//! Tiny argument parser: positionals + `--key value` + `--flag` booleans.
+//! Tiny argument parser: positionals + `--key value` / `-k value` options
+//! + `--flag` booleans.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -17,18 +18,43 @@ impl Args {
         let mut positionals = Vec::new();
         let mut options = BTreeMap::new();
         let mut flags = Vec::new();
+        // Classify a token as an option key: `--key` long form, `-k`
+        // single-letter short form, or `-k8` (attached value). Anything
+        // else — including `-3` — is a plain value/positional, so a
+        // negative-looking token after an option is still consumed as its
+        // value and surfaces a loud parse error rather than vanishing.
+        fn key_of(tok: &str) -> Option<(&str, Option<&str>)> {
+            if let Some(k) = tok.strip_prefix("--") {
+                return Some((k, None));
+            }
+            let k = tok.strip_prefix('-')?;
+            if k.len() == 1 && k.chars().all(|c| c.is_ascii_alphabetic()) {
+                Some((k, None))
+            } else if k.len() > 1
+                && k.starts_with(|c: char| c.is_ascii_alphabetic())
+                && k[1..].chars().all(|c| c.is_ascii_digit())
+            {
+                Some((&k[..1], Some(&k[1..])))
+            } else {
+                None
+            }
+        }
+
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
-                let next_is_value =
-                    it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
-                if next_is_value {
-                    options.insert(key.to_string(), it.next().unwrap());
-                } else {
-                    flags.push(key.to_string());
+            match key_of(&a) {
+                Some((key, Some(value))) => {
+                    options.insert(key.to_string(), value.to_string());
                 }
-            } else {
-                positionals.push(a);
+                Some((key, None)) => {
+                    let next_is_value = it.peek().map(|n| key_of(n).is_none()).unwrap_or(false);
+                    if next_is_value {
+                        options.insert(key.to_string(), it.next().unwrap());
+                    } else {
+                        flags.push(key.to_string());
+                    }
+                }
+                None => positionals.push(a),
             }
         }
         Self { positionals, options, flags, consumed: 0 }
@@ -110,6 +136,26 @@ mod tests {
         assert!(a.flag("verbose"));
         assert_eq!(a.next_positional().as_deref(), Some("next"));
         assert_eq!(a.next_positional(), None);
+    }
+
+    #[test]
+    fn short_options_parse() {
+        let a = mk("sweep --policies lru,acpc -j 8 --scenarios all");
+        assert_eq!(a.opt("policies"), Some("lru,acpc"));
+        assert_eq!(a.usize_or("j", 1).unwrap(), 8);
+        assert_eq!(a.opt("scenarios"), Some("all"));
+        // Attached short-option value, make-style.
+        let a = mk("sweep -j8");
+        assert_eq!(a.usize_or("j", 1).unwrap(), 8);
+        // A negative-looking token is consumed as the option's value and
+        // surfaces a parse error, not silently dropped.
+        let a = mk("x --seed -3");
+        assert_eq!(a.opt("seed"), Some("-3"));
+        assert!(a.u64_or("seed", 0).is_err());
+        // A lone `-5` is a positional, not an option key.
+        let mut b = mk("cmd -5");
+        assert_eq!(b.next_positional().as_deref(), Some("cmd"));
+        assert_eq!(b.next_positional().as_deref(), Some("-5"));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 pub mod policies;
 pub mod serve;
 pub mod simulate;
+pub mod sweep;
 pub mod table1;
 pub mod trace_stats;
 pub mod train;

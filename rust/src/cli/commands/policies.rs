@@ -12,7 +12,11 @@ pub fn run() -> Result<i32> {
         println!("  {p}");
     }
     println!("\nworkload profiles: gpt3ish llama2ish t5ish");
-    println!("hierarchy presets: scaled epyc7763");
+    println!("\nworkload scenarios (sweep grid):");
+    for s in crate::trace::Scenario::all() {
+        println!("  {:<17} {}", s.name, s.summary);
+    }
+    println!("\nhierarchy presets: scaled epyc7763");
     println!("predictors: none heuristic dnn tcn (artifact models: tcn tcn_flat tcn_short dnn)");
     Ok(0)
 }

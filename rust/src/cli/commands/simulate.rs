@@ -16,6 +16,7 @@ OPTIONS:
     --model <name>        artifact model override (tcn_flat, tcn_short, ...)
     --accesses <n>        trace length [default: 2000000]
     --profile <name>      gpt3ish|llama2ish|t5ish [default: gpt3ish]
+    --scenario <name>     scenario-registry workload (see `acpc policies`)
     --prefetcher <name>   none|nextline|stride|correlation|composite
     --hierarchy <preset>  scaled|epyc7763 [default: scaled]
     --config <file.json>  JSON config overrides (see config module)
@@ -30,14 +31,28 @@ pub fn run(args: &mut Args) -> Result<i32> {
         return Ok(0);
     }
     args.ensure_known(&[
-        "policy", "predictor", "model", "accesses", "profile", "prefetcher", "hierarchy",
-        "config", "feedback", "seed", "json", "help",
+        "policy", "predictor", "model", "accesses", "profile", "scenario", "prefetcher",
+        "hierarchy", "config", "feedback", "seed", "json", "help",
     ])?;
+    if args.opt("profile").is_some() && args.opt("scenario").is_some() {
+        anyhow::bail!("--profile and --scenario are mutually exclusive");
+    }
 
-    let kind = PredictorKind::parse(&args.opt_or("predictor", "heuristic"))?;
+    let mut kind = PredictorKind::parse(&args.opt_or("predictor", "heuristic"))?;
     let mut cfg = ExperimentConfig::table1(&args.opt_or("policy", "acpc"), kind);
     if let Some(path) = args.opt("config") {
         cfg = ExperimentConfig::from_file(Path::new(path))?;
+        // Explicitly-given CLI flags beat the file; otherwise the file is
+        // authoritative — including for the predictor actually built below,
+        // so the run matches the provenance the report records.
+        if let Some(p) = args.opt("policy") {
+            cfg.policy = p.to_string();
+        }
+        if args.opt("predictor").is_some() {
+            cfg.predictor = kind;
+        } else {
+            kind = cfg.predictor;
+        }
     }
     cfg.accesses = args.usize_or("accesses", cfg.accesses)?;
     cfg.feedback_interval = args.usize_or("feedback", cfg.feedback_interval)?;
@@ -47,6 +62,12 @@ pub fn run(args: &mut Args) -> Result<i32> {
         let profile = crate::trace::ModelProfile::by_name(p)
             .ok_or_else(|| anyhow::anyhow!("unknown profile '{p}'"))?;
         cfg.generator = crate::trace::GeneratorConfig::new(profile, cfg.seed);
+        // A --config file may have set a scenario; the profile replaces
+        // its generator wholesale, so drop the stale provenance.
+        cfg.scenario = None;
+    }
+    if let Some(s) = args.opt("scenario") {
+        cfg.set_scenario(s)?;
     }
     if let Some(p) = args.opt("prefetcher") {
         cfg.hierarchy.prefetcher = p.to_string();
@@ -60,10 +81,11 @@ pub fn run(args: &mut Args) -> Result<i32> {
     if crate::policy::make_policy(&cfg.policy, 2, 2, 0).is_none() {
         anyhow::bail!("unknown policy '{}' (see `acpc policies`)", cfg.policy);
     }
+    cfg.hierarchy.validate().map_err(|e| anyhow::anyhow!("invalid hierarchy geometry: {e}"))?;
 
     let mut predictor = build_predictor(kind, args.opt("model"))?;
     println!(
-        "simulating: policy={} predictor={} accesses={} profile={} prefetcher={}",
+        "simulating: policy={} predictor={} accesses={} workload={} prefetcher={}",
         cfg.policy, predictor.name(), cfg.accesses, cfg.generator.profile.name, cfg.hierarchy.prefetcher
     );
     let res = run_experiment(&cfg, &mut predictor);

@@ -1,0 +1,94 @@
+//! `acpc sweep` — multi-threaded policy×scenario grid sweep.
+
+use crate::cli::Args;
+use crate::sim::sweep::{render_cells, run_sweep, SweepConfig};
+use crate::trace::SCENARIO_NAMES;
+use crate::util::json::Json;
+use crate::util::pool::default_threads;
+use anyhow::Result;
+use std::time::Instant;
+
+const HELP: &str = "\
+acpc sweep — run the policy×scenario experiment grid in parallel
+
+Each grid cell simulates one replacement policy against one workload
+scenario through the shared engine, with a deterministic per-cell seed:
+results are identical for any -j.
+
+OPTIONS:
+    --policies <a,b,..>   comma-separated policies [default: lru,srrip,ship,acpc]
+    --scenarios <a,b,..>  comma-separated scenarios or 'all' [default: all]
+    -j, --jobs <n>        worker threads [default: cores-1]
+    --accesses <n>        accesses per cell [default: 400000]
+    --seed <n>            base seed (per-cell seeds derive from it)
+    --json <path>         write all cell reports as JSON
+    --help
+
+Scenarios: decode-heavy prefill-burst rag-embedding long-context multi-tenant-mix
+Example:
+    acpc sweep --policies lru,drrip,ship,acpc --scenarios all -j 8";
+
+fn parse_list(s: &str) -> Vec<String> {
+    s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+}
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&[
+        "policies", "scenarios", "jobs", "j", "accesses", "seed", "json", "help",
+    ])?;
+
+    let policies = parse_list(&args.opt_or("policies", "lru,srrip,ship,acpc"));
+    let scenarios = match args.opt_or("scenarios", "all").as_str() {
+        "all" => SCENARIO_NAMES.iter().map(|s| s.to_string()).collect(),
+        csv => parse_list(csv),
+    };
+    let mut cfg = SweepConfig::new(policies, scenarios);
+    cfg.threads = args.usize_or("j", args.usize_or("jobs", default_threads())?)?;
+    cfg.accesses = args.usize_or("accesses", cfg.accesses)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+
+    println!(
+        "sweep: {} policies × {} scenarios = {} cells, {} accesses/cell, -j {}",
+        cfg.policies.len(),
+        cfg.scenarios.len(),
+        cfg.policies.len() * cfg.scenarios.len(),
+        cfg.accesses,
+        cfg.threads
+    );
+    let t0 = Instant::now();
+    let cells = run_sweep(&cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n{}", render_cells(&cells));
+    let total_accesses: u64 = cells.iter().map(|c| c.result.report.accesses).sum();
+    println!(
+        "{} cells in {:.2}s wall ({:.2}M accesses/s aggregate)",
+        cells.len(),
+        wall,
+        total_accesses as f64 / wall / 1e6
+    );
+
+    if let Some(path) = args.opt("json") {
+        let rows: Vec<Json> = cells
+            .iter()
+            .map(|c| {
+                Json::from_pairs(vec![
+                    ("policy", Json::Str(c.policy.clone())),
+                    ("scenario", Json::Str(c.scenario.clone())),
+                    // String, not Num: u64 seeds exceed f64's 2^53 integer
+                    // range and must round-trip into `--seed` exactly.
+                    ("seed", Json::Str(c.seed.to_string())),
+                    ("tokens", Json::Num(c.result.tokens as f64)),
+                    ("report", c.result.report.to_json()),
+                ])
+            })
+            .collect();
+        std::fs::write(path, Json::Arr(rows).to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(0)
+}

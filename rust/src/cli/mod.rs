@@ -16,11 +16,12 @@ USAGE:
 
 COMMANDS:
     simulate     run one cache simulation (policy × predictor × workload)
+    sweep        parallel policy×scenario experiment grid
     train        train a predictor with the compiled Adam step (Fig. 2)
     table1       reproduce the paper's Table 1 end-to-end
     serve        multi-worker serving-node simulation (router + batcher)
     trace-stats  characterize a generated workload trace
-    policies     list replacement policies / prefetchers / profiles
+    policies     list replacement policies / prefetchers / profiles / scenarios
     help         show this message
 
 Run `acpc <COMMAND> --help` for per-command options.
@@ -39,6 +40,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     };
     match cmd.as_str() {
         "simulate" => commands::simulate::run(&mut args),
+        "sweep" => commands::sweep::run(&mut args),
         "train" => commands::train::run(&mut args),
         "table1" => commands::table1::run(&mut args),
         "serve" => commands::serve::run(&mut args),

@@ -48,6 +48,9 @@ pub struct ExperimentConfig {
     pub predictor: PredictorKind,
     pub hierarchy: HierarchyConfig,
     pub generator: GeneratorConfig,
+    /// Scenario-registry name when the generator came from a scenario
+    /// (`trace::Scenario`); provenance only — `generator` is authoritative.
+    pub scenario: Option<String>,
     /// Number of accesses to simulate.
     pub accesses: usize,
     /// Predictor batch size (accesses buffered before a model invocation).
@@ -68,11 +71,45 @@ impl ExperimentConfig {
             predictor,
             hierarchy: HierarchyConfig::scaled(),
             generator: GeneratorConfig::new(ModelProfile::gpt3ish(), seed),
+            scenario: None,
             accesses: 2_000_000,
             predict_batch: 256,
             feedback_interval: 0,
             seed,
         }
+    }
+
+    /// Config for one scenario-registry workload (see `trace::scenario`).
+    /// Errors on unknown scenario names.
+    pub fn for_scenario(
+        scenario: &str,
+        policy: &str,
+        predictor: PredictorKind,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut c = Self::table1(policy, predictor);
+        c.name = format!("{scenario}-{policy}");
+        c.seed = seed;
+        c.generator.seed = seed;
+        c.set_scenario(scenario)?;
+        Ok(c)
+    }
+
+    /// Resolve `name` in the scenario registry and stamp its generator
+    /// config (at the current seed) into `self`. The single scenario→config
+    /// path shared by the CLI, JSON overrides and the sweep runner.
+    pub fn set_scenario(&mut self, name: &str) -> Result<()> {
+        let sc = crate::trace::Scenario::by_name(name)
+            .ok_or_else(|| anyhow!("unknown scenario '{name}' (see `acpc policies`)"))?;
+        self.generator = sc.config(self.generator.seed);
+        self.scenario = Some(name.to_string());
+        Ok(())
+    }
+
+    /// Build the workload this config describes (the generator state, boxed
+    /// behind the `Workload` trait the sim `Engine` drives).
+    pub fn workload(&self) -> Box<dyn crate::trace::Workload> {
+        Box::new(crate::trace::TraceGenerator::new(self.generator.clone()))
     }
 
     /// Fast config for tests.
@@ -149,23 +186,34 @@ impl ExperimentConfig {
                 other => bail!("unknown hierarchy key '{other}'"),
             }
         }
+        // Config-time geometry validation: a bad size/assoc combination is a
+        // user error surfaced here, not a panic deep in `Cache::new`.
+        self.hierarchy.validate().map_err(|e| anyhow!(e))?;
         Ok(())
     }
 
     fn apply_workload(&mut self, j: &Json) -> Result<()> {
         let obj = j.as_obj().ok_or_else(|| anyhow!("workload must be an object"))?;
-        // `profile` resets the whole generator, so it must apply before any
-        // sibling keys regardless of JSON object order.
+        if obj.get("scenario").is_some() && obj.get("profile").is_some() {
+            bail!("workload: 'scenario' and 'profile' are mutually exclusive");
+        }
+        // `scenario`/`profile` reset the whole generator, so they must apply
+        // before any sibling keys regardless of JSON object order.
+        if let Some(v) = obj.get("scenario") {
+            let name = v.as_str().ok_or_else(|| anyhow!("scenario"))?;
+            self.set_scenario(name)?;
+        }
         if let Some(v) = obj.get("profile") {
             let name = v.as_str().ok_or_else(|| anyhow!("profile"))?;
             let profile = ModelProfile::by_name(name)
                 .ok_or_else(|| anyhow!("unknown model profile '{name}'"))?;
             let seed = self.generator.seed;
             self.generator = GeneratorConfig::new(profile, seed);
+            self.scenario = None;
         }
         for (k, v) in obj {
             match k.as_str() {
-                "profile" => {}
+                "profile" | "scenario" => {}
                 "max_live_sessions" => {
                     self.generator.max_live_sessions = num(v, "max_live_sessions")? as usize
                 }
@@ -212,6 +260,7 @@ impl ExperimentConfig {
             ("predict_batch", Json::Num(self.predict_batch as f64)),
             ("feedback_interval", Json::Num(self.feedback_interval as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("scenario", Json::Str(self.scenario.clone().unwrap_or_else(|| "-".into()))),
             ("profile", Json::Str(self.generator.profile.name.clone())),
             ("prefetcher", Json::Str(self.hierarchy.prefetcher.clone())),
             ("l2_kb", Json::Num(self.hierarchy.l2.size_bytes as f64 / 1024.0)),
@@ -262,6 +311,38 @@ mod tests {
         assert!(c
             .apply_json(&Json::parse(r#"{"hierarchy": {"l9_kb": 1}}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn scenario_constructor_and_json_key() {
+        let c = ExperimentConfig::for_scenario("rag-embedding", "lru", PredictorKind::None, 9)
+            .unwrap();
+        assert_eq!(c.scenario.as_deref(), Some("rag-embedding"));
+        assert_eq!(c.generator.profile.name, "rag-embedding");
+        assert_eq!(c.generator.seed, 9);
+        assert!(ExperimentConfig::for_scenario("nope", "lru", PredictorKind::None, 9).is_err());
+
+        let mut c = ExperimentConfig::table1("lru", PredictorKind::None);
+        c.apply_json(&Json::parse(r#"{"workload": {"scenario": "long-context"}}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.scenario.as_deref(), Some("long-context"));
+        assert_eq!(c.generator.max_ctx, 2048);
+        // scenario+profile together is ambiguous.
+        let mut c2 = ExperimentConfig::table1("lru", PredictorKind::None);
+        assert!(c2
+            .apply_json(
+                &Json::parse(r#"{"workload": {"scenario": "long-context", "profile": "t5"}}"#)
+                    .unwrap()
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn invalid_hierarchy_geometry_is_a_config_error() {
+        let mut c = ExperimentConfig::table1("lru", PredictorKind::None);
+        // 96 KiB / 8-way / 64 B lines → 192 sets: not a power of two.
+        let err = c.apply_json(&Json::parse(r#"{"hierarchy": {"l2_kb": 96}}"#).unwrap());
+        assert!(err.is_err(), "non-power-of-two geometry must be rejected");
     }
 
     #[test]

@@ -13,13 +13,18 @@
 //! Workers never block on predictions: fills use the latest completed
 //! utility for the line (the async model of §3.1), and responses are
 //! drained opportunistically each loop iteration.
+//!
+//! Each worker drives its admitted sessions through the shared
+//! [`crate::sim::Engine`] — the same access loop the batch simulator and
+//! the benches use — shipping the engine's feature rows to the predictor
+//! service instead of flushing them inline.
 
 use super::batcher::DynamicBatcher;
 use super::router::{Router, RouterPolicy};
-use crate::mem::{Hierarchy, HierarchyConfig};
-use crate::policy::AccessMeta;
-use crate::predictor::{FeatureExtractor, GeometryHints, PredictorBox, FEATURE_DIM};
-use crate::trace::{GeneratorConfig, TraceGenerator};
+use crate::mem::HierarchyConfig;
+use crate::predictor::{GeometryHints, PredictorBox, FEATURE_DIM};
+use crate::sim::{Engine, PredictionBatch};
+use crate::trace::{GeneratorConfig, TraceGenerator, Workload};
 use crate::util::stats::percentile;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -204,55 +209,37 @@ pub fn serve(
             let hcfg = cfg.hierarchy.clone();
             let policy = cfg.policy.clone();
             s.spawn(move || {
-                let mut hier = Hierarchy::new(hcfg, &policy);
+                // The shared engine drives this worker's accesses; its
+                // feature rows are shipped to the predictor service rather
+                // than flushed inline.
                 let geom = GeometryHints::from_generator(&gcfg);
-                let mut gen = TraceGenerator::new(gcfg);
-                let mut fx = FeatureExtractor::new(window, geom);
-                let mut seq = vec![0.0f32; window * FEATURE_DIM];
-                let mut completed_seen = 0u64;
-                let mut local_lines: Vec<u64> = Vec::new();
-                let mut local_x: Vec<f32> = Vec::new();
+                let mut workload: Box<dyn Workload> = Box::new(TraceGenerator::new(gcfg));
+                let mut engine =
+                    Engine::new(hcfg, &policy, geom, if use_pred { window } else { 0 });
                 const LOCAL_BATCH: usize = 32;
+                let mut batch = PredictionBatch::new(engine.row(), LOCAL_BATCH);
+                let mut completed_seen = 0u64;
 
                 loop {
                     while admit_rx.try_recv().is_ok() {
-                        gen.force_arrival();
+                        workload.force_arrival();
                     }
                     while let Ok(resp) = resp_rx.try_recv() {
                         for (line, p) in resp {
-                            hier.update_utility(line, p);
+                            engine.update_utility(line, p);
                         }
                     }
-                    if gen.has_work() {
-                        let a = gen.next_access();
-                        let line = a.line();
-                        let meta = AccessMeta {
-                            line,
-                            pc: a.pc,
-                            kind: a.kind,
-                            is_prefetch: false,
-                            predicted_utility: None, // late-bound by the hierarchy
-                            next_use: None,
+                    if workload.has_work() {
+                        let a = workload.next_access();
+                        let full = match engine.step(&a, None) {
+                            Some(feats) => batch.push(a.line(), feats),
+                            None => false,
                         };
-                        hier.access(&a, &meta);
-                        if use_pred {
-                            fx.push(&a, &mut seq);
-                            let feats: &[f32] = if row == FEATURE_DIM {
-                                &seq[(window - 1) * FEATURE_DIM..]
-                            } else {
-                                &seq
-                            };
-                            local_lines.push(line);
-                            local_x.extend_from_slice(feats);
-                            if local_lines.len() >= LOCAL_BATCH {
-                                let _ = pr_tx.send(PredictReq {
-                                    worker: w,
-                                    lines: std::mem::take(&mut local_lines),
-                                    x: std::mem::take(&mut local_x),
-                                });
-                            }
+                        if full {
+                            let (lines, x) = batch.take();
+                            let _ = pr_tx.send(PredictReq { worker: w, lines, x });
                         }
-                        let c = gen.sessions_completed();
+                        let c = workload.sessions_completed();
                         while completed_seen < c {
                             completed_seen += 1;
                             let _ = ev_tx.send(Event::SessionDone { worker: w });
@@ -263,13 +250,14 @@ pub fn serve(
                         std::thread::sleep(Duration::from_micros(50));
                     }
                 }
+                let l2 = &engine.hier.l2.stats;
                 let stats = WorkerStats {
-                    accesses: hier.accesses,
-                    tokens: gen.tokens_done(),
-                    l2_hits: hier.l2.stats.demand_hits,
-                    l2_accesses: hier.l2.stats.demand_accesses,
-                    l2_fills: hier.l2.stats.demand_misses + hier.l2.stats.prefetch_fills,
-                    l2_dead_prefetch: hier.l2.stats.dead_prefetch_evictions,
+                    accesses: engine.hier.accesses,
+                    tokens: workload.tokens_done(),
+                    l2_hits: l2.demand_hits,
+                    l2_accesses: l2.demand_accesses,
+                    l2_fills: l2.demand_misses + l2.prefetch_fills,
+                    l2_dead_prefetch: l2.dead_prefetch_evictions,
                 };
                 let _ = ev_tx.send(Event::Finished { stats });
             });

@@ -17,10 +17,46 @@ impl CacheConfig {
         Self { name: name.into(), size_bytes, assoc, line_bytes: 64 }
     }
 
+    /// Number of sets, if the geometry is valid. The error message names
+    /// the cache and the offending dimension so the CLI can surface it.
+    pub fn checked_num_sets(&self) -> Result<usize, String> {
+        if self.assoc == 0 {
+            return Err(format!("{}: associativity must be > 0", self.name));
+        }
+        if self.line_bytes == 0 || !self.line_bytes.is_power_of_two() {
+            return Err(format!(
+                "{}: line size must be a power of two, got {} B",
+                self.name, self.line_bytes
+            ));
+        }
+        let way_bytes = self.line_bytes * self.assoc as u64;
+        if self.size_bytes == 0 || self.size_bytes % way_bytes != 0 {
+            return Err(format!(
+                "{}: size {} B is not a multiple of line×assoc ({} B)",
+                self.name, self.size_bytes, way_bytes
+            ));
+        }
+        let sets = self.size_bytes / way_bytes;
+        if !sets.is_power_of_two() {
+            return Err(format!(
+                "{}: {} sets ({} B / {} B lines / {}-way) is not a power of two — \
+                 pick a size that yields 2^k sets",
+                self.name, sets, self.size_bytes, self.line_bytes, self.assoc
+            ));
+        }
+        Ok(sets as usize)
+    }
+
+    /// Config-time validation; run before constructing a [`Cache`].
+    pub fn validate(&self) -> Result<(), String> {
+        self.checked_num_sets().map(|_| ())
+    }
+
+    /// Number of sets. Geometry is validated at the config boundary
+    /// (`HierarchyConfig::validate` / CLI / JSON overrides); reaching this
+    /// with an invalid config is a programmer error.
     pub fn num_sets(&self) -> usize {
-        let sets = self.size_bytes / (self.line_bytes * self.assoc as u64);
-        assert!(sets > 0 && sets.is_power_of_two(), "sets must be a power of two: {sets}");
-        sets as usize
+        self.checked_num_sets().expect("cache geometry should be validated at config time")
     }
 }
 
@@ -320,6 +356,18 @@ mod tests {
 
     fn prefetch(line: u64) -> AccessMeta {
         AccessMeta::prefetch(line, 0x10, StreamKind::Weight)
+    }
+
+    #[test]
+    fn geometry_validation() {
+        assert!(CacheConfig::new("ok", 4 * 1024, 4).validate().is_ok());
+        // 96 KiB / 8-way / 64 B → 192 sets: not a power of two.
+        let e = CacheConfig::new("bad", 96 * 1024, 8).validate().unwrap_err();
+        assert!(e.contains("bad") && e.contains("power of two"), "{e}");
+        assert!(CacheConfig::new("z", 0, 4).validate().is_err());
+        assert!(CacheConfig::new("a0", 4 * 1024, 0).validate().is_err());
+        // Size not a multiple of line×assoc.
+        assert!(CacheConfig::new("odd", 4 * 1024 + 64, 4).validate().is_err());
     }
 
     #[test]

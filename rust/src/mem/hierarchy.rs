@@ -65,6 +65,15 @@ impl HierarchyConfig {
             _ => None,
         }
     }
+
+    /// Config-time geometry validation for all three levels. Call at the
+    /// CLI/JSON boundary so bad sizes surface as errors, not panics.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, lvl) in [("L1", &self.l1), ("L2", &self.l2), ("L3", &self.l3)] {
+            CacheConfig::new(name, lvl.size_bytes, lvl.assoc).validate()?;
+        }
+        Ok(())
+    }
 }
 
 /// Which level serviced a demand access.
@@ -404,5 +413,15 @@ mod tests {
         assert!(HierarchyConfig::by_name("scaled").is_some());
         assert!(HierarchyConfig::by_name("epyc7763").is_some());
         assert!(HierarchyConfig::by_name("x").is_none());
+    }
+
+    #[test]
+    fn presets_validate_and_bad_geometry_names_the_level() {
+        assert!(HierarchyConfig::scaled().validate().is_ok());
+        assert!(HierarchyConfig::epyc7763().validate().is_ok());
+        let mut c = HierarchyConfig::scaled();
+        c.l2.size_bytes = 96 * 1024; // 192 sets — not a power of two
+        let e = c.validate().unwrap_err();
+        assert!(e.contains("L2"), "{e}");
     }
 }

@@ -11,5 +11,5 @@
 pub mod report;
 mod throughput;
 
-pub use report::{render_table1, MetricsReport, Row};
+pub use report::{render_sweep, render_table1, MetricsReport, Row, SweepRowView};
 pub use throughput::{ThroughputModel, TOKENS_PER_SEC_CALIBRATION};

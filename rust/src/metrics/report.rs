@@ -119,6 +119,47 @@ impl MetricsReport {
     }
 }
 
+/// Borrowed view of one policy×scenario sweep cell for table rendering.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRowView<'a> {
+    pub policy: &'a str,
+    pub scenario: &'a str,
+    pub report: &'a MetricsReport,
+}
+
+/// Render a policy×scenario sweep grid: one row per cell, grouped in input
+/// order. MPR is reported against the same scenario's `lru` cell when the
+/// grid contains one (dash otherwise).
+pub fn render_sweep(rows: &[SweepRowView]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "| {:<17} | {:<10} | {:>7} | {:>7} | {:>7} | {:>5} | {:>5} |\n",
+        "Scenario", "Policy", "CHR (%)", "PPR (%)", "MPR (%)", "AMAT", "EMU"
+    ));
+    out.push_str(&format!("|{}|\n", "-".repeat(80)));
+    for r in rows {
+        let baseline = rows.iter().find(|b| b.scenario == r.scenario && b.policy == "lru");
+        let mpr = match baseline {
+            Some(b) if b.policy != r.policy => {
+                format!("{:>7.1}", r.report.miss_penalty_reduction_vs(b.report))
+            }
+            Some(_) => format!("{:>7.1}", 0.0),
+            None => format!("{:>7}", "—"),
+        };
+        out.push_str(&format!(
+            "| {:<17} | {:<10} | {:>7.1} | {:>7.2} | {} | {:>5.1} | {:>5.2} |\n",
+            r.scenario,
+            r.policy,
+            r.report.l2_hit_rate * 100.0,
+            r.report.l2_pollution_ratio * 100.0,
+            mpr,
+            r.report.amat,
+            r.report.emu,
+        ));
+    }
+    out
+}
+
 /// Render rows in the paper's Table 1 layout.
 pub fn render_table1(rows: &[Row]) -> String {
     let mut out = String::new();
@@ -176,6 +217,22 @@ mod tests {
         let srrip = run_small("srrip");
         let mpr = srrip.miss_penalty_reduction_vs(&lru);
         assert!(mpr.is_finite());
+    }
+
+    #[test]
+    fn sweep_table_renders_with_and_without_baseline() {
+        let lru = run_small("lru");
+        let srrip = run_small("srrip");
+        let rows = vec![
+            SweepRowView { policy: "lru", scenario: "decode-heavy", report: &lru },
+            SweepRowView { policy: "srrip", scenario: "decode-heavy", report: &srrip },
+            SweepRowView { policy: "srrip", scenario: "rag-embedding", report: &srrip },
+        ];
+        let t = render_sweep(&rows);
+        assert!(t.contains("decode-heavy"));
+        assert!(t.contains("srrip"));
+        // The baseline-less scenario renders a dash in the MPR column.
+        assert!(t.contains('—'), "{t}");
     }
 
     #[test]

@@ -1,0 +1,477 @@
+//! The unified experiment engine: one access-driving loop for every
+//! consumer (CLI `simulate`/`table1`/`sweep`, the benches, and the serving
+//! coordinator's workers), replacing the four divergent copies that used to
+//! live in the simulator, the coordinator and the benches.
+//!
+//! [`Engine`] owns the cache [`Hierarchy`] plus the per-access bookkeeping
+//! around it (feature extraction, EMU sampling, latency/metrics harvest)
+//! and drives any [`Workload`] — it does not care whether accesses come
+//! from a scenario generator, a materialized oracle trace, or a
+//! router-admitted serving session. Not to be confused with the PJRT
+//! [`crate::runtime::Engine`], which executes compiled HLO.
+//!
+//! Prediction is *asynchronous and batched*, mirroring the paper's pipeline
+//! (§3.1): every L2-relevant access yields a feature row; rows accumulate
+//! in a [`PredictionBatch`]; when the batch is full the predictor runs once
+//! and the resulting utilities update (a) a bounded line→utility cache
+//! consulted at fill time and (b) the utilities of still-resident L2 lines.
+//! A fill therefore uses the *most recent completed* prediction for its
+//! line — never a same-cycle oracle. In the serving coordinator the same
+//! batch structure is shipped over a channel to the predictor service
+//! thread instead of being flushed inline.
+//!
+//! The optional [`OnlineLearner`] implements §3.4: observed outcomes (was
+//! the line actually reused within the horizon?) are turned into labeled
+//! samples, and every `feedback_interval` accesses a few Adam steps run on
+//! a replay buffer — the compiled train-step HLO, from rust.
+
+use crate::config::ExperimentConfig;
+use crate::mem::{Hierarchy, HierarchyConfig, ServiceLevel};
+use crate::metrics::MetricsReport;
+use crate::policy::AccessMeta;
+use crate::predictor::{FeatureExtractor, GeometryHints, PredictorBox, FEATURE_DIM};
+use crate::trace::{Access, Workload};
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Outcome of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub report: MetricsReport,
+    pub tokens: u64,
+    pub emu: f64,
+    pub predictor: String,
+    pub prediction_batches: u64,
+    pub online_train_steps: u64,
+    pub wall_secs: f64,
+    /// Accesses simulated per wall-clock second (L3 perf metric).
+    pub accesses_per_sec: f64,
+}
+
+/// Accumulates per-access feature rows until a predictor batch is ready.
+/// Shared by the inline simulation loop (flushes into a [`PredictorBox`])
+/// and the coordinator workers (ship the batch to the predictor service).
+pub struct PredictionBatch {
+    lines: Vec<u64>,
+    x: Vec<f32>,
+    row: usize,
+    capacity: usize,
+}
+
+impl PredictionBatch {
+    pub fn new(row: usize, capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            lines: Vec::with_capacity(capacity),
+            x: Vec::with_capacity(capacity * row),
+            row,
+            capacity,
+        }
+    }
+
+    /// Buffer one (line, features) pair; true when the batch is now full.
+    pub fn push(&mut self, line: u64, features: &[f32]) -> bool {
+        debug_assert_eq!(features.len(), self.row);
+        self.lines.push(line);
+        self.x.extend_from_slice(features);
+        self.lines.len() >= self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// Drain the buffered batch, leaving an empty queue with its capacity
+    /// preallocated (this runs once per batch on the hot path).
+    pub fn take(&mut self) -> (Vec<u64>, Vec<f32>) {
+        let lines = std::mem::replace(&mut self.lines, Vec::with_capacity(self.capacity));
+        let x = std::mem::replace(&mut self.x, Vec::with_capacity(self.capacity * self.row));
+        (lines, x)
+    }
+}
+
+/// How often the engine samples L2 useful-fraction for the EMU metric.
+const EMU_SAMPLE_PERIOD: u64 = 8192;
+
+/// The shared access-driving core: hierarchy + feature extraction + metric
+/// sampling. Every consumer calls [`Engine::step`] per access and harvests
+/// a [`MetricsReport`] at the end; the batch-mode entry points
+/// ([`run_experiment`] / [`run_workload`]) wrap the loop.
+pub struct Engine {
+    /// The simulated memory system (public: consumers harvest raw stats).
+    pub hier: Hierarchy,
+    fx: FeatureExtractor,
+    seq: Vec<f32>,
+    window: usize,
+    row: usize,
+    features_on: bool,
+    steps: u64,
+    emu_acc: f64,
+    emu_samples: u64,
+}
+
+impl Engine {
+    /// `predictor_window` selects feature extraction: 0 = none (classic
+    /// policies), 1 = flat per-access features (heuristic/DNN), >1 = the
+    /// TCN's temporal window.
+    pub fn new(
+        hcfg: HierarchyConfig,
+        policy: &str,
+        geom: GeometryHints,
+        predictor_window: usize,
+    ) -> Self {
+        let features_on = predictor_window > 0;
+        let window = predictor_window.max(1);
+        let row = if predictor_window <= 1 { FEATURE_DIM } else { window * FEATURE_DIM };
+        Self {
+            hier: Hierarchy::new(hcfg, policy),
+            fx: FeatureExtractor::new(window, geom),
+            seq: vec![0.0f32; window * FEATURE_DIM],
+            window,
+            row,
+            features_on,
+            steps: 0,
+            emu_acc: 0.0,
+            emu_samples: 0,
+        }
+    }
+
+    /// Feature-row width (elements) of the rows [`step`](Self::step) yields.
+    pub fn row(&self) -> usize {
+        self.row
+    }
+
+    /// Accesses driven so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Drive one access through the hierarchy. Returns the access's feature
+    /// row when feature extraction is enabled (the caller batches it via
+    /// [`PredictionBatch`]), `None` otherwise. `next_use` is the Belady
+    /// oracle annotation (`u64::MAX` / `None` = never reused).
+    pub fn step(&mut self, a: &Access, next_use: Option<u64>) -> Option<&[f32]> {
+        let line = a.line();
+        let meta = AccessMeta {
+            line,
+            pc: a.pc,
+            kind: a.kind,
+            is_prefetch: false,
+            predicted_utility: None, // late-bound by the hierarchy's cache
+            // Belady encoding: u64::MAX means "never" — keep as None.
+            next_use: next_use.filter(|&t| t != u64::MAX),
+        };
+        self.hier.access(a, &meta);
+        self.steps += 1;
+        if self.steps % EMU_SAMPLE_PERIOD == 0 {
+            let f = self.hier.l2.useful_fraction();
+            if f.is_finite() {
+                self.emu_acc += f;
+                self.emu_samples += 1;
+            }
+        }
+        if self.features_on {
+            self.fx.push(a, &mut self.seq);
+            Some(if self.row == FEATURE_DIM {
+                &self.seq[(self.window - 1) * FEATURE_DIM..]
+            } else {
+                &self.seq[..]
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Record a completed prediction (inline or from the predictor service).
+    pub fn update_utility(&mut self, line: u64, utility: f32) -> bool {
+        self.hier.update_utility(line, utility)
+    }
+
+    /// Time-averaged effective memory utilization sampled so far.
+    pub fn emu(&self) -> f64 {
+        if self.emu_samples > 0 {
+            self.emu_acc / self.emu_samples as f64
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn latency_of(&self, lvl: ServiceLevel) -> u64 {
+        self.hier.latency_of(lvl)
+    }
+
+    /// Harvest the run's metrics.
+    pub fn report(&self, name: &str, tokens: u64) -> MetricsReport {
+        MetricsReport::from_hierarchy(name, &self.hier, tokens, self.emu())
+    }
+}
+
+/// Replay-buffer online learner (§3.4).
+pub struct OnlineLearner {
+    /// (features, label) samples awaiting training.
+    buf_x: Vec<f32>,
+    buf_y: Vec<f32>,
+    row: usize,
+    capacity: usize,
+    /// In-flight observations: line → (enqueue position, features start).
+    pending: VecDeque<(u64, u64, usize)>,
+    /// Lines touched recently (for labeling): line → last touch position.
+    last_touch: HashMap<u64, u64>,
+    horizon: u64,
+    pub steps_run: u64,
+    rng: Xoshiro256,
+}
+
+impl OnlineLearner {
+    pub fn new(row: usize, horizon: u64, seed: u64) -> Self {
+        Self {
+            buf_x: Vec::new(),
+            buf_y: Vec::new(),
+            row,
+            capacity: 1 << 15,
+            pending: VecDeque::new(),
+            last_touch: HashMap::new(),
+            horizon,
+            steps_run: 0,
+            rng: Xoshiro256::new(seed ^ 0xFEED),
+        }
+    }
+
+    /// Record a touch and enqueue the access as a future training sample.
+    pub fn observe(&mut self, pos: u64, line: u64, features: &[f32]) {
+        self.last_touch.insert(line, pos);
+        if self.buf_x.len() / self.row < self.capacity {
+            let start = self.buf_x.len();
+            self.buf_x.extend_from_slice(features);
+            self.buf_y.push(f32::NAN); // resolved later
+            self.pending.push_back((line, pos, start / self.row));
+        }
+        // Resolve matured observations.
+        while let Some(&(l, p, idx)) = self.pending.front() {
+            if pos.saturating_sub(p) < self.horizon {
+                break;
+            }
+            let reused = self.last_touch.get(&l).map(|&t| t > p && t - p <= self.horizon).unwrap_or(false);
+            self.buf_y[idx] = reused as u8 as f32;
+            self.pending.pop_front();
+        }
+    }
+
+    /// Run up to `steps` Adam steps on resolved samples. Returns mean loss.
+    pub fn train(&mut self, model: &mut crate::predictor::ModelRuntime, steps: usize) -> Option<f32> {
+        let b = model.mm.train.batch;
+        let resolved: Vec<usize> =
+            (0..self.buf_y.len()).filter(|&i| !self.buf_y[i].is_nan()).collect();
+        if resolved.len() < b {
+            return None;
+        }
+        let mut total = 0.0;
+        for _ in 0..steps {
+            let mut x = Vec::with_capacity(b * self.row);
+            let mut y = Vec::with_capacity(b);
+            for _ in 0..b {
+                let i = *self.rng.choose(&resolved);
+                x.extend_from_slice(&self.buf_x[i * self.row..(i + 1) * self.row]);
+                y.push(self.buf_y[i]);
+            }
+            total += model.train_step(x, y).expect("online train step");
+            self.steps_run += 1;
+        }
+        // Keep the buffer fresh: drop the oldest half when full.
+        if self.buf_y.len() >= self.capacity {
+            let keep = self.capacity / 2;
+            let drop_n = self.buf_y.len() - keep;
+            self.buf_x.drain(..drop_n * self.row);
+            self.buf_y.drain(..drop_n);
+            self.pending.clear(); // positions invalidated; restart labeling
+        }
+        Some(total / steps as f32)
+    }
+}
+
+/// Run one experiment on the workload the config describes (scenario or
+/// profile). The predictor is taken by value inside `PredictorBox` so
+/// learned runs can feed the online learner.
+pub fn run_experiment(cfg: &ExperimentConfig, predictor: &mut PredictorBox) -> SimResult {
+    let mut workload = cfg.workload();
+    run_workload(cfg, workload.as_mut(), predictor)
+}
+
+/// Run one experiment driving an explicit [`Workload`] through the shared
+/// [`Engine`] — the single batch-mode access loop in the codebase.
+pub fn run_workload(
+    cfg: &ExperimentConfig,
+    workload: &mut dyn Workload,
+    predictor: &mut PredictorBox,
+) -> SimResult {
+    let t0 = Instant::now();
+    let geom = GeometryHints::from_generator(&cfg.generator);
+    let pw = if predictor.is_some() { predictor.window().max(1) } else { 0 };
+    let mut engine = Engine::new(cfg.hierarchy.clone(), &cfg.policy, geom, pw);
+
+    // Oracle mode pre-materializes the trace for next-use annotation.
+    let (trace_vec, next_use) = if cfg.policy == "belady" {
+        let tv = workload.generate(cfg.accesses);
+        let nu = super::oracle::annotate_next_use(&tv);
+        (Some(tv), Some(nu))
+    } else {
+        (None, None)
+    };
+
+    let mut batch = PredictionBatch::new(engine.row(), cfg.predict_batch);
+    let mut prediction_batches = 0u64;
+    let mut learner = if cfg.feedback_interval > 0 && predictor.model_mut().is_some() {
+        Some(OnlineLearner::new(engine.row(), 4096, cfg.seed))
+    } else {
+        None
+    };
+
+    for i in 0..cfg.accesses {
+        let a = match &trace_vec {
+            Some(tv) => tv[i],
+            None => workload.next_access(),
+        };
+        let full = match engine.step(&a, next_use.as_ref().map(|nu| nu[i])) {
+            Some(feats) => {
+                if let Some(l) = learner.as_mut() {
+                    l.observe(i as u64, a.line(), feats);
+                }
+                batch.push(a.line(), feats)
+            }
+            None => false,
+        };
+        if full {
+            let (lines, x) = batch.take();
+            let probs = predictor.predict(&x, lines.len());
+            prediction_batches += 1;
+            for (&l, &p) in lines.iter().zip(&probs) {
+                engine.update_utility(l, p);
+            }
+        }
+
+        // Online feedback (§3.4).
+        if let (Some(l), true) =
+            (learner.as_mut(), cfg.feedback_interval > 0 && i > 0 && i % cfg.feedback_interval == 0)
+        {
+            if let Some(model) = predictor.model_mut() {
+                l.train(model, 2);
+            }
+        }
+    }
+
+    let tokens = workload.tokens_done();
+    let emu = engine.emu();
+    let report = engine.report(&cfg.name, tokens);
+    let wall = t0.elapsed().as_secs_f64();
+    SimResult {
+        report,
+        tokens,
+        emu,
+        predictor: predictor.name(),
+        prediction_batches,
+        online_train_steps: learner.map(|l| l.steps_run).unwrap_or(0),
+        wall_secs: wall,
+        accesses_per_sec: cfg.accesses as f64 / wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::predictor::HeuristicPredictor;
+
+    #[test]
+    fn smoke_run_all_classic_policies() {
+        for policy in ["lru", "srrip", "dip", "ship", "plru", "random"] {
+            let cfg = ExperimentConfig::smoke(policy);
+            let mut p = PredictorBox::None;
+            let r = run_experiment(&cfg, &mut p);
+            assert_eq!(r.report.accesses as usize, cfg.accesses, "{policy}");
+            assert!(r.report.l2_hit_rate > 0.0 && r.report.l2_hit_rate < 1.0, "{policy}");
+            assert!(r.tokens > 0);
+            assert!(r.emu > 0.0 && r.emu <= 1.0, "{policy}: emu {}", r.emu);
+        }
+    }
+
+    #[test]
+    fn belady_upper_bounds_lru() {
+        let lru = run_experiment(&ExperimentConfig::smoke("lru"), &mut PredictorBox::None);
+        let bel = run_experiment(&ExperimentConfig::smoke("belady"), &mut PredictorBox::None);
+        assert!(
+            bel.report.l2_hit_rate >= lru.report.l2_hit_rate - 0.005,
+            "belady {:.4} must dominate lru {:.4}",
+            bel.report.l2_hit_rate,
+            lru.report.l2_hit_rate
+        );
+    }
+
+    #[test]
+    fn heuristic_acpc_beats_lru_and_cuts_pollution() {
+        let mut cfg = ExperimentConfig::smoke("acpc");
+        cfg.accesses = 120_000;
+        let mut p = PredictorBox::Heuristic(HeuristicPredictor);
+        let acpc = run_experiment(&cfg, &mut p);
+
+        let mut cfg_lru = ExperimentConfig::smoke("lru");
+        cfg_lru.accesses = 120_000;
+        let lru = run_experiment(&cfg_lru, &mut PredictorBox::None);
+
+        assert!(acpc.prediction_batches > 0);
+        assert!(
+            acpc.report.l2_hit_rate > lru.report.l2_hit_rate,
+            "acpc {:.4} vs lru {:.4}",
+            acpc.report.l2_hit_rate,
+            lru.report.l2_hit_rate
+        );
+        assert!(
+            acpc.report.l2_pollution_ratio < lru.report.l2_pollution_ratio,
+            "pollution acpc {:.4} vs lru {:.4}",
+            acpc.report.l2_pollution_ratio,
+            lru.report.l2_pollution_ratio
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = ExperimentConfig::smoke("srrip");
+        let a = run_experiment(&cfg, &mut PredictorBox::None);
+        let b = run_experiment(&cfg, &mut PredictorBox::None);
+        assert_eq!(a.report.l2_hit_rate, b.report.l2_hit_rate);
+        assert_eq!(a.report.l2_miss_cycles, b.report.l2_miss_cycles);
+    }
+
+    #[test]
+    fn engine_runs_any_scenario_workload() {
+        use crate::trace::Scenario;
+        let cfg = ExperimentConfig::smoke("lru");
+        for sc in Scenario::all() {
+            let mut w = sc.workload(5);
+            let mut c = cfg.clone();
+            c.accesses = 20_000;
+            let r = run_workload(&c, w.as_mut(), &mut PredictorBox::None);
+            assert_eq!(r.report.accesses, 20_000, "{}", sc.name);
+            assert!(r.tokens > 0, "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn prediction_batch_fills_and_drains() {
+        let mut b = PredictionBatch::new(2, 3);
+        assert!(b.is_empty());
+        assert!(!b.push(1, &[0.0, 1.0]));
+        assert!(!b.push(2, &[2.0, 3.0]));
+        assert!(b.push(3, &[4.0, 5.0]), "third push reaches capacity");
+        let (lines, x) = b.take();
+        assert_eq!(lines, vec![1, 2, 3]);
+        assert_eq!(x.len(), 6);
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+    }
+}

@@ -1,11 +1,18 @@
-//! End-to-end experiment driver: trace generator → feature extractor →
-//! (batched) predictor → cache hierarchy (+prefetcher) → metrics. This is
-//! the module the CLI, benches and examples call into.
+//! End-to-end experiment driver: workload → feature extractor → (batched)
+//! predictor → cache hierarchy (+prefetcher) → metrics. This is the module
+//! the CLI, benches, coordinator and examples call into.
+//!
+//! - [`Engine`] — the shared per-access driving core (any [`crate::trace::Workload`]);
+//! - [`run_experiment`] / [`run_workload`] — batch-mode runs producing a [`SimResult`];
+//! - [`sweep`] — the multi-threaded policy×scenario grid runner;
+//! - [`table1`] — the paper's Table 1 pipeline built on the above.
 
+mod engine;
 mod oracle;
-mod simulator;
+pub mod sweep;
 pub mod table1;
 
+pub use engine::{run_experiment, run_workload, Engine, OnlineLearner, PredictionBatch, SimResult};
 pub use oracle::annotate_next_use;
-pub use simulator::{run_experiment, OnlineLearner, SimResult};
+pub use sweep::{cell_seed, run_sweep, SweepCell, SweepConfig};
 pub use table1::{run_table1, Table1Output, Table1Scale};

@@ -1,0 +1,196 @@
+//! Multi-threaded policy×scenario sweep runner.
+//!
+//! Fans the full experiment grid out over a scoped thread pool
+//! ([`crate::util::pool`]): one cell = one policy run against one scenario
+//! workload through the shared [`super::Engine`]. Cells are completely
+//! independent — each derives its own seed deterministically from the base
+//! seed and the cell coordinates ([`cell_seed`]), builds its own workload,
+//! hierarchy and predictor inside the worker thread, and returns a
+//! [`SimResult`]. Results come back in grid order regardless of the thread
+//! count, so a sweep at `-j 1` and `-j 8` is byte-identical (asserted by
+//! `tests/integration_sweep.rs`).
+
+use super::engine::{run_experiment, SimResult};
+use crate::config::{ExperimentConfig, PredictorKind};
+use crate::metrics::{render_sweep, SweepRowView};
+use crate::policy;
+use crate::predictor::{HeuristicPredictor, PredictorBox};
+use crate::trace::{Scenario, SCENARIO_NAMES};
+use crate::util::pool::{default_threads, run_parallel};
+use anyhow::{bail, Result};
+
+/// The sweep grid and its execution knobs.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub policies: Vec<String>,
+    pub scenarios: Vec<String>,
+    /// Accesses simulated per grid cell.
+    pub accesses: usize,
+    /// Worker threads (`-j`); cells queue onto the pool in grid order.
+    pub threads: usize,
+    /// Base seed; per-cell seeds derive from it deterministically.
+    pub seed: u64,
+    pub predict_batch: usize,
+}
+
+impl SweepConfig {
+    pub fn new(policies: Vec<String>, scenarios: Vec<String>) -> Self {
+        Self {
+            policies,
+            scenarios,
+            accesses: 400_000,
+            threads: default_threads(),
+            seed: 0xACDC_5EED,
+            predict_batch: 256,
+        }
+    }
+
+    /// The default grid: Table-1-adjacent policies × every scenario.
+    pub fn default_grid() -> Self {
+        Self::new(
+            ["lru", "srrip", "ship", "acpc"].iter().map(|s| s.to_string()).collect(),
+            SCENARIO_NAMES.iter().map(|s| s.to_string()).collect(),
+        )
+    }
+}
+
+/// One completed grid cell.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub policy: String,
+    pub scenario: String,
+    /// The derived per-cell seed (provenance).
+    pub seed: u64,
+    pub result: SimResult,
+}
+
+/// Deterministic per-cell seed: FNV-1a over (base seed, policy, scenario)
+/// with a splitmix64 finalizer, so neighbouring cells get well-separated
+/// generator streams and the assignment of cells to threads is irrelevant.
+pub fn cell_seed(base: u64, policy: &str, scenario: &str) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut fold = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    fold(&base.to_le_bytes());
+    fold(policy.as_bytes());
+    fold(b"/");
+    fold(scenario.as_bytes());
+    let mut z = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Utility-consuming policies get the heuristic predictor in sweeps (no
+/// artifacts required, constructible inside any worker thread); classic
+/// policies run predictor-free.
+fn predictor_kind_for(policy: &str) -> PredictorKind {
+    if policy.starts_with("acpc") || policy == "mlpredict" {
+        PredictorKind::Heuristic
+    } else {
+        PredictorKind::None
+    }
+}
+
+/// Validate the grid, then run every cell on the pool. Results are in grid
+/// order (scenarios outer, policies inner) independent of `threads`.
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepCell>> {
+    if cfg.policies.is_empty() || cfg.scenarios.is_empty() {
+        bail!("sweep grid is empty (need at least one policy and one scenario)");
+    }
+    for p in &cfg.policies {
+        if policy::make_policy(p, 2, 2, 0).is_none() {
+            bail!("unknown policy '{p}' (see `acpc policies`)");
+        }
+    }
+    for s in &cfg.scenarios {
+        if Scenario::by_name(s).is_none() {
+            bail!("unknown scenario '{s}' (known: {})", SCENARIO_NAMES.join(", "));
+        }
+    }
+
+    let mut jobs = Vec::with_capacity(cfg.policies.len() * cfg.scenarios.len());
+    for scenario in &cfg.scenarios {
+        for policy in &cfg.policies {
+            let policy = policy.clone();
+            let scenario = scenario.clone();
+            let seed = cell_seed(cfg.seed, &policy, &scenario);
+            let accesses = cfg.accesses;
+            let predict_batch = cfg.predict_batch;
+            jobs.push(move || -> Result<SweepCell> {
+                let kind = predictor_kind_for(&policy);
+                let mut ecfg = ExperimentConfig::for_scenario(&scenario, &policy, kind, seed)?;
+                ecfg.accesses = accesses;
+                ecfg.predict_batch = predict_batch;
+                let mut predictor = match kind {
+                    PredictorKind::Heuristic => PredictorBox::Heuristic(HeuristicPredictor),
+                    _ => PredictorBox::None,
+                };
+                let result = run_experiment(&ecfg, &mut predictor);
+                Ok(SweepCell { policy, scenario, seed, result })
+            });
+        }
+    }
+    run_parallel(cfg.threads.max(1), jobs).into_iter().collect()
+}
+
+/// Render the finished grid as the aggregated metrics table (per-scenario
+/// MPR baselines resolved against that scenario's `lru` cell when present).
+pub fn render_cells(cells: &[SweepCell]) -> String {
+    let rows: Vec<SweepRowView> = cells
+        .iter()
+        .map(|c| SweepRowView { policy: &c.policy, scenario: &c.scenario, report: &c.result.report })
+        .collect();
+    render_sweep(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_seeds_are_distinct_and_stable() {
+        let a = cell_seed(1, "lru", "decode-heavy");
+        assert_eq!(a, cell_seed(1, "lru", "decode-heavy"));
+        assert_ne!(a, cell_seed(2, "lru", "decode-heavy"));
+        assert_ne!(a, cell_seed(1, "srrip", "decode-heavy"));
+        assert_ne!(a, cell_seed(1, "lru", "rag-embedding"));
+        // Coordinate separator matters: ("ab","c") != ("a","bc").
+        assert_ne!(cell_seed(1, "ab", "c"), cell_seed(1, "a", "bc"));
+    }
+
+    #[test]
+    fn invalid_grid_rejected_before_running() {
+        let cfg = SweepConfig::new(vec!["lru".into()], vec!["no-such-scenario".into()]);
+        assert!(run_sweep(&cfg).is_err());
+        let cfg = SweepConfig::new(vec!["no-such-policy".into()], vec!["decode-heavy".into()]);
+        assert!(run_sweep(&cfg).is_err());
+        let cfg = SweepConfig::new(vec![], vec![]);
+        assert!(run_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn small_grid_runs_in_order() {
+        let mut cfg = SweepConfig::new(
+            vec!["lru".into(), "srrip".into()],
+            vec!["decode-heavy".into(), "rag-embedding".into()],
+        );
+        cfg.accesses = 15_000;
+        cfg.threads = 2;
+        let cells = run_sweep(&cfg).unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!((cells[0].scenario.as_str(), cells[0].policy.as_str()), ("decode-heavy", "lru"));
+        assert_eq!((cells[3].scenario.as_str(), cells[3].policy.as_str()), ("rag-embedding", "srrip"));
+        for c in &cells {
+            assert_eq!(c.result.report.accesses, 15_000);
+        }
+        let table = render_cells(&cells);
+        assert!(table.contains("decode-heavy") && table.contains("srrip"), "{table}");
+    }
+}

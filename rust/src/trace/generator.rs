@@ -131,6 +131,16 @@ impl TraceGenerator {
         self.tokens_done
     }
 
+    /// The effective configuration (scenarios stamp their name into
+    /// `profile.name`, so this also identifies the workload).
+    pub fn config(&self) -> &GeneratorConfig {
+        &self.cfg
+    }
+
+    pub fn profile_name(&self) -> &str {
+        &self.cfg.profile.name
+    }
+
     pub fn sessions_completed(&self) -> u64 {
         self.sessions_completed
     }

@@ -19,14 +19,42 @@
 //!   describes;
 //! - **phase drift** — the Zipf head rotates periodically, so a predictor
 //!   trained once goes stale (exercises the online-learning loop, §3.4).
+//!
+//! # Workloads and the scenario registry
+//!
+//! The [`Workload`] trait ([`workload`]) abstracts *any* access source the
+//! experiment [`crate::sim::Engine`] can drive — [`TraceGenerator`] is the
+//! canonical implementation. On top of it, [`scenario`] provides a registry
+//! of named access regimes ([`SCENARIO_NAMES`]), each a preconfigured
+//! generator capturing one of the LLM serving patterns the paper (and the
+//! related work it cites) evaluates:
+//!
+//! - [`decode-heavy`](scenario) — the stock autoregressive decode mix
+//!   (weight-scan dominant; the Table 1 workload);
+//! - [`prefill-burst`](scenario) — hot-state MMPP arrivals with long
+//!   prompts: batched prefill KV writes dominate;
+//! - [`rag-embedding`](scenario) — retrieval-style lookups over a large
+//!   flat-tailed embedding table (majority embedding traffic);
+//! - [`long-context`](scenario) — contexts far beyond the attention
+//!   window: KV re-reads dominate and mislead recency policies;
+//! - [`multi-tenant-mix`](scenario) — many interleaved sessions with fast
+//!   phase drift.
+//!
+//! Resolve by name with [`Scenario::by_name`], enumerate with
+//! [`Scenario::all`], and instantiate with `Scenario::workload(seed)`.
+//! The `acpc sweep` command runs the full policy×scenario grid in parallel.
 
 pub mod file;
 pub mod generator;
 pub mod profile;
+pub mod scenario;
 pub mod stats;
+pub mod workload;
 
 pub use generator::{GeneratorConfig, TraceGenerator};
 pub use profile::ModelProfile;
+pub use scenario::{Scenario, SCENARIO_NAMES};
+pub use workload::Workload;
 
 /// Memory stream kind — the coarse "instruction type" feature of the paper's
 /// record tuple (eq. 5). Encoded into addresses (region) and features.

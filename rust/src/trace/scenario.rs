@@ -1,0 +1,236 @@
+//! Named workload scenarios — the distinct LLM access regimes the paper's
+//! evaluation spans, each a preconfigured [`GeneratorConfig`] built from
+//! [`ModelProfile`] + generator knobs.
+//!
+//! A scenario is a *recipe*: `Scenario::config(seed)` yields a fully
+//! deterministic generator configuration, and `Scenario::workload(seed)`
+//! a ready-to-drive [`Workload`]. Each scenario declares the [`StreamKind`]
+//! expected to dominate its access mix; tests assert the declaration holds,
+//! so the registry doubles as executable documentation of the regimes:
+//!
+//! | scenario           | regime                                   | dominant |
+//! |--------------------|------------------------------------------|----------|
+//! | `decode-heavy`     | autoregressive decode (paper's default)  | weight   |
+//! | `prefill-burst`    | hot-state MMPP, long prompts, short gens | kv_wr    |
+//! | `rag-embedding`    | Zipf-tail embedding retrieval            | embed    |
+//! | `long-context`     | max_ctx ≫ attention window, KV re-reads  | kv_rd    |
+//! | `multi-tenant-mix` | many interleaved sessions, fast drift    | weight   |
+
+use super::generator::{GeneratorConfig, TraceGenerator};
+use super::profile::ModelProfile;
+use super::workload::Workload;
+use super::StreamKind;
+
+/// One named workload regime.
+#[derive(Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    /// One-line description for `acpc policies` / docs.
+    pub summary: &'static str,
+    /// Stream kind expected to dominate the generated access mix
+    /// (asserted by the scenario smoke tests).
+    pub dominant: StreamKind,
+    build: fn(u64) -> GeneratorConfig,
+}
+
+impl Scenario {
+    /// Deterministic generator config for this scenario and seed.
+    pub fn config(&self, seed: u64) -> GeneratorConfig {
+        (self.build)(seed)
+    }
+
+    /// Ready-to-run workload for this scenario and seed.
+    pub fn workload(&self, seed: u64) -> Box<dyn Workload> {
+        Box::new(TraceGenerator::new(self.config(seed)))
+    }
+
+    /// Registry lookup.
+    pub fn by_name(name: &str) -> Option<&'static Scenario> {
+        SCENARIOS.iter().find(|s| s.name == name)
+    }
+
+    /// All registered scenarios, in registry order.
+    pub fn all() -> &'static [Scenario] {
+        SCENARIOS
+    }
+}
+
+impl std::fmt::Debug for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scenario")
+            .field("name", &self.name)
+            .field("dominant", &self.dominant)
+            .finish()
+    }
+}
+
+/// Names of all registered scenarios (CLI help / sweep default grid).
+pub const SCENARIO_NAMES: &[&str] =
+    &["decode-heavy", "prefill-burst", "rag-embedding", "long-context", "multi-tenant-mix"];
+
+static SCENARIOS: &[Scenario] = &[
+    Scenario {
+        name: "decode-heavy",
+        summary: "autoregressive decode over a GPT-style profile (paper's Table 1 workload)",
+        dominant: StreamKind::Weight,
+        build: decode_heavy,
+    },
+    Scenario {
+        name: "prefill-burst",
+        summary: "bursty arrivals in the MMPP hot state; long prompts make prefill KV writes dominate",
+        dominant: StreamKind::KvWrite,
+        build: prefill_burst,
+    },
+    Scenario {
+        name: "rag-embedding",
+        summary: "retrieval-style lookups over a huge flat-tailed embedding table",
+        dominant: StreamKind::Embedding,
+        build: rag_embedding,
+    },
+    Scenario {
+        name: "long-context",
+        summary: "contexts far beyond the attention window; KV re-reads dominate",
+        dominant: StreamKind::KvRead,
+        build: long_context,
+    },
+    Scenario {
+        name: "multi-tenant-mix",
+        summary: "many interleaved tenant sessions with fast phase drift",
+        dominant: StreamKind::Weight,
+        build: multi_tenant_mix,
+    },
+];
+
+/// The paper's primary regime: the stock GPT-style decode mix. Per decoded
+/// token the per-layer weight-tile scans dominate (the scanning pattern
+/// that thrashes LRU and motivates RRIP-style policies).
+fn decode_heavy(seed: u64) -> GeneratorConfig {
+    let mut p = ModelProfile::gpt3ish();
+    p.name = "decode-heavy".into();
+    GeneratorConfig::new(p, seed)
+}
+
+/// Prefill-dominated arbitration stress (cf. LLaMCAT's mixed prefill/decode
+/// traffic): the MMPP sits mostly in its hot state, prompts are long and
+/// generations short, so batched prefill KV-append bursts are the majority
+/// stream and weight scans are long but infrequent.
+fn prefill_burst(seed: u64) -> GeneratorConfig {
+    let mut p = ModelProfile::gpt3ish();
+    p.name = "prefill-burst".into();
+    p.layers = 16;
+    p.kv_reads_per_token = 4;
+    p.weight_tiles_hot = 4;
+    p.scratch_lines_per_token = 2;
+    p.prompt_len_mean = 240.0;
+    p.gen_len_mean = 6.0;
+    let mut c = GeneratorConfig::new(p, seed);
+    c.max_live_sessions = 16;
+    c.arrival_p_hot = 0.6;
+    c.arrival_p_cold = 0.25;
+    c.burst_switch_p = 0.002;
+    c.weight_lines_per_tile = 4;
+    c
+}
+
+/// Embedding-retrieval regime (cf. recency/frequency-adaptive KV caching:
+/// policy rankings flip under KV-reuse skew): wide rows of a much larger,
+/// flatter-tailed table are read per lookup, shallow model, tiny KV
+/// traffic. Majority-embedding traffic with a long polluting tail.
+fn rag_embedding(seed: u64) -> GeneratorConfig {
+    let p = ModelProfile {
+        name: "rag-embedding".into(),
+        vocab: 200_000,
+        embed_row_bytes: 1024,
+        embed_lines_per_lookup: 12,
+        zipf_theta: 0.7,
+        layers: 2,
+        kv_bytes_per_token: 64,
+        attn_window: 16,
+        kv_reads_per_token: 2,
+        kv_longrange_p: 0.02,
+        weight_tiles_per_layer: 32,
+        weight_tile_bytes: 4096,
+        weight_tiles_hot: 2,
+        scratch_lines_per_token: 1,
+        prompt_len_mean: 12.0,
+        gen_len_mean: 24.0,
+    };
+    let mut c = GeneratorConfig::new(p, seed);
+    c.max_ctx = 256;
+    c.weight_lines_per_tile = 1;
+    c
+}
+
+/// Long-context serving: the KV working set per session vastly exceeds the
+/// attention window, with a high long-range read probability — the heavy
+/// KV re-read pattern whose lines look dead to recency policies but are
+/// provably re-read.
+fn long_context(seed: u64) -> GeneratorConfig {
+    let mut p = ModelProfile::gpt3ish();
+    p.name = "long-context".into();
+    p.attn_window = 24;
+    p.kv_reads_per_token = 24;
+    p.kv_longrange_p = 0.3;
+    p.weight_tiles_hot = 4;
+    p.scratch_lines_per_token = 1;
+    p.prompt_len_mean = 600.0;
+    p.gen_len_mean = 256.0;
+    let mut c = GeneratorConfig::new(p, seed);
+    c.max_ctx = 2048;
+    c.max_live_sessions = 8;
+    c.weight_lines_per_tile = 1;
+    c.phase_period = 40_000;
+    c
+}
+
+/// Multi-tenant interleaving: many concurrent sessions over a LLaMA-style
+/// profile with a short phase period, so each tenant's hot token set
+/// drifts quickly and cross-session interleaving is maximal.
+fn multi_tenant_mix(seed: u64) -> GeneratorConfig {
+    let mut p = ModelProfile::llama2ish();
+    p.name = "multi-tenant-mix".into();
+    p.prompt_len_mean = 48.0;
+    p.gen_len_mean = 48.0;
+    let mut c = GeneratorConfig::new(p, seed);
+    c.max_live_sessions = 24;
+    c.phase_period = 4_000;
+    c.arrival_p_hot = 0.5;
+    c.arrival_p_cold = 0.05;
+    c.burst_switch_p = 0.01;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_complete_and_resolvable() {
+        assert_eq!(SCENARIO_NAMES.len(), Scenario::all().len());
+        for name in SCENARIO_NAMES {
+            let sc = Scenario::by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(sc.name, *name);
+            assert!(!sc.summary.is_empty());
+        }
+        assert!(Scenario::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn configs_are_seed_deterministic() {
+        for sc in Scenario::all() {
+            let a = sc.workload(42).generate(2_000);
+            let b = sc.workload(42).generate(2_000);
+            let c = sc.workload(43).generate(2_000);
+            assert_eq!(a, b, "{}", sc.name);
+            assert_ne!(a, c, "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn scenario_names_stamp_the_workload() {
+        for sc in Scenario::all() {
+            assert_eq!(sc.config(1).profile.name, sc.name);
+            assert_eq!(sc.workload(1).name(), sc.name);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! The [`Workload`] abstraction: anything that can stream [`Access`]es into
+//! the experiment engine.
+//!
+//! Historically the access-driving loop was welded to [`TraceGenerator`] in
+//! four places (simulator, table1, coordinator workers, benches). The trait
+//! decouples *what* produces accesses from *how* they are driven through a
+//! cache hierarchy: the [`crate::sim::Engine`] runs any `Box<dyn Workload>`,
+//! and the scenario registry ([`super::scenario`]) names concrete
+//! instantiations.
+//!
+//! Besides the access stream itself, a workload exposes the ground-truth
+//! hooks the engine and the serving coordinator need:
+//!
+//! - **progress accounting** (`tokens_done`, `sessions_completed`) for
+//!   throughput metrics;
+//! - **admission control** (`force_arrival`, `has_work`, `live_sessions`)
+//!   for router-driven serving mode, where autonomous arrivals are disabled
+//!   and the coordinator admits sessions explicitly;
+//! - **materialization** (`generate`) for oracle (Belady) runs that need
+//!   the whole trace up front to annotate next-use times.
+
+use super::generator::TraceGenerator;
+use super::Access;
+
+/// A deterministic, seedable source of LLM-inference memory accesses.
+///
+/// `Send` is required so workloads can be moved into sweep / coordinator
+/// worker threads.
+pub trait Workload: Send {
+    /// Human-readable label (scenario or profile name) for reports.
+    fn name(&self) -> String;
+
+    /// Produce the next access. Workloads are infinite streams: this must
+    /// always return (generators synthesize arrivals when idle).
+    fn next_access(&mut self) -> Access;
+
+    /// Tokens decoded so far (ground truth for TGT / tokens-per-second).
+    fn tokens_done(&self) -> u64;
+
+    /// Sessions fully completed so far.
+    fn sessions_completed(&self) -> u64;
+
+    /// Currently live sessions.
+    fn live_sessions(&self) -> usize;
+
+    /// True when a `next_access` call can make progress without an
+    /// autonomous arrival (the coordinator drains workers on this).
+    fn has_work(&self) -> bool;
+
+    /// Externally-driven session admission (the serving router calls this).
+    /// Returns false when the workload cannot accept another session.
+    fn force_arrival(&mut self) -> bool;
+
+    /// Materialize `n` accesses (consumes stream state). Oracle runs use
+    /// this to annotate next-use times before simulation.
+    fn generate(&mut self, n: usize) -> Vec<Access> {
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.next_access());
+        }
+        v
+    }
+}
+
+impl Workload for TraceGenerator {
+    fn name(&self) -> String {
+        self.profile_name().to_string()
+    }
+
+    fn next_access(&mut self) -> Access {
+        TraceGenerator::next_access(self)
+    }
+
+    fn tokens_done(&self) -> u64 {
+        TraceGenerator::tokens_done(self)
+    }
+
+    fn sessions_completed(&self) -> u64 {
+        TraceGenerator::sessions_completed(self)
+    }
+
+    fn live_sessions(&self) -> usize {
+        TraceGenerator::live_sessions(self)
+    }
+
+    fn has_work(&self) -> bool {
+        TraceGenerator::has_work(self)
+    }
+
+    fn force_arrival(&mut self) -> bool {
+        TraceGenerator::force_arrival(self)
+    }
+
+    fn generate(&mut self, n: usize) -> Vec<Access> {
+        TraceGenerator::generate(self, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::GeneratorConfig;
+
+    #[test]
+    fn generator_satisfies_workload_contract() {
+        let mut w: Box<dyn Workload> = Box::new(TraceGenerator::new(GeneratorConfig::tiny(3)));
+        let first = w.next_access();
+        let direct = TraceGenerator::new(GeneratorConfig::tiny(3)).next_access();
+        assert_eq!(first, direct, "trait dispatch must not change the stream");
+        let _ = w.generate(1_000);
+        assert!(w.tokens_done() > 0);
+        assert!(!w.name().is_empty());
+    }
+
+    #[test]
+    fn workload_is_boxable_and_send() {
+        fn assert_send<T: Send>(_: &T) {}
+        let w: Box<dyn Workload> = Box::new(TraceGenerator::new(GeneratorConfig::tiny(1)));
+        assert_send(&w);
+    }
+}

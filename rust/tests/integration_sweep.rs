@@ -1,0 +1,109 @@
+//! Integration tests for the scenario registry and the parallel sweep
+//! runner: thread-count invariance (same seed ⇒ byte-identical reports at
+//! -j 1 vs -j 8), per-scenario stream-mix smoke checks, and the full
+//! acceptance grid.
+
+use acpc::sim::{run_sweep, SweepCell, SweepConfig};
+use acpc::trace::{Scenario, StreamKind, SCENARIO_NAMES};
+
+fn small_sweep(policies: &[&str], scenarios: &[&str], threads: usize) -> Vec<SweepCell> {
+    let mut cfg = SweepConfig::new(
+        policies.iter().map(|s| s.to_string()).collect(),
+        scenarios.iter().map(|s| s.to_string()).collect(),
+    );
+    cfg.accesses = 25_000;
+    cfg.threads = threads;
+    cfg.seed = 0xDE7E_2217;
+    run_sweep(&cfg).expect("sweep")
+}
+
+/// Byte-identical serialized reports regardless of `-j`: the per-cell seed
+/// derivation and the in-order result collection make thread count
+/// irrelevant to everything except wall-clock.
+#[test]
+fn sweep_is_thread_count_invariant() {
+    let policies = ["lru", "srrip", "acpc"];
+    let scenarios = ["decode-heavy", "rag-embedding", "long-context"];
+    let a = small_sweep(&policies, &scenarios, 1);
+    let b = small_sweep(&policies, &scenarios, 8);
+    assert_eq!(a.len(), b.len());
+    for (ca, cb) in a.iter().zip(&b) {
+        assert_eq!(ca.policy, cb.policy);
+        assert_eq!(ca.scenario, cb.scenario);
+        assert_eq!(ca.seed, cb.seed);
+        let ja = ca.result.report.to_json().to_pretty();
+        let jb = cb.result.report.to_json().to_pretty();
+        assert_eq!(ja, jb, "cell {}×{} differs across -j", ca.policy, ca.scenario);
+        assert_eq!(ca.result.tokens, cb.result.tokens);
+        assert_eq!(ca.result.prediction_batches, cb.result.prediction_batches);
+    }
+}
+
+/// Every registered scenario must actually generate the stream mix it
+/// declares dominant (e.g. rag-embedding is majority Embedding traffic).
+#[test]
+fn scenarios_generate_their_dominant_stream_mix() {
+    for sc in Scenario::all() {
+        let mut w = sc.workload(11);
+        let mut counts = [0usize; 5];
+        let n = 60_000;
+        for _ in 0..n {
+            counts[w.next_access().kind as usize] += 1;
+        }
+        let argmax = (0..counts.len()).max_by_key(|&i| counts[i]).unwrap();
+        assert_eq!(
+            StreamKind::from_u8(argmax as u8),
+            sc.dominant,
+            "{}: mix {:?}",
+            sc.name,
+            StreamKind::ALL.iter().zip(&counts).collect::<Vec<_>>()
+        );
+        // The declared-dominant stream is a substantial share, not a
+        // plurality artifact.
+        assert!(
+            counts[sc.dominant as usize] * 100 / n >= 30,
+            "{}: dominant share too thin: {:?}",
+            sc.name,
+            counts
+        );
+    }
+}
+
+/// rag-embedding specifically promises *majority* embedding traffic.
+#[test]
+fn rag_embedding_is_majority_embedding() {
+    let sc = Scenario::by_name("rag-embedding").unwrap();
+    let mut w = sc.workload(3);
+    let n = 60_000;
+    let embed = (0..n).filter(|_| w.next_access().kind == StreamKind::Embedding).count();
+    assert!(embed * 2 > n, "embedding share {}/{n}", embed);
+}
+
+/// The acceptance-criteria grid: every policy×scenario cell completes and
+/// produces a coherent metrics row.
+#[test]
+fn full_acceptance_grid_completes() {
+    let policies = ["lru", "drrip", "ship", "acpc"];
+    let cells = small_sweep(&policies, SCENARIO_NAMES, 4);
+    assert_eq!(cells.len(), policies.len() * SCENARIO_NAMES.len());
+    for c in &cells {
+        assert_eq!(c.result.report.accesses, 25_000, "{}×{}", c.policy, c.scenario);
+        assert!(
+            c.result.report.l2_hit_rate > 0.0 && c.result.report.l2_hit_rate < 1.0,
+            "{}×{}: chr {}",
+            c.policy,
+            c.scenario,
+            c.result.report.l2_hit_rate
+        );
+        assert!(c.result.tokens > 0);
+    }
+    // Distinct scenarios must be distinguishable under the same policy.
+    let lru_rates: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.policy == "lru")
+        .map(|c| c.result.report.l2_hit_rate)
+        .collect();
+    let spread = lru_rates.iter().cloned().fold(f64::MIN, f64::max)
+        - lru_rates.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread > 0.01, "scenarios indistinguishable under lru: {lru_rates:?}");
+}
