@@ -49,7 +49,10 @@ fn main() {
                 policy.to_string(),
                 format!("{:.1}", r.report.l2_hit_rate * 100.0),
                 format!("{:.2}", r.report.l2_pollution_ratio * 100.0),
-                format!("{:+.1}", r.report.miss_penalty_reduction_vs(&lru_report)),
+                r.report
+                    .miss_penalty_reduction_vs(&lru_report)
+                    .map(|v| format!("{v:+.1}"))
+                    .unwrap_or_else(|| "n/a".into()),
                 format!("{:.2}", r.report.amat),
                 format!("{:.2}", r.emu),
                 format!("{:.2}M", r.accesses_per_sec / 1e6),

@@ -65,6 +65,9 @@ fn main() {
             router: RouterPolicy::LeastLoaded,
             predict_batch: 256,
             predict_deadline: Duration::from_millis(2),
+            scenario: None,
+            adaptive: false,
+            adapt: acpc::adapt::ControllerConfig::default(),
         }
     };
 

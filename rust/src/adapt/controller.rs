@@ -1,0 +1,581 @@
+//! The closed-loop adaptive controller: consumes windowed telemetry, runs
+//! the drift detector, and reacts — by fine-tuning a trainable predictor
+//! from the replay buffer (hot-swapping its weights behind a versioned
+//! handle at a batch boundary, so the access loop never stalls on a
+//! mid-flight prediction), or, when no trainable model is present or
+//! confidence collapses, by *throttling*: predictions are demoted to plain
+//! policy-default (LRU-style) insertion until telemetry recovers
+//! (LLaMCAT-style back-off).
+//!
+//! The controller is strictly deterministic for a fixed access stream and
+//! seed: telemetry windows are counted in accesses (not wall clock), the
+//! Page–Hinkley detector is stateful-but-seedless, and the only RNG (replay
+//! sampling) derives from the configured seed.
+
+use super::drift::{Drift, PageHinkley};
+use super::learner::OnlineLearner;
+use super::telemetry::{Telemetry, WindowStats};
+use crate::mem::Hierarchy;
+use crate::predictor::PredictorBox;
+use crate::util::json::Json;
+
+/// Thresholds and cadences for the adaptive control loop. All units are
+/// accesses/windows — never wall clock — so runs are reproducible.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Telemetry window length in engine accesses.
+    pub window_accesses: u64,
+    /// Page–Hinkley magnitude tolerance (hit-rate units).
+    pub ph_delta: f64,
+    /// Page–Hinkley detection threshold.
+    pub ph_lambda: f64,
+    /// Windows before the detector / throttle logic may act.
+    pub warmup_windows: u64,
+    /// Windows to wait between consecutive adaptations.
+    pub cooldown_windows: u64,
+    /// Consecutive unhealthy windows before throttling kicks in.
+    pub unhealthy_windows_to_throttle: u64,
+    /// Consecutive healthy windows before a throttled controller resumes.
+    pub recover_windows: u64,
+    /// A window is unhealthy when its hit rate sinks below
+    /// `ewma_hit * throttle_hit_ratio` …
+    pub throttle_hit_ratio: f64,
+    /// … or its pollution exceeds `ewma_pollution + pollution_margin`.
+    pub pollution_margin: f64,
+    /// Adam steps per drift-triggered fine-tune (trainable predictors).
+    pub train_steps_on_drift: usize,
+    /// Labeling horizon (accesses) for the replay buffer.
+    pub replay_horizon: u64,
+    /// Seed for replay sampling.
+    pub seed: u64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            window_accesses: 8192,
+            ph_delta: 0.002,
+            ph_lambda: 0.03,
+            warmup_windows: 4,
+            cooldown_windows: 3,
+            unhealthy_windows_to_throttle: 2,
+            recover_windows: 3,
+            throttle_hit_ratio: 0.88,
+            pollution_margin: 0.08,
+            train_steps_on_drift: 8,
+            replay_horizon: 4096,
+            seed: 0xADA7,
+        }
+    }
+}
+
+impl ControllerConfig {
+    /// Small windows for fast tests.
+    pub fn quick() -> Self {
+        Self {
+            window_accesses: 2048,
+            warmup_windows: 2,
+            cooldown_windows: 2,
+            unhealthy_windows_to_throttle: 2,
+            recover_windows: 2,
+            ..Self::default()
+        }
+    }
+
+    /// Observation-only controller: telemetry is collected but no drift can
+    /// fire and no throttle can engage, so a run with a passive controller
+    /// is metric-identical to a run without one (asserted by the
+    /// integration tests).
+    pub fn passive() -> Self {
+        Self {
+            ph_lambda: f64::INFINITY,
+            throttle_hit_ratio: 0.0,
+            pollution_margin: f64::INFINITY,
+            train_steps_on_drift: 0,
+            ..Self::default()
+        }
+    }
+}
+
+/// What an adaptation event did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdaptationAction {
+    /// Fine-tuned the trainable predictor from the replay buffer.
+    Retrain { steps: u64, mean_loss: f64 },
+    /// Demoted predictions to policy-default insertion.
+    Throttle,
+    /// Re-enabled predictions after recovery.
+    Resume,
+}
+
+impl AdaptationAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdaptationAction::Retrain { .. } => "retrain",
+            AdaptationAction::Throttle => "throttle",
+            AdaptationAction::Resume => "resume",
+        }
+    }
+}
+
+/// One recorded adaptation.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptationEvent {
+    /// Telemetry window index at which the event fired.
+    pub window: u64,
+    /// Engine access count at the window boundary.
+    pub access: u64,
+    pub action: AdaptationAction,
+    /// The window hit rate that triggered the event.
+    pub hit_rate: f64,
+    /// Predictor version *after* the event (every event bumps it).
+    pub predictor_version: u64,
+}
+
+impl AdaptationEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("window", Json::Num(self.window as f64)),
+            ("access", Json::Num(self.access as f64)),
+            ("action", Json::Str(self.action.label().into())),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            ("predictor_version", Json::Num(self.predictor_version as f64)),
+        ];
+        if let AdaptationAction::Retrain { steps, mean_loss } = self.action {
+            pairs.push(("steps", Json::Num(steps as f64)));
+            if mean_loss.is_finite() {
+                pairs.push(("mean_loss", Json::Num(mean_loss)));
+            }
+        }
+        Json::from_pairs(pairs)
+    }
+}
+
+/// What [`AdaptiveController::maybe_window`] decided this window (callers
+/// that need to react — e.g. flush stale utilities on throttle/retrain —
+/// branch on this; everything else can ignore it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlDecision {
+    Retrained,
+    Throttled,
+    Resumed,
+}
+
+/// How the controller may reach the predictor feeding its engine.
+pub enum PredictorAccess<'a> {
+    /// No predictor feeds this engine: nothing to throttle or retrain.
+    None,
+    /// The predictor is owned by the calling loop: the controller may both
+    /// throttle its predictions and fine-tune it from the replay buffer.
+    Local(&'a mut PredictorBox),
+    /// Predictions arrive from elsewhere (the serving coordinator's
+    /// predictor-service thread): throttling applies, retraining is out of
+    /// reach from here.
+    Remote,
+}
+
+impl PredictorAccess<'_> {
+    /// Are there predictions whose application could be throttled?
+    fn throttleable(&self) -> bool {
+        match self {
+            PredictorAccess::None => false,
+            PredictorAccess::Local(p) => p.is_some(),
+            PredictorAccess::Remote => true,
+        }
+    }
+}
+
+/// Bound on the retained per-window log (counters keep accumulating past
+/// it; only the detailed log is truncated).
+const WINDOW_LOG_CAP: usize = 4096;
+
+/// The runtime adaptive-control loop. One controller per engine (per sweep
+/// cell / per serving worker); see the module docs for the control law.
+pub struct AdaptiveController {
+    cfg: ControllerConfig,
+    telemetry: Telemetry,
+    detector: PageHinkley,
+    learner: Option<OnlineLearner>,
+    /// Versioned-handle counter: bumps on every swap of the *effective*
+    /// predictor (retrained weights, throttle engage, resume).
+    version: u64,
+    /// Weight hot-swaps specifically (Retrain events) — the number callers
+    /// should read as "how many times were the weights replaced".
+    retrains: u64,
+    /// Drift detected but not yet acted on (detection landed in a cooldown
+    /// window). The Page–Hinkley detector self-resets when it fires, so
+    /// without this carry-over a shift during cooldown would be silently
+    /// lost — the reset detector re-anchors on the post-shift regime.
+    pending_drift: Option<Drift>,
+    throttled: bool,
+    unhealthy_streak: u64,
+    healthy_streak: u64,
+    cooldown_left: u64,
+    ewma_hit: f64,
+    ewma_pollution: f64,
+    ewma_ready: bool,
+    window_log: Vec<WindowStats>,
+    events: Vec<AdaptationEvent>,
+    drift_windows: Vec<u64>,
+    throttled_windows: u64,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        let detector =
+            PageHinkley::new(cfg.ph_delta, cfg.ph_lambda, cfg.warmup_windows.max(3));
+        Self {
+            cfg,
+            telemetry: Telemetry::new(),
+            detector,
+            learner: None,
+            version: 0,
+            retrains: 0,
+            pending_drift: None,
+            throttled: false,
+            unhealthy_streak: 0,
+            healthy_streak: 0,
+            cooldown_left: 0,
+            ewma_hit: 0.0,
+            ewma_pollution: 0.0,
+            ewma_ready: false,
+            window_log: Vec::new(),
+            events: Vec::new(),
+            drift_windows: Vec::new(),
+            throttled_windows: 0,
+        }
+    }
+
+    /// Per-access hook (reuse-distance sketch). Cheap; call for every
+    /// access regardless of feature extraction.
+    pub fn observe_access(&mut self, pos: u64, line: u64) {
+        self.telemetry.touch(pos, line);
+    }
+
+    /// Per-access hook for feature-extracting runs: feeds the replay
+    /// buffer. The learner's row width is latched from the first call.
+    pub fn observe_features(&mut self, pos: u64, line: u64, features: &[f32]) {
+        let learner = self.learner.get_or_insert_with(|| {
+            OnlineLearner::new(features.len(), self.cfg.replay_horizon, self.cfg.seed)
+        });
+        learner.observe(pos, line, features);
+    }
+
+    /// Should completed predictions be applied to the hierarchy? `false`
+    /// while throttled (predictions demoted to policy-default insertion).
+    pub fn apply_predictions(&self) -> bool {
+        !self.throttled
+    }
+
+    pub fn throttled(&self) -> bool {
+        self.throttled
+    }
+
+    /// Current predictor version (bumps on every hot swap).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn windows(&self) -> u64 {
+        self.telemetry.windows()
+    }
+
+    /// Distinct windows at which the drift detector fired.
+    pub fn drift_count(&self) -> u64 {
+        self.drift_windows.len() as u64
+    }
+
+    /// Weight hot-swaps (drift-triggered retrains). Throttle/resume bump
+    /// the handle [`version`](Self::version) but do not replace weights,
+    /// so they are deliberately not counted here.
+    pub fn swap_count(&self) -> u64 {
+        self.retrains
+    }
+
+    pub fn throttled_windows(&self) -> u64 {
+        self.throttled_windows
+    }
+
+    pub fn events(&self) -> &[AdaptationEvent] {
+        &self.events
+    }
+
+    pub fn window_log(&self) -> &[WindowStats] {
+        &self.window_log
+    }
+
+    fn record(&mut self, w: &WindowStats, access: u64, action: AdaptationAction) {
+        self.version += 1;
+        self.events.push(AdaptationEvent {
+            window: w.index,
+            access,
+            action,
+            hit_rate: w.hit_rate,
+            predictor_version: self.version,
+        });
+    }
+
+    /// Window-boundary hook: call once per access with the engine's access
+    /// count; does nothing except on multiples of `window_accesses`. On a
+    /// boundary it harvests telemetry, updates the drift detector, and
+    /// applies the control law against whatever predictor access the
+    /// caller has.
+    pub fn maybe_window(
+        &mut self,
+        steps: u64,
+        hier: &Hierarchy,
+        mut predictor: PredictorAccess<'_>,
+    ) -> Option<ControlDecision> {
+        if steps == 0 || steps % self.cfg.window_accesses != 0 {
+            return None;
+        }
+        let w = self.telemetry.harvest(hier);
+        if self.window_log.len() < WINDOW_LOG_CAP {
+            self.window_log.push(w);
+        }
+        if self.throttled {
+            self.throttled_windows += 1;
+        }
+        let past_warmup = w.index + 1 > self.cfg.warmup_windows;
+        // A window with no L2 demand carries no hit-rate evidence: its
+        // `hit_rate` is 0.0 only because of the max(1) denominator, and
+        // feeding that into the drift test would read as a total collapse.
+        // Such windows are logged but not scored.
+        let scored = w.l2_demand > 0;
+
+        // Health bookkeeping against the EWMA baseline — only after
+        // warmup. Cold-start windows (tiny demand counts, unfilled caches)
+        // would otherwise seed a skewed baseline and bank an unhealthy
+        // streak that lets throttling fire on pre-baseline evidence the
+        // moment warmup ends.
+        if past_warmup && scored {
+            let unhealthy = self.ewma_ready
+                && (w.hit_rate < self.ewma_hit * self.cfg.throttle_hit_ratio
+                    || w.pollution > self.ewma_pollution + self.cfg.pollution_margin);
+            if unhealthy {
+                self.unhealthy_streak += 1;
+                self.healthy_streak = 0;
+            } else {
+                self.unhealthy_streak = 0;
+                self.healthy_streak += 1;
+            }
+            // The baseline is frozen while throttled: letting it absorb
+            // throttled-regime windows would converge it onto the degraded
+            // level, every window would then read "healthy" against its
+            // own regime, and the throttle would auto-resume with no real
+            // recovery (a throttle/resume oscillation). Resume therefore
+            // requires telemetry back near the *pre-throttle* baseline.
+            if !self.throttled {
+                if self.ewma_ready {
+                    self.ewma_hit = 0.8 * self.ewma_hit + 0.2 * w.hit_rate;
+                    self.ewma_pollution = 0.8 * self.ewma_pollution + 0.2 * w.pollution;
+                } else {
+                    self.ewma_hit = w.hit_rate;
+                    self.ewma_pollution = w.pollution;
+                    self.ewma_ready = true;
+                }
+            }
+        }
+
+        // Drift detection runs on every scored window (so the drift log is
+        // complete), but actions respect warmup + cooldown: a detection
+        // during cooldown is carried in `pending_drift` and acted on at
+        // the next actionable window instead of being lost.
+        let detected = if scored { self.detector.update(w.hit_rate) } else { None };
+        if detected.is_some() && past_warmup {
+            self.drift_windows.push(w.index);
+            self.pending_drift = detected;
+        }
+
+        let mut decision = None;
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+        } else if past_warmup {
+            // Only downward shifts trigger adaptation: an upward drift is
+            // logged but needs no reaction (and while throttled it is
+            // usually the throttle itself working — retraining on it would
+            // bypass the recovery gate and re-enable the predictions whose
+            // removal caused the improvement).
+            if self.pending_drift.take() == Some(Drift::Down) {
+                let steps_cfg = self.cfg.train_steps_on_drift;
+                let loss = match (&mut predictor, self.learner.as_mut()) {
+                    (PredictorAccess::Local(p), Some(l)) => l.train_predictor(p, steps_cfg),
+                    _ => None,
+                };
+                if let Some(mean_loss) = loss {
+                    // Hot swap: the replay-tuned weights become the live
+                    // predictor at the next batch boundary. A retrain also
+                    // lifts any standing throttle — fresh weights deserve
+                    // to be applied, and a Retrain event that left
+                    // predictions discarded would misstate what ran.
+                    self.throttled = false;
+                    self.unhealthy_streak = 0;
+                    self.retrains += 1;
+                    self.record(
+                        &w,
+                        steps,
+                        AdaptationAction::Retrain {
+                            steps: steps_cfg as u64,
+                            mean_loss: mean_loss as f64,
+                        },
+                    );
+                    decision = Some(ControlDecision::Retrained);
+                    self.cooldown_left = self.cfg.cooldown_windows;
+                } else if !self.throttled && predictor.throttleable() {
+                    // No trainable model (or replay not matured): back off.
+                    self.throttled = true;
+                    self.healthy_streak = 0;
+                    self.record(&w, steps, AdaptationAction::Throttle);
+                    decision = Some(ControlDecision::Throttled);
+                    self.cooldown_left = self.cfg.cooldown_windows;
+                }
+            }
+            // Confidence collapse independent of the mean-shift test.
+            if decision.is_none()
+                && !self.throttled
+                && predictor.throttleable()
+                && self.unhealthy_streak >= self.cfg.unhealthy_windows_to_throttle
+            {
+                self.throttled = true;
+                self.healthy_streak = 0;
+                self.record(&w, steps, AdaptationAction::Throttle);
+                decision = Some(ControlDecision::Throttled);
+                self.cooldown_left = self.cfg.cooldown_windows;
+            }
+            // Recovery: healthy long enough → resume predictions.
+            if decision.is_none()
+                && self.throttled
+                && self.healthy_streak >= self.cfg.recover_windows
+            {
+                self.throttled = false;
+                self.record(&w, steps, AdaptationAction::Resume);
+                decision = Some(ControlDecision::Resumed);
+                self.cooldown_left = self.cfg.cooldown_windows;
+            }
+        }
+        decision
+    }
+
+    /// Replay-buffer Adam steps executed by drift-triggered retrains.
+    pub fn online_train_steps(&self) -> u64 {
+        self.learner.as_ref().map(|l| l.steps_run).unwrap_or(0)
+    }
+
+    /// Consume the controller into its serializable run summary.
+    pub fn into_summary(self) -> ControllerSummary {
+        ControllerSummary {
+            windows_observed: self.telemetry.windows(),
+            drift_events: self.drift_windows.len() as u64,
+            swaps: self.retrains,
+            throttled_windows: self.throttled_windows,
+            online_train_steps: self.learner.as_ref().map(|l| l.steps_run).unwrap_or(0),
+            drift_windows: self.drift_windows,
+            events: self.events,
+            windows: self.window_log,
+        }
+    }
+}
+
+/// Serializable summary of one controller run (`acpc adapt --json`).
+#[derive(Debug, Clone)]
+pub struct ControllerSummary {
+    pub windows_observed: u64,
+    pub drift_events: u64,
+    pub swaps: u64,
+    pub throttled_windows: u64,
+    /// Replay-buffer Adam steps run by drift-triggered retrains.
+    pub online_train_steps: u64,
+    pub drift_windows: Vec<u64>,
+    pub events: Vec<AdaptationEvent>,
+    pub windows: Vec<WindowStats>,
+}
+
+impl ControllerSummary {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("windows_observed", Json::Num(self.windows_observed as f64)),
+            ("drift_events", Json::Num(self.drift_events as f64)),
+            ("swaps", Json::Num(self.swaps as f64)),
+            ("throttled_windows", Json::Num(self.throttled_windows as f64)),
+            ("online_train_steps", Json::Num(self.online_train_steps as f64)),
+            (
+                "drift_windows",
+                Json::Arr(self.drift_windows.iter().map(|&w| Json::Num(w as f64)).collect()),
+            ),
+            ("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+            ("windows", Json::Arr(self.windows.iter().map(|w| w.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::HierarchyConfig;
+    use crate::policy::AccessMeta;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    /// Drive a hierarchy + controller by hand for `n` accesses.
+    fn drive(ccfg: ControllerConfig, n: u64, seed: u64) -> AdaptiveController {
+        let mut h = Hierarchy::new(HierarchyConfig::scaled(), "acpc");
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(seed));
+        let mut c = AdaptiveController::new(ccfg);
+        let mut p = PredictorBox::Heuristic(crate::predictor::HeuristicPredictor);
+        for i in 0..n {
+            let a = gen.next_access();
+            let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+            h.access(&a, &meta);
+            c.observe_access(i, a.line());
+            c.maybe_window(i + 1, &h, PredictorAccess::Local(&mut p));
+        }
+        c
+    }
+
+    #[test]
+    fn windows_tick_at_configured_cadence() {
+        let mut ccfg = ControllerConfig::quick();
+        ccfg.window_accesses = 1000;
+        let c = drive(ccfg, 10_500, 3);
+        assert_eq!(c.windows(), 10);
+        assert_eq!(c.window_log().len(), 10);
+    }
+
+    #[test]
+    fn passive_controller_never_acts() {
+        let c = drive(ControllerConfig::passive(), 80_000, 7);
+        assert!(c.events().is_empty(), "{:?}", c.events());
+        assert_eq!(c.swap_count(), 0);
+        assert_eq!(c.drift_count(), 0);
+        assert!(!c.throttled());
+        assert!(c.windows() > 0);
+    }
+
+    #[test]
+    fn controller_is_deterministic() {
+        let a = drive(ControllerConfig::quick(), 120_000, 11).into_summary();
+        let b = drive(ControllerConfig::quick(), 120_000, 11).into_summary();
+        assert_eq!(a.drift_windows, b.drift_windows);
+        assert_eq!(a.swaps, b.swaps);
+        assert_eq!(a.throttled_windows, b.throttled_windows);
+        assert_eq!(a.events.len(), b.events.len());
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn summary_json_has_schema_keys() {
+        let s = drive(ControllerConfig::quick(), 30_000, 5).into_summary();
+        let j = s.to_json();
+        for key in [
+            "windows_observed",
+            "drift_events",
+            "swaps",
+            "throttled_windows",
+            "online_train_steps",
+            "drift_windows",
+            "events",
+            "windows",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Deterministic phase/drift detection over the telemetry stream.
+//!
+//! A two-sided Page–Hinkley test over a scalar signal (the controller feeds
+//! it the per-window L2 hit rate): the test tracks the running mean and two
+//! one-sided cumulative deviations; when either exceeds `lambda` the signal
+//! has shifted and a [`Drift`] fires. Thresholds come from
+//! [`crate::adapt::ControllerConfig`] — the detector itself has no
+//! randomness, so a fixed access stream yields a fixed drift sequence
+//! regardless of thread count or wall clock.
+
+/// Direction of a detected mean shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Drift {
+    /// The signal dropped (hit rate collapsing — the interesting case).
+    Down,
+    /// The signal rose (e.g. recovery after a phase ends).
+    Up,
+}
+
+/// Two-sided Page–Hinkley mean-shift detector.
+#[derive(Debug, Clone)]
+pub struct PageHinkley {
+    /// Magnitude tolerance: deviations below `delta` are treated as noise.
+    delta: f64,
+    /// Detection threshold on the cumulative deviation.
+    lambda: f64,
+    /// Samples required before a detection may fire.
+    min_samples: u64,
+    n: u64,
+    mean: f64,
+    /// Cumulative evidence of a downward / upward shift (CUSUM form).
+    m_down: f64,
+    m_up: f64,
+}
+
+impl PageHinkley {
+    pub fn new(delta: f64, lambda: f64, min_samples: u64) -> Self {
+        Self { delta, lambda, min_samples, n: 0, mean: 0.0, m_down: 0.0, m_up: 0.0 }
+    }
+
+    /// Samples absorbed since the last reset.
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean of the current regime.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Feed one sample; `Some(direction)` when a shift is detected. The
+    /// detector resets itself after a detection (the new regime becomes the
+    /// reference).
+    pub fn update(&mut self, x: f64) -> Option<Drift> {
+        self.n += 1;
+        self.mean += (x - self.mean) / self.n as f64;
+        self.m_down = (self.m_down + (self.mean - x - self.delta)).max(0.0);
+        self.m_up = (self.m_up + (x - self.mean - self.delta)).max(0.0);
+        if self.n < self.min_samples {
+            return None;
+        }
+        let drift = if self.m_down > self.lambda {
+            Some(Drift::Down)
+        } else if self.m_up > self.lambda {
+            Some(Drift::Up)
+        } else {
+            None
+        };
+        if drift.is_some() {
+            self.reset();
+        }
+        drift
+    }
+
+    /// Forget the current regime (called internally after each detection).
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.mean = 0.0;
+        self.m_down = 0.0;
+        self.m_up = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_signal_never_fires() {
+        let mut ph = PageHinkley::new(0.005, 0.05, 4);
+        for i in 0..200 {
+            // Tiny deterministic ripple around 0.7, amplitude < delta.
+            let x = 0.7 + 0.002 * ((i % 3) as f64 - 1.0);
+            assert_eq!(ph.update(x), None, "sample {i}");
+        }
+        assert!((ph.mean() - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    fn step_down_fires_down_then_resets() {
+        let mut ph = PageHinkley::new(0.005, 0.05, 4);
+        for _ in 0..30 {
+            assert_eq!(ph.update(0.8), None);
+        }
+        let mut fired = None;
+        for i in 0..30 {
+            if let Some(d) = ph.update(0.6) {
+                fired = Some((i, d));
+                break;
+            }
+        }
+        let (i, d) = fired.expect("step change must be detected");
+        assert_eq!(d, Drift::Down);
+        assert!(i < 10, "detection latency {i}");
+        assert_eq!(ph.samples(), 0, "detector must reset after firing");
+    }
+
+    #[test]
+    fn step_up_fires_up() {
+        let mut ph = PageHinkley::new(0.005, 0.05, 4);
+        for _ in 0..30 {
+            ph.update(0.4);
+        }
+        let fired = (0..30).find_map(|_| ph.update(0.65));
+        assert_eq!(fired, Some(Drift::Up));
+    }
+
+    #[test]
+    fn deterministic_for_identical_streams() {
+        let series: Vec<f64> =
+            (0..300).map(|i| if (i / 60) % 2 == 0 { 0.75 } else { 0.62 }).collect();
+        let run = |series: &[f64]| -> Vec<(usize, Drift)> {
+            let mut ph = PageHinkley::new(0.005, 0.05, 4);
+            series
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &x)| ph.update(x).map(|d| (i, d)))
+                .collect()
+        };
+        let a = run(&series);
+        let b = run(&series);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "alternating phases must produce detections");
+    }
+}

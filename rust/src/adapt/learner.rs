@@ -1,0 +1,177 @@
+//! Replay-buffer online learner (paper §3.4), lifted out of the simulator
+//! so every consumer — batch sim, `acpc adapt`, the serving coordinator —
+//! can fine-tune a predictor from observed reuse outcomes.
+//!
+//! Each observed access is enqueued with its feature row; once the labeling
+//! horizon has passed, the sample's label resolves to "was the line touched
+//! again within the horizon?". [`OnlineLearner::train`] then runs a few
+//! compiled Adam steps over a uniform replay sample. The learner is
+//! predictor-agnostic at the call site ([`OnlineLearner::train_predictor`]):
+//! non-trainable predictors (heuristic, none) simply report `None`, which is
+//! the controller's cue to fall back to throttling instead of retraining.
+
+use crate::predictor::{ModelRuntime, PredictorBox};
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+/// Bound on the last-touch labeling map (entries beyond the horizon are
+/// swept once the map exceeds this).
+const LAST_TOUCH_CAP: usize = 1 << 17;
+
+/// Replay-buffer online learner (§3.4).
+pub struct OnlineLearner {
+    /// (features, label) samples awaiting training.
+    buf_x: Vec<f32>,
+    buf_y: Vec<f32>,
+    row: usize,
+    capacity: usize,
+    /// In-flight observations: line → (enqueue position, features start).
+    pending: VecDeque<(u64, u64, usize)>,
+    /// Lines touched recently (for labeling): line → last touch position.
+    last_touch: HashMap<u64, u64>,
+    horizon: u64,
+    pub steps_run: u64,
+    rng: Xoshiro256,
+}
+
+impl OnlineLearner {
+    pub fn new(row: usize, horizon: u64, seed: u64) -> Self {
+        Self {
+            buf_x: Vec::new(),
+            buf_y: Vec::new(),
+            row,
+            capacity: 1 << 15,
+            pending: VecDeque::new(),
+            last_touch: HashMap::new(),
+            horizon,
+            steps_run: 0,
+            rng: Xoshiro256::new(seed ^ 0xFEED),
+        }
+    }
+
+    /// Feature-row width this learner buffers.
+    pub fn row(&self) -> usize {
+        self.row
+    }
+
+    /// Labeled samples currently available for training.
+    pub fn resolved(&self) -> usize {
+        self.buf_y.iter().filter(|y| !y.is_nan()).count()
+    }
+
+    /// Record a touch and enqueue the access as a future training sample.
+    /// A full buffer evicts its oldest half *here* — not only in
+    /// [`train`](Self::train) — so drift-triggered trainers (which may not
+    /// train for hundreds of thousands of accesses) always sample the
+    /// current regime rather than a buffer frozen at the run's start.
+    pub fn observe(&mut self, pos: u64, line: u64, features: &[f32]) {
+        // Bound the labeling map: only touches within the horizon can ever
+        // resolve a label, so entries older than that are dead weight. The
+        // retain pass runs rarely (cap >> lines touchable per horizon) and
+        // leaves at most `horizon`+1 entries.
+        if self.last_touch.len() > LAST_TOUCH_CAP {
+            let horizon = self.horizon;
+            self.last_touch.retain(|_, &mut t| pos.saturating_sub(t) <= horizon);
+        }
+        self.last_touch.insert(line, pos);
+        if self.buf_y.len() >= self.capacity {
+            let keep = self.capacity / 2;
+            let drop_n = self.buf_y.len() - keep;
+            self.buf_x.drain(..drop_n * self.row);
+            self.buf_y.drain(..drop_n);
+            self.pending.clear(); // positions invalidated; restart labeling
+        }
+        {
+            let start = self.buf_x.len();
+            self.buf_x.extend_from_slice(features);
+            self.buf_y.push(f32::NAN); // resolved later
+            self.pending.push_back((line, pos, start / self.row));
+        }
+        // Resolve matured observations.
+        while let Some(&(l, p, idx)) = self.pending.front() {
+            if pos.saturating_sub(p) < self.horizon {
+                break;
+            }
+            let reused =
+                self.last_touch.get(&l).map(|&t| t > p && t - p <= self.horizon).unwrap_or(false);
+            self.buf_y[idx] = reused as u8 as f32;
+            self.pending.pop_front();
+        }
+    }
+
+    /// Run up to `steps` Adam steps on resolved samples. Returns mean loss,
+    /// or `None` when too few samples have matured for a full batch.
+    pub fn train(&mut self, model: &mut ModelRuntime, steps: usize) -> Option<f32> {
+        let b = model.mm.train.batch;
+        let resolved: Vec<usize> =
+            (0..self.buf_y.len()).filter(|&i| !self.buf_y[i].is_nan()).collect();
+        if resolved.len() < b || steps == 0 {
+            return None;
+        }
+        let mut total = 0.0;
+        for _ in 0..steps {
+            let mut x = Vec::with_capacity(b * self.row);
+            let mut y = Vec::with_capacity(b);
+            for _ in 0..b {
+                let i = *self.rng.choose(&resolved);
+                x.extend_from_slice(&self.buf_x[i * self.row..(i + 1) * self.row]);
+                y.push(self.buf_y[i]);
+            }
+            total += model.train_step(x, y).expect("online train step");
+            self.steps_run += 1;
+        }
+        // Buffer freshness is maintained by `observe` (oldest-half eviction
+        // on overflow), so sampling here always sees the current regime.
+        Some(total / steps as f32)
+    }
+
+    /// Predictor-generic entry point: fine-tunes when the box holds a
+    /// trainable [`ModelRuntime`], reports `None` otherwise (heuristic /
+    /// no-predictor fallback — the controller throttles instead).
+    pub fn train_predictor(&mut self, predictor: &mut PredictorBox, steps: usize) -> Option<f32> {
+        match predictor.model_mut() {
+            Some(m) => self.train(m, steps),
+            None => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::{HeuristicPredictor, FEATURE_DIM};
+
+    #[test]
+    fn labels_resolve_after_horizon() {
+        let mut l = OnlineLearner::new(FEATURE_DIM, 10, 1);
+        let feat = [0.5f32; FEATURE_DIM];
+        // Line 7 touched at 0 and 4 (reused within horizon); line 9 once.
+        l.observe(0, 7, &feat);
+        l.observe(4, 9, &feat);
+        assert_eq!(l.resolved(), 0, "nothing matured yet");
+        // Advance past the horizon; re-touch 7 so its label is positive.
+        l.observe(6, 7, &feat);
+        l.observe(20, 1, &feat);
+        assert!(l.resolved() >= 2, "matured: {}", l.resolved());
+        // First sample of line 7 (pos 0): re-touched at 6 ≤ horizon → 1.
+        assert_eq!(l.buf_y[0], 1.0);
+        // Line 9 (pos 4): never re-touched → 0.
+        assert_eq!(l.buf_y[1], 0.0);
+    }
+
+    #[test]
+    fn non_trainable_predictors_yield_none() {
+        let mut l = OnlineLearner::new(FEATURE_DIM, 10, 1);
+        let feat = [0.1f32; FEATURE_DIM];
+        for i in 0..100 {
+            l.observe(i, i % 7, &feat);
+        }
+        assert_eq!(l.train_predictor(&mut PredictorBox::None, 4), None);
+        assert_eq!(
+            l.train_predictor(&mut PredictorBox::Heuristic(HeuristicPredictor), 4),
+            None
+        );
+        assert_eq!(l.steps_run, 0);
+    }
+}

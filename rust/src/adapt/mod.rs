@@ -1,0 +1,127 @@
+//! Online adaptive-control subsystem: the piece that makes "adaptive cache
+//! pollution control" *adaptive at runtime* rather than only at training
+//! time.
+//!
+//! - [`telemetry`] — windowed pollution telemetry (per-window hit rate,
+//!   dead-block/pollution rate, prefetch accuracy, reuse-distance sketch)
+//!   computed incrementally alongside [`crate::sim::Engine::step`];
+//! - [`drift`] — a deterministic two-sided Page–Hinkley phase/drift
+//!   detector over the telemetry stream;
+//! - [`learner`] — the §3.4 replay-buffer [`OnlineLearner`], lifted out of
+//!   the simulator and generalized over any [`crate::predictor::PredictorBox`];
+//! - [`controller`] — the [`AdaptiveController`] closing the loop: on
+//!   drift it fine-tunes a trainable predictor from the replay buffer and
+//!   hot-swaps the weights behind a versioned handle, or throttles
+//!   predictions down to policy-default insertion when no trainable model
+//!   exists / confidence collapses (LLaMCAT-style back-off).
+//!
+//! Consumers: `sim::run_workload_adaptive` (batch runs + `acpc adapt`),
+//! `sim::sweep` (`--predictor adaptive` cells) and the serving
+//! coordinator's workers (per-worker throttle controllers).
+
+pub mod controller;
+pub mod drift;
+pub mod learner;
+pub mod telemetry;
+
+pub use controller::{
+    AdaptationAction, AdaptationEvent, AdaptiveController, ControlDecision, ControllerConfig,
+    ControllerSummary, PredictorAccess,
+};
+pub use drift::{Drift, PageHinkley};
+pub use learner::OnlineLearner;
+pub use telemetry::{ReuseSketch, Telemetry, WindowStats};
+
+use crate::config::ExperimentConfig;
+use crate::predictor::PredictorBox;
+use crate::sim::SimResult;
+use crate::util::json::Json;
+
+/// Result of one controller-on vs controller-off replay of the same
+/// workload and seed (`acpc adapt`).
+#[derive(Debug, Clone)]
+pub struct CompareOutput {
+    pub baseline: SimResult,
+    pub adaptive: SimResult,
+    pub summary: ControllerSummary,
+}
+
+impl CompareOutput {
+    /// L2 hit-rate delta (adaptive − baseline), in absolute rate units.
+    pub fn hit_rate_delta(&self) -> f64 {
+        self.adaptive.report.l2_hit_rate - self.baseline.report.l2_hit_rate
+    }
+
+    /// Pollution-ratio delta (adaptive − baseline).
+    pub fn pollution_delta(&self) -> f64 {
+        self.adaptive.report.l2_pollution_ratio - self.baseline.report.l2_pollution_ratio
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("baseline", self.baseline.report.to_json()),
+            ("adaptive", self.adaptive.report.to_json()),
+            ("adaptation", self.summary.to_json()),
+            (
+                "deltas",
+                Json::from_pairs(vec![
+                    ("hit_rate", Json::Num(self.hit_rate_delta())),
+                    ("pollution", Json::Num(self.pollution_delta())),
+                    ("amat", Json::Num(self.adaptive.report.amat - self.baseline.report.amat)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Replay the workload `cfg` describes twice with identical seeds — once
+/// without and once with the adaptive controller — and report both runs
+/// plus the controller's event log. `mk_predictor` is invoked once per run
+/// so each replay gets a fresh predictor (fresh weights for trainable
+/// ones).
+pub fn run_compare(
+    cfg: &ExperimentConfig,
+    ccfg: &ControllerConfig,
+    mut mk_predictor: impl FnMut() -> PredictorBox,
+) -> CompareOutput {
+    let mut base_pred = mk_predictor();
+    let mut base_workload = cfg.workload();
+    let baseline = crate::sim::run_workload(cfg, base_workload.as_mut(), &mut base_pred);
+
+    let mut adapt_pred = mk_predictor();
+    let mut controller = AdaptiveController::new(ccfg.clone());
+    let mut adapt_workload = cfg.workload();
+    let adaptive = crate::sim::run_workload_adaptive(
+        cfg,
+        adapt_workload.as_mut(),
+        &mut adapt_pred,
+        Some(&mut controller),
+    );
+    CompareOutput { baseline, adaptive, summary: controller.into_summary() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PredictorKind};
+    use crate::predictor::HeuristicPredictor;
+
+    #[test]
+    fn compare_runs_both_arms_on_one_seed() {
+        let mut cfg =
+            ExperimentConfig::for_scenario("multi-tenant-mix", "acpc", PredictorKind::Heuristic, 42)
+                .unwrap();
+        cfg.accesses = 60_000;
+        let mut ccfg = ControllerConfig::quick();
+        ccfg.window_accesses = 2048;
+        let out = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+        assert_eq!(out.baseline.report.accesses, 60_000);
+        assert_eq!(out.adaptive.report.accesses, 60_000);
+        assert!(out.summary.windows_observed > 0);
+        let j = out.to_json();
+        for key in ["baseline", "adaptive", "adaptation", "deltas"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert!(j.get("deltas").unwrap().get("hit_rate").unwrap().as_f64().is_some());
+    }
+}

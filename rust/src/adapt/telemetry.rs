@@ -1,0 +1,242 @@
+//! Windowed pollution telemetry: the controller's view of how the cache is
+//! doing *right now*, computed incrementally from the hierarchy's cumulative
+//! counters plus a per-window reuse-distance sketch.
+//!
+//! The simulator's [`crate::metrics::MetricsReport`] is an end-of-run
+//! aggregate; drift detection needs a *stream* of short-horizon samples.
+//! [`Telemetry`] differentiates the hierarchy's monotone counters at window
+//! boundaries (one subtraction per counter — no per-access cost beyond the
+//! reuse sketch's map touch), yielding one [`WindowStats`] per
+//! `window_accesses` simulated accesses.
+
+use crate::mem::Hierarchy;
+use crate::util::hash::FastMap;
+use crate::util::json::Json;
+
+/// Snapshot of the cumulative counters the telemetry differentiates.
+#[derive(Debug, Clone, Copy, Default)]
+struct CounterSnapshot {
+    accesses: u64,
+    demand_accesses: u64,
+    demand_hits: u64,
+    demand_misses: u64,
+    prefetch_fills: u64,
+    prefetch_useful: u64,
+    dead_prefetch_evictions: u64,
+    demand_evicted_by_prefetch: u64,
+}
+
+impl CounterSnapshot {
+    fn of(hier: &Hierarchy) -> Self {
+        let l2 = &hier.l2.stats;
+        Self {
+            accesses: hier.accesses,
+            demand_accesses: l2.demand_accesses,
+            demand_hits: l2.demand_hits,
+            demand_misses: l2.demand_misses,
+            prefetch_fills: l2.prefetch_fills,
+            prefetch_useful: l2.prefetch_useful,
+            dead_prefetch_evictions: l2.dead_prefetch_evictions,
+            demand_evicted_by_prefetch: l2.demand_evicted_by_prefetch,
+        }
+    }
+}
+
+/// One telemetry window: L2-centric health metrics over the last
+/// `window_accesses` accesses (not cumulative).
+#[derive(Debug, Clone, Copy)]
+pub struct WindowStats {
+    /// 0-based window index.
+    pub index: u64,
+    /// Engine accesses covered by this window.
+    pub accesses: u64,
+    /// L2 demand accesses in the window.
+    pub l2_demand: u64,
+    /// L2 demand hit rate in the window.
+    pub hit_rate: f64,
+    /// Dead-block/pollution rate: dead prefetch evictions (+ demand lines
+    /// evicted by prefetches) per L2 fill-side event in the window.
+    pub pollution: f64,
+    /// Useful prefetches per prefetch fill in the window.
+    pub prefetch_accuracy: f64,
+    /// Median log2 reuse distance observed in the window (the sketch's
+    /// p50 bucket); `u8::MAX` when the window saw no reuse at all.
+    pub reuse_p50_log2: u8,
+}
+
+impl WindowStats {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("index", Json::Num(self.index as f64)),
+            ("accesses", Json::Num(self.accesses as f64)),
+            ("l2_demand", Json::Num(self.l2_demand as f64)),
+            ("hit_rate", Json::Num(self.hit_rate)),
+            ("pollution", Json::Num(self.pollution)),
+            ("prefetch_accuracy", Json::Num(self.prefetch_accuracy)),
+            ("reuse_p50_log2", Json::Num(self.reuse_p50_log2 as f64)),
+        ])
+    }
+}
+
+/// Bounded last-touch map + log2-bucketed histogram of line reuse
+/// distances, reset each window. Distances are measured in accesses.
+pub struct ReuseSketch {
+    last: FastMap<u64, u64>,
+    capacity: usize,
+    hist: [u64; 33],
+}
+
+impl ReuseSketch {
+    pub fn new(capacity: usize) -> Self {
+        Self { last: FastMap::default(), capacity: capacity.max(1024), hist: [0; 33] }
+    }
+
+    /// Record one touch of `line` at access position `pos`.
+    pub fn touch(&mut self, pos: u64, line: u64) {
+        if self.last.len() >= self.capacity {
+            // Cheap deterministic wholesale aging (same idiom as the
+            // hierarchy's utility cache).
+            self.last.clear();
+        }
+        if let Some(prev) = self.last.insert(line, pos) {
+            let dist = pos.saturating_sub(prev).max(1);
+            // log2 bucket: 1 → 0, 2..3 → 1, 4..7 → 2, ... capped at 32.
+            let bucket = (63 - dist.leading_zeros() as usize).min(32);
+            self.hist[bucket] += 1;
+        }
+    }
+
+    /// Median bucket of the current histogram; `None` when empty.
+    pub fn p50_bucket(&self) -> Option<u8> {
+        let total: u64 = self.hist.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let mut acc = 0u64;
+        for (i, &c) in self.hist.iter().enumerate() {
+            acc += c;
+            if acc * 2 >= total {
+                return Some(i as u8);
+            }
+        }
+        Some(32)
+    }
+
+    /// Reset the histogram for the next window (the last-touch map is kept —
+    /// reuse spanning a window boundary is still reuse).
+    pub fn reset_window(&mut self) {
+        self.hist = [0; 33];
+    }
+}
+
+/// Incremental window telemetry over a running [`Hierarchy`].
+pub struct Telemetry {
+    prev: CounterSnapshot,
+    sketch: ReuseSketch,
+    windows: u64,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self { prev: CounterSnapshot::default(), sketch: ReuseSketch::new(1 << 16), windows: 0 }
+    }
+
+    /// Per-access hook (cheap: one bounded map insert).
+    pub fn touch(&mut self, pos: u64, line: u64) {
+        self.sketch.touch(pos, line);
+    }
+
+    /// Windows harvested so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Close the current window against the hierarchy's cumulative counters
+    /// and return its stats.
+    pub fn harvest(&mut self, hier: &Hierarchy) -> WindowStats {
+        let now = CounterSnapshot::of(hier);
+        let p = self.prev;
+        let demand = now.demand_accesses - p.demand_accesses;
+        let hits = now.demand_hits - p.demand_hits;
+        let pf_fills = now.prefetch_fills - p.prefetch_fills;
+        // Fill-side events this window (same normalization as
+        // `CacheStats::pollution_ratio`): demand-miss fills + prefetch
+        // fills. Normalizing by prefetch fills alone would let a window
+        // with few fills but carried-over dead evictions spike unboundedly.
+        let all_fills = (now.demand_misses - p.demand_misses) + pf_fills;
+        let useful = now.prefetch_useful - p.prefetch_useful;
+        let dead = (now.dead_prefetch_evictions - p.dead_prefetch_evictions)
+            + (now.demand_evicted_by_prefetch - p.demand_evicted_by_prefetch);
+        let stats = WindowStats {
+            index: self.windows,
+            accesses: now.accesses - p.accesses,
+            l2_demand: demand,
+            hit_rate: hits as f64 / demand.max(1) as f64,
+            pollution: dead as f64 / all_fills.max(1) as f64,
+            prefetch_accuracy: useful as f64 / pf_fills.max(1) as f64,
+            reuse_p50_log2: self.sketch.p50_bucket().unwrap_or(u8::MAX),
+        };
+        self.prev = now;
+        self.sketch.reset_window();
+        self.windows += 1;
+        stats
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::HierarchyConfig;
+    use crate::policy::AccessMeta;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    #[test]
+    fn reuse_sketch_buckets_distances() {
+        let mut s = ReuseSketch::new(4096);
+        assert_eq!(s.p50_bucket(), None);
+        // Line 1 touched at 0 and 1 → distance 1 → bucket 0.
+        s.touch(0, 1);
+        s.touch(1, 1);
+        assert_eq!(s.p50_bucket(), Some(0));
+        // Line 2 at distance 8 → bucket 3 shifts the median up.
+        s.touch(10, 2);
+        s.touch(18, 2);
+        s.touch(26, 2);
+        assert_eq!(s.p50_bucket(), Some(3));
+        s.reset_window();
+        assert_eq!(s.p50_bucket(), None);
+    }
+
+    #[test]
+    fn windows_differentiate_cumulative_counters() {
+        let mut cfg = HierarchyConfig::scaled();
+        cfg.prefetcher = "nextline".into();
+        let mut h = Hierarchy::new(cfg, "lru");
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(5));
+        let mut t = Telemetry::new();
+        let mut total_demand = 0u64;
+        for w in 0..4u64 {
+            for i in 0..10_000u64 {
+                let a = gen.next_access();
+                let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+                h.access(&a, &meta);
+                t.touch(w * 10_000 + i, a.line());
+            }
+            let ws = t.harvest(&h);
+            assert_eq!(ws.index, w);
+            assert_eq!(ws.accesses, 10_000);
+            assert!(ws.hit_rate > 0.0 && ws.hit_rate <= 1.0, "window {w}: {}", ws.hit_rate);
+            assert!(ws.pollution >= 0.0);
+            total_demand += ws.l2_demand;
+        }
+        // Window deltas must sum back to the cumulative counter.
+        assert_eq!(total_demand, h.l2.stats.demand_accesses);
+        assert_eq!(t.windows(), 4);
+    }
+}

@@ -1,0 +1,130 @@
+//! `acpc adapt` — replay one scenario with the adaptive controller ON vs
+//! OFF on the same seed and report the comparison (windows, drift points,
+//! swap count, hit-rate delta) as a table and optional JSON.
+
+use super::build_predictor;
+use crate::adapt::{run_compare, ControllerConfig};
+use crate::cli::Args;
+use crate::config::{ExperimentConfig, PredictorKind};
+use crate::predictor::PredictorBox;
+use crate::util::json::Json;
+use anyhow::Result;
+
+const HELP: &str = "\
+acpc adapt — closed-loop adaptation: controller ON vs OFF on one seed
+
+Replays the scenario twice with identical seeds: once plain, once with the
+adaptive controller (windowed pollution telemetry → Page–Hinkley drift
+detection → replay-buffer retrain for trainable predictors, throttle
+back-off otherwise). Prints the per-arm metrics, the adaptation event log,
+and the deltas; --json emits the full comparison.
+
+OPTIONS:
+    --scenario <name>     scenario-registry workload [default: multi-tenant-mix]
+    --policy <name>       L2 policy [default: acpc]
+    --predictor <kind>    heuristic|tcn|dnn [default: heuristic]
+    --accesses <n>        accesses per arm [default: 400000]
+    --window <n>          telemetry window in accesses [default: 8192]
+    --ph-delta <x>        Page-Hinkley tolerance [default: 0.002]
+    --ph-lambda <x>       Page-Hinkley threshold [default: 0.03]
+    --train-steps <n>     Adam steps per drift retrain [default: 8]
+    --seed <n>            RNG seed
+    --json <path>         write the comparison JSON
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&[
+        "scenario", "policy", "predictor", "accesses", "window", "ph-delta", "ph-lambda",
+        "train-steps", "seed", "json", "help",
+    ])?;
+
+    let scenario = args.opt_or("scenario", "multi-tenant-mix");
+    let policy = args.opt_or("policy", "acpc");
+    let kind = PredictorKind::parse(&args.opt_or("predictor", "heuristic"))?;
+    if kind == PredictorKind::None {
+        anyhow::bail!(
+            "--predictor none gives the controller nothing to adapt (no predictions to \
+             throttle, no model to retrain) — both arms would be identical"
+        );
+    }
+    let seed = args.u64_or("seed", 0xADA7_2026)?;
+    let mut cfg = ExperimentConfig::for_scenario(&scenario, &policy, kind, seed)?;
+    cfg.accesses = args.usize_or("accesses", 400_000)?;
+    if crate::policy::make_policy(&cfg.policy, 2, 2, 0).is_none() {
+        anyhow::bail!("unknown policy '{}' (see `acpc policies`)", cfg.policy);
+    }
+
+    let base = ControllerConfig::default();
+    let ccfg = ControllerConfig {
+        window_accesses: args.u64_or("window", base.window_accesses)?.max(256),
+        ph_delta: args.f64_or("ph-delta", base.ph_delta)?,
+        ph_lambda: args.f64_or("ph-lambda", base.ph_lambda)?,
+        train_steps_on_drift: args.usize_or("train-steps", base.train_steps_on_drift)?,
+        seed,
+        ..base
+    };
+
+    println!(
+        "adapt: scenario={} policy={} predictor={} accesses={} window={} (2 arms, same seed)",
+        scenario,
+        cfg.policy,
+        kind.label(),
+        cfg.accesses,
+        ccfg.window_accesses
+    );
+    // One fresh predictor per arm so the adaptive arm's fine-tuning cannot
+    // leak into the baseline. Built up front so artifact errors surface as
+    // CLI errors, not mid-run panics.
+    let mut pool: Vec<PredictorBox> =
+        vec![build_predictor(kind, None)?, build_predictor(kind, None)?];
+    let out = run_compare(&cfg, &ccfg, move || pool.pop().expect("two prebuilt arms"));
+
+    println!("\n== controller OFF (baseline) ==");
+    println!("{}", out.baseline.report.summary());
+    println!("== controller ON ==");
+    println!("{}", out.adaptive.report.summary());
+    let s = &out.summary;
+    println!(
+        "\nadaptation: windows={} drift_windows={:?} drift_events={} swaps={} throttled_windows={} online_steps={}",
+        s.windows_observed,
+        s.drift_windows,
+        s.drift_events,
+        s.swaps,
+        s.throttled_windows,
+        s.online_train_steps,
+    );
+    for e in &s.events {
+        println!(
+            "  window {:>4} @access {:>9}: {:<8} (hit_rate {:.3}, v{})",
+            e.window,
+            e.access,
+            e.action.label(),
+            e.hit_rate,
+            e.predictor_version
+        );
+    }
+    println!(
+        "\ndeltas (adaptive − baseline): CHR {:+.2} pp, pollution {:+.2} pp, AMAT {:+.2}",
+        out.hit_rate_delta() * 100.0,
+        out.pollution_delta() * 100.0,
+        out.adaptive.report.amat - out.baseline.report.amat,
+    );
+
+    if let Some(path) = args.opt("json") {
+        let mut j = out.to_json();
+        j.set("scenario", Json::Str(scenario.clone()));
+        j.set("policy", Json::Str(cfg.policy.clone()));
+        j.set("predictor", Json::Str(kind.label().into()));
+        // String, not Num: u64 seeds exceed f64's exact-integer range.
+        j.set("seed", Json::Str(seed.to_string()));
+        j.set("accesses", Json::Num(cfg.accesses as f64));
+        j.set("window_accesses", Json::Num(ccfg.window_accesses as f64));
+        std::fs::write(path, j.to_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(0)
+}

@@ -1,5 +1,6 @@
 //! CLI subcommand implementations.
 
+pub mod adapt;
 pub mod policies;
 pub mod serve;
 pub mod simulate;
@@ -10,25 +11,20 @@ pub mod train;
 
 use crate::config::PredictorKind;
 use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
-use crate::runtime::{Engine, Manifest};
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-/// Build a predictor box for a kind, loading + (optionally) quick-training
-/// the model from the artifacts when needed.
+/// Build a predictor box for a kind, loading the model from the AOT
+/// artifacts when needed.
 pub fn build_predictor(kind: PredictorKind, model_override: Option<&str>) -> Result<PredictorBox> {
     match kind {
         PredictorKind::None => Ok(PredictorBox::None),
         PredictorKind::Heuristic => Ok(PredictorBox::Heuristic(HeuristicPredictor)),
         PredictorKind::Dnn | PredictorKind::Tcn => {
-            let dir = crate::runtime::artifacts_dir()
-                .context("artifacts/ not found — run `make artifacts`")?;
-            let manifest = Manifest::load(&dir)?;
-            let engine = Engine::cpu()?;
             let name = model_override.unwrap_or(match kind {
                 PredictorKind::Dnn => "dnn",
                 _ => "tcn",
             });
-            let rt = ModelRuntime::load(&engine, &manifest, name)?;
+            let rt = ModelRuntime::load_from_artifacts(name)?;
             Ok(PredictorBox::Model(Box::new(rt)))
         }
     }

@@ -18,5 +18,6 @@ pub fn run() -> Result<i32> {
     }
     println!("\nhierarchy presets: scaled epyc7763");
     println!("predictors: none heuristic dnn tcn (artifact models: tcn tcn_flat tcn_short dnn)");
+    println!("sweep predictor specs: {}", crate::sim::sweep::PREDICTOR_SPECS.join(" "));
     Ok(0)
 }

@@ -4,7 +4,7 @@ use crate::cli::Args;
 use crate::config::PredictorKind;
 use crate::coordinator::{serve, RouterPolicy, ServeConfig};
 use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::Manifest;
 use crate::trace::{GeneratorConfig, ModelProfile};
 use anyhow::{Context, Result};
 use std::time::Duration;
@@ -19,6 +19,10 @@ OPTIONS:
     --predictor <kind>   none|heuristic|dnn|tcn [default: heuristic]
     --router <policy>    rr|least [default: least]
     --profile <name>     workload profile [default: gpt3ish]
+    --scenario <name>    scenario-registry workload (mutually exclusive
+                         with --profile; see `acpc policies`)
+    --adaptive           per-worker adaptive controllers (drift-triggered
+                         prediction throttling; events in the report)
     --batch <n>          predictor batch size [default: 256]
     --deadline-us <n>    batching deadline [default: 2000]
     --arrival-us <n>     inter-arrival pacing [default: 100]
@@ -31,12 +35,24 @@ pub fn run(args: &mut Args) -> Result<i32> {
         return Ok(0);
     }
     args.ensure_known(&[
-        "workers", "sessions", "policy", "predictor", "router", "profile", "batch",
-        "deadline-us", "arrival-us", "seed", "help",
+        "workers", "sessions", "policy", "predictor", "router", "profile", "scenario",
+        "adaptive", "batch", "deadline-us", "arrival-us", "seed", "help",
     ])?;
+    if args.opt("profile").is_some() && args.opt("scenario").is_some() {
+        anyhow::bail!("--profile and --scenario are mutually exclusive");
+    }
 
     let kind = PredictorKind::parse(&args.opt_or("predictor", "heuristic"))?;
+    if args.flag("adaptive") && kind == PredictorKind::None {
+        anyhow::bail!("--adaptive needs a predictor to throttle (drop --predictor none)");
+    }
     let seed = args.u64_or("seed", 0x5E21)?;
+    let scenario = args.opt("scenario").map(|s| s.to_string());
+    if let Some(name) = &scenario {
+        if crate::trace::Scenario::by_name(name).is_none() {
+            anyhow::bail!("unknown scenario '{name}' (see `acpc policies`)");
+        }
+    }
     let profile =
         ModelProfile::by_name(&args.opt_or("profile", "gpt3ish")).context("unknown profile")?;
     let mut generator = GeneratorConfig::new(profile, seed);
@@ -53,6 +69,9 @@ pub fn run(args: &mut Args) -> Result<i32> {
         router: RouterPolicy::parse(&args.opt_or("router", "least")).context("router: rr|least")?,
         predict_batch: args.usize_or("batch", 256)?,
         predict_deadline: Duration::from_micros(args.u64_or("deadline-us", 2000)?),
+        scenario,
+        adaptive: args.flag("adaptive"),
+        adapt: crate::adapt::ControllerConfig::default(),
     };
 
     // Window + thread-local factory (PJRT is !Send).
@@ -66,8 +85,14 @@ pub fn run(args: &mut Args) -> Result<i32> {
         }
     };
     println!(
-        "serving: workers={} sessions={} policy={} predictor={:?} router={:?}",
-        cfg.workers, cfg.total_sessions, cfg.policy, kind, cfg.router
+        "serving: workers={} sessions={} policy={} predictor={:?} router={:?} workload={} adaptive={}",
+        cfg.workers,
+        cfg.total_sessions,
+        cfg.policy,
+        kind,
+        cfg.router,
+        cfg.scenario.as_deref().unwrap_or(&cfg.generator.profile.name),
+        cfg.adaptive
     );
     let rep = serve(&cfg, window, move || build_in_thread(kind, model_name.as_deref()));
 
@@ -91,6 +116,12 @@ pub fn run(args: &mut Args) -> Result<i32> {
         "prediction: batches={} mean_fill={:.1} | router imbalance(max)={}",
         rep.prediction_batches, rep.mean_batch_fill, rep.router_imbalance_max
     );
+    if cfg.adaptive {
+        println!(
+            "adaptation: windows={} drift_events={} throttled_windows={}",
+            rep.adapt_windows, rep.drift_events, rep.throttled_windows
+        );
+    }
     Ok(0)
 }
 
@@ -108,10 +139,7 @@ fn build_in_thread(kind: PredictorKind, model: Option<&str>) -> PredictorBox {
         PredictorKind::None => PredictorBox::None,
         PredictorKind::Heuristic => PredictorBox::Heuristic(HeuristicPredictor),
         PredictorKind::Dnn | PredictorKind::Tcn => {
-            let dir = crate::runtime::artifacts_dir().expect("artifacts");
-            let manifest = Manifest::load(&dir).expect("manifest");
-            let engine = Engine::cpu().expect("engine");
-            let rt = ModelRuntime::load(&engine, &manifest, model.unwrap()).expect("model");
+            let rt = ModelRuntime::load_from_artifacts(model.unwrap()).expect("model artifacts");
             PredictorBox::Model(Box::new(rt))
         }
     }

@@ -18,15 +18,20 @@ results are identical for any -j.
 OPTIONS:
     --policies <a,b,..>   comma-separated policies [default: lru,srrip,ship,acpc]
     --scenarios <a,b,..>  comma-separated scenarios or 'all' [default: all]
+    --predictor <spec>    auto|heuristic|tcn|adaptive|none [default: auto]
+                          (tcn loads the AOT artifacts per worker thread and
+                          falls back to heuristic when absent; adaptive runs
+                          a per-cell drift controller)
     -j, --jobs <n>        worker threads [default: cores-1]
     --accesses <n>        accesses per cell [default: 400000]
     --seed <n>            base seed (per-cell seeds derive from it)
     --json <path>         write all cell reports as JSON
     --help
 
-Scenarios: decode-heavy prefill-burst rag-embedding long-context multi-tenant-mix
+Scenarios: decode-heavy prefill-burst rag-embedding long-context
+           multi-tenant-mix speculative-decode
 Example:
-    acpc sweep --policies lru,drrip,ship,acpc --scenarios all -j 8";
+    acpc sweep --policies lru,drrip,ship,acpc --scenarios all --predictor tcn -j 8";
 
 fn parse_list(s: &str) -> Vec<String> {
     s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
@@ -38,7 +43,7 @@ pub fn run(args: &mut Args) -> Result<i32> {
         return Ok(0);
     }
     args.ensure_known(&[
-        "policies", "scenarios", "jobs", "j", "accesses", "seed", "json", "help",
+        "policies", "scenarios", "predictor", "jobs", "j", "accesses", "seed", "json", "help",
     ])?;
 
     let policies = parse_list(&args.opt_or("policies", "lru,srrip,ship,acpc"));
@@ -50,13 +55,15 @@ pub fn run(args: &mut Args) -> Result<i32> {
     cfg.threads = args.usize_or("j", args.usize_or("jobs", default_threads())?)?;
     cfg.accesses = args.usize_or("accesses", cfg.accesses)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.predictor = args.opt_or("predictor", &cfg.predictor);
 
     println!(
-        "sweep: {} policies × {} scenarios = {} cells, {} accesses/cell, -j {}",
+        "sweep: {} policies × {} scenarios = {} cells, {} accesses/cell, predictor={}, -j {}",
         cfg.policies.len(),
         cfg.scenarios.len(),
         cfg.policies.len() * cfg.scenarios.len(),
         cfg.accesses,
+        cfg.predictor,
         cfg.threads
     );
     let t0 = Instant::now();
@@ -79,10 +86,15 @@ pub fn run(args: &mut Args) -> Result<i32> {
                 Json::from_pairs(vec![
                     ("policy", Json::Str(c.policy.clone())),
                     ("scenario", Json::Str(c.scenario.clone())),
+                    ("predictor", Json::Str(c.predictor.clone())),
                     // String, not Num: u64 seeds exceed f64's 2^53 integer
                     // range and must round-trip into `--seed` exactly.
                     ("seed", Json::Str(c.seed.to_string())),
                     ("tokens", Json::Num(c.result.tokens as f64)),
+                    ("adapt_windows", Json::Num(c.result.adapt_windows as f64)),
+                    ("drift_events", Json::Num(c.result.drift_events as f64)),
+                    ("predictor_swaps", Json::Num(c.result.predictor_swaps as f64)),
+                    ("throttled_windows", Json::Num(c.result.throttled_windows as f64)),
                     ("report", c.result.report.to_json()),
                 ])
             })

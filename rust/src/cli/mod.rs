@@ -17,6 +17,7 @@ USAGE:
 COMMANDS:
     simulate     run one cache simulation (policy × predictor × workload)
     sweep        parallel policy×scenario experiment grid
+    adapt        closed-loop adaptation: controller ON vs OFF on one seed
     train        train a predictor with the compiled Adam step (Fig. 2)
     table1       reproduce the paper's Table 1 end-to-end
     serve        multi-worker serving-node simulation (router + batcher)
@@ -41,6 +42,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     match cmd.as_str() {
         "simulate" => commands::simulate::run(&mut args),
         "sweep" => commands::sweep::run(&mut args),
+        "adapt" => commands::adapt::run(&mut args),
         "train" => commands::train::run(&mut args),
         "table1" => commands::table1::run(&mut args),
         "serve" => commands::serve::run(&mut args),

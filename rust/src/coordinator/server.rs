@@ -18,13 +18,23 @@
 //! [`crate::sim::Engine`] — the same access loop the batch simulator and
 //! the benches use — shipping the engine's feature rows to the predictor
 //! service instead of flushing them inline.
+//!
+//! Workloads come from the scenario registry when `scenario` is set
+//! (`acpc serve --scenario <name>`), otherwise from the configured
+//! generator. With `adaptive` on, each worker runs its own
+//! [`AdaptiveController`] over its engine's telemetry: the model lives in
+//! the (remote) predictor service thread, so workers adapt by *throttling*
+//! — on detected drift or confidence collapse they stop applying incoming
+//! utilities (policy-default inserts) until telemetry recovers, and the
+//! adaptation events are aggregated into the [`ServeReport`].
 
 use super::batcher::DynamicBatcher;
 use super::router::{Router, RouterPolicy};
+use crate::adapt::{AdaptiveController, ControlDecision, ControllerConfig, PredictorAccess};
 use crate::mem::HierarchyConfig;
 use crate::predictor::{GeometryHints, PredictorBox, FEATURE_DIM};
 use crate::sim::{Engine, PredictionBatch};
-use crate::trace::{GeneratorConfig, TraceGenerator, Workload};
+use crate::trace::{GeneratorConfig, Scenario, TraceGenerator, Workload};
 use crate::util::stats::percentile;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -46,6 +56,13 @@ pub struct ServeConfig {
     /// Cross-worker prediction batch + deadline.
     pub predict_batch: usize,
     pub predict_deadline: Duration,
+    /// Scenario-registry workload for the workers (arrivals stay
+    /// router-driven); `None` uses `generator` as-is.
+    pub scenario: Option<String>,
+    /// Run a per-worker [`AdaptiveController`] (throttle-mode back-off).
+    pub adaptive: bool,
+    /// Controller thresholds when `adaptive` is on.
+    pub adapt: ControllerConfig,
 }
 
 impl ServeConfig {
@@ -68,6 +85,27 @@ impl ServeConfig {
             router: RouterPolicy::LeastLoaded,
             predict_batch: 128,
             predict_deadline: Duration::from_millis(2),
+            scenario: None,
+            adaptive: false,
+            adapt: ControllerConfig::default(),
+        }
+    }
+
+    /// Resolve the per-worker generator template: the scenario registry
+    /// entry (arrivals zeroed — serving admission is router-driven) or the
+    /// configured generator. Panics on unknown scenario names (the CLI
+    /// validates before calling [`serve`]).
+    fn worker_generator(&self) -> GeneratorConfig {
+        match &self.scenario {
+            Some(name) => {
+                let sc = Scenario::by_name(name)
+                    .unwrap_or_else(|| panic!("unknown scenario '{name}'"));
+                let mut g = sc.config(self.generator.seed);
+                g.arrival_p_hot = 0.0;
+                g.arrival_p_cold = 0.0;
+                g
+            }
+            None => self.generator.clone(),
         }
     }
 }
@@ -88,6 +126,20 @@ pub struct ServeReport {
     pub prediction_batches: u64,
     pub mean_batch_fill: f64,
     pub router_imbalance_max: usize,
+    /// Telemetry windows observed across all workers (adaptive mode).
+    ///
+    /// Unlike sim/sweep/`acpc adapt` (strictly access-counted and seed-
+    /// deterministic), serving mode is wall-clock driven — prediction
+    /// responses race arrivals — so these three counters can vary between
+    /// runs of the same seed. They are load telemetry, not reproducible
+    /// metrics.
+    pub adapt_windows: u64,
+    /// Drift-detector firings across all workers (timing-dependent; see
+    /// [`Self::adapt_windows`]).
+    pub drift_events: u64,
+    /// Worker-windows spent with predictions throttled (timing-dependent;
+    /// see [`Self::adapt_windows`]).
+    pub throttled_windows: u64,
 }
 
 enum Event {
@@ -103,15 +155,24 @@ struct WorkerStats {
     l2_accesses: u64,
     l2_fills: u64,
     l2_dead_prefetch: u64,
+    adapt_windows: u64,
+    drift_events: u64,
+    throttled_windows: u64,
 }
 
 struct PredictReq {
     worker: usize,
+    /// Controller version at send time (0 without a controller). Responses
+    /// are dropped by the worker when their version no longer matches —
+    /// predictions requested before a throttle must not be applied after a
+    /// resume re-enables application.
+    version: u64,
     lines: Vec<u64>,
     x: Vec<f32>,
 }
 
-type PredictResp = Vec<(u64, f32)>;
+/// (line, probability, request version) triples for one worker.
+type PredictResp = Vec<(u64, f32, u64)>;
 
 /// Run the serving node to completion.
 ///
@@ -129,6 +190,10 @@ pub fn serve(
     let use_pred = predictor_window > 0;
     let window = predictor_window.max(1);
     let row = if predictor_window <= 1 { FEATURE_DIM } else { window * FEATURE_DIM };
+    // Resolve the worker workload template up front: an unknown scenario
+    // name panics here on the caller's thread with a clear message, not
+    // inside a spawned worker (the CLI validates the name before calling).
+    let worker_template = cfg.worker_generator();
 
     let (ev_tx, ev_rx) = mpsc::channel::<Event>();
     let (pr_tx, pr_rx) = mpsc::channel::<PredictReq>();
@@ -147,11 +212,11 @@ pub fn serve(
         let pred_stats = s.spawn(move || {
             // Construct inside the thread: PJRT handles are !Send.
             let mut predictor = predictor_factory();
-            let mut batcher: DynamicBatcher<(usize, u64)> =
+            let mut batcher: DynamicBatcher<(usize, u64, u64)> =
                 DynamicBatcher::new(row, pred_batch, pred_deadline);
             let mut batches = 0u64;
             let mut filled = 0u64;
-            let flush = |batcher: &mut DynamicBatcher<(usize, u64)>,
+            let flush = |batcher: &mut DynamicBatcher<(usize, u64, u64)>,
                          predictor: &mut PredictorBox,
                          by_deadline: bool,
                          batches: &mut u64,
@@ -164,8 +229,8 @@ pub fn serve(
                 *batches += 1;
                 *filled += n as u64;
                 let mut grouped: HashMap<usize, PredictResp> = HashMap::new();
-                for ((w, line), p) in tags.into_iter().zip(probs) {
-                    grouped.entry(w).or_default().push((line, p));
+                for ((w, line, ver), p) in tags.into_iter().zip(probs) {
+                    grouped.entry(w).or_default().push((line, p, ver));
                 }
                 for (w, resp) in grouped {
                     let _ = resp_txs[w].send(resp);
@@ -175,7 +240,8 @@ pub fn serve(
                 match pr_rx.recv_timeout(pred_deadline) {
                     Ok(req) => {
                         for (i, &line) in req.lines.iter().enumerate() {
-                            let full = batcher.push((req.worker, line), &req.x[i * row..(i + 1) * row]);
+                            let full = batcher
+                                .push((req.worker, line, req.version), &req.x[i * row..(i + 1) * row]);
                             if full {
                                 flush(&mut batcher, &mut predictor, false, &mut batches, &mut filled);
                             }
@@ -204,10 +270,12 @@ pub fn serve(
             let pr_tx = pr_tx.clone();
             let resp_rx = std::mem::replace(&mut resp_rxs[w], mpsc::channel().1);
             let done = done.clone();
-            let mut gcfg = cfg.generator.clone();
+            let mut gcfg = worker_template.clone();
             gcfg.seed = cfg.generator.seed.wrapping_add(w as u64 * 7919);
             let hcfg = cfg.hierarchy.clone();
             let policy = cfg.policy.clone();
+            let adaptive = cfg.adaptive;
+            let acfg = cfg.adapt.clone();
             s.spawn(move || {
                 // The shared engine drives this worker's accesses; its
                 // feature rows are shipped to the predictor service rather
@@ -219,25 +287,72 @@ pub fn serve(
                 const LOCAL_BATCH: usize = 32;
                 let mut batch = PredictionBatch::new(engine.row(), LOCAL_BATCH);
                 let mut completed_seen = 0u64;
+                // Worker-local adaptive back-off: the model is owned by the
+                // predictor service thread (`PredictorAccess::Remote`), so
+                // on drift this controller throttles (stops applying
+                // utilities) rather than retrains.
+                let mut controller =
+                    if adaptive && use_pred { Some(AdaptiveController::new(acfg)) } else { None };
 
                 loop {
+                    // One throttle gate per iteration: it governs both the
+                    // response drain (in-flight predictions that raced the
+                    // throttle) and the request path below, so the two can
+                    // never diverge. Throttled workers neither buffer rows
+                    // nor ship work to the predictor service, and the
+                    // version match discards late responses to requests
+                    // from a previous throttle regime — those utilities
+                    // were explicitly flushed and must not return.
+                    let (apply, cur_version) = controller
+                        .as_ref()
+                        .map(|c| (c.apply_predictions(), c.version()))
+                        .unwrap_or((true, 0));
                     while admit_rx.try_recv().is_ok() {
                         workload.force_arrival();
                     }
                     while let Ok(resp) = resp_rx.try_recv() {
-                        for (line, p) in resp {
-                            engine.update_utility(line, p);
+                        if apply {
+                            for (line, p, ver) in resp {
+                                if ver == cur_version {
+                                    engine.update_utility(line, p);
+                                }
+                            }
                         }
                     }
                     if workload.has_work() {
                         let a = workload.next_access();
                         let full = match engine.step(&a, None) {
-                            Some(feats) => batch.push(a.line(), feats),
+                            Some(feats) => apply && batch.push(a.line(), feats),
                             None => false,
                         };
+                        if let Some(c) = controller.as_mut() {
+                            c.observe_access(engine.steps(), a.line());
+                            let decision = c.maybe_window(
+                                engine.steps(),
+                                &engine.hier,
+                                PredictorAccess::Remote,
+                            );
+                            if decision == Some(ControlDecision::Throttled) {
+                                engine.hier.clear_utilities();
+                                // Drop rows captured pre-throttle: they
+                                // would otherwise flush after resume and
+                                // re-stamp old-regime predictions.
+                                let _ = batch.take();
+                            }
+                        }
                         if full {
                             let (lines, x) = batch.take();
-                            let _ = pr_tx.send(PredictReq { worker: w, lines, x });
+                            // A throttle decision on this very access may
+                            // have just drained the batch; don't ship an
+                            // empty request.
+                            if !lines.is_empty() {
+                                let _ = pr_tx.send(PredictReq {
+                                    worker: w,
+                                    version: cur_version,
+                                    lines,
+                                    x,
+                                });
+                            }
                         }
                         let c = workload.sessions_completed();
                         while completed_seen < c {
@@ -250,6 +365,9 @@ pub fn serve(
                         std::thread::sleep(Duration::from_micros(50));
                     }
                 }
+                let (adapt_windows, drift_events, throttled_windows) = controller
+                    .map(|c| (c.windows(), c.drift_count(), c.throttled_windows()))
+                    .unwrap_or((0, 0, 0));
                 let l2 = &engine.hier.l2.stats;
                 let stats = WorkerStats {
                     accesses: engine.hier.accesses,
@@ -258,6 +376,9 @@ pub fn serve(
                     l2_accesses: l2.demand_accesses,
                     l2_fills: l2.demand_misses + l2.prefetch_fills,
                     l2_dead_prefetch: l2.dead_prefetch_evictions,
+                    adapt_windows,
+                    drift_events,
+                    throttled_windows,
                 };
                 let _ = ev_tx.send(Event::Finished { stats });
             });
@@ -266,8 +387,10 @@ pub fn serve(
         drop(pr_tx);
 
         // ---- main: arrivals + bookkeeping ---------------------------------
+        // Per-worker admission capacity must match the *resolved* workload
+        // (scenario templates carry their own KV slot counts).
         let mut router =
-            Router::new(cfg.router, cfg.workers, cfg.generator.max_live_sessions);
+            Router::new(cfg.router, cfg.workers, worker_template.max_live_sessions);
         let mut admit_times: Vec<std::collections::VecDeque<Instant>> =
             vec![Default::default(); cfg.workers];
         let mut latencies_ms: Vec<f64> = Vec::new();
@@ -339,6 +462,9 @@ pub fn serve(
         let l2_acc: u64 = stats.iter().map(|s| s.l2_accesses).sum();
         let l2_fills: u64 = stats.iter().map(|s| s.l2_fills).sum();
         let l2_dead: u64 = stats.iter().map(|s| s.l2_dead_prefetch).sum();
+        let adapt_windows: u64 = stats.iter().map(|s| s.adapt_windows).sum();
+        let drift_events: u64 = stats.iter().map(|s| s.drift_events).sum();
+        let throttled_windows: u64 = stats.iter().map(|s| s.throttled_windows).sum();
 
         ServeReport {
             sessions_admitted: admitted,
@@ -359,6 +485,9 @@ pub fn serve(
                 0.0
             },
             router_imbalance_max: max_imbalance,
+            adapt_windows,
+            drift_events,
+            throttled_windows,
         }
     })
 }
@@ -388,5 +517,35 @@ mod tests {
         assert!(rep.prediction_batches > 0, "predictor service must run");
         assert!(rep.mean_batch_fill > 1.0, "batching must amortize: {}", rep.mean_batch_fill);
         assert!(rep.sessions_completed >= 7);
+        assert_eq!(rep.adapt_windows, 0, "adaptive off by default");
+    }
+
+    #[test]
+    fn serve_pulls_scenario_registry_workloads() {
+        let mut cfg = ServeConfig::quick("srrip");
+        cfg.scenario = Some("rag-embedding".into());
+        cfg.total_sessions = 8;
+        // The resolved template must come from the registry with arrivals
+        // disabled for router-driven admission.
+        let g = cfg.worker_generator();
+        assert_eq!(g.profile.name, "rag-embedding");
+        assert_eq!(g.arrival_p_hot, 0.0);
+        assert_eq!(g.arrival_p_cold, 0.0);
+        let rep = serve(&cfg, 0, || PredictorBox::None);
+        assert_eq!(rep.sessions_admitted, 8);
+        assert!(rep.sessions_completed >= 7, "completed {}", rep.sessions_completed);
+        assert!(rep.tokens > 0);
+    }
+
+    #[test]
+    fn serve_adaptive_mode_ticks_worker_controllers() {
+        let mut cfg = ServeConfig::quick("acpc");
+        cfg.total_sessions = 12;
+        cfg.adaptive = true;
+        cfg.adapt = crate::adapt::ControllerConfig::quick();
+        cfg.adapt.window_accesses = 1024;
+        let rep = serve(&cfg, 1, || PredictorBox::Heuristic(HeuristicPredictor));
+        assert!(rep.sessions_completed >= 10, "completed {}", rep.sessions_completed);
+        assert!(rep.adapt_windows > 0, "workers must harvest telemetry windows");
     }
 }

@@ -19,6 +19,7 @@
 //!
 //! Python never executes on the simulation/serving path.
 
+pub mod adapt;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -298,6 +298,12 @@ impl Cache {
         }
     }
 
+    /// Forget every stored predicted utility in the policy (adaptive
+    /// throttle / predictor hot swap). No-op for classic policies.
+    pub fn reset_utilities(&mut self) {
+        self.policy.reset_utilities();
+    }
+
     /// Valid-line occupancy in [0,1].
     pub fn occupancy(&self) -> f64 {
         let valid = self.lines.iter().filter(|l| l.valid).count();

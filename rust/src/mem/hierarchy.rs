@@ -316,6 +316,15 @@ impl Hierarchy {
         self.utility.get(&line).copied()
     }
 
+    /// Drop every cached prediction *and* the per-line utilities already
+    /// stamped into the L2 policy (adaptive throttle entry / predictor hot
+    /// swap): subsequent fills see no utility, and resident lines stop
+    /// being ranked by stale predictions.
+    pub fn clear_utilities(&mut self) {
+        self.utility.clear();
+        self.l2.reset_utilities();
+    }
+
     pub fn prefetches_issued(&self) -> u64 {
         self.prefetcher.issued()
     }

@@ -11,7 +11,8 @@ pub struct Row {
     pub chr: f64,
     /// Prefetch pollution ratio, %.
     pub ppr: f64,
-    /// L2 miss-penalty reduction vs the LRU anchor, %.
+    /// L2 miss-penalty reduction vs the LRU anchor, %; NaN = undefined
+    /// baseline (rendered as `n/a`).
     pub mpr: f64,
     /// Token generation throughput, tokens/s.
     pub tgt: f64,
@@ -78,14 +79,20 @@ impl MetricsReport {
     }
 
     /// Miss-penalty reduction (%) of `self` relative to `baseline`
-    /// (both normalized per demand access).
-    pub fn miss_penalty_reduction_vs(&self, baseline: &MetricsReport) -> f64 {
-        let mine = self.l2_miss_cycles as f64 / self.accesses.max(1) as f64;
-        let base = baseline.l2_miss_cycles as f64 / baseline.accesses.max(1) as f64;
-        if base <= 0.0 {
-            return 0.0;
+    /// (both normalized per demand access). `None` when the baseline is
+    /// degenerate (zero accesses or zero miss cycles): "reduction vs
+    /// nothing" is undefined, and silently reporting `0.0%` would read as
+    /// "no improvement" — callers render it as `n/a` instead.
+    pub fn miss_penalty_reduction_vs(&self, baseline: &MetricsReport) -> Option<f64> {
+        if self.accesses == 0 || baseline.accesses == 0 {
+            return None;
         }
-        (1.0 - mine / base) * 100.0
+        let mine = self.l2_miss_cycles as f64 / self.accesses as f64;
+        let base = baseline.l2_miss_cycles as f64 / baseline.accesses as f64;
+        if base <= 0.0 || !base.is_finite() {
+            return None;
+        }
+        Some((1.0 - mine / base) * 100.0)
     }
 
     pub fn to_json(&self) -> Json {
@@ -140,10 +147,11 @@ pub fn render_sweep(rows: &[SweepRowView]) -> String {
     for r in rows {
         let baseline = rows.iter().find(|b| b.scenario == r.scenario && b.policy == "lru");
         let mpr = match baseline {
-            Some(b) if b.policy != r.policy => {
-                format!("{:>7.1}", r.report.miss_penalty_reduction_vs(b.report))
-            }
-            Some(_) => format!("{:>7.1}", 0.0),
+            Some(b) => match r.report.miss_penalty_reduction_vs(b.report) {
+                Some(v) => format!("{v:>7.1}"),
+                // Degenerate baseline (no misses / no accesses): not zero.
+                None => format!("{:>7}", "n/a"),
+            },
             None => format!("{:>7}", "—"),
         };
         out.push_str(&format!(
@@ -170,9 +178,11 @@ pub fn render_table1(rows: &[Row]) -> String {
     out.push_str(&format!("|{}|\n", "-".repeat(102)));
     for r in rows {
         let loss = if r.final_loss.is_nan() { "—".to_string() } else { format!("{:.2}", r.final_loss) };
+        // NaN MPR = undefined baseline (see `miss_penalty_reduction_vs`).
+        let mpr = if r.mpr.is_nan() { format!("{:>8}", "n/a") } else { format!("{:>8.1}", r.mpr) };
         out.push_str(&format!(
-            "| {:<18} | {:>8.1} | {:>8.1} | {:>8.1} | {:>12.0} | {:>10} | {:<13} |\n",
-            r.model, r.chr, r.ppr, r.mpr, r.tgt, loss, r.stability
+            "| {:<18} | {:>8.1} | {:>8.1} | {} | {:>12.0} | {:>10} | {:<13} |\n",
+            r.model, r.chr, r.ppr, mpr, r.tgt, loss, r.stability
         ));
     }
     out
@@ -213,10 +223,30 @@ mod tests {
     #[test]
     fn mpr_zero_against_self_and_signed_vs_other() {
         let lru = run_small("lru");
-        assert!(lru.miss_penalty_reduction_vs(&lru).abs() < 1e-9);
+        assert!(lru.miss_penalty_reduction_vs(&lru).unwrap().abs() < 1e-9);
         let srrip = run_small("srrip");
-        let mpr = srrip.miss_penalty_reduction_vs(&lru);
+        let mpr = srrip.miss_penalty_reduction_vs(&lru).unwrap();
         assert!(mpr.is_finite());
+    }
+
+    #[test]
+    fn mpr_undefined_against_degenerate_baseline() {
+        let real = run_small("lru");
+        // A baseline that never missed (or never ran) yields None, not a
+        // silent 0.0%.
+        let mut zero_miss = real.clone();
+        zero_miss.l2_miss_cycles = 0;
+        assert_eq!(real.miss_penalty_reduction_vs(&zero_miss), None);
+        let mut no_accesses = real.clone();
+        no_accesses.accesses = 0;
+        assert_eq!(real.miss_penalty_reduction_vs(&no_accesses), None);
+        // And the sweep table renders it as n/a instead of 0.0.
+        let rows = vec![
+            SweepRowView { policy: "lru", scenario: "s", report: &zero_miss },
+            SweepRowView { policy: "srrip", scenario: "s", report: &real },
+        ];
+        let t = render_sweep(&rows);
+        assert!(t.contains("n/a"), "{t}");
     }
 
     #[test]

@@ -206,6 +206,16 @@ impl Policy for AcpcParm {
         self.rrpv[set * self.assoc + way] = self.quantize(set, way);
     }
 
+    fn reset_utilities(&mut self) {
+        // Adaptive back-off: stale predictions stop steering victim
+        // selection immediately (priority falls back to the neutral prior +
+        // live frequency); RRPV ages out naturally rather than being
+        // rewritten, preserving recency state.
+        for u in &mut self.utility {
+            *u = self.cfg.neutral_utility;
+        }
+    }
+
     fn occupancy_hint(&mut self, set: usize, frac_dead_prefetch: f64) {
         // EWMA so a single noisy sample does not whipsaw insert priorities.
         let p = &mut self.pressure[set];

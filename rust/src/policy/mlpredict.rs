@@ -96,6 +96,14 @@ impl Policy for MlPredict {
         self.rrpv[idx] = Self::quantize(utility);
     }
 
+    fn reset_utilities(&mut self) {
+        // Adaptive back-off: resident lines revert to the neutral prior so
+        // stale predictions stop deciding victims; RRPV ages out naturally.
+        for p in &mut self.prob {
+            *p = NEUTRAL;
+        }
+    }
+
     fn on_invalidate(&mut self, set: usize, way: usize) {
         let idx = set * self.assoc + way;
         self.prob[idx] = NEUTRAL;

@@ -63,6 +63,12 @@ pub trait Policy: Send {
     /// Asynchronous utility refresh from the predictor (ACPC/ML-Predict).
     fn update_utility(&mut self, _set: usize, _way: usize, _utility: f32) {}
 
+    /// Forget every stored predicted utility (adaptive throttle / predictor
+    /// hot swap): utility-consuming policies fall back to their neutral
+    /// prior for all resident lines, so stale predictions stop steering
+    /// victim selection. No-op for classic policies.
+    fn reset_utilities(&mut self) {}
+
     /// Occupancy feedback: fraction of currently-resident lines that are
     /// unreferenced prefetches (PARM's pollution-pressure signal).
     fn occupancy_hint(&mut self, _set: usize, _frac_dead_prefetch: f64) {}

@@ -22,6 +22,18 @@ pub struct ModelRuntime {
 }
 
 impl ModelRuntime {
+    /// Load a named model straight from the AOT artifacts bundle,
+    /// constructing the PJRT engine in the *calling* thread (handles are
+    /// thread-affine). The one artifact-load sequence shared by the CLI,
+    /// the serving predictor service, and the sweep workers.
+    pub fn load_from_artifacts(model: &str) -> Result<ModelRuntime> {
+        let dir = crate::runtime::artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/ not found — run `make artifacts`"))?;
+        let manifest = Manifest::load(&dir)?;
+        let engine = Engine::cpu()?;
+        ModelRuntime::load(&engine, &manifest, model)
+    }
+
     pub fn load(engine: &Engine, manifest: &Manifest, model: &str) -> Result<ModelRuntime> {
         let mm = manifest.model(model)?.clone();
         let infer = engine.load_hlo(&manifest.hlo_path(&mm.infer.hlo))?;

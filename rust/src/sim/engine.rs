@@ -23,17 +23,18 @@
 //! The optional [`OnlineLearner`] implements §3.4: observed outcomes (was
 //! the line actually reused within the horizon?) are turned into labeled
 //! samples, and every `feedback_interval` accesses a few Adam steps run on
-//! a replay buffer — the compiled train-step HLO, from rust.
+//! a replay buffer — the compiled train-step HLO, from rust. The learner
+//! lives in [`crate::adapt`] now; [`run_workload_adaptive`] additionally
+//! threads a full [`AdaptiveController`] (windowed telemetry + drift
+//! detection + predictor hot-swap/throttle) through the loop.
 
+use crate::adapt::{AdaptiveController, ControlDecision, OnlineLearner, PredictorAccess};
 use crate::config::ExperimentConfig;
 use crate::mem::{Hierarchy, HierarchyConfig, ServiceLevel};
 use crate::metrics::MetricsReport;
 use crate::policy::AccessMeta;
 use crate::predictor::{FeatureExtractor, GeometryHints, PredictorBox, FEATURE_DIM};
 use crate::trace::{Access, Workload};
-use crate::util::rng::Xoshiro256;
-use std::collections::HashMap;
-use std::collections::VecDeque;
 use std::time::Instant;
 
 /// Outcome of one simulation run.
@@ -48,6 +49,15 @@ pub struct SimResult {
     pub wall_secs: f64,
     /// Accesses simulated per wall-clock second (L3 perf metric).
     pub accesses_per_sec: f64,
+    /// Telemetry windows observed by the adaptive controller (0 without one).
+    pub adapt_windows: u64,
+    /// Drift-detector firings recorded by the controller.
+    pub drift_events: u64,
+    /// Weight hot-swaps (drift-triggered retrains); throttle/resume events
+    /// bump the controller's handle version but are not counted here.
+    pub predictor_swaps: u64,
+    /// Windows spent with predictions throttled to policy-default inserts.
+    pub throttled_windows: u64,
 }
 
 /// Accumulates per-access feature rows until a predictor batch is ready.
@@ -212,89 +222,6 @@ impl Engine {
     }
 }
 
-/// Replay-buffer online learner (§3.4).
-pub struct OnlineLearner {
-    /// (features, label) samples awaiting training.
-    buf_x: Vec<f32>,
-    buf_y: Vec<f32>,
-    row: usize,
-    capacity: usize,
-    /// In-flight observations: line → (enqueue position, features start).
-    pending: VecDeque<(u64, u64, usize)>,
-    /// Lines touched recently (for labeling): line → last touch position.
-    last_touch: HashMap<u64, u64>,
-    horizon: u64,
-    pub steps_run: u64,
-    rng: Xoshiro256,
-}
-
-impl OnlineLearner {
-    pub fn new(row: usize, horizon: u64, seed: u64) -> Self {
-        Self {
-            buf_x: Vec::new(),
-            buf_y: Vec::new(),
-            row,
-            capacity: 1 << 15,
-            pending: VecDeque::new(),
-            last_touch: HashMap::new(),
-            horizon,
-            steps_run: 0,
-            rng: Xoshiro256::new(seed ^ 0xFEED),
-        }
-    }
-
-    /// Record a touch and enqueue the access as a future training sample.
-    pub fn observe(&mut self, pos: u64, line: u64, features: &[f32]) {
-        self.last_touch.insert(line, pos);
-        if self.buf_x.len() / self.row < self.capacity {
-            let start = self.buf_x.len();
-            self.buf_x.extend_from_slice(features);
-            self.buf_y.push(f32::NAN); // resolved later
-            self.pending.push_back((line, pos, start / self.row));
-        }
-        // Resolve matured observations.
-        while let Some(&(l, p, idx)) = self.pending.front() {
-            if pos.saturating_sub(p) < self.horizon {
-                break;
-            }
-            let reused = self.last_touch.get(&l).map(|&t| t > p && t - p <= self.horizon).unwrap_or(false);
-            self.buf_y[idx] = reused as u8 as f32;
-            self.pending.pop_front();
-        }
-    }
-
-    /// Run up to `steps` Adam steps on resolved samples. Returns mean loss.
-    pub fn train(&mut self, model: &mut crate::predictor::ModelRuntime, steps: usize) -> Option<f32> {
-        let b = model.mm.train.batch;
-        let resolved: Vec<usize> =
-            (0..self.buf_y.len()).filter(|&i| !self.buf_y[i].is_nan()).collect();
-        if resolved.len() < b {
-            return None;
-        }
-        let mut total = 0.0;
-        for _ in 0..steps {
-            let mut x = Vec::with_capacity(b * self.row);
-            let mut y = Vec::with_capacity(b);
-            for _ in 0..b {
-                let i = *self.rng.choose(&resolved);
-                x.extend_from_slice(&self.buf_x[i * self.row..(i + 1) * self.row]);
-                y.push(self.buf_y[i]);
-            }
-            total += model.train_step(x, y).expect("online train step");
-            self.steps_run += 1;
-        }
-        // Keep the buffer fresh: drop the oldest half when full.
-        if self.buf_y.len() >= self.capacity {
-            let keep = self.capacity / 2;
-            let drop_n = self.buf_y.len() - keep;
-            self.buf_x.drain(..drop_n * self.row);
-            self.buf_y.drain(..drop_n);
-            self.pending.clear(); // positions invalidated; restart labeling
-        }
-        Some(total / steps as f32)
-    }
-}
-
 /// Run one experiment on the workload the config describes (scenario or
 /// profile). The predictor is taken by value inside `PredictorBox` so
 /// learned runs can feed the online learner.
@@ -309,6 +236,23 @@ pub fn run_workload(
     cfg: &ExperimentConfig,
     workload: &mut dyn Workload,
     predictor: &mut PredictorBox,
+) -> SimResult {
+    run_workload_adaptive(cfg, workload, predictor, None)
+}
+
+/// [`run_workload`] with an optional [`AdaptiveController`] closing the
+/// loop: per-access telemetry feeds the controller, predictions are only
+/// applied while the controller allows them (throttle demotes fills to
+/// policy-default insertion), and window boundaries run drift detection /
+/// replay-buffer fine-tuning. `controller = None` is byte-identical to the
+/// plain run. With a controller attached, the controller's drift-triggered
+/// learner replaces the legacy fixed-interval §3.4 feedback
+/// (`cfg.feedback_interval` is ignored).
+pub fn run_workload_adaptive(
+    cfg: &ExperimentConfig,
+    workload: &mut dyn Workload,
+    predictor: &mut PredictorBox,
+    mut controller: Option<&mut AdaptiveController>,
 ) -> SimResult {
     let t0 = Instant::now();
     let geom = GeometryHints::from_generator(&cfg.generator);
@@ -326,32 +270,82 @@ pub fn run_workload(
 
     let mut batch = PredictionBatch::new(engine.row(), cfg.predict_batch);
     let mut prediction_batches = 0u64;
-    let mut learner = if cfg.feedback_interval > 0 && predictor.model_mut().is_some() {
+    // With a controller attached, its drift-triggered replay learner owns
+    // online adaptation; running the legacy fixed-interval learner as well
+    // would duplicate every feature row into a second replay buffer and
+    // fine-tune the same weights from two uncoordinated samplers.
+    let mut learner = if cfg.feedback_interval > 0
+        && predictor.model_mut().is_some()
+        && controller.is_none()
+    {
         Some(OnlineLearner::new(engine.row(), 4096, cfg.seed))
     } else {
         None
     };
+    // The controller's replay buffer only pays off for trainable
+    // predictors; heuristic runs adapt by throttling and skip the
+    // per-access feature copies entirely.
+    let controller_learns = predictor.model_mut().is_some();
 
     for i in 0..cfg.accesses {
         let a = match &trace_vec {
             Some(tv) => tv[i],
             None => workload.next_access(),
         };
+        // Throttled controllers demote predictions to policy-default
+        // insertion: rows are not even buffered (let alone inferred) while
+        // throttled — the whole prediction pipeline is the cost the
+        // back-off saves. Replay/telemetry observation continues so the
+        // controller can still decide when to resume or retrain.
+        let apply = controller.as_deref().map(|c| c.apply_predictions()).unwrap_or(true);
         let full = match engine.step(&a, next_use.as_ref().map(|nu| nu[i])) {
             Some(feats) => {
                 if let Some(l) = learner.as_mut() {
                     l.observe(i as u64, a.line(), feats);
                 }
-                batch.push(a.line(), feats)
+                if controller_learns {
+                    if let Some(c) = controller.as_deref_mut() {
+                        c.observe_features(i as u64, a.line(), feats);
+                    }
+                }
+                apply && batch.push(a.line(), feats)
             }
             None => false,
         };
+        if let Some(c) = controller.as_deref_mut() {
+            c.observe_access(i as u64, a.line());
+        }
         if full {
             let (lines, x) = batch.take();
             let probs = predictor.predict(&x, lines.len());
             prediction_batches += 1;
             for (&l, &p) in lines.iter().zip(&probs) {
                 engine.update_utility(l, p);
+            }
+        }
+
+        // Window boundary: telemetry harvest + drift detection + control.
+        if let Some(c) = controller.as_deref_mut() {
+            // Reborrow: the loop keeps using `predictor` afterwards.
+            let access = if predictor.is_some() {
+                PredictorAccess::Local(&mut *predictor)
+            } else {
+                PredictorAccess::None
+            };
+            let decision = c.maybe_window(engine.steps(), &engine.hier, access);
+            match decision {
+                // Entering back-off: flush stale utilities so fills really
+                // are policy-default from here on. A hot swap flushes too —
+                // predictions from the pre-drift weights must not keep
+                // steering evictions after the retrain. The partially-
+                // filled batch is dropped for the same reason: its rows
+                // were captured under the old regime and would re-stamp
+                // stale predictions after a later resume/flush.
+                Some(ControlDecision::Throttled) | Some(ControlDecision::Retrained) => {
+                    engine.hier.clear_utilities();
+                    let _ = batch.take();
+                }
+                Some(ControlDecision::Resumed) | None => {}
             }
         }
 
@@ -369,15 +363,32 @@ pub fn run_workload(
     let emu = engine.emu();
     let report = engine.report(&cfg.name, tokens);
     let wall = t0.elapsed().as_secs_f64();
+    let (adapt_windows, drift_events, predictor_swaps, throttled_windows, controller_steps) =
+        match controller.as_deref() {
+            Some(c) => (
+                c.windows(),
+                c.drift_count(),
+                c.swap_count(),
+                c.throttled_windows(),
+                c.online_train_steps(),
+            ),
+            None => (0, 0, 0, 0, 0),
+        };
     SimResult {
         report,
         tokens,
         emu,
         predictor: predictor.name(),
         prediction_batches,
-        online_train_steps: learner.map(|l| l.steps_run).unwrap_or(0),
+        // Interval-feedback steps (legacy §3.4) or the controller's
+        // drift-triggered replay steps — at most one learner exists.
+        online_train_steps: learner.map(|l| l.steps_run).unwrap_or(0) + controller_steps,
         wall_secs: wall,
         accesses_per_sec: cfg.accesses as f64 / wall,
+        adapt_windows,
+        drift_events,
+        predictor_swaps,
+        throttled_windows,
     }
 }
 

@@ -4,7 +4,8 @@
 //!
 //! - [`Engine`] — the shared per-access driving core (any [`crate::trace::Workload`]);
 //! - [`run_experiment`] / [`run_workload`] — batch-mode runs producing a [`SimResult`];
-//! - [`sweep`] — the multi-threaded policy×scenario grid runner;
+//! - [`run_workload_adaptive`] — same loop with an [`crate::adapt::AdaptiveController`];
+//! - [`sweep`] — the multi-threaded policy×scenario×predictor grid runner;
 //! - [`table1`] — the paper's Table 1 pipeline built on the above.
 
 mod engine;
@@ -12,7 +13,12 @@ mod oracle;
 pub mod sweep;
 pub mod table1;
 
-pub use engine::{run_experiment, run_workload, Engine, OnlineLearner, PredictionBatch, SimResult};
+// `OnlineLearner` moved to `crate::adapt`; re-exported here for the
+// historical `sim::OnlineLearner` path.
+pub use crate::adapt::OnlineLearner;
+pub use engine::{
+    run_experiment, run_workload, run_workload_adaptive, Engine, PredictionBatch, SimResult,
+};
 pub use oracle::annotate_next_use;
 pub use sweep::{cell_seed, run_sweep, SweepCell, SweepConfig};
 pub use table1::{run_table1, Table1Output, Table1Scale};

@@ -9,8 +9,16 @@
 //! [`SimResult`]. Results come back in grid order regardless of the thread
 //! count, so a sweep at `-j 1` and `-j 8` is byte-identical (asserted by
 //! `tests/integration_sweep.rs`).
+//!
+//! The per-cell predictor is selectable (`--predictor`): `auto`/`heuristic`
+//! (artifact-free, the default), `tcn` (the compiled TCN loaded from the
+//! artifacts *inside* each worker thread — PJRT handles are thread-affine —
+//! falling back to the heuristic with a warning when artifacts are absent),
+//! `adaptive` (heuristic + a per-cell [`AdaptiveController`] closing the
+//! loop), or `none`. Classic policies ignore the predictor entirely.
 
-use super::engine::{run_experiment, SimResult};
+use super::engine::{run_experiment, run_workload_adaptive, SimResult};
+use crate::adapt::{AdaptiveController, ControllerConfig};
 use crate::config::{ExperimentConfig, PredictorKind};
 use crate::metrics::{render_sweep, SweepRowView};
 use crate::policy;
@@ -18,6 +26,9 @@ use crate::predictor::{HeuristicPredictor, PredictorBox};
 use crate::trace::{Scenario, SCENARIO_NAMES};
 use crate::util::pool::{default_threads, run_parallel};
 use anyhow::{bail, Result};
+
+/// Predictor specs `--predictor` accepts.
+pub const PREDICTOR_SPECS: &[&str] = &["auto", "heuristic", "tcn", "adaptive", "none"];
 
 /// The sweep grid and its execution knobs.
 #[derive(Debug, Clone)]
@@ -31,6 +42,9 @@ pub struct SweepConfig {
     /// Base seed; per-cell seeds derive from it deterministically.
     pub seed: u64,
     pub predict_batch: usize,
+    /// Per-cell predictor spec (see [`PREDICTOR_SPECS`]). Only affects
+    /// utility-consuming policies; classic policies run predictor-free.
+    pub predictor: String,
 }
 
 impl SweepConfig {
@@ -42,6 +56,7 @@ impl SweepConfig {
             threads: default_threads(),
             seed: 0xACDC_5EED,
             predict_batch: 256,
+            predictor: "auto".into(),
         }
     }
 
@@ -61,6 +76,9 @@ pub struct SweepCell {
     pub scenario: String,
     /// The derived per-cell seed (provenance).
     pub seed: u64,
+    /// The predictor that actually ran (e.g. `tcn`, `heuristic`,
+    /// `heuristic(fallback)`, `adaptive(heuristic)`, `none`).
+    pub predictor: String,
     pub result: SimResult,
 }
 
@@ -87,15 +105,66 @@ pub fn cell_seed(base: u64, policy: &str, scenario: &str) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Utility-consuming policies get the heuristic predictor in sweeps (no
-/// artifacts required, constructible inside any worker thread); classic
-/// policies run predictor-free.
-fn predictor_kind_for(policy: &str) -> PredictorKind {
-    if policy.starts_with("acpc") || policy == "mlpredict" {
-        PredictorKind::Heuristic
-    } else {
-        PredictorKind::None
+/// Does this policy consume predicted utilities at all?
+fn policy_uses_predictor(policy: &str) -> bool {
+    policy.starts_with("acpc") || policy == "mlpredict"
+}
+
+/// Resolve the cell's (predictor kind, adaptive-controller) pair from the
+/// sweep-level spec. Classic policies always run predictor-free.
+fn resolve_spec(spec: &str, policy: &str) -> (PredictorKind, bool) {
+    if !policy_uses_predictor(policy) {
+        return (PredictorKind::None, false);
     }
+    match spec {
+        "tcn" => (PredictorKind::Tcn, false),
+        "adaptive" => (PredictorKind::Heuristic, true),
+        "none" => (PredictorKind::None, false),
+        // "auto" | "heuristic"
+        _ => (PredictorKind::Heuristic, false),
+    }
+}
+
+/// Load the compiled TCN inside the calling (worker) thread. `None` when
+/// the AOT artifacts are unavailable or fail to load.
+fn build_tcn_in_thread() -> Option<PredictorBox> {
+    let rt = crate::predictor::ModelRuntime::load_from_artifacts("tcn").ok()?;
+    Some(PredictorBox::Model(Box::new(rt)))
+}
+
+thread_local! {
+    /// Per-worker-thread TCN cache: PJRT handles are thread-affine, and
+    /// sweep cells never mutate weights (no online feedback in sweeps), so
+    /// one artifact load + PJRT compile serves every cell the thread runs.
+    /// Tri-state: outer `None` = never probed; `Some(None)` = probe failed
+    /// (also permanent — a broken PJRT setup is not retried per cell);
+    /// `Some(Some(_))` = loaded. The box is taken for the duration of a
+    /// cell and put back afterwards.
+    static THREAD_TCN: std::cell::RefCell<Option<Option<PredictorBox>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Fetch the thread's cached TCN, probing the artifacts at most once per
+/// thread (success *and* failure are both cached).
+fn take_thread_tcn() -> Option<PredictorBox> {
+    THREAD_TCN.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            let loaded = build_tcn_in_thread();
+            if loaded.is_none() {
+                crate::log_warn!(
+                    "sweep: TCN load failed in this worker thread; its tcn cells fall back \
+                     to the heuristic predictor"
+                );
+            }
+            *slot = Some(loaded);
+        }
+        slot.as_mut().unwrap().take()
+    })
+}
+
+fn put_back_thread_tcn(p: PredictorBox) {
+    THREAD_TCN.with(|c| *c.borrow_mut() = Some(Some(p)));
 }
 
 /// Validate the grid, then run every cell on the pool. Results are in grid
@@ -114,26 +183,77 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepCell>> {
             bail!("unknown scenario '{s}' (known: {})", SCENARIO_NAMES.join(", "));
         }
     }
+    if !PREDICTOR_SPECS.contains(&cfg.predictor.as_str()) {
+        bail!("unknown predictor '{}' (known: {})", cfg.predictor, PREDICTOR_SPECS.join("|"));
+    }
+    // Probe artifact availability once for the whole grid, not once per
+    // cell: when the bundle is absent every tcn cell would repeat the
+    // filesystem walk and the fallback warning.
+    let tcn_unavailable =
+        cfg.predictor == "tcn" && !crate::runtime::artifacts_available();
+    if tcn_unavailable {
+        crate::log_warn!(
+            "sweep: AOT artifacts unavailable; --predictor tcn cells fall back to the \
+             heuristic predictor"
+        );
+    }
 
     let mut jobs = Vec::with_capacity(cfg.policies.len() * cfg.scenarios.len());
     for scenario in &cfg.scenarios {
         for policy in &cfg.policies {
             let policy = policy.clone();
             let scenario = scenario.clone();
+            let spec = cfg.predictor.clone();
             let seed = cell_seed(cfg.seed, &policy, &scenario);
             let accesses = cfg.accesses;
             let predict_batch = cfg.predict_batch;
             jobs.push(move || -> Result<SweepCell> {
-                let kind = predictor_kind_for(&policy);
+                let (kind, adaptive) = resolve_spec(&spec, &policy);
                 let mut ecfg = ExperimentConfig::for_scenario(&scenario, &policy, kind, seed)?;
                 ecfg.accesses = accesses;
                 ecfg.predict_batch = predict_batch;
-                let mut predictor = match kind {
-                    PredictorKind::Heuristic => PredictorBox::Heuristic(HeuristicPredictor),
-                    _ => PredictorBox::None,
+                let (mut predictor, mut effective) = match kind {
+                    PredictorKind::Tcn => {
+                        let loaded = if tcn_unavailable { None } else { take_thread_tcn() };
+                        match loaded {
+                            Some(p) => (p, "tcn".to_string()),
+                            // Fallback already warned about: grid-level for
+                            // absent artifacts, once per thread for load
+                            // failures (take_thread_tcn).
+                            None => {
+                                ecfg.predictor = PredictorKind::Heuristic;
+                                (
+                                    PredictorBox::Heuristic(HeuristicPredictor),
+                                    "heuristic(fallback)".to_string(),
+                                )
+                            }
+                        }
+                    }
+                    PredictorKind::Heuristic => {
+                        (PredictorBox::Heuristic(HeuristicPredictor), "heuristic".to_string())
+                    }
+                    _ => (PredictorBox::None, "none".to_string()),
                 };
-                let result = run_experiment(&ecfg, &mut predictor);
-                Ok(SweepCell { policy, scenario, seed, result })
+                let result = if adaptive {
+                    effective = format!("adaptive({effective})");
+                    let mut controller = AdaptiveController::new(ControllerConfig::default());
+                    let mut workload = ecfg.workload();
+                    run_workload_adaptive(
+                        &ecfg,
+                        workload.as_mut(),
+                        &mut predictor,
+                        Some(&mut controller),
+                    )
+                } else {
+                    run_experiment(&ecfg, &mut predictor)
+                };
+                if effective == "tcn" {
+                    // Return the loaded model to the thread cache for the
+                    // next cell (weights untouched — sweeps run no online
+                    // feedback, so reuse cannot leak state between cells).
+                    put_back_thread_tcn(predictor);
+                }
+                Ok(SweepCell { policy, scenario, seed, predictor: effective, result })
             });
         }
     }
@@ -173,6 +293,9 @@ mod tests {
         assert!(run_sweep(&cfg).is_err());
         let cfg = SweepConfig::new(vec![], vec![]);
         assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::new(vec!["lru".into()], vec!["decode-heavy".into()]);
+        cfg.predictor = "no-such-predictor".into();
+        assert!(run_sweep(&cfg).is_err());
     }
 
     #[test]
@@ -189,8 +312,36 @@ mod tests {
         assert_eq!((cells[3].scenario.as_str(), cells[3].policy.as_str()), ("rag-embedding", "srrip"));
         for c in &cells {
             assert_eq!(c.result.report.accesses, 15_000);
+            assert_eq!(c.predictor, "none", "classic policies run predictor-free");
         }
         let table = render_cells(&cells);
         assert!(table.contains("decode-heavy") && table.contains("srrip"), "{table}");
+    }
+
+    #[test]
+    fn predictor_spec_resolves_per_policy() {
+        assert_eq!(resolve_spec("auto", "lru"), (PredictorKind::None, false));
+        assert_eq!(resolve_spec("tcn", "srrip"), (PredictorKind::None, false));
+        assert_eq!(resolve_spec("auto", "acpc"), (PredictorKind::Heuristic, false));
+        assert_eq!(resolve_spec("tcn", "acpc"), (PredictorKind::Tcn, false));
+        assert_eq!(resolve_spec("adaptive", "acpc"), (PredictorKind::Heuristic, true));
+        assert_eq!(resolve_spec("none", "acpc"), (PredictorKind::None, false));
+        assert_eq!(resolve_spec("auto", "mlpredict"), (PredictorKind::Heuristic, false));
+    }
+
+    #[test]
+    fn adaptive_cells_run_and_are_deterministic() {
+        let mut cfg = SweepConfig::new(vec!["acpc".into()], vec!["multi-tenant-mix".into()]);
+        cfg.accesses = 30_000;
+        cfg.threads = 2;
+        cfg.predictor = "adaptive".into();
+        let a = run_sweep(&cfg).unwrap();
+        let b = run_sweep(&cfg).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].predictor, "adaptive(heuristic)");
+        assert!(a[0].result.adapt_windows > 0, "controller must tick windows");
+        assert_eq!(a[0].result.report.l2_hit_rate, b[0].result.report.l2_hit_rate);
+        assert_eq!(a[0].result.drift_events, b[0].result.drift_events);
+        assert_eq!(a[0].result.predictor_swaps, b[0].result.predictor_swaps);
     }
 }

@@ -156,7 +156,10 @@ pub fn run_table1(scale: &Table1Scale) -> Result<Table1Output> {
     let tgt = |r: &crate::sim::SimResult| {
         tm.tokens_per_sec(ThroughputModel::mem_cycles_per_token(r.report.total_latency, r.tokens))
     };
-    let mpr = |r: &crate::sim::SimResult| r.report.miss_penalty_reduction_vs(&lru.report);
+    // NaN = undefined baseline; `render_table1` shows it as `n/a`.
+    let mpr = |r: &crate::sim::SimResult| {
+        r.report.miss_penalty_reduction_vs(&lru.report).unwrap_or(f64::NAN)
+    };
 
     let rows = vec![
         Row {

@@ -38,7 +38,9 @@
 //! - [`long-context`](scenario) — contexts far beyond the attention
 //!   window: KV re-reads dominate and mislead recency policies;
 //! - [`multi-tenant-mix`](scenario) — many interleaved sessions with fast
-//!   phase drift.
+//!   phase drift;
+//! - [`speculative-decode`](scenario) — draft/verify interleave whose
+//!   verify passes re-read the drafted KV window in bulk.
 //!
 //! Resolve by name with [`Scenario::by_name`], enumerate with
 //! [`Scenario::all`], and instantiate with `Scenario::workload(seed)`.

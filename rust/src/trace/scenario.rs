@@ -8,13 +8,14 @@
 //! expected to dominate its access mix; tests assert the declaration holds,
 //! so the registry doubles as executable documentation of the regimes:
 //!
-//! | scenario           | regime                                   | dominant |
-//! |--------------------|------------------------------------------|----------|
-//! | `decode-heavy`     | autoregressive decode (paper's default)  | weight   |
-//! | `prefill-burst`    | hot-state MMPP, long prompts, short gens | kv_wr    |
-//! | `rag-embedding`    | Zipf-tail embedding retrieval            | embed    |
-//! | `long-context`     | max_ctx ≫ attention window, KV re-reads  | kv_rd    |
-//! | `multi-tenant-mix` | many interleaved sessions, fast drift    | weight   |
+//! | scenario             | regime                                     | dominant |
+//! |----------------------|--------------------------------------------|----------|
+//! | `decode-heavy`       | autoregressive decode (paper's default)    | weight   |
+//! | `prefill-burst`      | hot-state MMPP, long prompts, short gens   | kv_wr    |
+//! | `rag-embedding`      | Zipf-tail embedding retrieval              | embed    |
+//! | `long-context`       | max_ctx ≫ attention window, KV re-reads    | kv_rd    |
+//! | `multi-tenant-mix`   | many interleaved sessions, fast drift      | weight   |
+//! | `speculative-decode` | draft/verify interleave, KV verify re-reads| kv_rd    |
 
 use super::generator::{GeneratorConfig, TraceGenerator};
 use super::profile::ModelProfile;
@@ -65,8 +66,14 @@ impl std::fmt::Debug for Scenario {
 }
 
 /// Names of all registered scenarios (CLI help / sweep default grid).
-pub const SCENARIO_NAMES: &[&str] =
-    &["decode-heavy", "prefill-burst", "rag-embedding", "long-context", "multi-tenant-mix"];
+pub const SCENARIO_NAMES: &[&str] = &[
+    "decode-heavy",
+    "prefill-burst",
+    "rag-embedding",
+    "long-context",
+    "multi-tenant-mix",
+    "speculative-decode",
+];
 
 static SCENARIOS: &[Scenario] = &[
     Scenario {
@@ -98,6 +105,12 @@ static SCENARIOS: &[Scenario] = &[
         summary: "many interleaved tenant sessions with fast phase drift",
         dominant: StreamKind::Weight,
         build: multi_tenant_mix,
+    },
+    Scenario {
+        name: "speculative-decode",
+        summary: "draft/verify interleave: verify passes re-read the drafted KV window in bulk",
+        dominant: StreamKind::KvRead,
+        build: speculative_decode,
     },
 ];
 
@@ -197,6 +210,31 @@ fn multi_tenant_mix(seed: u64) -> GeneratorConfig {
     c.arrival_p_hot = 0.5;
     c.arrival_p_cold = 0.05;
     c.burst_switch_p = 0.01;
+    c
+}
+
+/// Speculative decoding: a small draft model proposes a block of tokens
+/// and the big model verifies them in one pass. The memory signature is a
+/// draft/verify interleave — per accepted token the verifier re-reads the
+/// *whole* drafted KV window across all of its (deep) layers, while its
+/// weight scans amortize over the verified block (few hot tiles per
+/// token). Verify-burst KV reads dominate; acceptance-rate phases rotate
+/// the Zipf head fairly quickly.
+fn speculative_decode(seed: u64) -> GeneratorConfig {
+    let mut p = ModelProfile::gpt3ish();
+    p.name = "speculative-decode".into();
+    p.layers = 24; // the big verifier model
+    p.attn_window = 48;
+    p.kv_reads_per_token = 10; // bulk verify re-reads of the draft block
+    p.kv_longrange_p = 0.05;
+    p.weight_tiles_hot = 2; // amortized over the verified block
+    p.scratch_lines_per_token = 2; // draft logits + acceptance bookkeeping
+    p.prompt_len_mean = 32.0;
+    p.gen_len_mean = 96.0; // speculation stretches generations
+    let mut c = GeneratorConfig::new(p, seed);
+    c.max_live_sessions = 12;
+    c.weight_lines_per_tile = 1;
+    c.phase_period = 12_000; // acceptance-rate phases
     c
 }
 

@@ -158,7 +158,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity tokens; emit null so the
+                    // output stays parseable (NaN = "undefined" metrics,
+                    // e.g. MPR against a degenerate baseline, EMU on runs
+                    // too short to sample).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
                     let _ = fmt::Write::write_fmt(out, format_args!("{}", *x as i64));
                 } else {
                     let _ = fmt::Write::write_fmt(out, format_args!("{x}"));
@@ -484,5 +490,16 @@ mod tests {
         assert_eq!(v.usize_array("dims").unwrap(), vec![2, 3, 4]);
         assert!(v.req("missing").is_err());
         assert!(v.usize_array("missing").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(1.5).to_string(), "1.5");
+        // Round-trips as a parseable document.
+        let doc = Json::from_pairs(vec![("mpr", Json::Num(f64::NAN))]);
+        assert!(Json::parse(&doc.to_pretty()).is_ok());
     }
 }

@@ -1,0 +1,157 @@
+//! Integration tests for the adaptive-control subsystem: a passive
+//! controller must not perturb the simulation, the drift/event log must be
+//! deterministic under a fixed seed, the `acpc adapt` comparison JSON must
+//! keep its schema, and the predictor hot-swap plumbing must be
+//! metric-transparent when the swapped-in weights are identical.
+
+use acpc::adapt::{run_compare, AdaptiveController, ControllerConfig};
+use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::predictor::{HeuristicPredictor, PredictorBox};
+use acpc::sim::{run_workload, run_workload_adaptive};
+
+fn scenario_cfg(scenario: &str, accesses: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg =
+        ExperimentConfig::for_scenario(scenario, "acpc", PredictorKind::Heuristic, seed).unwrap();
+    cfg.accesses = accesses;
+    cfg
+}
+
+/// A controller that only observes (thresholds disabled) must leave the
+/// simulation byte-identical to a controller-free run: telemetry taps and
+/// the versioned-handle plumbing cannot perturb metrics.
+#[test]
+fn passive_controller_is_metric_transparent() {
+    let cfg = scenario_cfg("multi-tenant-mix", 80_000, 0xA11CE);
+
+    let mut plain_pred = PredictorBox::Heuristic(HeuristicPredictor);
+    let mut w1 = cfg.workload();
+    let plain = run_workload(&cfg, w1.as_mut(), &mut plain_pred);
+
+    let mut adapt_pred = PredictorBox::Heuristic(HeuristicPredictor);
+    let mut controller = AdaptiveController::new(ControllerConfig::passive());
+    let mut w2 = cfg.workload();
+    let adaptive = run_workload_adaptive(&cfg, w2.as_mut(), &mut adapt_pred, Some(&mut controller));
+
+    assert_eq!(
+        plain.report.to_json().to_pretty(),
+        adaptive.report.to_json().to_pretty(),
+        "passive controller must not change metrics"
+    );
+    assert_eq!(plain.prediction_batches, adaptive.prediction_batches);
+    assert!(adaptive.adapt_windows > 0, "telemetry still collected");
+    assert_eq!(adaptive.predictor_swaps, 0);
+    assert_eq!(adaptive.drift_events, 0);
+    assert_eq!(controller.swap_count(), 0);
+}
+
+/// Same seed + same thresholds ⇒ identical drift windows, events and
+/// metrics — the whole control loop is wall-clock-free.
+#[test]
+fn drift_detection_deterministic_under_fixed_seed() {
+    let cfg = scenario_cfg("multi-tenant-mix", 120_000, 0xD51F7);
+    let ccfg = ControllerConfig::quick();
+    let a = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+    let b = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+    assert_eq!(a.summary.drift_windows, b.summary.drift_windows);
+    assert_eq!(a.summary.swaps, b.summary.swaps);
+    assert_eq!(a.summary.throttled_windows, b.summary.throttled_windows);
+    assert_eq!(
+        a.adaptive.report.to_json().to_pretty(),
+        b.adaptive.report.to_json().to_pretty()
+    );
+    assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+}
+
+/// The fast-drift scenario must actually trip the detector, and the
+/// comparison must quantify a hit-rate delta between the two arms.
+#[test]
+fn multi_tenant_mix_trips_the_drift_detector() {
+    let cfg = scenario_cfg("multi-tenant-mix", 150_000, 0xBEE5);
+    let ccfg = ControllerConfig::quick();
+    let out = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+    assert!(out.summary.windows_observed > 10);
+    assert!(
+        out.summary.drift_events >= 1,
+        "fast-drift scenario should fire the detector: {:?}",
+        out.summary
+    );
+    assert!(out.hit_rate_delta().is_finite());
+    // With only a heuristic predictor the controller adapts by throttling;
+    // every event must carry a monotone version stamp.
+    let mut last = 0;
+    for e in &out.summary.events {
+        assert!(e.predictor_version > last, "versions must be monotone: {:?}", out.summary.events);
+        last = e.predictor_version;
+    }
+}
+
+/// `acpc adapt --json` schema: the keys the docs promise must exist.
+#[test]
+fn adapt_comparison_json_schema() {
+    let cfg = scenario_cfg("decode-heavy", 40_000, 7);
+    let mut ccfg = ControllerConfig::quick();
+    ccfg.window_accesses = 4096;
+    let out = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+    let j = out.to_json();
+    for key in ["baseline", "adaptive", "adaptation", "deltas"] {
+        assert!(j.get(key).is_some(), "missing top-level key {key}");
+    }
+    let adaptation = j.get("adaptation").unwrap();
+    for key in [
+        "windows_observed",
+        "drift_events",
+        "swaps",
+        "throttled_windows",
+        "online_train_steps",
+        "drift_windows",
+        "events",
+        "windows",
+    ] {
+        assert!(adaptation.get(key).is_some(), "missing adaptation key {key}");
+    }
+    let deltas = j.get("deltas").unwrap();
+    for key in ["hit_rate", "pollution", "amat"] {
+        assert!(deltas.get(key).unwrap().as_f64().is_some(), "delta {key} must be numeric");
+    }
+    // Windows must serialize with their telemetry fields.
+    let windows = adaptation.get("windows").unwrap().as_arr().unwrap();
+    assert!(!windows.is_empty());
+    for key in ["index", "hit_rate", "pollution", "prefetch_accuracy", "reuse_p50_log2"] {
+        assert!(windows[0].get(key).is_some(), "missing window key {key}");
+    }
+}
+
+/// Hot-swap transparency with the *real* compiled model: a passive
+/// controller threading an untouched TCN through the versioned handle must
+/// reproduce the plain TCN run exactly (same weights ⇒ same metrics).
+/// Skips when the AOT artifacts are absent.
+#[test]
+fn tcn_hot_swap_plumbing_is_metric_transparent() {
+    let Some(dir) = acpc::runtime::artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let manifest = acpc::runtime::Manifest::load(&dir).unwrap();
+    let engine = acpc::runtime::Engine::cpu().unwrap();
+    let load = || {
+        let rt = acpc::predictor::ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+        PredictorBox::Model(Box::new(rt))
+    };
+    let mut cfg = scenario_cfg("decode-heavy", 40_000, 0x7C2);
+    cfg.predictor = PredictorKind::Tcn;
+
+    let mut plain_pred = load();
+    let mut w1 = cfg.workload();
+    let plain = run_workload(&cfg, w1.as_mut(), &mut plain_pred);
+
+    let mut adapt_pred = load();
+    let mut controller = AdaptiveController::new(ControllerConfig::passive());
+    let mut w2 = cfg.workload();
+    let adaptive = run_workload_adaptive(&cfg, w2.as_mut(), &mut adapt_pred, Some(&mut controller));
+
+    assert_eq!(
+        plain.report.to_json().to_pretty(),
+        adaptive.report.to_json().to_pretty(),
+        "identical weights through the swap handle must give identical metrics"
+    );
+}

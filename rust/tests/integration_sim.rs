@@ -43,7 +43,7 @@ fn paper_orderings_hold_on_full_workload() {
         lru.report.l2_pollution_ratio
     );
     // Miss-penalty reduction positive for the better policies.
-    assert!(acpc.report.miss_penalty_reduction_vs(&lru.report) > 0.0);
+    assert!(acpc.report.miss_penalty_reduction_vs(&lru.report).expect("lru misses") > 0.0);
 }
 
 /// AMAT must decrease as hit rates increase (metric coherence).
