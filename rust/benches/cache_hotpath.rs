@@ -6,57 +6,92 @@
 //! Accesses are driven through the shared `sim::Engine` (the same loop the
 //! CLI, sweep runner and coordinator use), so the numbers here are the real
 //! end-to-end per-access cost, not a bench-only replica of it.
+//!
+//! `ACPC_BENCH_SCALE=smoke` shrinks the trace for CI; results land in
+//! `BENCH_sim.json` (schema `acpc-bench-v1`) for the machine-readable perf
+//! trajectory.
 
 use acpc::mem::HierarchyConfig;
 use acpc::predictor::GeometryHints;
 use acpc::sim::Engine;
 use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
-use acpc::util::bench::{black_box, Bench};
+use acpc::util::bench::{bench_scale, black_box, Bench, BenchJson};
 
 fn main() {
-    let n = 1_000_000usize;
+    let smoke = bench_scale() == "smoke";
+    let n = if smoke { 120_000 } else { 1_000_000 };
+    let iters = if smoke { 2 } else { 5 };
     let gcfg = GeneratorConfig::new(ModelProfile::gpt3ish(), 42);
     let geom = GeometryHints::from_generator(&gcfg);
+    let mut sink = BenchJson::new("cache_hotpath");
 
     // Raw generator rate (upper bound for streaming mode).
-    let bench = Bench::new(1, 5).throughput(n as u64);
-    bench.run("trace_generator", || {
+    let bench = Bench::new(1, iters).throughput(n as u64);
+    sink.push(&bench.run("trace_generator", || {
         let mut gen = TraceGenerator::new(gcfg.clone());
         for _ in 0..n {
             black_box(gen.next_access());
         }
-    });
+    }));
 
     // Pre-materialized trace → pure engine rate per policy.
     let trace = TraceGenerator::new(gcfg.clone()).generate(n);
     for policy in ["lru", "plru", "srrip", "drrip", "dip", "ship", "acpc", "mlpredict"] {
         let mut hcfg = HierarchyConfig::scaled();
         hcfg.prefetcher = "composite".into();
-        bench.run(&format!("engine[{policy}]"), || {
+        sink.push(&bench.run(&format!("engine[{policy}]"), || {
             let mut eng = Engine::new(hcfg.clone(), policy, geom, 0);
             for a in &trace {
                 black_box(eng.step(a, None));
             }
-        });
+        }));
     }
 
     // Feature extraction enabled (window 1) isolates the predictor-feed cost.
     let mut hcfg = HierarchyConfig::scaled();
     hcfg.prefetcher = "composite".into();
-    bench.run("engine[acpc,features]", || {
+    sink.push(&bench.run("engine[acpc,features]", || {
         let mut eng = Engine::new(hcfg.clone(), "acpc", geom, 1);
         for a in &trace {
             black_box(eng.step(a, None));
         }
-    });
+    }));
 
     // No-prefetcher variant isolates prefetch-machinery cost.
     let mut hcfg = HierarchyConfig::scaled();
     hcfg.prefetcher = "none".into();
-    bench.run("engine[lru,no-prefetch]", || {
+    sink.push(&bench.run("engine[lru,no-prefetch]", || {
         let mut eng = Engine::new(hcfg.clone(), "lru", geom, 0);
         for a in &trace {
             black_box(eng.step(a, None));
         }
-    });
+    }));
+
+    // O(1) residency metrics: occupancy/useful_fraction used to scan every
+    // line; they are now incremental counters. Hammer them at EMU-sampling
+    // frequency to keep the regression visible in the trajectory.
+    let mut hcfg = HierarchyConfig::scaled();
+    hcfg.prefetcher = "none".into();
+    let mut eng = Engine::new(hcfg.clone(), "lru", geom, 0);
+    for a in trace.iter().take(100_000.min(n)) {
+        eng.step(a, None);
+    }
+    let probes = if smoke { 100_000u64 } else { 1_000_000u64 };
+    let pb = Bench::new(1, iters).throughput(probes);
+    sink.push(&pb.run("l2_occupancy+useful_fraction", || {
+        let mut acc = 0.0f64;
+        for _ in 0..probes {
+            acc += black_box(eng.hier.l2.occupancy());
+            let f = eng.hier.l2.useful_fraction();
+            if f.is_finite() {
+                acc += f;
+            }
+        }
+        black_box(acc);
+    }));
+
+    match sink.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_sim.json write failed: {e}"),
+    }
 }

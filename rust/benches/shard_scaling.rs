@@ -1,0 +1,127 @@
+//! Bench: set-sharded single-cell throughput — accesses/second for one
+//! decode-heavy simulation cell as `--shards` scales, plus the exactness
+//! check (aggregate metrics identical across shard counts for a set-local
+//! configuration).
+//!
+//! `ACPC_BENCH_SCALE=smoke` shrinks the trace. Results (including the
+//! scaling curve and per-shard-count speedups) merge into `BENCH_sim.json`
+//! for the machine-readable perf trajectory.
+
+use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::predictor::{HeuristicPredictor, PredictorBox};
+use acpc::sim::run_workload_sharded;
+use acpc::util::bench::{bench_scale, Bench, BenchJson};
+use acpc::util::json::Json;
+use acpc::util::pool::default_threads;
+
+fn cell_cfg(policy: &str, accesses: usize, prefetcher: &str) -> ExperimentConfig {
+    let mut cfg =
+        ExperimentConfig::for_scenario("decode-heavy", policy, PredictorKind::None, 0x5CA1E)
+            .expect("decode-heavy registered");
+    cfg.accesses = accesses;
+    cfg.hierarchy.prefetcher = prefetcher.into();
+    cfg
+}
+
+fn mk_none(_shard: usize) -> PredictorBox {
+    PredictorBox::None
+}
+
+fn mk_heuristic(_shard: usize) -> PredictorBox {
+    PredictorBox::Heuristic(HeuristicPredictor)
+}
+
+fn main() {
+    let smoke = bench_scale() == "smoke";
+    let accesses = if smoke { 200_000 } else { 4_000_000 };
+    let iters = if smoke { 1 } else { 3 };
+    let mut sink = BenchJson::new("shard_scaling");
+
+    // Shard counts to sweep: powers of two up to the machine (the scaled
+    // hierarchy supports up to 32).
+    let max_shards = (default_threads() + 1).next_power_of_two().min(32).max(8);
+    let mut shard_counts = vec![1usize];
+    while *shard_counts.last().unwrap() < max_shards {
+        shard_counts.push(shard_counts.last().unwrap() * 2);
+    }
+
+    println!("shard scaling: decode-heavy, {accesses} accesses/run, shards {shard_counts:?}\n");
+    let bench = Bench::new(if smoke { 0 } else { 1 }, iters).throughput(accesses as u64);
+
+    // Throughput curve on the realistic configuration (lru + composite
+    // prefetcher, per-shard prefetch engines).
+    let mut curve: Vec<f64> = Vec::new();
+    for &shards in &shard_counts {
+        let cfg = cell_cfg("lru", accesses, "composite");
+        let r = bench.run(&format!("decode-heavy[lru,composite] shards={shards}"), || {
+            let mut w = cfg.workload();
+            let out = run_workload_sharded(&cfg, w.as_mut(), shards, &mk_none, None)
+                .expect("sharded run");
+            assert_eq!(out.result.report.accesses, accesses as u64);
+        });
+        curve.push(r.throughput.unwrap_or(0.0));
+        sink.push(&r);
+    }
+    let speedups: Vec<f64> = curve.iter().map(|&t| t / curve[0].max(1e-9)).collect();
+    println!("\nspeedup vs 1 shard: {speedups:?}");
+
+    // ACPC + heuristic predictor: the full prediction pipeline sharded.
+    let mut pred_curve: Vec<f64> = Vec::new();
+    for &shards in &shard_counts {
+        let cfg = {
+            let mut c = cell_cfg("acpc", accesses, "composite");
+            c.predictor = PredictorKind::Heuristic;
+            c
+        };
+        let r = bench.run(&format!("decode-heavy[acpc,heuristic] shards={shards}"), || {
+            let mut w = cfg.workload();
+            let out = run_workload_sharded(&cfg, w.as_mut(), shards, &mk_heuristic, None)
+                .expect("sharded run");
+            assert_eq!(out.result.report.accesses, accesses as u64);
+        });
+        pred_curve.push(r.throughput.unwrap_or(0.0));
+        sink.push(&r);
+    }
+
+    // Exactness: with a set-local configuration (prefetcher off, lru at L2,
+    // srrip at L3 — the default DRRIP LLC has a global PSEL/RNG) every
+    // counter-derived aggregate must be bit-identical for every shard count
+    // (EMU is excluded: its sampling instants are shard-local).
+    let exact_accesses = accesses.min(400_000);
+    let mut cfg = cell_cfg("lru", exact_accesses, "none");
+    cfg.hierarchy.l3_policy = "srrip".into();
+    let reference = {
+        let mut w = cfg.workload();
+        run_workload_sharded(&cfg, w.as_mut(), 1, &mk_none, None).unwrap()
+    };
+    let rref = &reference.result.report;
+    for &shards in &shard_counts[1..] {
+        let mut w = cfg.workload();
+        let run = run_workload_sharded(&cfg, w.as_mut(), shards, &mk_none, None).unwrap();
+        let r = &run.result.report;
+        assert_eq!(r.accesses, rref.accesses, "{shards} shards: accesses");
+        assert_eq!(r.l2_hit_rate.to_bits(), rref.l2_hit_rate.to_bits(), "{shards}: hit rate");
+        assert_eq!(
+            r.l2_pollution_ratio.to_bits(),
+            rref.l2_pollution_ratio.to_bits(),
+            "{shards}: pollution"
+        );
+        assert_eq!(r.amat.to_bits(), rref.amat.to_bits(), "{shards} shards: amat");
+        assert_eq!(r.l2_miss_cycles, rref.l2_miss_cycles, "{shards} shards: miss cycles");
+        assert_eq!(r.total_latency, rref.total_latency, "{shards} shards: latency");
+    }
+    println!("exactness: hit-rate/pollution/AMAT identical across shards {shard_counts:?} ✓");
+
+    sink.set(
+        "shards",
+        Json::Arr(shard_counts.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    sink.set("accesses_per_sec", Json::array_f64(&curve));
+    sink.set("accesses_per_sec_acpc_heuristic", Json::array_f64(&pred_curve));
+    sink.set("speedup_vs_1_shard", Json::array_f64(&speedups));
+    sink.set("exactness_checked", Json::Bool(true));
+    match sink.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_sim.json write failed: {e}"),
+    }
+}

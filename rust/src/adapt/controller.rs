@@ -13,6 +13,7 @@
 //! sampling) derives from the configured seed.
 
 use super::drift::{Drift, PageHinkley};
+use super::last_touch::LastTouch;
 use super::learner::OnlineLearner;
 use super::telemetry::{Telemetry, WindowStats};
 use crate::mem::Hierarchy;
@@ -195,6 +196,10 @@ pub struct AdaptiveController {
     cfg: ControllerConfig,
     telemetry: Telemetry,
     detector: PageHinkley,
+    /// The unified per-line last-touch map (ROADMAP item): touched once per
+    /// access, consumed by both the telemetry reuse sketch and the replay
+    /// learner's labeler — one map insert where there used to be two.
+    last_touch: LastTouch,
     learner: Option<OnlineLearner>,
     /// Versioned-handle counter: bumps on every swap of the *effective*
     /// predictor (retrained weights, throttle engage, resume).
@@ -224,7 +229,12 @@ impl AdaptiveController {
     pub fn new(cfg: ControllerConfig) -> Self {
         let detector =
             PageHinkley::new(cfg.ph_delta, cfg.ph_lambda, cfg.warmup_windows.max(3));
+        // Retention must cover both consumers: the learner labels within
+        // `replay_horizon`; the reuse sketch wants distances spanning a few
+        // telemetry windows.
+        let retention = cfg.replay_horizon.max(4 * cfg.window_accesses);
         Self {
+            last_touch: LastTouch::new(1 << 17, retention),
             cfg,
             telemetry: Telemetry::new(),
             detector,
@@ -246,19 +256,27 @@ impl AdaptiveController {
         }
     }
 
-    /// Per-access hook (reuse-distance sketch). Cheap; call for every
-    /// access regardless of feature extraction.
+    /// Per-access hook: one touch of the unified [`LastTouch`] map feeds
+    /// the telemetry reuse sketch (and, for feature-extracting runs, the
+    /// learner's labeler via [`observe_features`](Self::observe_features)).
+    /// Cheap; call for every access regardless of feature extraction —
+    /// and call it *before* `observe_features` for the same access so the
+    /// labeler sees the current touch.
     pub fn observe_access(&mut self, pos: u64, line: u64) {
-        self.telemetry.touch(pos, line);
+        let prev = self.last_touch.touch(pos, line);
+        self.telemetry.record_reuse(prev, pos);
     }
 
     /// Per-access hook for feature-extracting runs: feeds the replay
-    /// buffer. The learner's row width is latched from the first call.
+    /// buffer, labeling against the unified last-touch map (already
+    /// touched by [`observe_access`](Self::observe_access) — no second map
+    /// insert). The learner's row width is latched from the first call.
     pub fn observe_features(&mut self, pos: u64, line: u64, features: &[f32]) {
+        let cfg = &self.cfg;
         let learner = self.learner.get_or_insert_with(|| {
-            OnlineLearner::new(features.len(), self.cfg.replay_horizon, self.cfg.seed)
+            OnlineLearner::new(features.len(), cfg.replay_horizon, cfg.seed)
         });
-        learner.observe(pos, line, features);
+        learner.observe_shared(pos, line, features, &self.last_touch);
     }
 
     /// Should completed predictions be applied to the hierarchy? `false`
@@ -491,6 +509,38 @@ pub struct ControllerSummary {
 }
 
 impl ControllerSummary {
+    /// Merge the per-shard controller summaries of a sharded adaptive run:
+    /// counters sum; the drift-window list and the event/window logs are
+    /// interleaved in (access, window) order. Window indices are per-shard,
+    /// so a merged log can repeat an index — consumers treating it as a
+    /// trace (not a key) are unaffected.
+    pub fn merge(parts: Vec<ControllerSummary>) -> ControllerSummary {
+        let mut out = ControllerSummary {
+            windows_observed: 0,
+            drift_events: 0,
+            swaps: 0,
+            throttled_windows: 0,
+            online_train_steps: 0,
+            drift_windows: Vec::new(),
+            events: Vec::new(),
+            windows: Vec::new(),
+        };
+        for p in parts {
+            out.windows_observed += p.windows_observed;
+            out.drift_events += p.drift_events;
+            out.swaps += p.swaps;
+            out.throttled_windows += p.throttled_windows;
+            out.online_train_steps += p.online_train_steps;
+            out.drift_windows.extend(p.drift_windows);
+            out.events.extend(p.events);
+            out.windows.extend(p.windows);
+        }
+        out.drift_windows.sort_unstable();
+        out.events.sort_by_key(|e| (e.access, e.window));
+        out.windows.sort_by_key(|w| w.index);
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("windows_observed", Json::Num(self.windows_observed as f64)),

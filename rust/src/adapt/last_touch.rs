@@ -1,0 +1,83 @@
+//! The unified per-line last-touch map for adaptive runs.
+//!
+//! Before this module, an adaptive run tracked line→last-position *twice*
+//! per access: once in the telemetry [`super::ReuseSketch`] (reuse-distance
+//! histogram) and once in the replay [`super::OnlineLearner`] (label
+//! resolution). [`LastTouch`] is the single shared structure: the
+//! [`super::AdaptiveController`] touches it once per access, feeds the
+//! returned previous position to the telemetry sketch, and lends the map to
+//! the learner for labeling — halving the per-access map work when both
+//! consumers are active.
+
+use crate::util::hash::FastMap;
+
+/// Bounded line → last-touch-position map with deterministic aging.
+pub struct LastTouch {
+    map: FastMap<u64, u64>,
+    capacity: usize,
+    /// Retention horizon (accesses): on overflow, entries older than this
+    /// are swept. Consumers that only need distances/labels up to their own
+    /// horizon lose nothing as long as `horizon` covers it.
+    horizon: u64,
+}
+
+impl LastTouch {
+    pub fn new(capacity: usize, horizon: u64) -> Self {
+        Self { map: FastMap::default(), capacity: capacity.max(1024), horizon: horizon.max(1) }
+    }
+
+    /// Record a touch of `line` at position `pos`; returns the previous
+    /// touch position if the line was tracked.
+    pub fn touch(&mut self, pos: u64, line: u64) -> Option<u64> {
+        if self.map.len() >= self.capacity {
+            let horizon = self.horizon;
+            self.map.retain(|_, &mut t| pos.saturating_sub(t) <= horizon);
+            // Pathological case (more live lines within the horizon than
+            // capacity): deterministic wholesale aging, same idiom as the
+            // hierarchy's utility cache.
+            if self.map.len() >= self.capacity {
+                self.map.clear();
+            }
+        }
+        self.map.insert(line, pos)
+    }
+
+    /// Last touch position of `line`, if tracked.
+    pub fn last(&self, line: u64) -> Option<u64> {
+        self.map.get(&line).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_previous_positions() {
+        let mut lt = LastTouch::new(2048, 100);
+        assert_eq!(lt.touch(5, 42), None);
+        assert_eq!(lt.touch(9, 42), Some(5));
+        assert_eq!(lt.last(42), Some(9));
+        assert_eq!(lt.last(7), None);
+    }
+
+    #[test]
+    fn overflow_sweeps_stale_entries() {
+        let mut lt = LastTouch::new(1024, 64);
+        // Fill beyond capacity with strictly aging entries.
+        for i in 0..2000u64 {
+            lt.touch(i, i);
+        }
+        assert!(lt.len() <= 1024, "{}", lt.len());
+        // Recent entries survive the sweep.
+        assert_eq!(lt.last(1999), Some(1999));
+    }
+}

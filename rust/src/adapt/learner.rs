@@ -10,9 +10,9 @@
 //! non-trainable predictors (heuristic, none) simply report `None`, which is
 //! the controller's cue to fall back to throttling instead of retraining.
 
+use super::last_touch::LastTouch;
 use crate::predictor::{ModelRuntime, PredictorBox};
 use crate::util::rng::Xoshiro256;
-use std::collections::HashMap;
 use std::collections::VecDeque;
 
 /// Bound on the last-touch labeling map (entries beyond the horizon are
@@ -28,8 +28,12 @@ pub struct OnlineLearner {
     capacity: usize,
     /// In-flight observations: line → (enqueue position, features start).
     pending: VecDeque<(u64, u64, usize)>,
-    /// Lines touched recently (for labeling): line → last touch position.
-    last_touch: HashMap<u64, u64>,
+    /// Lines touched recently (for labeling). Only maintained on the
+    /// standalone [`observe`](Self::observe) path; controller-driven runs
+    /// share one [`LastTouch`] across telemetry and learner and call
+    /// [`observe_shared`](Self::observe_shared) instead, so this map stays
+    /// empty and costs nothing.
+    own_last: LastTouch,
     horizon: u64,
     pub steps_run: u64,
     rng: Xoshiro256,
@@ -43,7 +47,7 @@ impl OnlineLearner {
             row,
             capacity: 1 << 15,
             pending: VecDeque::new(),
-            last_touch: HashMap::new(),
+            own_last: LastTouch::new(LAST_TOUCH_CAP, horizon),
             horizon,
             steps_run: 0,
             rng: Xoshiro256::new(seed ^ 0xFEED),
@@ -60,21 +64,30 @@ impl OnlineLearner {
         self.buf_y.iter().filter(|y| !y.is_nan()).count()
     }
 
-    /// Record a touch and enqueue the access as a future training sample.
-    /// A full buffer evicts its oldest half *here* — not only in
-    /// [`train`](Self::train) — so drift-triggered trainers (which may not
-    /// train for hundreds of thousands of accesses) always sample the
-    /// current regime rather than a buffer frozen at the run's start.
+    /// Record a touch and enqueue the access as a future training sample,
+    /// maintaining the learner's own labeling map (standalone runs with no
+    /// adaptive controller).
     pub fn observe(&mut self, pos: u64, line: u64, features: &[f32]) {
-        // Bound the labeling map: only touches within the horizon can ever
-        // resolve a label, so entries older than that are dead weight. The
-        // retain pass runs rarely (cap >> lines touchable per horizon) and
-        // leaves at most `horizon`+1 entries.
-        if self.last_touch.len() > LAST_TOUCH_CAP {
-            let horizon = self.horizon;
-            self.last_touch.retain(|_, &mut t| pos.saturating_sub(t) <= horizon);
-        }
-        self.last_touch.insert(line, pos);
+        self.own_last.touch(pos, line);
+        self.enqueue(pos, line, features);
+        let horizon = self.horizon;
+        Self::resolve_matured(&mut self.pending, &mut self.buf_y, &self.own_last, pos, horizon);
+    }
+
+    /// [`observe`](Self::observe) against a shared [`LastTouch`] map the
+    /// caller has *already touched* for this access (the controller touches
+    /// once and fans out to telemetry + learner) — no second map insert.
+    pub fn observe_shared(&mut self, pos: u64, line: u64, features: &[f32], last: &LastTouch) {
+        self.enqueue(pos, line, features);
+        Self::resolve_matured(&mut self.pending, &mut self.buf_y, last, pos, self.horizon);
+    }
+
+    /// Buffer one observation. A full buffer evicts its oldest half *here*
+    /// — not only in [`train`](Self::train) — so drift-triggered trainers
+    /// (which may not train for hundreds of thousands of accesses) always
+    /// sample the current regime rather than a buffer frozen at the run's
+    /// start.
+    fn enqueue(&mut self, pos: u64, line: u64, features: &[f32]) {
         if self.buf_y.len() >= self.capacity {
             let keep = self.capacity / 2;
             let drop_n = self.buf_y.len() - keep;
@@ -82,21 +95,29 @@ impl OnlineLearner {
             self.buf_y.drain(..drop_n);
             self.pending.clear(); // positions invalidated; restart labeling
         }
-        {
-            let start = self.buf_x.len();
-            self.buf_x.extend_from_slice(features);
-            self.buf_y.push(f32::NAN); // resolved later
-            self.pending.push_back((line, pos, start / self.row));
-        }
-        // Resolve matured observations.
-        while let Some(&(l, p, idx)) = self.pending.front() {
-            if pos.saturating_sub(p) < self.horizon {
+        let start = self.buf_x.len();
+        self.buf_x.extend_from_slice(features);
+        self.buf_y.push(f32::NAN); // resolved later
+        self.pending.push_back((line, pos, start / self.row));
+    }
+
+    /// Resolve matured observations against whichever last-touch map is in
+    /// use. Associated fn over disjoint field borrows so both observe paths
+    /// can lend `own_last` or an external map.
+    fn resolve_matured(
+        pending: &mut VecDeque<(u64, u64, usize)>,
+        buf_y: &mut [f32],
+        last: &LastTouch,
+        pos: u64,
+        horizon: u64,
+    ) {
+        while let Some(&(l, p, idx)) = pending.front() {
+            if pos.saturating_sub(p) < horizon {
                 break;
             }
-            let reused =
-                self.last_touch.get(&l).map(|&t| t > p && t - p <= self.horizon).unwrap_or(false);
-            self.buf_y[idx] = reused as u8 as f32;
-            self.pending.pop_front();
+            let reused = last.last(l).map(|t| t > p && t - p <= horizon).unwrap_or(false);
+            buf_y[idx] = reused as u8 as f32;
+            pending.pop_front();
         }
     }
 
@@ -158,6 +179,32 @@ mod tests {
         assert_eq!(l.buf_y[0], 1.0);
         // Line 9 (pos 4): never re-touched → 0.
         assert_eq!(l.buf_y[1], 0.0);
+    }
+
+    /// The shared-map path must label identically to the standalone path
+    /// when the shared map sees the same touch stream.
+    #[test]
+    fn shared_map_labels_match_standalone() {
+        let feat = [0.5f32; FEATURE_DIM];
+        let stream: Vec<(u64, u64)> =
+            (0..200).map(|i| (i, [7u64, 9, 7, 13, 9][(i % 5) as usize])).collect();
+
+        let mut own = OnlineLearner::new(FEATURE_DIM, 10, 1);
+        for &(pos, line) in &stream {
+            own.observe(pos, line, &feat);
+        }
+
+        let mut shared_map = LastTouch::new(4096, 10);
+        let mut shared = OnlineLearner::new(FEATURE_DIM, 10, 1);
+        for &(pos, line) in &stream {
+            shared_map.touch(pos, line);
+            shared.observe_shared(pos, line, &feat, &shared_map);
+        }
+
+        assert_eq!(own.resolved(), shared.resolved());
+        // Bitwise compare: unresolved slots are NaN and NaN != NaN.
+        let bits = |l: &OnlineLearner| l.buf_y.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&own), bits(&shared));
     }
 
     #[test]

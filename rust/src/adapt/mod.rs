@@ -21,6 +21,7 @@
 
 pub mod controller;
 pub mod drift;
+pub mod last_touch;
 pub mod learner;
 pub mod telemetry;
 
@@ -29,6 +30,7 @@ pub use controller::{
     ControllerSummary, PredictorAccess,
 };
 pub use drift::{Drift, PageHinkley};
+pub use last_touch::LastTouch;
 pub use learner::OnlineLearner;
 pub use telemetry::{ReuseSketch, Telemetry, WindowStats};
 
@@ -98,6 +100,34 @@ pub fn run_compare(
         Some(&mut controller),
     );
     CompareOutput { baseline, adaptive, summary: controller.into_summary() }
+}
+
+/// [`run_compare`] with both arms split across `shards` set partitions
+/// (`crate::sim::shard`). `mk_predictor` runs once per shard *inside* each
+/// shard thread; the adaptive arm runs one controller per shard and the
+/// reported summary is their [`ControllerSummary::merge`].
+pub fn run_compare_sharded(
+    cfg: &ExperimentConfig,
+    ccfg: &ControllerConfig,
+    shards: usize,
+    mk_predictor: &(dyn Fn(usize) -> PredictorBox + Sync),
+) -> anyhow::Result<CompareOutput> {
+    let mut base_workload = cfg.workload();
+    let baseline =
+        crate::sim::run_workload_sharded(cfg, base_workload.as_mut(), shards, mk_predictor, None)?;
+    let mut adapt_workload = cfg.workload();
+    let adaptive = crate::sim::run_workload_sharded(
+        cfg,
+        adapt_workload.as_mut(),
+        shards,
+        mk_predictor,
+        Some(ccfg),
+    )?;
+    Ok(CompareOutput {
+        baseline: baseline.result,
+        adaptive: adaptive.result,
+        summary: ControllerSummary::merge(adaptive.controllers),
+    })
 }
 
 #[cfg(test)]

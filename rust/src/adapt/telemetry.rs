@@ -91,14 +91,24 @@ impl ReuseSketch {
         Self { last: FastMap::default(), capacity: capacity.max(1024), hist: [0; 33] }
     }
 
-    /// Record one touch of `line` at access position `pos`.
+    /// Record one touch of `line` at access position `pos` using the
+    /// sketch's own last-touch map. Runs that already maintain a shared
+    /// [`super::LastTouch`] should call [`record_prev`](Self::record_prev)
+    /// instead and skip this map entirely.
     pub fn touch(&mut self, pos: u64, line: u64) {
         if self.last.len() >= self.capacity {
             // Cheap deterministic wholesale aging (same idiom as the
             // hierarchy's utility cache).
             self.last.clear();
         }
-        if let Some(prev) = self.last.insert(line, pos) {
+        let prev = self.last.insert(line, pos);
+        self.record_prev(prev, pos);
+    }
+
+    /// Histogram a reuse distance given the line's previous touch position
+    /// (from a shared last-touch map); `None` = first observed touch.
+    pub fn record_prev(&mut self, prev: Option<u64>, pos: u64) {
+        if let Some(prev) = prev {
             let dist = pos.saturating_sub(prev).max(1);
             // log2 bucket: 1 → 0, 2..3 → 1, 4..7 → 2, ... capped at 32.
             let bucket = (63 - dist.leading_zeros() as usize).min(32);
@@ -144,6 +154,13 @@ impl Telemetry {
     /// Per-access hook (cheap: one bounded map insert).
     pub fn touch(&mut self, pos: u64, line: u64) {
         self.sketch.touch(pos, line);
+    }
+
+    /// Per-access hook for callers that maintain a shared
+    /// [`super::LastTouch`] map: records only the histogram update, no map
+    /// work.
+    pub fn record_reuse(&mut self, prev: Option<u64>, pos: u64) {
+        self.sketch.record_prev(prev, pos);
     }
 
     /// Windows harvested so far.

@@ -3,7 +3,7 @@
 //! swap count, hit-rate delta) as a table and optional JSON.
 
 use super::build_predictor;
-use crate::adapt::{run_compare, ControllerConfig};
+use crate::adapt::{run_compare, run_compare_sharded, ControllerConfig};
 use crate::cli::Args;
 use crate::config::{ExperimentConfig, PredictorKind};
 use crate::predictor::PredictorBox;
@@ -28,6 +28,8 @@ OPTIONS:
     --ph-delta <x>        Page-Hinkley tolerance [default: 0.002]
     --ph-lambda <x>       Page-Hinkley threshold [default: 0.03]
     --train-steps <n>     Adam steps per drift retrain [default: 8]
+    --shards <n>          split each arm across n set-partitioned worker
+                          threads, one controller per shard [default: 1]
     --seed <n>            RNG seed
     --json <path>         write the comparison JSON
     --help";
@@ -39,7 +41,7 @@ pub fn run(args: &mut Args) -> Result<i32> {
     }
     args.ensure_known(&[
         "scenario", "policy", "predictor", "accesses", "window", "ph-delta", "ph-lambda",
-        "train-steps", "seed", "json", "help",
+        "train-steps", "shards", "seed", "json", "help",
     ])?;
 
     let scenario = args.opt_or("scenario", "multi-tenant-mix");
@@ -68,20 +70,36 @@ pub fn run(args: &mut Args) -> Result<i32> {
         ..base
     };
 
+    let shards = args.usize_or("shards", 1)?;
+    if shards > 1 {
+        cfg.hierarchy
+            .validate_shards(shards)
+            .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
+    }
+
     println!(
-        "adapt: scenario={} policy={} predictor={} accesses={} window={} (2 arms, same seed)",
+        "adapt: scenario={} policy={} predictor={} accesses={} window={} shards={} \
+         (2 arms, same seed)",
         scenario,
         cfg.policy,
         kind.label(),
         cfg.accesses,
-        ccfg.window_accesses
+        ccfg.window_accesses,
+        shards.max(1)
     );
-    // One fresh predictor per arm so the adaptive arm's fine-tuning cannot
-    // leak into the baseline. Built up front so artifact errors surface as
-    // CLI errors, not mid-run panics.
-    let mut pool: Vec<PredictorBox> =
-        vec![build_predictor(kind, None)?, build_predictor(kind, None)?];
-    let out = run_compare(&cfg, &ccfg, move || pool.pop().expect("two prebuilt arms"));
+    let out = if shards > 1 {
+        let mk = move |_shard: usize| -> PredictorBox {
+            super::build_predictor_or_heuristic(kind, None, "adapt")
+        };
+        run_compare_sharded(&cfg, &ccfg, shards, &mk)?
+    } else {
+        // One fresh predictor per arm so the adaptive arm's fine-tuning
+        // cannot leak into the baseline. Built up front so artifact errors
+        // surface as CLI errors, not mid-run panics.
+        let mut pool: Vec<PredictorBox> =
+            vec![build_predictor(kind, None)?, build_predictor(kind, None)?];
+        run_compare(&cfg, &ccfg, move || pool.pop().expect("two prebuilt arms"))
+    };
 
     println!("\n== controller OFF (baseline) ==");
     println!("{}", out.baseline.report.summary());

@@ -30,6 +30,25 @@ pub fn build_predictor(kind: PredictorKind, model_override: Option<&str>) -> Res
     }
 }
 
+/// [`build_predictor`] with the sharded-run fallback policy: learned
+/// predictors are loaded *inside* each shard thread (PJRT handles are
+/// thread-affine), and a load failure there degrades to the heuristic with
+/// a warning instead of aborting the whole run mid-flight. `ctx` names the
+/// command for the log line.
+pub fn build_predictor_or_heuristic(
+    kind: PredictorKind,
+    model_override: Option<&str>,
+    ctx: &str,
+) -> PredictorBox {
+    build_predictor(kind, model_override).unwrap_or_else(|e| {
+        crate::log_warn!(
+            "{ctx}: predictor load failed in a shard thread ({e}); falling back to the \
+             heuristic predictor"
+        );
+        PredictorBox::Heuristic(HeuristicPredictor)
+    })
+}
+
 /// ASCII plot of a loss curve (y auto-scaled), for terminal-friendly Fig 2.
 pub fn ascii_plot(curve: &[f64], width: usize, height: usize) -> String {
     if curve.is_empty() {

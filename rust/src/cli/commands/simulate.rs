@@ -3,7 +3,8 @@
 use super::build_predictor;
 use crate::cli::Args;
 use crate::config::{ExperimentConfig, PredictorKind};
-use crate::sim::run_experiment;
+use crate::predictor::PredictorBox;
+use crate::sim::{run_experiment, run_workload_sharded};
 use anyhow::Result;
 use std::path::Path;
 
@@ -21,6 +22,8 @@ OPTIONS:
     --hierarchy <preset>  scaled|epyc7763 [default: scaled]
     --config <file.json>  JSON config overrides (see config module)
     --feedback <n>        online-learning interval in accesses (0 = off)
+    --shards <n>          split the run across n set-partitioned worker
+                          threads (power of two; exact aggregate stats) [default: 1]
     --seed <n>            RNG seed
     --json <path>         write the metrics report as JSON
     --help";
@@ -32,7 +35,7 @@ pub fn run(args: &mut Args) -> Result<i32> {
     }
     args.ensure_known(&[
         "policy", "predictor", "model", "accesses", "profile", "scenario", "prefetcher",
-        "hierarchy", "config", "feedback", "seed", "json", "help",
+        "hierarchy", "config", "feedback", "shards", "seed", "json", "help",
     ])?;
     if args.opt("profile").is_some() && args.opt("scenario").is_some() {
         anyhow::bail!("--profile and --scenario are mutually exclusive");
@@ -82,13 +85,37 @@ pub fn run(args: &mut Args) -> Result<i32> {
         anyhow::bail!("unknown policy '{}' (see `acpc policies`)", cfg.policy);
     }
     cfg.hierarchy.validate().map_err(|e| anyhow::anyhow!("invalid hierarchy geometry: {e}"))?;
+    let shards = args.usize_or("shards", 1)?;
+    if shards > 1 {
+        cfg.hierarchy
+            .validate_shards(shards)
+            .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
+    }
 
-    let mut predictor = build_predictor(kind, args.opt("model"))?;
-    println!(
-        "simulating: policy={} predictor={} accesses={} workload={} prefetcher={}",
-        cfg.policy, predictor.name(), cfg.accesses, cfg.generator.profile.name, cfg.hierarchy.prefetcher
-    );
-    let res = run_experiment(&cfg, &mut predictor);
+    let res = if shards > 1 {
+        let model = args.opt("model").map(|s| s.to_string());
+        let mk = move |_shard: usize| -> PredictorBox {
+            super::build_predictor_or_heuristic(kind, model.as_deref(), "simulate")
+        };
+        println!(
+            "simulating: policy={} predictor={} accesses={} workload={} prefetcher={} shards={}",
+            cfg.policy,
+            kind.label(),
+            cfg.accesses,
+            cfg.generator.profile.name,
+            cfg.hierarchy.prefetcher,
+            shards
+        );
+        let mut workload = cfg.workload();
+        run_workload_sharded(&cfg, workload.as_mut(), shards, &mk, None)?.result
+    } else {
+        let mut predictor = build_predictor(kind, args.opt("model"))?;
+        println!(
+            "simulating: policy={} predictor={} accesses={} workload={} prefetcher={}",
+            cfg.policy, predictor.name(), cfg.accesses, cfg.generator.profile.name, cfg.hierarchy.prefetcher
+        );
+        run_experiment(&cfg, &mut predictor)
+    };
 
     println!("\n{}", res.report.summary());
     println!(

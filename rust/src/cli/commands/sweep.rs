@@ -23,6 +23,9 @@ OPTIONS:
                           falls back to heuristic when absent; adaptive runs
                           a per-cell drift controller)
     -j, --jobs <n>        worker threads [default: cores-1]
+    --shards <n>          set-shards per cell (power of two): each cell runs
+                          on n extra threads with exact stat merging; total
+                          parallelism ≈ jobs × shards [default: 1]
     --accesses <n>        accesses per cell [default: 400000]
     --seed <n>            base seed (per-cell seeds derive from it)
     --json <path>         write all cell reports as JSON
@@ -43,7 +46,8 @@ pub fn run(args: &mut Args) -> Result<i32> {
         return Ok(0);
     }
     args.ensure_known(&[
-        "policies", "scenarios", "predictor", "jobs", "j", "accesses", "seed", "json", "help",
+        "policies", "scenarios", "predictor", "jobs", "j", "shards", "accesses", "seed", "json",
+        "help",
     ])?;
 
     let policies = parse_list(&args.opt_or("policies", "lru,srrip,ship,acpc"));
@@ -53,18 +57,21 @@ pub fn run(args: &mut Args) -> Result<i32> {
     };
     let mut cfg = SweepConfig::new(policies, scenarios);
     cfg.threads = args.usize_or("j", args.usize_or("jobs", default_threads())?)?;
+    cfg.shards = args.usize_or("shards", 1)?.max(1);
     cfg.accesses = args.usize_or("accesses", cfg.accesses)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.predictor = args.opt_or("predictor", &cfg.predictor);
 
     println!(
-        "sweep: {} policies × {} scenarios = {} cells, {} accesses/cell, predictor={}, -j {}",
+        "sweep: {} policies × {} scenarios = {} cells, {} accesses/cell, predictor={}, -j {}, \
+         shards/cell {}",
         cfg.policies.len(),
         cfg.scenarios.len(),
         cfg.policies.len() * cfg.scenarios.len(),
         cfg.accesses,
         cfg.predictor,
-        cfg.threads
+        cfg.threads,
+        cfg.shards
     );
     let t0 = Instant::now();
     let cells = run_sweep(&cfg)?;

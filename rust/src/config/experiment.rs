@@ -176,6 +176,13 @@ impl ExperimentConfig {
                     }
                     self.hierarchy.prefetcher = p.to_string();
                 }
+                "l3_policy" => {
+                    let p = v.as_str().ok_or_else(|| anyhow!("l3_policy"))?;
+                    if crate::policy::make_policy(p, 2, 2, 0).is_none() {
+                        bail!("unknown l3_policy '{p}'");
+                    }
+                    self.hierarchy.l3_policy = p.to_string();
+                }
                 "l1_kb" => self.hierarchy.l1.size_bytes = num(v, "l1_kb")? * 1024,
                 "l2_kb" => self.hierarchy.l2.size_bytes = num(v, "l2_kb")? * 1024,
                 "l3_kb" => self.hierarchy.l3.size_bytes = num(v, "l3_kb")? * 1024,
@@ -290,7 +297,7 @@ mod tests {
         let mut c = ExperimentConfig::table1("lru", PredictorKind::None);
         let j = Json::parse(
             r#"{"policy": "srrip", "accesses": 1000,
-                "hierarchy": {"l2_kb": 128, "prefetcher": "stride"},
+                "hierarchy": {"l2_kb": 128, "prefetcher": "stride", "l3_policy": "srrip"},
                 "workload": {"profile": "llama2", "max_ctx": 256}}"#,
         )
         .unwrap();
@@ -299,6 +306,11 @@ mod tests {
         assert_eq!(c.accesses, 1000);
         assert_eq!(c.hierarchy.l2.size_bytes, 128 * 1024);
         assert_eq!(c.hierarchy.prefetcher, "stride");
+        assert_eq!(c.hierarchy.l3_policy, "srrip");
+        // Unknown L3 policies are rejected at the config boundary.
+        assert!(c
+            .apply_json(&Json::parse(r#"{"hierarchy": {"l3_policy": "nope"}}"#).unwrap())
+            .is_err());
         assert_eq!(c.generator.profile.name, "llama2ish");
         assert_eq!(c.generator.max_ctx, 256);
     }

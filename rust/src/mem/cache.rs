@@ -103,6 +103,23 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Exact merge for set-sharded simulation: every field is a monotone
+    /// event counter over a disjoint set partition, so the aggregate run's
+    /// stats are the field-wise sum of the shard stats.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.demand_accesses += other.demand_accesses;
+        self.demand_hits += other.demand_hits;
+        self.demand_misses += other.demand_misses;
+        self.writes += other.writes;
+        self.prefetch_fills += other.prefetch_fills;
+        self.prefetch_useful += other.prefetch_useful;
+        self.dead_prefetch_evictions += other.dead_prefetch_evictions;
+        self.demand_evicted_by_prefetch += other.demand_evicted_by_prefetch;
+        self.evictions += other.evictions;
+        self.writebacks += other.writebacks;
+        self.invalidations += other.invalidations;
+    }
+
     pub fn hit_rate(&self) -> f64 {
         if self.demand_accesses == 0 {
             return f64::NAN;
@@ -140,6 +157,12 @@ pub struct Cache {
     cfg: CacheConfig,
     num_sets: usize,
     set_mask: u64,
+    /// Low line bits consumed by the shard router before set selection:
+    /// `set_of(line) = (line >> set_shift) & set_mask`. 0 for an unsharded
+    /// cache. A shard's sub-cache owns every `shards`-th set of the full
+    /// geometry, and this shift makes its local set indexing agree with the
+    /// global run set-for-set (see `sim::shard`).
+    set_shift: u32,
     lines: Vec<LineState>,
     policy: Box<dyn Policy>,
     pub stats: CacheStats,
@@ -147,20 +170,41 @@ pub struct Cache {
     /// policy's `occupancy_hint` (PARM pressure signal).
     occupancy_sample_period: u64,
     accesses_since_sample: u64,
+    /// Incremental residency counters so `occupancy`/`useful_fraction` are
+    /// O(1) instead of O(lines) scans (they sit on the per-access EMU and
+    /// telemetry paths).
+    valid_count: usize,
+    referenced_count: usize,
+    /// Per-set count of resident never-referenced prefetch lines, kept
+    /// incrementally so `maybe_sample_occupancy` reads a counter instead of
+    /// scanning the set. Invariant: `was_prefetch ⇒ !referenced` (the first
+    /// demand hit clears `was_prefetch` as it sets `referenced`).
+    dead_prefetch_per_set: Vec<u16>,
 }
 
 impl Cache {
     pub fn new(cfg: CacheConfig, policy: Box<dyn Policy>) -> Self {
+        Self::with_set_shift(cfg, policy, 0)
+    }
+
+    /// Shard-aware constructor: `cfg` describes this shard's slice of the
+    /// sets and `set_shift` the number of low line bits the shard router
+    /// consumed (`log2(shards)`).
+    pub fn with_set_shift(cfg: CacheConfig, policy: Box<dyn Policy>, set_shift: u32) -> Self {
         let num_sets = cfg.num_sets();
         Self {
             num_sets,
             set_mask: num_sets as u64 - 1,
+            set_shift,
             lines: vec![LineState::default(); num_sets * cfg.assoc],
             policy,
             stats: CacheStats::default(),
-            cfg,
             occupancy_sample_period: 64,
             accesses_since_sample: 0,
+            valid_count: 0,
+            referenced_count: 0,
+            dead_prefetch_per_set: vec![0; num_sets],
+            cfg,
         }
     }
 
@@ -178,7 +222,7 @@ impl Cache {
 
     #[inline]
     pub fn set_of(&self, line: u64) -> usize {
-        (line & self.set_mask) as usize
+        ((line >> self.set_shift) & self.set_mask) as usize
     }
 
     #[inline]
@@ -210,6 +254,10 @@ impl Cache {
             if l.was_prefetch {
                 l.was_prefetch = false;
                 self.stats.prefetch_useful += 1;
+                self.dead_prefetch_per_set[set] -= 1;
+            }
+            if !l.referenced {
+                self.referenced_count += 1;
             }
             l.referenced = true;
             if is_write {
@@ -232,7 +280,10 @@ impl Cache {
         // Free way if any.
         let free = (0..assoc).find(|&w| !self.lines[set * assoc + w].valid);
         let (way, evicted) = match free {
-            Some(w) => (w, None),
+            Some(w) => {
+                self.valid_count += 1;
+                (w, None)
+            }
             None => {
                 let w = self.policy.victim(set);
                 debug_assert!(w < assoc);
@@ -244,6 +295,10 @@ impl Cache {
                 let dead_prefetch = old.was_prefetch && !old.referenced;
                 if dead_prefetch {
                     self.stats.dead_prefetch_evictions += 1;
+                    self.dead_prefetch_per_set[set] -= 1;
+                }
+                if old.referenced {
+                    self.referenced_count -= 1;
                 }
                 if meta.is_prefetch && old.referenced {
                     self.stats.demand_evicted_by_prefetch += 1;
@@ -261,6 +316,9 @@ impl Cache {
         };
         if meta.is_prefetch {
             self.stats.prefetch_fills += 1;
+            self.dead_prefetch_per_set[set] += 1;
+        } else {
+            self.referenced_count += 1;
         }
         self.lines[set * assoc + way] = LineState {
             line,
@@ -278,7 +336,15 @@ impl Cache {
         if let Some(way) = self.probe(line) {
             let set = self.set_of(line);
             let idx = set * self.cfg.assoc + way;
+            let old = self.lines[idx];
             self.lines[idx].valid = false;
+            self.valid_count -= 1;
+            if old.referenced {
+                self.referenced_count -= 1;
+            }
+            if old.was_prefetch {
+                self.dead_prefetch_per_set[set] -= 1;
+            }
             self.stats.invalidations += 1;
             self.policy.on_invalidate(set, way);
             true
@@ -304,21 +370,19 @@ impl Cache {
         self.policy.reset_utilities();
     }
 
-    /// Valid-line occupancy in [0,1].
+    /// Valid-line occupancy in [0,1]. O(1): maintained incrementally.
     pub fn occupancy(&self) -> f64 {
-        let valid = self.lines.iter().filter(|l| l.valid).count();
-        valid as f64 / self.lines.len() as f64
+        self.valid_count as f64 / self.lines.len() as f64
     }
 
     /// Effective memory utilization: referenced fraction of resident lines
     /// (the paper's EMU numerator — useful lines / occupied capacity).
+    /// O(1): maintained incrementally.
     pub fn useful_fraction(&self) -> f64 {
-        let valid = self.lines.iter().filter(|l| l.valid).count();
-        if valid == 0 {
+        if self.valid_count == 0 {
             return f64::NAN;
         }
-        let useful = self.lines.iter().filter(|l| l.valid && l.referenced).count();
-        useful as f64 / valid as f64
+        self.referenced_count as f64 / self.valid_count as f64
     }
 
     fn maybe_sample_occupancy(&mut self, line: u64) {
@@ -328,14 +392,10 @@ impl Cache {
         }
         self.accesses_since_sample = 0;
         let set = self.set_of(line);
-        let assoc = self.cfg.assoc;
-        let dead = (0..assoc)
-            .filter(|&w| {
-                let l = &self.lines[set * assoc + w];
-                l.valid && l.was_prefetch && !l.referenced
-            })
-            .count();
-        self.policy.occupancy_hint(set, dead as f64 / assoc as f64);
+        // Incremental per-set dead-prefetch counter instead of an O(assoc)
+        // way scan (this sits on the demand-access hot path).
+        let dead = self.dead_prefetch_per_set[set] as f64;
+        self.policy.occupancy_hint(set, dead / self.cfg.assoc as f64);
     }
 
     /// Iterate resident lines (diagnostics / EMU sampling).
@@ -478,5 +538,79 @@ mod tests {
         c.fill(16, &prefetch(16), false);
         assert!((c.occupancy() - 2.0 / 64.0).abs() < 1e-9);
         assert!((c.useful_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    /// The incremental residency counters must agree with a full line scan
+    /// after an arbitrary access/fill/invalidate history.
+    #[test]
+    fn incremental_counters_match_full_scan() {
+        use crate::util::rng::Xoshiro256;
+        let mut c = mk(4, 4, "lru");
+        let mut rng = Xoshiro256::new(0xC0FFEE);
+        for i in 0..20_000u64 {
+            let line = rng.next_u64() % 128;
+            match i % 5 {
+                0 | 1 => {
+                    if c.access(line, &demand(line), false) == Lookup::Miss {
+                        c.fill(line, &demand(line), false);
+                    }
+                }
+                2 => {
+                    if c.probe(line).is_none() {
+                        c.fill(line, &prefetch(line), false);
+                    }
+                }
+                3 => {
+                    let _ = c.access(line, &demand(line), true);
+                    if c.probe(line).is_none() {
+                        c.fill(line, &demand(line), true);
+                    }
+                }
+                _ => {
+                    c.invalidate(line);
+                }
+            }
+        }
+        let valid = c.lines.iter().filter(|l| l.valid).count();
+        let referenced = c.lines.iter().filter(|l| l.valid && l.referenced).count();
+        assert_eq!(c.valid_count, valid);
+        assert_eq!(c.referenced_count, referenced);
+        assert!((c.occupancy() - valid as f64 / c.lines.len() as f64).abs() < 1e-12);
+        for set in 0..c.num_sets() {
+            let dead = (0..c.cfg.assoc)
+                .filter(|&w| {
+                    let l = &c.lines[set * c.cfg.assoc + w];
+                    l.valid && l.was_prefetch && !l.referenced
+                })
+                .count();
+            assert_eq!(c.dead_prefetch_per_set[set] as usize, dead, "set {set}");
+        }
+    }
+
+    /// A set-shifted cache must index sets by the post-shard line bits.
+    #[test]
+    fn set_shift_indexes_high_bits() {
+        let cfg = CacheConfig::new("t", 4 * 1024, 4); // 16 sets
+        let p = make_policy("lru", cfg.num_sets(), 4, 1).unwrap();
+        let c = Cache::with_set_shift(cfg, p, 2); // 4-way sharding
+        // Lines congruent mod 4 (same shard) spread over sets by bits 2..6.
+        assert_eq!(c.set_of(0b0000_01), 0);
+        assert_eq!(c.set_of(0b0001_01), 1);
+        assert_eq!(c.set_of(0b1111_01), 15);
+        // Next multiple wraps around the 16-set mask.
+        assert_eq!(c.set_of((1 << 6) | 1), 0);
+    }
+
+    #[test]
+    fn stats_merge_sums_counters() {
+        let mut a =
+            CacheStats { demand_accesses: 3, demand_hits: 2, evictions: 1, ..Default::default() };
+        let b =
+            CacheStats { demand_accesses: 7, demand_hits: 1, writebacks: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.demand_accesses, 10);
+        assert_eq!(a.demand_hits, 3);
+        assert_eq!(a.evictions, 1);
+        assert_eq!(a.writebacks, 4);
     }
 }

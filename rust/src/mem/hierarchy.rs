@@ -27,6 +27,11 @@ pub struct HierarchyConfig {
     pub dram_latency: u64,
     /// Prefetcher attached to L2 (`none|nextline|stride|correlation|composite`).
     pub prefetcher: String,
+    /// LLC replacement policy. DRRIP (the realistic default) carries global
+    /// state (PSEL, BRRIP RNG), so sharded runs instantiate it per shard;
+    /// pick a set-local policy (`srrip`, `lru`) when exact shard-count
+    /// invariance of AMAT/miss-penalty is required.
+    pub l3_policy: String,
     pub seed: u64,
 }
 
@@ -41,6 +46,7 @@ impl HierarchyConfig {
             l3: LevelConfig { size_bytes: 8 * 1024 * 1024, assoc: 16, hit_latency: 46 },
             dram_latency: 220,
             prefetcher: "composite".into(),
+            l3_policy: "drrip".into(),
             seed: 0xCAFE,
         }
     }
@@ -54,6 +60,7 @@ impl HierarchyConfig {
             l3: LevelConfig { size_bytes: 4 * 1024 * 1024, assoc: 16, hit_latency: 46 },
             dram_latency: 220,
             prefetcher: "composite".into(),
+            l3_policy: "drrip".into(),
             seed: 0xCAFE,
         }
     }
@@ -71,6 +78,30 @@ impl HierarchyConfig {
     pub fn validate(&self) -> Result<(), String> {
         for (name, lvl) in [("L1", &self.l1), ("L2", &self.l2), ("L3", &self.l3)] {
             CacheConfig::new(name, lvl.size_bytes, lvl.assoc).validate()?;
+        }
+        if make_policy(&self.l3_policy, 2, 2, 0).is_none() {
+            return Err(format!("unknown L3 policy '{}'", self.l3_policy));
+        }
+        Ok(())
+    }
+
+    /// Can this hierarchy be split into `shards` set partitions? Requires a
+    /// power-of-two shard count that divides *every* level's set count, so
+    /// the low `log2(shards)` line bits select the same shard at L1, L2 and
+    /// L3 and each shard owns an exact 1/shards slice of every level.
+    pub fn validate_shards(&self, shards: usize) -> Result<(), String> {
+        self.validate()?;
+        if shards == 0 || !shards.is_power_of_two() {
+            return Err(format!("shard count must be a power of two ≥ 1, got {shards}"));
+        }
+        for (name, lvl) in [("L1", &self.l1), ("L2", &self.l2), ("L3", &self.l3)] {
+            let sets = CacheConfig::new(name, lvl.size_bytes, lvl.assoc).checked_num_sets()?;
+            if shards > sets {
+                return Err(format!(
+                    "{name} has {sets} sets — cannot split into {shards} shards \
+                     (shards must divide every level's set count)"
+                ));
+            }
         }
         Ok(())
     }
@@ -107,6 +138,14 @@ pub struct Hierarchy {
     pf_accuracy: FastMap<u64, (u32, u32)>,
     /// line → issuing PC for in-flight prefetches (outcome attribution).
     pf_inflight: FastMap<u64, u64>,
+    /// Shard routing identity: this hierarchy only owns lines with
+    /// `line & shard_mask == shard_index`. `mask = 0` for an unsharded run,
+    /// so every line passes. Prefetch candidates outside the partition are
+    /// dropped (a per-bank prefetcher cannot fill another bank) and counted
+    /// in `cross_shard_prefetches_dropped`.
+    shard_mask: u64,
+    shard_index: u64,
+    pub cross_shard_prefetches_dropped: u64,
     /// Total latency accumulated over all demand accesses.
     pub total_latency: u64,
     pub accesses: u64,
@@ -117,16 +156,34 @@ const UTILITY_CAP: usize = 1 << 17;
 impl Hierarchy {
     /// `policy` governs L2. Panics on unknown names (caller validates).
     pub fn new(cfg: HierarchyConfig, policy: &str) -> Self {
+        Self::new_sharded(cfg, policy, 0, 1)
+    }
+
+    /// One shard of a set-partitioned hierarchy: owns every `shards`-th set
+    /// of each level (the sets whose lines satisfy
+    /// `line & (shards-1) == shard`). With `shards == 1` this is exactly
+    /// [`Hierarchy::new`]. Caller must have run
+    /// [`HierarchyConfig::validate_shards`]; `policy` is per-shard (set-local
+    /// policies behave identically to the unsharded run; policies with
+    /// global state — DIP's PSEL, SHiP's SHCT — become per-shard, seeded by
+    /// shard for determinism).
+    pub fn new_sharded(cfg: HierarchyConfig, policy: &str, shard: usize, shards: usize) -> Self {
+        assert!(shards.is_power_of_two() && shard < shards, "shard {shard}/{shards}");
+        let set_shift = shards.trailing_zeros();
+        // Well-separated per-shard seed stream (splitmix-style increment)
+        // so stochastic tie-breaks differ across shards but are fixed for a
+        // given (seed, shard) pair.
+        let seed = cfg.seed ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mk = |name: &str, lvl: &LevelConfig, pol: &str, seed: u64| -> Cache {
-            let ccfg = CacheConfig::new(name, lvl.size_bytes, lvl.assoc);
+            let ccfg = CacheConfig::new(name, lvl.size_bytes / shards as u64, lvl.assoc);
             let p: Box<dyn Policy> =
                 make_policy(pol, ccfg.num_sets(), lvl.assoc, seed).unwrap_or_else(|| panic!("policy {pol}"));
-            Cache::new(ccfg, p)
+            Cache::with_set_shift(ccfg, p, set_shift)
         };
-        let l1 = mk("L1", &cfg.l1, "lru", cfg.seed ^ 1);
-        let l2 = mk("L2", &cfg.l2, policy, cfg.seed ^ 2);
-        let l3 = mk("L3", &cfg.l3, "drrip", cfg.seed ^ 3);
-        let prefetcher = make_prefetcher(&cfg.prefetcher, cfg.seed ^ 4)
+        let l1 = mk("L1", &cfg.l1, "lru", seed ^ 1);
+        let l2 = mk("L2", &cfg.l2, policy, seed ^ 2);
+        let l3 = mk("L3", &cfg.l3, &cfg.l3_policy, seed ^ 3);
+        let prefetcher = make_prefetcher(&cfg.prefetcher, seed ^ 4)
             .unwrap_or_else(|| panic!("prefetcher {}", cfg.prefetcher));
         // The prefetch filter is PARM's distinctive pollution-suppression
         // mechanism; enable it only for the ACPC policy.
@@ -143,6 +200,9 @@ impl Hierarchy {
             prefetches_dropped: 0,
             pf_accuracy: FastMap::default(),
             pf_inflight: FastMap::default(),
+            shard_mask: shards as u64 - 1,
+            shard_index: shard as u64,
+            cross_shard_prefetches_dropped: 0,
             total_latency: 0,
             accesses: 0,
         }
@@ -258,6 +318,14 @@ impl Hierarchy {
             if !self.pf_buf.is_empty() {
                 let buf = std::mem::take(&mut self.pf_buf);
                 for &cand in &buf {
+                    // Sharded runs: a candidate outside this shard's set
+                    // partition belongs to another shard's hierarchy;
+                    // filling it here would duplicate the line across
+                    // partitions. (mask = 0 in unsharded runs ⇒ no-op.)
+                    if cand & self.shard_mask != self.shard_index {
+                        self.cross_shard_prefetches_dropped += 1;
+                        continue;
+                    }
                     if self.l2.probe(cand).is_some() {
                         continue;
                     }
@@ -422,6 +490,50 @@ mod tests {
         assert!(HierarchyConfig::by_name("scaled").is_some());
         assert!(HierarchyConfig::by_name("epyc7763").is_some());
         assert!(HierarchyConfig::by_name("x").is_none());
+    }
+
+    #[test]
+    fn shard_validation_and_geometry() {
+        let cfg = HierarchyConfig::scaled();
+        // Scaled L1 = 16 KiB / 8-way → 32 sets: up to 32 shards divide all
+        // levels.
+        for shards in [1usize, 2, 8, 32] {
+            assert!(cfg.validate_shards(shards).is_ok(), "{shards}");
+        }
+        assert!(cfg.validate_shards(0).is_err());
+        assert!(cfg.validate_shards(3).is_err(), "non-power-of-two rejected");
+        assert!(cfg.validate_shards(64).is_err(), "exceeds L1 set count");
+
+        // A shard owns 1/N of each level's sets.
+        let h = Hierarchy::new_sharded(small(), "lru", 1, 4);
+        let full = Hierarchy::new(small(), "lru");
+        assert_eq!(h.l2.num_sets() * 4, full.l2.num_sets());
+        assert_eq!(h.l1.num_sets() * 4, full.l1.num_sets());
+    }
+
+    #[test]
+    fn sharded_hierarchy_serves_its_partition() {
+        // Shard 2 of 4 owns lines ≡ 2 (mod 4); drive a few of its lines and
+        // check the usual climb-the-hierarchy behavior within the shard.
+        let mut h = Hierarchy::new_sharded(small(), "lru", 2, 4);
+        let line = 0x1000 / 64 * 4 + 2; // line ≡ 2 (mod 4)
+        let a = acc(line << 6, 1);
+        assert_eq!(h.access(&a, &meta_for(&a)), ServiceLevel::Dram);
+        assert_eq!(h.access(&a, &meta_for(&a)), ServiceLevel::L1);
+    }
+
+    #[test]
+    fn cross_shard_prefetch_candidates_dropped() {
+        let mut cfg = small();
+        cfg.prefetcher = "nextline".into();
+        // Shard 0 of 4: next-line candidates (line+1, line+2) are ≡ 1, 2
+        // (mod 4) — never shard 0's — so every candidate must be dropped.
+        let mut h = Hierarchy::new_sharded(cfg, "lru", 0, 4);
+        let line = 32u64; // ≡ 0 (mod 4) → owned by shard 0
+        let a = acc(line << 6, 4);
+        h.access(&a, &meta_for(&a));
+        assert_eq!(h.l2.stats.prefetch_fills, 0, "no in-shard candidates");
+        assert!(h.cross_shard_prefetches_dropped >= 1);
     }
 
     #[test]

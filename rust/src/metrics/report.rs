@@ -41,6 +41,10 @@ pub struct MetricsReport {
     pub amat: f64,
     pub emu: f64,
     pub prefetches_issued: u64,
+    /// Prefetch candidates discarded because they fell outside the issuing
+    /// shard's set partition (always 0 in unsharded runs) — the diagnostic
+    /// for per-bank prefetcher coverage loss under `--shards`.
+    pub cross_shard_prefetches_dropped: u64,
     pub total_latency: u64,
 }
 
@@ -48,33 +52,58 @@ impl MetricsReport {
     /// Harvest from a finished hierarchy. `emu` is sampled by the simulator
     /// during the run (time-averaged useful fraction); pass the average.
     pub fn from_hierarchy(name: &str, h: &Hierarchy, tokens: u64, emu: f64) -> Self {
-        let l2 = &h.l2.stats;
+        Self::from_hierarchies(name, &[h], tokens, emu)
+    }
+
+    /// Exact merge over the shards of a set-partitioned run: every derived
+    /// metric is recomputed from the *summed* per-level counters (never
+    /// averaged from per-shard rates), so an N-shard run reports the same
+    /// aggregates a 1-shard run would for set-local state. All shards must
+    /// share one [`crate::mem::HierarchyConfig`] (latencies read from the
+    /// first). Panics on an empty slice.
+    pub fn from_hierarchies(name: &str, parts: &[&Hierarchy], tokens: u64, emu: f64) -> Self {
+        let first = parts[0];
+        let mut l1 = crate::mem::CacheStats::default();
+        let mut l2 = crate::mem::CacheStats::default();
+        let mut l3 = crate::mem::CacheStats::default();
+        let mut accesses = 0u64;
+        let mut total_latency = 0u64;
+        let mut prefetches_issued = 0u64;
+        let mut cross_shard_dropped = 0u64;
+        for h in parts {
+            l1.merge(&h.l1.stats);
+            l2.merge(&h.l2.stats);
+            l3.merge(&h.l3.stats);
+            accesses += h.accesses;
+            total_latency += h.total_latency;
+            prefetches_issued += h.prefetches_issued();
+            cross_shard_dropped += h.cross_shard_prefetches_dropped;
+        }
         // L2 miss penalty: cycles spent below L2 on L2 demand misses.
-        let l3_hit_lat = h.latency_of(crate::mem::ServiceLevel::L3)
-            - h.latency_of(crate::mem::ServiceLevel::L2);
-        let dram_lat = h.latency_of(crate::mem::ServiceLevel::Dram)
-            - h.latency_of(crate::mem::ServiceLevel::L2);
-        let l3 = &h.l3.stats;
-        let l3_hits_for_l2_misses = l3.demand_hits;
-        let dram_fills = l3.demand_misses;
-        let l2_miss_cycles = l3_hits_for_l2_misses * l3_hit_lat + dram_fills * dram_lat;
+        let l3_hit_lat = first.latency_of(crate::mem::ServiceLevel::L3)
+            - first.latency_of(crate::mem::ServiceLevel::L2);
+        let dram_lat = first.latency_of(crate::mem::ServiceLevel::Dram)
+            - first.latency_of(crate::mem::ServiceLevel::L2);
+        let l2_miss_cycles = l3.demand_hits * l3_hit_lat + l3.demand_misses * dram_lat;
+        let amat = if accesses == 0 { f64::NAN } else { total_latency as f64 / accesses as f64 };
         Self {
             name: name.to_string(),
-            policy: h.policy_name().to_string(),
-            accesses: h.accesses,
+            policy: first.policy_name().to_string(),
+            accesses,
             tokens,
-            l1_hit_rate: h.l1.stats.hit_rate(),
+            l1_hit_rate: l1.hit_rate(),
             l2_hit_rate: l2.hit_rate(),
-            l3_hit_rate: h.l3.stats.hit_rate(),
+            l3_hit_rate: l3.hit_rate(),
             l2_pollution_ratio: l2.pollution_ratio(),
             l2_prefetch_accuracy: l2.prefetch_accuracy(),
             l2_dead_prefetch_evictions: l2.dead_prefetch_evictions,
             l2_demand_evicted_by_prefetch: l2.demand_evicted_by_prefetch,
             l2_miss_cycles,
-            amat: h.amat(),
+            amat,
             emu,
-            prefetches_issued: h.prefetches_issued(),
-            total_latency: h.total_latency,
+            prefetches_issued,
+            cross_shard_prefetches_dropped: cross_shard_dropped,
+            total_latency,
         }
     }
 
@@ -110,6 +139,10 @@ impl MetricsReport {
             ("amat", Json::Num(self.amat)),
             ("emu", Json::Num(self.emu)),
             ("prefetches_issued", Json::Num(self.prefetches_issued as f64)),
+            (
+                "cross_shard_prefetches_dropped",
+                Json::Num(self.cross_shard_prefetches_dropped as f64),
+            ),
         ])
     }
 
@@ -218,6 +251,36 @@ mod tests {
         assert!(r.tokens > 0);
         let j = r.to_json();
         assert!(j.get("l2_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// Driving the same access stream through one full hierarchy vs two
+    /// set-shards and merging must produce identical aggregate metrics
+    /// (prefetcher off, set-local policy): the partition is exact.
+    #[test]
+    fn sharded_merge_equals_unsharded_run() {
+        let mut cfg = HierarchyConfig::scaled();
+        cfg.prefetcher = "none".into();
+        // DRRIP's global PSEL/RNG would make the LLC shard-sensitive; use a
+        // set-local L3 policy so the partition is exact end to end.
+        cfg.l3_policy = "srrip".into();
+        let mut full = Hierarchy::new(cfg.clone(), "lru");
+        let mut shards = vec![
+            Hierarchy::new_sharded(cfg.clone(), "lru", 0, 2),
+            Hierarchy::new_sharded(cfg, "lru", 1, 2),
+        ];
+        let mut gen = TraceGenerator::new(GeneratorConfig::tiny(17));
+        for _ in 0..40_000 {
+            let a = gen.next_access();
+            let meta = AccessMeta::demand(a.line(), a.pc, a.kind);
+            full.access(&a, &meta);
+            shards[(a.line() & 1) as usize].access(&a, &meta);
+        }
+        let whole = MetricsReport::from_hierarchy("w", &full, 1, 0.5);
+        let parts: Vec<&Hierarchy> = shards.iter().collect();
+        let merged = MetricsReport::from_hierarchies("w", &parts, 1, 0.5);
+        assert_eq!(whole.to_json().to_pretty(), merged.to_json().to_pretty());
+        assert_eq!(whole.total_latency, merged.total_latency);
+        assert_eq!(whole.l2_miss_cycles, merged.l2_miss_cycles);
     }
 
     #[test]

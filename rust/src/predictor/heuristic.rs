@@ -37,8 +37,16 @@ impl ReusePredictor for HeuristicPredictor {
     }
 
     fn predict(&mut self, x: &[f32], n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        self.predict_into(x, n, &mut out);
+        out
+    }
+
+    /// Native allocation-free scoring (the simulation hot path).
+    fn predict_into(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) {
         assert_eq!(x.len(), n * FEATURE_DIM);
-        (0..n).map(|i| Self::score(&x[i * FEATURE_DIM..(i + 1) * FEATURE_DIM])).collect()
+        out.clear();
+        out.extend((0..n).map(|i| Self::score(&x[i * FEATURE_DIM..(i + 1) * FEATURE_DIM])));
     }
 }
 

@@ -29,6 +29,17 @@ pub trait ReusePredictor {
     /// `x` is row-major `[n, window(), FEATURE_DIM]` (or `[n, FEATURE_DIM]`
     /// when `window() == 1`). Returns `n` probabilities.
     fn predict(&mut self, x: &[f32], n: usize) -> Vec<f32>;
+
+    /// Allocation-free variant for the simulation hot loop: write the `n`
+    /// probabilities into `out` (cleared first; capacity is reused across
+    /// batches, so steady state performs no heap allocation). The default
+    /// delegates to [`predict`](Self::predict); hot-path implementations
+    /// override it natively.
+    fn predict_into(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) {
+        let probs = self.predict(x, n);
+        out.clear();
+        out.extend_from_slice(&probs);
+    }
 }
 
 /// Concrete predictor dispatch for the simulator/coordinator: keeps the
@@ -66,6 +77,19 @@ impl PredictorBox {
             PredictorBox::None => vec![0.5; n],
             PredictorBox::Heuristic(p) => p.predict(x, n),
             PredictorBox::Model(m) => m.predict(x, n),
+        }
+    }
+
+    /// Allocation-free dispatch of [`ReusePredictor::predict_into`]: the
+    /// simulation loop owns `out` and reuses its capacity across batches.
+    pub fn predict_into(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) {
+        match self {
+            PredictorBox::None => {
+                out.clear();
+                out.resize(n, 0.5);
+            }
+            PredictorBox::Heuristic(p) => p.predict_into(x, n, out),
+            PredictorBox::Model(m) => m.predict_into(x, n, out),
         }
     }
 

@@ -15,6 +15,17 @@ pub struct ModelRuntime {
     eval: Executable,
     /// Inference batch (from the manifest; AOT shape is fixed).
     pub infer_batch: usize,
+    /// Reusable `[infer_batch, row]` staging buffer for chunked inference:
+    /// loaned into the input `Tensor` for the PJRT call and recovered
+    /// afterwards, so steady-state prediction allocates no fresh staging
+    /// vector per chunk.
+    stage: Vec<f32>,
+    /// Cached PJRT inference input list (`params ++ x`): the parameter
+    /// tensors are deep-cloned once per *weight update*, not once per
+    /// chunk; only the trailing x slot is replaced per call.
+    infer_inputs: Vec<Tensor>,
+    /// Parameters changed since `infer_inputs` was built (train step).
+    infer_params_stale: bool,
     /// Total predictions served (telemetry).
     pub predictions: u64,
     /// Train steps executed.
@@ -48,6 +59,9 @@ impl ModelRuntime {
             train,
             eval,
             infer_batch,
+            stage: Vec::new(),
+            infer_inputs: Vec::new(),
+            infer_params_stale: true,
             predictions: 0,
             train_steps: 0,
         })
@@ -80,6 +94,9 @@ impl ModelRuntime {
         let inputs = self.store.train_inputs(xt, yt);
         let out = self.train.run(&inputs)?;
         self.train_steps += 1;
+        // Weights changed: the cached inference input list must be rebuilt
+        // before the next predict (hot-swap correctness).
+        self.infer_params_stale = true;
         self.store.absorb_train_output(out)
     }
 
@@ -93,12 +110,33 @@ impl ModelRuntime {
         Ok(out[0].data[0])
     }
 
-    /// Raw batched inference at the fixed AOT batch size.
-    fn infer_fixed(&mut self, x: Vec<f32>) -> Result<Vec<f32>> {
+    /// Raw batched inference at the fixed AOT batch size. The staged input
+    /// lives in `self.stage` (exactly `infer_batch * row_elems` elements);
+    /// it is loaned into the input tensor and recovered after the call, and
+    /// the output vector is *moved* out of the result tuple rather than
+    /// cloned.
+    fn infer_staged(&mut self) -> Result<Vec<f32>> {
         let b = self.infer_batch;
-        let xt = Tensor::new(self.x_shape(b), x);
-        let out = self.infer.run(&self.store.infer_inputs(xt))?;
-        Ok(out[0].data.clone())
+        debug_assert_eq!(self.stage.len(), b * self.row_elems());
+        let xt = Tensor::new(self.x_shape(b), std::mem::take(&mut self.stage));
+        if self.infer_params_stale {
+            // Rebuild the whole list (clones the params) — happens once at
+            // first use and after each weight update, never per chunk.
+            self.infer_inputs = self.store.infer_inputs(xt);
+            self.infer_params_stale = false;
+        } else {
+            *self.infer_inputs.last_mut().expect("x slot present") = xt;
+        }
+        let result = self.infer.run(&self.infer_inputs);
+        // Recover the staging buffer (x is the last input) before
+        // propagating any execution error. The x slot is left with an empty
+        // data vec; every call overwrites it before running.
+        if let Some(t) = self.infer_inputs.last_mut() {
+            self.stage = std::mem::take(&mut t.data);
+        }
+        let mut out = result?;
+        anyhow::ensure!(!out.is_empty(), "infer returned no outputs");
+        Ok(out.swap_remove(0).data)
     }
 }
 
@@ -118,21 +156,33 @@ impl ReusePredictor for ModelRuntime {
     /// Arbitrary-n prediction: chunks into the fixed AOT batch, zero-padding
     /// the tail. Panics on malformed input length (programmer error).
     fn predict(&mut self, x: &[f32], n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        self.predict_into(x, n, &mut out);
+        out
+    }
+
+    /// Chunked prediction into a caller-owned buffer: the staging chunk and
+    /// the params side of the PJRT input list are reused across calls (see
+    /// `infer_staged`), so the per-chunk allocations left are the PJRT
+    /// literal marshalling and result readback inside `Executable::run`.
+    fn predict_into(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) {
         let row = self.row_elems();
         assert_eq!(x.len(), n * row, "predict input length");
         let b = self.infer_batch;
-        let mut out = Vec::with_capacity(n);
+        out.clear();
+        out.reserve(n);
         let mut i = 0;
         while i < n {
             let take = (n - i).min(b);
-            let mut chunk = vec![0.0f32; b * row];
-            chunk[..take * row].copy_from_slice(&x[i * row..(i + take) * row]);
-            let probs = self.infer_fixed(chunk).expect("inference failed");
+            self.stage.clear();
+            self.stage.extend_from_slice(&x[i * row..(i + take) * row]);
+            // Zero-pad the tail chunk up to the fixed AOT batch shape.
+            self.stage.resize(b * row, 0.0);
+            let probs = self.infer_staged().expect("inference failed");
             out.extend_from_slice(&probs[..take]);
             i += take;
         }
         self.predictions += n as u64;
-        out
     }
 }
 

@@ -97,8 +97,28 @@ impl PredictionBatch {
         self.lines.is_empty()
     }
 
+    /// Buffered lines (parallel to the rows of [`x`](Self::x)).
+    pub fn lines(&self) -> &[u64] {
+        &self.lines
+    }
+
+    /// Buffered feature rows, row-major.
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Reset the batch *in place*, keeping both buffers' capacity — the
+    /// allocation-free alternative to [`take`](Self::take) for loops that
+    /// consume the batch by reference ([`PredictorBox::predict_into`]).
+    pub fn clear(&mut self) {
+        self.lines.clear();
+        self.x.clear();
+    }
+
     /// Drain the buffered batch, leaving an empty queue with its capacity
-    /// preallocated (this runs once per batch on the hot path).
+    /// preallocated. Used where the batch contents must *move* (the serving
+    /// coordinator ships them to the predictor service thread); in-process
+    /// loops use [`clear`](Self::clear) + the accessors instead.
     pub fn take(&mut self) -> (Vec<u64>, Vec<f32>) {
         let lines = std::mem::replace(&mut self.lines, Vec::with_capacity(self.capacity));
         let x = std::mem::replace(&mut self.x, Vec::with_capacity(self.capacity * self.row));
@@ -136,11 +156,18 @@ impl Engine {
         geom: GeometryHints,
         predictor_window: usize,
     ) -> Self {
+        Self::with_hierarchy(Hierarchy::new(hcfg, policy), geom, predictor_window)
+    }
+
+    /// Wrap an already-built hierarchy — the entry point for the sharded
+    /// simulator, whose shards construct sub-hierarchies via
+    /// [`Hierarchy::new_sharded`] and drive each through its own engine.
+    pub fn with_hierarchy(hier: Hierarchy, geom: GeometryHints, predictor_window: usize) -> Self {
         let features_on = predictor_window > 0;
         let window = predictor_window.max(1);
         let row = if predictor_window <= 1 { FEATURE_DIM } else { window * FEATURE_DIM };
         Self {
-            hier: Hierarchy::new(hcfg, policy),
+            hier,
             fx: FeatureExtractor::new(window, geom),
             seq: vec![0.0f32; window * FEATURE_DIM],
             window,
@@ -212,6 +239,12 @@ impl Engine {
         }
     }
 
+    /// Raw EMU accumulator (sum, sample count) for exact cross-shard
+    /// averaging: merged EMU = Σ sums / Σ counts, not a mean of means.
+    pub fn emu_parts(&self) -> (f64, u64) {
+        (self.emu_acc, self.emu_samples)
+    }
+
     pub fn latency_of(&self, lvl: ServiceLevel) -> u64 {
         self.hier.latency_of(lvl)
     }
@@ -240,6 +273,159 @@ pub fn run_workload(
     run_workload_adaptive(cfg, workload, predictor, None)
 }
 
+/// The per-access pipeline around one [`Engine`]: feature observation,
+/// prediction batching + flush, adaptive-controller windows and the legacy
+/// §3.4 interval feedback. Extracted so the single-threaded batch path
+/// ([`run_workload_adaptive`]) and each shard of the set-partitioned
+/// simulator ([`super::shard`]) drive *the same* loop body — the sharded
+/// run cannot diverge from the reference semantics.
+///
+/// Prediction flushes go through [`PredictorBox::predict_into`] with reused
+/// line/feature/probability buffers: the steady-state predict path performs
+/// no per-access heap allocation (asserted by `tests/alloc_predict.rs`).
+pub(crate) struct AccessDriver<'a> {
+    pub engine: Engine,
+    batch: PredictionBatch,
+    probs: Vec<f32>,
+    predictor: &'a mut PredictorBox,
+    controller: Option<&'a mut AdaptiveController>,
+    learner: Option<OnlineLearner>,
+    controller_learns: bool,
+    feedback_interval: usize,
+    prediction_batches: u64,
+    pos: u64,
+}
+
+/// What an [`AccessDriver`] accumulated over its run.
+pub(crate) struct DriverOutcome {
+    pub engine: Engine,
+    pub prediction_batches: u64,
+    /// Legacy interval-feedback Adam steps (0 under a controller, which
+    /// owns adaptation through its own replay learner).
+    pub learner_steps: u64,
+}
+
+impl<'a> AccessDriver<'a> {
+    pub(crate) fn new(
+        cfg: &ExperimentConfig,
+        engine: Engine,
+        predictor: &'a mut PredictorBox,
+        controller: Option<&'a mut AdaptiveController>,
+    ) -> Self {
+        // With a controller attached, its drift-triggered replay learner
+        // owns online adaptation; running the legacy fixed-interval learner
+        // as well would duplicate every feature row into a second replay
+        // buffer and fine-tune the same weights from two uncoordinated
+        // samplers.
+        let learner = if cfg.feedback_interval > 0
+            && predictor.model_mut().is_some()
+            && controller.is_none()
+        {
+            Some(OnlineLearner::new(engine.row(), 4096, cfg.seed))
+        } else {
+            None
+        };
+        // The controller's replay buffer only pays off for trainable
+        // predictors; heuristic runs adapt by throttling and skip the
+        // per-access feature copies entirely.
+        let controller_learns = predictor.model_mut().is_some();
+        let batch = PredictionBatch::new(engine.row(), cfg.predict_batch);
+        Self {
+            engine,
+            batch,
+            probs: Vec::with_capacity(cfg.predict_batch.max(1)),
+            predictor,
+            controller,
+            learner,
+            controller_learns,
+            feedback_interval: cfg.feedback_interval,
+            prediction_batches: 0,
+            pos: 0,
+        }
+    }
+
+    /// Drive one access through the full pipeline.
+    pub(crate) fn drive(&mut self, a: &Access, next_use: Option<u64>) {
+        let i = self.pos;
+        // Throttled controllers demote predictions to policy-default
+        // insertion: rows are not even buffered (let alone inferred) while
+        // throttled — the whole prediction pipeline is the cost the
+        // back-off saves. Replay/telemetry observation continues so the
+        // controller can still decide when to resume or retrain.
+        let apply = self.controller.as_deref().map(|c| c.apply_predictions()).unwrap_or(true);
+        // Touch the controller's unified last-touch map *before* feature
+        // observation so the replay labeler sees the current access.
+        if let Some(c) = self.controller.as_deref_mut() {
+            c.observe_access(i, a.line());
+        }
+        let full = match self.engine.step(a, next_use) {
+            Some(feats) => {
+                if let Some(l) = self.learner.as_mut() {
+                    l.observe(i, a.line(), feats);
+                }
+                if self.controller_learns {
+                    if let Some(c) = self.controller.as_deref_mut() {
+                        c.observe_features(i, a.line(), feats);
+                    }
+                }
+                apply && self.batch.push(a.line(), feats)
+            }
+            None => false,
+        };
+        if full {
+            self.predictor.predict_into(self.batch.x(), self.batch.len(), &mut self.probs);
+            self.prediction_batches += 1;
+            for (&l, &p) in self.batch.lines().iter().zip(&self.probs) {
+                self.engine.update_utility(l, p);
+            }
+            self.batch.clear();
+        }
+
+        // Window boundary: telemetry harvest + drift detection + control.
+        if let Some(c) = self.controller.as_deref_mut() {
+            // Reborrow: the loop keeps using `predictor` afterwards.
+            let access = if self.predictor.is_some() {
+                PredictorAccess::Local(&mut *self.predictor)
+            } else {
+                PredictorAccess::None
+            };
+            let decision = c.maybe_window(self.engine.steps(), &self.engine.hier, access);
+            match decision {
+                // Entering back-off: flush stale utilities so fills really
+                // are policy-default from here on. A hot swap flushes too —
+                // predictions from the pre-drift weights must not keep
+                // steering evictions after the retrain. The partially-
+                // filled batch is dropped for the same reason: its rows
+                // were captured under the old regime and would re-stamp
+                // stale predictions after a later resume/flush.
+                Some(ControlDecision::Throttled) | Some(ControlDecision::Retrained) => {
+                    self.engine.hier.clear_utilities();
+                    self.batch.clear();
+                }
+                Some(ControlDecision::Resumed) | None => {}
+            }
+        }
+
+        // Online feedback (§3.4).
+        if self.feedback_interval > 0 && i > 0 && i as usize % self.feedback_interval == 0 {
+            if let Some(l) = self.learner.as_mut() {
+                if let Some(model) = self.predictor.model_mut() {
+                    l.train(model, 2);
+                }
+            }
+        }
+        self.pos += 1;
+    }
+
+    pub(crate) fn finish(self) -> DriverOutcome {
+        DriverOutcome {
+            engine: self.engine,
+            prediction_batches: self.prediction_batches,
+            learner_steps: self.learner.map(|l| l.steps_run).unwrap_or(0),
+        }
+    }
+}
+
 /// [`run_workload`] with an optional [`AdaptiveController`] closing the
 /// loop: per-access telemetry feeds the controller, predictions are only
 /// applied while the controller allows them (throttle demotes fills to
@@ -252,12 +438,12 @@ pub fn run_workload_adaptive(
     cfg: &ExperimentConfig,
     workload: &mut dyn Workload,
     predictor: &mut PredictorBox,
-    mut controller: Option<&mut AdaptiveController>,
+    controller: Option<&mut AdaptiveController>,
 ) -> SimResult {
     let t0 = Instant::now();
     let geom = GeometryHints::from_generator(&cfg.generator);
     let pw = if predictor.is_some() { predictor.window().max(1) } else { 0 };
-    let mut engine = Engine::new(cfg.hierarchy.clone(), &cfg.policy, geom, pw);
+    let engine = Engine::new(cfg.hierarchy.clone(), &cfg.policy, geom, pw);
 
     // Oracle mode pre-materializes the trace for next-use annotation.
     let (trace_vec, next_use) = if cfg.policy == "belady" {
@@ -268,121 +454,41 @@ pub fn run_workload_adaptive(
         (None, None)
     };
 
-    let mut batch = PredictionBatch::new(engine.row(), cfg.predict_batch);
-    let mut prediction_batches = 0u64;
-    // With a controller attached, its drift-triggered replay learner owns
-    // online adaptation; running the legacy fixed-interval learner as well
-    // would duplicate every feature row into a second replay buffer and
-    // fine-tune the same weights from two uncoordinated samplers.
-    let mut learner = if cfg.feedback_interval > 0
-        && predictor.model_mut().is_some()
-        && controller.is_none()
-    {
-        Some(OnlineLearner::new(engine.row(), 4096, cfg.seed))
-    } else {
-        None
-    };
-    // The controller's replay buffer only pays off for trainable
-    // predictors; heuristic runs adapt by throttling and skip the
-    // per-access feature copies entirely.
-    let controller_learns = predictor.model_mut().is_some();
-
+    let mut driver = AccessDriver::new(cfg, engine, predictor, controller);
     for i in 0..cfg.accesses {
         let a = match &trace_vec {
             Some(tv) => tv[i],
             None => workload.next_access(),
         };
-        // Throttled controllers demote predictions to policy-default
-        // insertion: rows are not even buffered (let alone inferred) while
-        // throttled — the whole prediction pipeline is the cost the
-        // back-off saves. Replay/telemetry observation continues so the
-        // controller can still decide when to resume or retrain.
-        let apply = controller.as_deref().map(|c| c.apply_predictions()).unwrap_or(true);
-        let full = match engine.step(&a, next_use.as_ref().map(|nu| nu[i])) {
-            Some(feats) => {
-                if let Some(l) = learner.as_mut() {
-                    l.observe(i as u64, a.line(), feats);
-                }
-                if controller_learns {
-                    if let Some(c) = controller.as_deref_mut() {
-                        c.observe_features(i as u64, a.line(), feats);
-                    }
-                }
-                apply && batch.push(a.line(), feats)
-            }
-            None => false,
-        };
-        if let Some(c) = controller.as_deref_mut() {
-            c.observe_access(i as u64, a.line());
-        }
-        if full {
-            let (lines, x) = batch.take();
-            let probs = predictor.predict(&x, lines.len());
-            prediction_batches += 1;
-            for (&l, &p) in lines.iter().zip(&probs) {
-                engine.update_utility(l, p);
-            }
-        }
-
-        // Window boundary: telemetry harvest + drift detection + control.
-        if let Some(c) = controller.as_deref_mut() {
-            // Reborrow: the loop keeps using `predictor` afterwards.
-            let access = if predictor.is_some() {
-                PredictorAccess::Local(&mut *predictor)
-            } else {
-                PredictorAccess::None
-            };
-            let decision = c.maybe_window(engine.steps(), &engine.hier, access);
-            match decision {
-                // Entering back-off: flush stale utilities so fills really
-                // are policy-default from here on. A hot swap flushes too —
-                // predictions from the pre-drift weights must not keep
-                // steering evictions after the retrain. The partially-
-                // filled batch is dropped for the same reason: its rows
-                // were captured under the old regime and would re-stamp
-                // stale predictions after a later resume/flush.
-                Some(ControlDecision::Throttled) | Some(ControlDecision::Retrained) => {
-                    engine.hier.clear_utilities();
-                    let _ = batch.take();
-                }
-                Some(ControlDecision::Resumed) | None => {}
-            }
-        }
-
-        // Online feedback (§3.4).
-        if let (Some(l), true) =
-            (learner.as_mut(), cfg.feedback_interval > 0 && i > 0 && i % cfg.feedback_interval == 0)
-        {
-            if let Some(model) = predictor.model_mut() {
-                l.train(model, 2);
-            }
-        }
+        driver.drive(&a, next_use.as_ref().map(|nu| nu[i]));
     }
 
+    let controller_stats = driver.controller.as_deref().map(|c| {
+        (
+            c.windows(),
+            c.drift_count(),
+            c.swap_count(),
+            c.throttled_windows(),
+            c.online_train_steps(),
+        )
+    });
+    let out = driver.finish();
+
     let tokens = workload.tokens_done();
-    let emu = engine.emu();
-    let report = engine.report(&cfg.name, tokens);
+    let emu = out.engine.emu();
+    let report = out.engine.report(&cfg.name, tokens);
     let wall = t0.elapsed().as_secs_f64();
     let (adapt_windows, drift_events, predictor_swaps, throttled_windows, controller_steps) =
-        match controller.as_deref() {
-            Some(c) => (
-                c.windows(),
-                c.drift_count(),
-                c.swap_count(),
-                c.throttled_windows(),
-                c.online_train_steps(),
-            ),
-            None => (0, 0, 0, 0, 0),
-        };
+        controller_stats.unwrap_or((0, 0, 0, 0, 0));
     SimResult {
         report,
         tokens,
         emu,
         predictor: predictor.name(),
-        prediction_batches,
+        prediction_batches: out.prediction_batches,
         // Interval-feedback steps (legacy §3.4) or the controller's
         // drift-triggered replay steps — at most one learner exists.
-        online_train_steps: learner.map(|l| l.steps_run).unwrap_or(0) + controller_steps,
+        online_train_steps: out.learner_steps + controller_steps,
         wall_secs: wall,
         accesses_per_sec: cfg.accesses as f64 / wall,
         adapt_windows,

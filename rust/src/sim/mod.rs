@@ -5,11 +5,14 @@
 //! - [`Engine`] — the shared per-access driving core (any [`crate::trace::Workload`]);
 //! - [`run_experiment`] / [`run_workload`] — batch-mode runs producing a [`SimResult`];
 //! - [`run_workload_adaptive`] — same loop with an [`crate::adapt::AdaptiveController`];
+//! - [`shard`] — set-sharded single-cell simulation: one run split across
+//!   N worker threads by cache-set partition, with exact stat merging;
 //! - [`sweep`] — the multi-threaded policy×scenario×predictor grid runner;
 //! - [`table1`] — the paper's Table 1 pipeline built on the above.
 
 mod engine;
 mod oracle;
+pub mod shard;
 pub mod sweep;
 pub mod table1;
 
@@ -20,5 +23,6 @@ pub use engine::{
     run_experiment, run_workload, run_workload_adaptive, Engine, PredictionBatch, SimResult,
 };
 pub use oracle::annotate_next_use;
+pub use shard::{run_workload_sharded, ShardedRun};
 pub use sweep::{cell_seed, run_sweep, SweepCell, SweepConfig};
 pub use table1::{run_table1, Table1Output, Table1Scale};

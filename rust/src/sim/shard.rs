@@ -1,0 +1,251 @@
+//! Set-sharded single-cell simulation: split *one* policy×scenario run
+//! across N worker threads by cache-set partition.
+//!
+//! Cache sets are independent under every replacement policy we model, so a
+//! set partition is **exact**, not approximate: shard `k` of `N` owns every
+//! line with `line & (N-1) == k`, which — because set counts are powers of
+//! two and `N` divides all of them — carves out the same 1/N slice of the
+//! sets at L1, L2 *and* L3 ([`Hierarchy::new_sharded`]). Each shard runs the
+//! same per-access pipeline as the single-threaded path (the shared
+//! [`super::engine::AccessDriver`]): its own sub-hierarchy, feature
+//! extractor, prediction batch and (optionally) adaptive-controller window.
+//! The workload stream is produced once, in order, and routed into bounded
+//! lock-free SPSC rings ([`crate::util::spsc`]) as per-shard chunks, so the
+//! access path takes no locks.
+//!
+//! Aggregation is exact: [`CacheStats`](crate::mem::CacheStats) /
+//! [`SimResult`] merge by summing monotone counters and recomputing derived
+//! rates ([`MetricsReport::from_hierarchies`]). Consequences:
+//!
+//! - a fully **set-local configuration** — per-set policies at every level
+//!   (lru, srrip, plru, belady; `l3_policy = "srrip"` instead of the
+//!   global-PSEL DRRIP default) and the prefetcher off — reports
+//!   byte-identical aggregate hit rate / pollution / AMAT for *any* shard
+//!   count — asserted by `tests/integration_shard.rs`;
+//! - policies with global state (DIP's/DRRIP's PSEL, SHiP's SHCT),
+//!   history-based prefetchers (stride/correlation tables become
+//!   per-shard, like per-bank prefetch engines) and ML predictors
+//!   (per-shard batch boundaries) are *deterministic for a fixed shard
+//!   count* via seeded per-shard tie-breaks, the same contract LLaMCAT's
+//!   per-bank arbitration provides.
+
+use super::engine::{run_workload_adaptive, AccessDriver, Engine, SimResult};
+use crate::adapt::{AdaptiveController, ControllerConfig, ControllerSummary};
+use crate::config::ExperimentConfig;
+use crate::mem::Hierarchy;
+use crate::metrics::MetricsReport;
+use crate::predictor::{GeometryHints, PredictorBox};
+use crate::trace::{Access, Workload};
+use crate::util::spsc;
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Accesses per routed chunk: big enough that ring-atomic traffic is
+/// amortized to noise, small enough that shards stay busy on skewed
+/// partitions.
+const CHUNK: usize = 1024;
+/// Chunks buffered per shard ring before the producer back-pressures.
+const RING_CHUNKS: usize = 8;
+
+const SHARD_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One access plus its Belady next-use annotation (`u64::MAX` = none).
+type Item = (Access, u64);
+
+/// Everything a finished shard hands back for the exact merge.
+struct ShardOut {
+    hier: Hierarchy,
+    emu_acc: f64,
+    emu_samples: u64,
+    steps: u64,
+    prediction_batches: u64,
+    train_steps: u64,
+    predictor_name: String,
+    adapt: Option<(u64, u64, u64, u64)>, // windows, drifts, swaps, throttled
+    summary: Option<ControllerSummary>,
+}
+
+/// Result of a sharded run: the exactly-merged [`SimResult`] plus the
+/// per-shard controller summaries of adaptive runs (empty otherwise).
+pub struct ShardedRun {
+    pub result: SimResult,
+    pub controllers: Vec<ControllerSummary>,
+}
+
+/// Run one simulation cell split across `shards` worker threads by L2 set
+/// index. `mk_predictor` is invoked once *inside* each shard thread (PJRT
+/// executables are thread-affine); `ccfg` attaches a per-shard
+/// [`AdaptiveController`] (seeded per shard). `shards <= 1` is exactly the
+/// single-threaded [`run_workload_adaptive`] path.
+pub fn run_workload_sharded(
+    cfg: &ExperimentConfig,
+    workload: &mut dyn Workload,
+    shards: usize,
+    mk_predictor: &(dyn Fn(usize) -> PredictorBox + Sync),
+    ccfg: Option<&ControllerConfig>,
+) -> Result<ShardedRun> {
+    if shards <= 1 {
+        let mut predictor = mk_predictor(0);
+        let mut controller = ccfg.map(|c| AdaptiveController::new(c.clone()));
+        let result = run_workload_adaptive(cfg, workload, &mut predictor, controller.as_mut());
+        let controllers = controller.map(|c| vec![c.into_summary()]).unwrap_or_default();
+        return Ok(ShardedRun { result, controllers });
+    }
+    cfg.hierarchy
+        .validate_shards(shards)
+        .map_err(|e| anyhow!("cannot shard this hierarchy: {e}"))?;
+
+    let t0 = Instant::now();
+    let geom = GeometryHints::from_generator(&cfg.generator);
+    let mask = shards as u64 - 1;
+
+    // Oracle mode pre-materializes the trace for next-use annotation (the
+    // annotations carry *global* positions; within a set — and therefore
+    // within a shard — their ordering is exactly the unsharded one).
+    let (trace_vec, next_use) = if cfg.policy == "belady" {
+        let tv = workload.generate(cfg.accesses);
+        let nu = super::oracle::annotate_next_use(&tv);
+        (Some(tv), Some(nu))
+    } else {
+        (None, None)
+    };
+
+    let mut producers = Vec::with_capacity(shards);
+    let mut consumers = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = spsc::channel::<Vec<Item>>(RING_CHUNKS);
+        producers.push(tx);
+        consumers.push(rx);
+    }
+
+    let outs: Vec<ShardOut> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(shards);
+        for (k, mut rx) in consumers.into_iter().enumerate() {
+            handles.push(s.spawn(move || {
+                let hier = Hierarchy::new_sharded(cfg.hierarchy.clone(), &cfg.policy, k, shards);
+                let mut predictor = mk_predictor(k);
+                let pw = if predictor.is_some() { predictor.window().max(1) } else { 0 };
+                let engine = Engine::with_hierarchy(hier, geom, pw);
+                let mut controller = ccfg.map(|c| {
+                    let mut cc = c.clone();
+                    cc.seed ^= (k as u64).wrapping_mul(SHARD_SEED_MIX);
+                    AdaptiveController::new(cc)
+                });
+                let mut driver =
+                    AccessDriver::new(cfg, engine, &mut predictor, controller.as_mut());
+                while let Some(chunk) = rx.pop() {
+                    for (a, nu) in chunk {
+                        driver.drive(&a, (nu != u64::MAX).then_some(nu));
+                    }
+                }
+                let out = driver.finish();
+                let (emu_acc, emu_samples) = out.engine.emu_parts();
+                let steps = out.engine.steps();
+                let (adapt, controller_steps, summary) = match controller {
+                    Some(c) => {
+                        let counters =
+                            (c.windows(), c.drift_count(), c.swap_count(), c.throttled_windows());
+                        let steps = c.online_train_steps();
+                        (Some(counters), steps, Some(c.into_summary()))
+                    }
+                    None => (None, 0, None),
+                };
+                ShardOut {
+                    hier: out.engine.hier,
+                    emu_acc,
+                    emu_samples,
+                    steps,
+                    prediction_batches: out.prediction_batches,
+                    train_steps: out.learner_steps + controller_steps,
+                    predictor_name: predictor.name(),
+                    adapt,
+                    summary,
+                }
+            }));
+        }
+
+        // Producer: route the single ordered stream into per-shard chunks.
+        let mut staging: Vec<Vec<Item>> =
+            (0..shards).map(|_| Vec::with_capacity(CHUNK)).collect();
+        for i in 0..cfg.accesses {
+            let a = match &trace_vec {
+                Some(tv) => tv[i],
+                None => workload.next_access(),
+            };
+            let nu = next_use.as_ref().map(|v| v[i]).unwrap_or(u64::MAX);
+            let k = (a.line() & mask) as usize;
+            staging[k].push((a, nu));
+            if staging[k].len() == CHUNK {
+                let chunk = std::mem::replace(&mut staging[k], Vec::with_capacity(CHUNK));
+                producers[k].push(chunk);
+            }
+        }
+        for (k, st) in staging.into_iter().enumerate() {
+            if !st.is_empty() {
+                producers[k].push(st);
+            }
+        }
+        for p in &mut producers {
+            p.close();
+        }
+
+        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+    });
+
+    Ok(merge_shards(cfg, outs, workload.tokens_done(), t0.elapsed().as_secs_f64()))
+}
+
+/// Exact merge of the per-shard outcomes into one [`SimResult`].
+fn merge_shards(cfg: &ExperimentConfig, outs: Vec<ShardOut>, tokens: u64, wall: f64) -> ShardedRun {
+    debug_assert_eq!(
+        outs.iter().map(|o| o.steps).sum::<u64>(),
+        cfg.accesses as u64,
+        "every access must be routed to exactly one shard"
+    );
+    let emu_acc: f64 = outs.iter().map(|o| o.emu_acc).sum();
+    let emu_n: u64 = outs.iter().map(|o| o.emu_samples).sum();
+    let emu = if emu_n > 0 { emu_acc / emu_n as f64 } else { f64::NAN };
+    let hiers: Vec<&Hierarchy> = outs.iter().map(|o| &o.hier).collect();
+    let report = MetricsReport::from_hierarchies(&cfg.name, &hiers, tokens, emu);
+    let prediction_batches: u64 = outs.iter().map(|o| o.prediction_batches).sum();
+    let online_train_steps: u64 = outs.iter().map(|o| o.train_steps).sum();
+    let (mut aw, mut de, mut ps, mut tw) = (0u64, 0u64, 0u64, 0u64);
+    for o in &outs {
+        if let Some((w, d, p, t)) = o.adapt {
+            aw += w;
+            de += d;
+            ps += p;
+            tw += t;
+        }
+    }
+    // Provenance: shards normally run the same predictor, but per-shard
+    // artifact-load fallbacks can differ — report that honestly instead of
+    // letting shard 0 speak for everyone.
+    let mut names: Vec<String> = outs.iter().map(|o| o.predictor_name.clone()).collect();
+    names.sort();
+    names.dedup();
+    let predictor = match names.len() {
+        0 => "none".to_string(),
+        1 => names.pop().expect("one name"),
+        _ => format!("mixed({})", names.join("+")),
+    };
+    let controllers: Vec<ControllerSummary> =
+        outs.into_iter().filter_map(|o| o.summary).collect();
+    ShardedRun {
+        result: SimResult {
+            report,
+            tokens,
+            emu,
+            predictor,
+            prediction_batches,
+            online_train_steps,
+            wall_secs: wall,
+            accesses_per_sec: cfg.accesses as f64 / wall,
+            adapt_windows: aw,
+            drift_events: de,
+            predictor_swaps: ps,
+            throttled_windows: tw,
+        },
+        controllers,
+    }
+}

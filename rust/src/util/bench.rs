@@ -1,8 +1,15 @@
 //! Bench timing harness. `criterion` is not present in the offline registry,
 //! so `cargo bench` targets (declared `harness = false`) use this module:
 //! warmup + repeated timed runs, reporting mean ± 95% CI, min, and throughput.
+//!
+//! Benches that feed the repo's perf trajectory additionally record their
+//! results through [`BenchJson`], which merges them into a machine-readable
+//! `BENCH_sim.json` (schema `acpc-bench-v1`) so CI can archive
+//! accesses/second and shard-scaling curves across commits.
 
+use super::json::Json;
 use super::stats::Welford;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -18,6 +25,20 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("ci95_ns", Json::Num(self.ci95_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+        ];
+        if let Some(tp) = self.throughput {
+            pairs.push(("items_per_sec", Json::Num(tp)));
+        }
+        Json::from_pairs(pairs)
+    }
+
     pub fn report(&self) -> String {
         let t = fmt_ns(self.mean_ns);
         let ci = fmt_ns(self.ci95_ns);
@@ -91,6 +112,96 @@ impl Bench {
     }
 }
 
+/// Bench scale selector: `ACPC_BENCH_SCALE=smoke` shrinks workloads for CI
+/// smoke runs; anything else (or unset) is the full scale.
+pub fn bench_scale() -> &'static str {
+    match std::env::var("ACPC_BENCH_SCALE").as_deref() {
+        Ok("smoke") => "smoke",
+        _ => "full",
+    }
+}
+
+/// Machine-readable perf-trajectory sink: collects one bench binary's
+/// results plus arbitrary extra series (e.g. a shard-scaling curve) and
+/// merges them into `BENCH_sim.json` under a stable schema:
+///
+/// ```json
+/// {
+///   "schema": "acpc-bench-v1",
+///   "benches": {
+///     "<bench>": { "scale": "full|smoke",
+///                  "results": [{"name", "iters", "mean_ns", "ci95_ns",
+///                               "min_ns", "items_per_sec"?}, ...],
+///                  ...extra keys... }
+///   }
+/// }
+/// ```
+///
+/// The file path is `$ACPC_BENCH_JSON` or `BENCH_sim.json` in the working
+/// directory; other benches' sections are preserved on merge, so running
+/// the bench suite accumulates one trajectory file.
+pub struct BenchJson {
+    bench: String,
+    results: Vec<Json>,
+    extra: Vec<(String, Json)>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), results: Vec::new(), extra: Vec::new() }
+    }
+
+    /// Record one timed case.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.to_json());
+    }
+
+    /// Attach an extra series/value under the bench's section.
+    pub fn set(&mut self, key: &str, value: Json) {
+        self.extra.push((key.to_string(), value));
+    }
+
+    /// Resolved output path.
+    pub fn path() -> PathBuf {
+        std::env::var("ACPC_BENCH_JSON").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from("BENCH_sim.json")
+        })
+    }
+
+    /// Merge this bench's section into the trajectory file and write it.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = Self::path();
+        self.write_to(&path)?;
+        Ok(path)
+    }
+
+    /// [`write`](Self::write) to an explicit path (tests / custom sinks).
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        // Start from the existing file when it parses; a corrupt or absent
+        // file is replaced wholesale.
+        let mut root = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .filter(|j| j.as_obj().is_some())
+            .unwrap_or_else(Json::obj);
+        root.set("schema", Json::Str("acpc-bench-v1".into()));
+        let mut benches = root.get("benches").cloned().unwrap_or_else(Json::obj);
+        if benches.as_obj().is_none() {
+            benches = Json::obj();
+        }
+        let mut section = Json::from_pairs(vec![
+            ("scale", Json::Str(bench_scale().into())),
+            ("results", Json::Arr(self.results.clone())),
+        ]);
+        for (k, v) in &self.extra {
+            section.set(k, v.clone());
+        }
+        benches.set(&self.bench, section);
+        root.set("benches", benches);
+        std::fs::write(path, root.to_pretty())
+    }
+}
+
 /// Prevent the optimizer from discarding a computed value
 /// (stable-rust black_box).
 #[inline]
@@ -146,5 +257,49 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e10).contains('s'));
+    }
+
+    /// Two benches writing to the same trajectory file must each keep their
+    /// section, and a rewrite must replace (not duplicate) a section.
+    #[test]
+    fn bench_json_merges_sections() {
+        let dir = std::env::temp_dir().join("acpc_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_sim.json");
+        let _ = std::fs::remove_file(&path);
+
+        let r = BenchResult {
+            name: "case_a".into(),
+            iters: 5,
+            mean_ns: 1000.0,
+            ci95_ns: 10.0,
+            min_ns: 900.0,
+            throughput: Some(1e6),
+        };
+        let mut a = BenchJson::new("alpha");
+        a.push(&r);
+        a.set("extra_curve", Json::array_f64(&[1.0, 2.0]));
+        a.write_to(&path).unwrap();
+
+        let mut b = BenchJson::new("beta");
+        b.push(&r);
+        b.write_to(&path).unwrap();
+
+        // Re-run alpha: replaces its section.
+        a.write_to(&path).unwrap();
+
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("acpc-bench-v1"));
+        let benches = j.get("benches").unwrap();
+        for name in ["alpha", "beta"] {
+            let sec = benches.get(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(sec.get("scale").is_some());
+            let results = sec.get("results").unwrap().as_arr().unwrap();
+            assert_eq!(results.len(), 1);
+            assert_eq!(results[0].get("name").unwrap().as_str(), Some("case_a"));
+            assert!(results[0].get("items_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert!(benches.get("alpha").unwrap().get("extra_curve").is_some());
+        let _ = std::fs::remove_file(&path);
     }
 }

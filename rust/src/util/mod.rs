@@ -10,4 +10,5 @@ pub mod log;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod spsc;
 pub mod stats;

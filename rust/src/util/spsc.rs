@@ -1,0 +1,242 @@
+//! Bounded single-producer/single-consumer ring for the sharded simulator's
+//! access distribution path.
+//!
+//! The offline registry carries no `crossbeam`, and `std::sync::mpsc` takes
+//! a lock per send under contention, so the shard splitter ships access
+//! chunks through this minimal lock-free ring instead: one atomic store per
+//! push and one per pop, wait-free on both sides except when the ring is
+//! full/empty (the caller spins with `yield_now`). The SPSC discipline is
+//! enforced by the type system — [`channel`] hands out exactly one
+//! [`Producer`] and one [`Consumer`], neither of which is `Clone`.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct Ring<T> {
+    slots: Box<[UnsafeCell<Option<T>>]>,
+    /// Next slot the consumer will read (monotone; slot = head % cap).
+    head: AtomicU64,
+    /// Next slot the producer will write (monotone; slot = tail % cap).
+    tail: AtomicU64,
+    closed: AtomicBool,
+    /// Consumer handle dropped (normally or by a panicking thread). A
+    /// blocking push must not spin forever on a full ring nobody will ever
+    /// drain — it discards instead, so a panicked shard worker surfaces as
+    /// a join error rather than a producer livelock.
+    receiver_gone: AtomicBool,
+}
+
+/// Escalating wait: stay on `yield_now` for a while (fast path when the
+/// peer is merely behind), then back off to short sleeps so starved sides
+/// of an oversubscribed run stop burning whole cores.
+fn backoff(spins: &mut u32) {
+    *spins = spins.saturating_add(1);
+    if *spins < 64 {
+        std::thread::yield_now();
+    } else {
+        std::thread::sleep(std::time::Duration::from_micros(50));
+    }
+}
+
+// The producer only writes slots in [tail, head+cap) and the consumer only
+// reads slots in [head, tail); the acquire/release pair on `tail` (push →
+// pop) and `head` (pop → push) orders the slot contents between the two
+// threads. Safe *only* under the one-producer/one-consumer discipline the
+// public handles enforce.
+unsafe impl<T: Send> Sync for Ring<T> {}
+unsafe impl<T: Send> Send for Ring<T> {}
+
+/// Producer handle: push values, then [`Producer::close`] (or drop) to let
+/// the consumer drain and terminate.
+pub struct Producer<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Consumer handle: pop until [`Consumer::pop`] returns `None` *and*
+/// [`Consumer::is_closed`] — an empty ring alone may just mean the producer
+/// is momentarily behind.
+pub struct Consumer<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Build a bounded SPSC channel with room for `capacity` in-flight values.
+pub fn channel<T: Send>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    let capacity = capacity.max(1);
+    let slots: Box<[UnsafeCell<Option<T>>]> =
+        (0..capacity).map(|_| UnsafeCell::new(None)).collect();
+    let ring = Arc::new(Ring {
+        slots,
+        head: AtomicU64::new(0),
+        tail: AtomicU64::new(0),
+        closed: AtomicBool::new(false),
+        receiver_gone: AtomicBool::new(false),
+    });
+    (Producer { ring: Arc::clone(&ring) }, Consumer { ring })
+}
+
+impl<T: Send> Producer<T> {
+    /// Non-blocking push; returns the value back when the ring is full.
+    pub fn try_push(&mut self, v: T) -> Result<(), T> {
+        let ring = &*self.ring;
+        let tail = ring.tail.load(Ordering::Relaxed);
+        let head = ring.head.load(Ordering::Acquire);
+        if tail - head >= ring.slots.len() as u64 {
+            return Err(v);
+        }
+        let slot = (tail % ring.slots.len() as u64) as usize;
+        // SAFETY: slot index is in (head+cap)-exclusive producer territory;
+        // the consumer will not touch it until tail is published below.
+        unsafe {
+            *ring.slots[slot].get() = Some(v);
+        }
+        ring.tail.store(tail + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Blocking push: waits (escalating backoff) while the ring is full.
+    /// If the consumer is gone — dropped normally or unwound by a panic —
+    /// the value is *discarded* instead of blocking forever: the stream has
+    /// no reader, and the caller's join of the consumer thread reports why.
+    pub fn push(&mut self, mut v: T) {
+        let mut spins = 0u32;
+        loop {
+            if self.ring.receiver_gone.load(Ordering::Acquire) {
+                return;
+            }
+            match self.try_push(v) {
+                Ok(()) => return,
+                Err(back) => {
+                    v = back;
+                    backoff(&mut spins);
+                }
+            }
+        }
+    }
+
+    /// Signal end-of-stream. Also performed on drop.
+    pub fn close(&mut self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T> Drop for Producer<T> {
+    fn drop(&mut self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T: Send> Consumer<T> {
+    /// Non-blocking pop; `None` when the ring is momentarily empty.
+    pub fn try_pop(&mut self) -> Option<T> {
+        let ring = &*self.ring;
+        let head = ring.head.load(Ordering::Relaxed);
+        let tail = ring.tail.load(Ordering::Acquire);
+        if tail == head {
+            return None;
+        }
+        let slot = (head % ring.slots.len() as u64) as usize;
+        // SAFETY: slot is in [head, tail) consumer territory; the producer
+        // will not reuse it until head is published below.
+        let v = unsafe { (*ring.slots[slot].get()).take() };
+        ring.head.store(head + 1, Ordering::Release);
+        v
+    }
+
+    /// Blocking pop: waits (escalating backoff) while the ring is empty;
+    /// `None` only after the producer closed *and* the ring fully drained.
+    pub fn pop(&mut self) -> Option<T> {
+        let mut spins = 0u32;
+        loop {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            if self.is_closed() {
+                // Re-check: the producer may have pushed between the empty
+                // try_pop and the closed read.
+                return self.try_pop();
+            }
+            backoff(&mut spins);
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.ring.closed.load(Ordering::Acquire)
+    }
+}
+
+impl<T> Drop for Consumer<T> {
+    fn drop(&mut self) {
+        self.ring.receiver_gone.store(true, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let (mut tx, mut rx) = channel::<u32>(4);
+        for i in 0..4 {
+            tx.try_push(i).unwrap();
+        }
+        assert!(tx.try_push(99).is_err(), "full ring rejects");
+        for i in 0..4 {
+            assert_eq!(rx.try_pop(), Some(i));
+        }
+        assert_eq!(rx.try_pop(), None);
+        // Space freed: push works again (indices keep counting up).
+        tx.try_push(7).unwrap();
+        assert_eq!(rx.try_pop(), Some(7));
+    }
+
+    #[test]
+    fn close_terminates_consumer() {
+        let (mut tx, mut rx) = channel::<u8>(2);
+        tx.push(1);
+        tx.close();
+        assert_eq!(rx.pop(), Some(1));
+        assert_eq!(rx.pop(), None, "closed + drained");
+    }
+
+    #[test]
+    fn cross_thread_stream_is_lossless_and_ordered() {
+        let n = 200_000u64;
+        let (mut tx, mut rx) = channel::<u64>(64);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for i in 0..n {
+                    tx.push(i);
+                }
+                // Producer drop closes the ring.
+            });
+            let mut expect = 0u64;
+            while let Some(v) = rx.pop() {
+                assert_eq!(v, expect);
+                expect += 1;
+            }
+            assert_eq!(expect, n);
+        });
+    }
+
+    #[test]
+    fn drop_of_producer_closes() {
+        let (tx, mut rx) = channel::<u8>(2);
+        drop(tx);
+        assert!(rx.is_closed());
+        assert_eq!(rx.pop(), None);
+    }
+
+    /// A dead consumer (e.g. a panicked shard worker) must not deadlock the
+    /// producer: blocking pushes discard instead of spinning forever.
+    #[test]
+    fn push_does_not_block_after_consumer_drop() {
+        let (mut tx, rx) = channel::<u32>(1);
+        tx.push(1); // ring now full
+        drop(rx);
+        // Would spin forever without the receiver_gone check.
+        tx.push(2);
+        tx.push(3);
+    }
+}

@@ -1,0 +1,182 @@
+//! Integration tests for the set-sharded simulator: exact aggregate
+//! invariance across shard counts for set-local configurations,
+//! per-shard-count determinism for ML-predictor and adaptive runs, and
+//! validation of unshardable inputs.
+
+use acpc::adapt::{run_compare_sharded, ControllerConfig};
+use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::metrics::MetricsReport;
+use acpc::predictor::{HeuristicPredictor, PredictorBox};
+use acpc::sim::{run_workload_sharded, ShardedRun};
+
+/// Assert every aggregate metric is bit-identical, *except* EMU: EMU is a
+/// time-sampled statistic and the sampling instants are shard-local (every
+/// 8192 shard-steps), so it is the one field that is only approximately
+/// shard-invariant. All event-counter-derived metrics must match exactly.
+fn assert_reports_match(a: &MetricsReport, b: &MetricsReport, ctx: &str) {
+    assert_eq!(a.policy, b.policy, "{ctx}: policy");
+    assert_eq!(a.accesses, b.accesses, "{ctx}: accesses");
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+    assert_eq!(a.l1_hit_rate.to_bits(), b.l1_hit_rate.to_bits(), "{ctx}: l1_hit_rate");
+    assert_eq!(a.l2_hit_rate.to_bits(), b.l2_hit_rate.to_bits(), "{ctx}: l2_hit_rate");
+    assert_eq!(a.l3_hit_rate.to_bits(), b.l3_hit_rate.to_bits(), "{ctx}: l3_hit_rate");
+    assert_eq!(
+        a.l2_pollution_ratio.to_bits(),
+        b.l2_pollution_ratio.to_bits(),
+        "{ctx}: l2_pollution_ratio"
+    );
+    assert_eq!(a.l2_dead_prefetch_evictions, b.l2_dead_prefetch_evictions, "{ctx}: dead pf");
+    assert_eq!(
+        a.l2_demand_evicted_by_prefetch, b.l2_demand_evicted_by_prefetch,
+        "{ctx}: evicted-by-pf"
+    );
+    assert_eq!(a.l2_miss_cycles, b.l2_miss_cycles, "{ctx}: l2_miss_cycles");
+    assert_eq!(a.amat.to_bits(), b.amat.to_bits(), "{ctx}: amat");
+    assert_eq!(a.prefetches_issued, b.prefetches_issued, "{ctx}: prefetches_issued");
+    assert_eq!(a.total_latency, b.total_latency, "{ctx}: total_latency");
+}
+
+fn cfg_for(
+    policy: &str,
+    predictor: PredictorKind,
+    prefetcher: &str,
+    accesses: usize,
+) -> ExperimentConfig {
+    let mut cfg =
+        ExperimentConfig::for_scenario("decode-heavy", policy, predictor, 0x51AB_D5EE).unwrap();
+    cfg.accesses = accesses;
+    cfg.hierarchy.prefetcher = prefetcher.into();
+    cfg
+}
+
+/// A fully set-local configuration: every level's policy is per-set state
+/// only (the default DRRIP LLC carries a global PSEL + RNG and is therefore
+/// only deterministic per shard count, not shard-count-invariant).
+fn set_local_cfg(policy: &str, accesses: usize) -> ExperimentConfig {
+    let mut cfg = cfg_for(policy, PredictorKind::None, "none", accesses);
+    cfg.hierarchy.l3_policy = "srrip".into();
+    cfg
+}
+
+fn run_sharded(cfg: &ExperimentConfig, shards: usize, kind: PredictorKind) -> ShardedRun {
+    let mk = move |_s: usize| -> PredictorBox {
+        match kind {
+            PredictorKind::Heuristic => PredictorBox::Heuristic(HeuristicPredictor),
+            _ => PredictorBox::None,
+        }
+    };
+    let mut w = cfg.workload();
+    run_workload_sharded(cfg, w.as_mut(), shards, &mk, None).expect("sharded run")
+}
+
+/// Classic set-local policies with the prefetcher off: aggregate metrics
+/// must be byte-identical for shards ∈ {1, 2, 8} — the set partition is
+/// exact, not approximate.
+#[test]
+fn classic_policies_invariant_across_shard_counts() {
+    for policy in ["lru", "srrip"] {
+        let cfg = set_local_cfg(policy, 120_000);
+        let reference = run_sharded(&cfg, 1, PredictorKind::None);
+        for shards in [2usize, 8] {
+            let run = run_sharded(&cfg, shards, PredictorKind::None);
+            assert_reports_match(
+                &run.result.report,
+                &reference.result.report,
+                &format!("{policy} @ {shards} shards"),
+            );
+            assert_eq!(run.result.report.accesses, 120_000, "{policy}");
+            assert_eq!(run.result.tokens, reference.result.tokens, "{policy}");
+        }
+    }
+}
+
+/// The belady oracle annotates next-use with *global* positions, which
+/// stay comparable inside each set — sharded belady must match too.
+#[test]
+fn belady_oracle_invariant_across_shard_counts() {
+    let cfg = set_local_cfg("belady", 60_000);
+    let a = run_sharded(&cfg, 1, PredictorKind::None);
+    let b = run_sharded(&cfg, 4, PredictorKind::None);
+    assert_reports_match(&a.result.report, &b.result.report, "belady @ 4 shards");
+}
+
+/// With the composite prefetcher the history tables become per-shard, so
+/// aggregates may shift slightly across shard counts — but a fixed shard
+/// count must stay fully deterministic, and every access must be simulated.
+#[test]
+fn prefetching_runs_deterministic_per_shard_count() {
+    let cfg = cfg_for("lru", PredictorKind::None, "composite", 80_000);
+    let a = run_sharded(&cfg, 4, PredictorKind::None);
+    let b = run_sharded(&cfg, 4, PredictorKind::None);
+    assert_eq!(
+        a.result.report.to_json().to_pretty(),
+        b.result.report.to_json().to_pretty()
+    );
+    assert_eq!(a.result.report.accesses, 80_000);
+}
+
+/// ML-policy runs (`acpc` + heuristic predictor): per-shard batching makes
+/// shard counts distinct regimes, but each is deterministic, simulates the
+/// full stream, and actually exercises the prediction pipeline per shard.
+#[test]
+fn heuristic_predictor_deterministic_per_shard_count() {
+    let cfg = cfg_for("acpc", PredictorKind::Heuristic, "composite", 100_000);
+    let a = run_sharded(&cfg, 8, PredictorKind::Heuristic);
+    let b = run_sharded(&cfg, 8, PredictorKind::Heuristic);
+    assert_eq!(
+        a.result.report.to_json().to_pretty(),
+        b.result.report.to_json().to_pretty()
+    );
+    assert_eq!(a.result.prediction_batches, b.result.prediction_batches);
+    assert!(a.result.prediction_batches > 0, "predictor must have run in the shards");
+    assert_eq!(a.result.report.accesses, 100_000);
+}
+
+/// Sharded adaptive runs: one controller per shard, drift detection and
+/// event logs deterministic for a fixed shard count; the merged summary
+/// carries the per-shard telemetry.
+#[test]
+fn sharded_adaptive_drift_is_deterministic() {
+    let mut cfg = ExperimentConfig::for_scenario(
+        "multi-tenant-mix",
+        "acpc",
+        PredictorKind::Heuristic,
+        0xD51F7,
+    )
+    .unwrap();
+    cfg.accesses = 120_000;
+    let mut ccfg = ControllerConfig::quick();
+    ccfg.window_accesses = 2048;
+    let mk = |_s: usize| PredictorBox::Heuristic(HeuristicPredictor);
+    let a = run_compare_sharded(&cfg, &ccfg, 4, &mk).unwrap();
+    let b = run_compare_sharded(&cfg, &ccfg, 4, &mk).unwrap();
+    assert_eq!(a.summary.drift_windows, b.summary.drift_windows);
+    assert_eq!(a.summary.swaps, b.summary.swaps);
+    assert_eq!(a.summary.throttled_windows, b.summary.throttled_windows);
+    assert_eq!(a.summary.events.len(), b.summary.events.len());
+    assert_eq!(
+        a.adaptive.report.to_json().to_pretty(),
+        b.adaptive.report.to_json().to_pretty()
+    );
+    assert!(a.summary.windows_observed > 0, "per-shard controllers must tick windows");
+    // Both arms simulated the full stream.
+    assert_eq!(a.baseline.report.accesses, 120_000);
+    assert_eq!(a.adaptive.report.accesses, 120_000);
+}
+
+/// Unshardable inputs are rejected up front, not deep in a worker thread.
+#[test]
+fn invalid_shard_counts_rejected() {
+    let cfg = cfg_for("lru", PredictorKind::None, "none", 10_000);
+    let mk = |_s: usize| PredictorBox::None;
+    let mut w = cfg.workload();
+    assert!(
+        run_workload_sharded(&cfg, w.as_mut(), 3, &mk, None).is_err(),
+        "non-power-of-two shard count"
+    );
+    let mut w = cfg.workload();
+    assert!(
+        run_workload_sharded(&cfg, w.as_mut(), 64, &mk, None).is_err(),
+        "more shards than the smallest level's set count"
+    );
+}
