@@ -2,12 +2,12 @@
 //! with the heuristic predictor held fixed — how much does blending
 //! prediction (α→1) vs frequency (α→0) matter?
 //!
-//! Runs the sweep in parallel over the thread pool.
+//! Runs the sweep in parallel over the thread pool; each α point is one
+//! `RunSpec` executed through the unified `Runner`.
 //! `ACPC_BENCH_SCALE=smoke` shrinks the per-point trace.
 
-use acpc::config::{ExperimentConfig, PredictorKind};
-use acpc::predictor::{HeuristicPredictor, PredictorBox};
-use acpc::sim::run_experiment;
+use acpc::api::{RunReport, RunSpec, Runner};
+use acpc::config::PredictorKind;
 use acpc::util::bench::print_table;
 use acpc::util::pool::{default_threads, run_parallel};
 
@@ -19,12 +19,14 @@ fn main() {
     let jobs: Vec<_> = alphas
         .iter()
         .map(|&alpha| {
-            move || {
-                let mut cfg =
-                    ExperimentConfig::table1(&format!("acpc@{alpha}"), PredictorKind::Heuristic);
-                cfg.accesses = accesses;
-                let mut predictor = PredictorBox::Heuristic(HeuristicPredictor);
-                (alpha, run_experiment(&cfg, &mut predictor))
+            move || -> (f64, RunReport) {
+                let spec = RunSpec::builder()
+                    .policy(&format!("acpc@{alpha}"))
+                    .predictor(PredictorKind::Heuristic)
+                    .accesses(accesses)
+                    .build()
+                    .expect("valid alpha spec");
+                (alpha, Runner::new(spec).expect("resolve").run().expect("run"))
             }
         })
         .collect();
@@ -35,10 +37,10 @@ fn main() {
         .map(|(alpha, r)| {
             vec![
                 format!("{alpha:.2}"),
-                format!("{:.1}", r.report.l2_hit_rate * 100.0),
-                format!("{:.2}", r.report.l2_pollution_ratio * 100.0),
-                format!("{:.2}", r.report.amat),
-                format!("{:.2}", r.emu),
+                format!("{:.1}", r.result.report.l2_hit_rate * 100.0),
+                format!("{:.2}", r.result.report.l2_pollution_ratio * 100.0),
+                format!("{:.2}", r.result.report.amat),
+                format!("{:.2}", r.result.emu),
             ]
         })
         .collect();
@@ -48,7 +50,7 @@ fn main() {
         &rows,
     );
 
-    let chr = |i: usize| results[i].1.report.l2_hit_rate;
+    let chr = |i: usize| results[i].1.result.report.l2_hit_rate;
     println!(
         "\nmid-range best CHR {:.3} vs extremes (α=0: {:.3}, α=1: {:.3})",
         chr(2).max(chr(3)).max(chr(4)),

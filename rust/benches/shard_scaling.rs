@@ -1,34 +1,40 @@
 //! Bench: set-sharded single-cell throughput — accesses/second for one
 //! decode-heavy simulation cell as `--shards` scales, plus the exactness
 //! check (aggregate metrics identical across shard counts for a set-local
-//! configuration).
+//! configuration). Every run is a `RunSpec` executed through the unified
+//! `Runner` — the same code path as the CLI and the library.
 //!
 //! `ACPC_BENCH_SCALE=smoke` shrinks the trace. Results (including the
 //! scaling curve and per-shard-count speedups) merge into `BENCH_sim.json`
 //! for the machine-readable perf trajectory.
 
-use acpc::config::{ExperimentConfig, PredictorKind};
-use acpc::predictor::{HeuristicPredictor, PredictorBox};
-use acpc::sim::run_workload_sharded;
+use acpc::api::{RunReport, RunSpec, Runner};
+use acpc::config::PredictorKind;
 use acpc::util::bench::{bench_scale, Bench, BenchJson};
 use acpc::util::json::Json;
 use acpc::util::pool::default_threads;
 
-fn cell_cfg(policy: &str, accesses: usize, prefetcher: &str) -> ExperimentConfig {
-    let mut cfg =
-        ExperimentConfig::for_scenario("decode-heavy", policy, PredictorKind::None, 0x5CA1E)
-            .expect("decode-heavy registered");
-    cfg.accesses = accesses;
-    cfg.hierarchy.prefetcher = prefetcher.into();
-    cfg
+fn cell_spec(
+    policy: &str,
+    kind: PredictorKind,
+    accesses: usize,
+    prefetcher: &str,
+    shards: usize,
+) -> RunSpec {
+    RunSpec::builder()
+        .scenario("decode-heavy")
+        .policy(policy)
+        .predictor(kind)
+        .accesses(accesses)
+        .seed(0x5CA1E)
+        .prefetcher(prefetcher)
+        .shards(shards)
+        .build()
+        .expect("valid bench spec")
 }
 
-fn mk_none(_shard: usize) -> PredictorBox {
-    PredictorBox::None
-}
-
-fn mk_heuristic(_shard: usize) -> PredictorBox {
-    PredictorBox::Heuristic(HeuristicPredictor)
+fn run(spec: RunSpec) -> RunReport {
+    Runner::new(spec).expect("resolve").run().expect("sharded run")
 }
 
 fn main() {
@@ -52,11 +58,8 @@ fn main() {
     // prefetcher, per-shard prefetch engines).
     let mut curve: Vec<f64> = Vec::new();
     for &shards in &shard_counts {
-        let cfg = cell_cfg("lru", accesses, "composite");
         let r = bench.run(&format!("decode-heavy[lru,composite] shards={shards}"), || {
-            let mut w = cfg.workload();
-            let out = run_workload_sharded(&cfg, w.as_mut(), shards, &mk_none, None)
-                .expect("sharded run");
+            let out = run(cell_spec("lru", PredictorKind::None, accesses, "composite", shards));
             assert_eq!(out.result.report.accesses, accesses as u64);
         });
         curve.push(r.throughput.unwrap_or(0.0));
@@ -68,15 +71,9 @@ fn main() {
     // ACPC + heuristic predictor: the full prediction pipeline sharded.
     let mut pred_curve: Vec<f64> = Vec::new();
     for &shards in &shard_counts {
-        let cfg = {
-            let mut c = cell_cfg("acpc", accesses, "composite");
-            c.predictor = PredictorKind::Heuristic;
-            c
-        };
         let r = bench.run(&format!("decode-heavy[acpc,heuristic] shards={shards}"), || {
-            let mut w = cfg.workload();
-            let out = run_workload_sharded(&cfg, w.as_mut(), shards, &mk_heuristic, None)
-                .expect("sharded run");
+            let out =
+                run(cell_spec("acpc", PredictorKind::Heuristic, accesses, "composite", shards));
             assert_eq!(out.result.report.accesses, accesses as u64);
         });
         pred_curve.push(r.throughput.unwrap_or(0.0));
@@ -88,16 +85,23 @@ fn main() {
     // counter-derived aggregate must be bit-identical for every shard count
     // (EMU is excluded: its sampling instants are shard-local).
     let exact_accesses = accesses.min(400_000);
-    let mut cfg = cell_cfg("lru", exact_accesses, "none");
-    cfg.hierarchy.l3_policy = "srrip".into();
-    let reference = {
-        let mut w = cfg.workload();
-        run_workload_sharded(&cfg, w.as_mut(), 1, &mk_none, None).unwrap()
+    let exact_spec = |shards: usize| {
+        RunSpec::builder()
+            .scenario("decode-heavy")
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .accesses(exact_accesses)
+            .seed(0x5CA1E)
+            .prefetcher("none")
+            .l3_policy("srrip")
+            .shards(shards)
+            .build()
+            .expect("valid exactness spec")
     };
+    let reference = run(exact_spec(1));
     let rref = &reference.result.report;
     for &shards in &shard_counts[1..] {
-        let mut w = cfg.workload();
-        let run = run_workload_sharded(&cfg, w.as_mut(), shards, &mk_none, None).unwrap();
+        let run = run(exact_spec(shards));
         let r = &run.result.report;
         assert_eq!(r.accesses, rref.accesses, "{shards} shards: accesses");
         assert_eq!(r.l2_hit_rate.to_bits(), rref.l2_hit_rate.to_bits(), "{shards}: hit rate");

@@ -4,20 +4,24 @@
 //! outcomes (replay buffer + compiled Adam steps from rust) and recovers;
 //! without it, predictions go stale.
 //!
+//! Both arms execute through the unified `Runner`; the pre-trained model
+//! (checkpointed weights) is injected with `Runner::with_predictor`, the
+//! API's escape hatch for caller-owned predictors.
+//!
 //! Requires `make artifacts`.
 //!
 //! ```bash
 //! cargo run --release --example online_adaptation
 //! ```
 
-use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::api::{RunSpec, Runner};
+use acpc::config::PredictorKind;
 use acpc::predictor::{Dataset, GeometryHints, ModelRuntime, PredictorBox};
 use acpc::runtime::{Engine, Manifest};
-use acpc::sim::run_experiment;
 use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
 use acpc::training::{train, TrainConfig};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let Some(dir) = acpc::runtime::artifacts_dir() else {
         eprintln!("online_adaptation: run `make artifacts` first");
         std::process::exit(1);
@@ -46,36 +50,48 @@ fn main() {
     let ckpt = std::env::temp_dir().join("acpc_online_adapt.ckpt");
     pretrained.store.save_checkpoint(&ckpt).expect("ckpt");
 
-    // Evaluation trace WITH aggressive phase drift.
-    let mk_cfg = |feedback: usize| {
-        let mut cfg = ExperimentConfig::table1("acpc", PredictorKind::Tcn);
-        cfg.accesses = 600_000;
-        cfg.generator.phase_period = 1_500; // rotate the hot set frequently
-        cfg.feedback_interval = feedback;
-        cfg.name = format!("drift-feedback{feedback}");
-        cfg
+    // Evaluation spec WITH aggressive phase drift; `feedback` selects the
+    // §3.4 interval-retrain loop.
+    let mk_spec = |feedback: usize| -> anyhow::Result<RunSpec> {
+        RunSpec::builder()
+            .name(&format!("drift-feedback{feedback}"))
+            .policy("acpc")
+            .predictor(PredictorKind::Tcn)
+            .accesses(600_000)
+            .phase_period(1_500) // rotate the hot set frequently
+            .feedback_interval(feedback)
+            .seed(seed)
+            .build()
     };
     let load = |engine: &Engine| {
         let mut rt = ModelRuntime::load(engine, &manifest, "tcn").expect("tcn");
         rt.store.load_checkpoint(&ckpt).expect("load");
-        rt
+        PredictorBox::Model(Box::new(rt))
     };
 
     println!("[2/3] drifting workload, feedback OFF ...");
-    let mut frozen = PredictorBox::Model(Box::new(load(&engine)));
-    let off = run_experiment(&mk_cfg(0), &mut frozen);
+    let off = Runner::new(mk_spec(0)?)?.with_predictor(load(&engine)).run()?;
 
     println!("[3/3] drifting workload, feedback ON (retrain every 50k accesses) ...");
-    let mut adaptive = PredictorBox::Model(Box::new(load(&engine)));
-    let on = run_experiment(&mk_cfg(50_000), &mut adaptive);
+    let on = Runner::new(mk_spec(50_000)?)?.with_predictor(load(&engine)).run()?;
 
     println!("\n== online adaptation under phase drift ==");
-    println!("  feedback OFF: {} (online steps: {})", off.report.summary(), off.online_train_steps);
-    println!("  feedback ON : {} (online steps: {})", on.report.summary(), on.online_train_steps);
+    println!(
+        "  feedback OFF: {} (online steps: {})",
+        off.result.report.summary(),
+        off.result.online_train_steps
+    );
+    println!(
+        "  feedback ON : {} (online steps: {})",
+        on.result.report.summary(),
+        on.result.online_train_steps
+    );
     println!(
         "\nadaptation gain: CHR {:+.2} pp, pollution {:+.1}%",
-        (on.report.l2_hit_rate - off.report.l2_hit_rate) * 100.0,
-        (on.report.l2_pollution_ratio / off.report.l2_pollution_ratio - 1.0) * 100.0
+        (on.result.report.l2_hit_rate - off.result.report.l2_hit_rate) * 100.0,
+        (on.result.report.l2_pollution_ratio / off.result.report.l2_pollution_ratio - 1.0)
+            * 100.0
     );
     std::fs::remove_file(ckpt).ok();
+    Ok(())
 }

@@ -1,18 +1,18 @@
 //! Policy shoot-out across the whole zoo — every replacement policy in the
 //! library on the same GPT-style trace, including the Belady upper bound,
-//! run in parallel on the thread pool.
+//! run in parallel on the thread pool. Each run is one `RunSpec` executed
+//! through the unified `Runner`.
 //!
 //! ```bash
 //! cargo run --release --example policy_comparison [accesses]
 //! ```
 
-use acpc::config::{ExperimentConfig, PredictorKind};
-use acpc::predictor::{HeuristicPredictor, PredictorBox};
-use acpc::sim::run_experiment;
+use acpc::api::{RunReport, RunSpec, Runner};
+use acpc::config::PredictorKind;
 use acpc::util::bench::print_table;
 use acpc::util::pool::{default_threads, run_parallel};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let accesses: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(500_000);
 
@@ -23,39 +23,39 @@ fn main() {
     let jobs: Vec<_> = policies
         .iter()
         .map(|&policy| {
-            move || {
+            move || -> anyhow::Result<(&'static str, RunReport)> {
                 let needs_pred = matches!(policy, "mlpredict" | "acpc");
                 let kind =
                     if needs_pred { PredictorKind::Heuristic } else { PredictorKind::None };
-                let mut cfg = ExperimentConfig::table1(policy, kind);
-                cfg.accesses = accesses;
-                let mut predictor = if needs_pred {
-                    PredictorBox::Heuristic(HeuristicPredictor)
-                } else {
-                    PredictorBox::None
-                };
-                (policy, run_experiment(&cfg, &mut predictor))
+                let spec = RunSpec::builder()
+                    .policy(policy)
+                    .predictor(kind)
+                    .accesses(accesses)
+                    .build()?;
+                Ok((policy, Runner::new(spec)?.run()?))
             }
         })
         .collect();
-    let results = run_parallel(default_threads(), jobs);
+    let results: Vec<(&'static str, RunReport)> =
+        run_parallel(default_threads(), jobs).into_iter().collect::<anyhow::Result<_>>()?;
 
     let lru_report =
-        results.iter().find(|(p, _)| *p == "lru").map(|(_, r)| r.report.clone()).unwrap();
+        results.iter().find(|(p, _)| *p == "lru").map(|(_, r)| r.result.report.clone()).unwrap();
     let mut rows: Vec<Vec<String>> = results
         .iter()
         .map(|(policy, r)| {
             vec![
                 policy.to_string(),
-                format!("{:.1}", r.report.l2_hit_rate * 100.0),
-                format!("{:.2}", r.report.l2_pollution_ratio * 100.0),
-                r.report
+                format!("{:.1}", r.result.report.l2_hit_rate * 100.0),
+                format!("{:.2}", r.result.report.l2_pollution_ratio * 100.0),
+                r.result
+                    .report
                     .miss_penalty_reduction_vs(&lru_report)
                     .map(|v| format!("{v:+.1}"))
                     .unwrap_or_else(|| "n/a".into()),
-                format!("{:.2}", r.report.amat),
-                format!("{:.2}", r.emu),
-                format!("{:.2}M", r.accesses_per_sec / 1e6),
+                format!("{:.2}", r.result.report.amat),
+                format!("{:.2}", r.result.emu),
+                format!("{:.2}M", r.result.accesses_per_sec / 1e6),
             ]
         })
         .collect();
@@ -66,4 +66,5 @@ fn main() {
         &rows,
     );
     println!("\n(belady is the clairvoyant upper bound; mlpredict/acpc use the heuristic predictor here)");
+    Ok(())
 }

@@ -5,6 +5,11 @@
 //! hierarchy, and reports throughput + latency percentiles — then repeats
 //! with plain LRU for contrast.
 //!
+//! Before serving, the same comparison runs once in batch mode through the
+//! unified `Runner` (the library's front door): the batch-sim prediction of
+//! the ACPC-vs-LRU win should agree in sign with what the serving
+//! coordinator then measures.
+//!
 //! Requires `make artifacts`. A short training pass runs first so the TCN
 //! predicts meaningfully (all from rust via the compiled train step).
 //!
@@ -12,6 +17,8 @@
 //! cargo run --release --example serve_llm
 //! ```
 
+use acpc::api::{RunSpec, Runner};
+use acpc::config::PredictorKind;
 use acpc::coordinator::{serve, RouterPolicy, ServeConfig};
 use acpc::predictor::{Dataset, GeometryHints, ModelRuntime, PredictorBox};
 use acpc::runtime::{Engine, Manifest};
@@ -19,7 +26,7 @@ use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
 use acpc::training::{train, TrainConfig};
 use std::time::Duration;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let Some(dir) = acpc::runtime::artifacts_dir() else {
         eprintln!("serve_llm: run `make artifacts` first");
         std::process::exit(1);
@@ -28,7 +35,7 @@ fn main() {
     let window = manifest.model("tcn").expect("tcn").window;
 
     // --- quick training pass (rust-driven, compiled Adam step) ------------
-    println!("[1/3] training TCN predictor (short run) ...");
+    println!("[1/4] training TCN predictor (short run) ...");
     let seed = 0x5E2E;
     let gcfg_train = GeneratorConfig::new(ModelProfile::gpt3ish(), seed);
     let geom = GeometryHints::from_generator(&gcfg_train);
@@ -48,9 +55,27 @@ fn main() {
     let ckpt = std::env::temp_dir().join("acpc_serve_llm.ckpt");
     tcn.store.save_checkpoint(&ckpt).expect("checkpoint");
     drop(tcn);
+
+    // --- batch-mode cross-check through the Runner ------------------------
+    println!("[2/4] batch-sim cross-check (ACPC+TCN vs LRU, unified Runner) ...");
+    let batch_spec = |policy: &str, kind: PredictorKind| -> anyhow::Result<RunSpec> {
+        RunSpec::builder().policy(policy).predictor(kind).accesses(300_000).seed(seed).build()
+    };
+    let load_trained = |engine: &Engine| {
+        let mut rt = ModelRuntime::load(engine, &manifest, "tcn").expect("tcn");
+        rt.store.load_checkpoint(&ckpt).expect("load trained weights");
+        PredictorBox::Model(Box::new(rt))
+    };
+    let acpc_batch = Runner::new(batch_spec("acpc", PredictorKind::Tcn)?)?
+        .with_predictor(load_trained(&engine))
+        .run()?;
+    let lru_batch = Runner::new(batch_spec("lru", PredictorKind::None)?)?.run()?;
+    let batch_delta =
+        (acpc_batch.result.report.l2_hit_rate - lru_batch.result.report.l2_hit_rate) * 100.0;
+    println!("      batch-sim predicts: CHR {batch_delta:+.1} pp for ACPC+TCN over LRU");
     drop(engine);
 
-    // --- serving runs -------------------------------------------------------
+    // --- serving runs -----------------------------------------------------
     let mk_cfg = |policy: &str| {
         let mut generator = GeneratorConfig::new(ModelProfile::gpt3ish(), 0xBEEF);
         generator.arrival_p_hot = 0.0;
@@ -71,7 +96,7 @@ fn main() {
         }
     };
 
-    println!("[2/3] serving with ACPC + trained TCN (4 workers) ...");
+    println!("[3/4] serving with ACPC + trained TCN (4 workers) ...");
     let ckpt2 = ckpt.clone();
     let acpc_rep = serve(&mk_cfg("acpc"), window, move || {
         let dir = acpc::runtime::artifacts_dir().unwrap();
@@ -82,7 +107,7 @@ fn main() {
         PredictorBox::Model(Box::new(rt))
     });
 
-    println!("[3/3] serving with LRU (no predictor) ...");
+    println!("[4/4] serving with LRU (no predictor) ...");
     let lru_rep = serve(&mk_cfg("lru"), 0, || PredictorBox::None);
 
     let show = |name: &str, r: &acpc::coordinator::ServeReport| {
@@ -101,10 +126,13 @@ fn main() {
     println!("\n== serving comparison ==");
     show("ACPC+TCN", &acpc_rep);
     show("LRU", &lru_rep);
+    let serve_delta = (acpc_rep.l2_hit_rate - lru_rep.l2_hit_rate) * 100.0;
     println!(
-        "\nsimulated-memory win: CHR {:+.1} pp, pollution {:+.0}%",
-        (acpc_rep.l2_hit_rate - lru_rep.l2_hit_rate) * 100.0,
+        "\nsimulated-memory win: CHR {:+.1} pp (batch-sim predicted {:+.1} pp), pollution {:+.0}%",
+        serve_delta,
+        batch_delta,
         (acpc_rep.l2_pollution_ratio / lru_rep.l2_pollution_ratio - 1.0) * 100.0
     );
     std::fs::remove_file(ckpt).ok();
+    Ok(())
 }

@@ -541,6 +541,34 @@ impl ControllerSummary {
         out
     }
 
+    /// Columnar per-window telemetry series (schema
+    /// `acpc-adapt-telemetry-v1`) — the fig-style plotting input written by
+    /// `acpc adapt --telemetry`. One entry per retained window, parallel
+    /// arrays per metric; sharded runs interleave their per-shard windows
+    /// in index order (an index can repeat once per shard).
+    pub fn telemetry_json(&self) -> Json {
+        fn col(windows: &[WindowStats], f: impl Fn(&WindowStats) -> f64) -> Json {
+            Json::Arr(windows.iter().map(|w| Json::Num(f(w))).collect())
+        }
+        let w = &self.windows;
+        Json::from_pairs(vec![
+            ("schema", Json::Str("acpc-adapt-telemetry-v1".into())),
+            ("windows_observed", Json::Num(self.windows_observed as f64)),
+            ("index", col(w, |x| x.index as f64)),
+            ("accesses", col(w, |x| x.accesses as f64)),
+            ("l2_demand", col(w, |x| x.l2_demand as f64)),
+            ("hit_rate", col(w, |x| x.hit_rate)),
+            ("pollution", col(w, |x| x.pollution)),
+            ("prefetch_accuracy", col(w, |x| x.prefetch_accuracy)),
+            ("reuse_p50_log2", col(w, |x| x.reuse_p50_log2 as f64)),
+            (
+                "drift_windows",
+                Json::Arr(self.drift_windows.iter().map(|&d| Json::Num(d as f64)).collect()),
+            ),
+            ("events", Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("windows_observed", Json::Num(self.windows_observed as f64)),
@@ -609,6 +637,23 @@ mod tests {
         assert_eq!(a.throttled_windows, b.throttled_windows);
         assert_eq!(a.events.len(), b.events.len());
         assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    }
+
+    #[test]
+    fn telemetry_series_is_columnar_and_aligned() {
+        let s = drive(ControllerConfig::quick(), 40_000, 5).into_summary();
+        let j = s.telemetry_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("acpc-adapt-telemetry-v1"));
+        let n = s.windows.len();
+        assert!(n > 0);
+        for key in
+            ["index", "accesses", "l2_demand", "hit_rate", "pollution", "prefetch_accuracy",
+             "reuse_p50_log2"]
+        {
+            let arr = j.get(key).unwrap().as_arr().unwrap();
+            assert_eq!(arr.len(), n, "column {key} must align with the window log");
+        }
+        assert!(j.get("events").unwrap().as_arr().is_some());
     }
 
     #[test]

@@ -15,9 +15,11 @@
 //!   predictions down to policy-default insertion when no trainable model
 //!   exists / confidence collapses (LLaMCAT-style back-off).
 //!
-//! Consumers: `sim::run_workload_adaptive` (batch runs + `acpc adapt`),
-//! `sim::sweep` (`--predictor adaptive` cells) and the serving
-//! coordinator's workers (per-worker throttle controllers).
+//! Consumers: the [`crate::api::Runner`] (adaptive specs — `acpc adapt`,
+//! `acpc sweep --predictor adaptive`, `acpc run`) and the serving
+//! coordinator's workers (per-worker throttle controllers). The
+//! controller-ON-vs-OFF comparison harness is [`crate::api::run_compare`];
+//! this module keeps its result type, [`CompareOutput`].
 
 pub mod controller;
 pub mod drift;
@@ -34,18 +36,21 @@ pub use last_touch::LastTouch;
 pub use learner::OnlineLearner;
 pub use telemetry::{ReuseSketch, Telemetry, WindowStats};
 
-use crate::config::ExperimentConfig;
-use crate::predictor::PredictorBox;
 use crate::sim::SimResult;
 use crate::util::json::Json;
 
 /// Result of one controller-on vs controller-off replay of the same
-/// workload and seed (`acpc adapt`).
+/// workload and seed ([`crate::api::run_compare`] / `acpc adapt`).
 #[derive(Debug, Clone)]
 pub struct CompareOutput {
     pub baseline: SimResult,
     pub adaptive: SimResult,
     pub summary: ControllerSummary,
+    /// Provenance of what actually ran in each arm (e.g.
+    /// `heuristic(fallback)` when TCN artifacts were absent) — the spec
+    /// records what was *requested*, these record what *executed*.
+    pub predictor_effective_baseline: String,
+    pub predictor_effective_adaptive: String,
 }
 
 impl CompareOutput {
@@ -63,6 +68,13 @@ impl CompareOutput {
         Json::from_pairs(vec![
             ("baseline", self.baseline.report.to_json()),
             ("adaptive", self.adaptive.report.to_json()),
+            (
+                "predictor_effective",
+                Json::from_pairs(vec![
+                    ("baseline", Json::Str(self.predictor_effective_baseline.clone())),
+                    ("adaptive", Json::Str(self.predictor_effective_adaptive.clone())),
+                ]),
+            ),
             ("adaptation", self.summary.to_json()),
             (
                 "deltas",
@@ -76,82 +88,6 @@ impl CompareOutput {
     }
 }
 
-/// Replay the workload `cfg` describes twice with identical seeds — once
-/// without and once with the adaptive controller — and report both runs
-/// plus the controller's event log. `mk_predictor` is invoked once per run
-/// so each replay gets a fresh predictor (fresh weights for trainable
-/// ones).
-pub fn run_compare(
-    cfg: &ExperimentConfig,
-    ccfg: &ControllerConfig,
-    mut mk_predictor: impl FnMut() -> PredictorBox,
-) -> CompareOutput {
-    let mut base_pred = mk_predictor();
-    let mut base_workload = cfg.workload();
-    let baseline = crate::sim::run_workload(cfg, base_workload.as_mut(), &mut base_pred);
-
-    let mut adapt_pred = mk_predictor();
-    let mut controller = AdaptiveController::new(ccfg.clone());
-    let mut adapt_workload = cfg.workload();
-    let adaptive = crate::sim::run_workload_adaptive(
-        cfg,
-        adapt_workload.as_mut(),
-        &mut adapt_pred,
-        Some(&mut controller),
-    );
-    CompareOutput { baseline, adaptive, summary: controller.into_summary() }
-}
-
-/// [`run_compare`] with both arms split across `shards` set partitions
-/// (`crate::sim::shard`). `mk_predictor` runs once per shard *inside* each
-/// shard thread; the adaptive arm runs one controller per shard and the
-/// reported summary is their [`ControllerSummary::merge`].
-pub fn run_compare_sharded(
-    cfg: &ExperimentConfig,
-    ccfg: &ControllerConfig,
-    shards: usize,
-    mk_predictor: &(dyn Fn(usize) -> PredictorBox + Sync),
-) -> anyhow::Result<CompareOutput> {
-    let mut base_workload = cfg.workload();
-    let baseline =
-        crate::sim::run_workload_sharded(cfg, base_workload.as_mut(), shards, mk_predictor, None)?;
-    let mut adapt_workload = cfg.workload();
-    let adaptive = crate::sim::run_workload_sharded(
-        cfg,
-        adapt_workload.as_mut(),
-        shards,
-        mk_predictor,
-        Some(ccfg),
-    )?;
-    Ok(CompareOutput {
-        baseline: baseline.result,
-        adaptive: adaptive.result,
-        summary: ControllerSummary::merge(adaptive.controllers),
-    })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::{ExperimentConfig, PredictorKind};
-    use crate::predictor::HeuristicPredictor;
-
-    #[test]
-    fn compare_runs_both_arms_on_one_seed() {
-        let mut cfg =
-            ExperimentConfig::for_scenario("multi-tenant-mix", "acpc", PredictorKind::Heuristic, 42)
-                .unwrap();
-        cfg.accesses = 60_000;
-        let mut ccfg = ControllerConfig::quick();
-        ccfg.window_accesses = 2048;
-        let out = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
-        assert_eq!(out.baseline.report.accesses, 60_000);
-        assert_eq!(out.adaptive.report.accesses, 60_000);
-        assert!(out.summary.windows_observed > 0);
-        let j = out.to_json();
-        for key in ["baseline", "adaptive", "adaptation", "deltas"] {
-            assert!(j.get(key).is_some(), "missing {key}");
-        }
-        assert!(j.get("deltas").unwrap().get("hit_rate").unwrap().as_f64().is_some());
-    }
-}
+// (`run_compare` / `run_compare_sharded` moved behind the one front door:
+// see `crate::api::run_compare`, which replays the spec's run through two
+// `Runner`s — adaptive arm and stripped baseline — on identical seeds.)

@@ -1,0 +1,89 @@
+//! The crate's public run API — one front door for every experiment.
+//!
+//! ```text
+//!   RunSpec ──resolve──▶ Runner ──run()──▶ RunReport (schema acpc-run-v1)
+//!   (JSON-round-trippable)                  └─ embeds the resolved spec
+//! ```
+//!
+//! - [`RunSpec`] describes a run completely (policy, scenario/profile,
+//!   predictor + artifact override, hierarchy, accesses, shards, adaptive
+//!   controller, seed) and round-trips through JSON;
+//! - [`Runner`] owns all resolution — registry lookups, predictor loading
+//!   with heuristic fallback and per-thread TCN caching, single vs
+//!   set-sharded dispatch, controller construction — behind exactly one
+//!   entrypoint, [`Runner::run`];
+//! - [`RunReport`] is the versioned result; its embedded resolved spec
+//!   re-runs to identical stats (`acpc run --spec <(jq .spec report.json)`).
+//!
+//! The CLI (`simulate`, `adapt`, per-cell `sweep`, `run`), the examples
+//! and the benches all execute through this module; the former
+//! `sim::run_experiment` / `run_workload` / `run_workload_adaptive` /
+//! `run_workload_sharded` functions are crate-internal delegates now.
+
+mod runner;
+mod spec;
+
+pub use runner::{PredictorFactory, RunReport, Runner};
+pub use spec::{AdaptSpec, HierarchySpec, RunSpec, RunSpecBuilder, WorkloadSpec, SCHEMA};
+
+use crate::adapt::{CompareOutput, ControllerSummary};
+use anyhow::Result;
+
+/// Replay the run a spec describes twice on identical seeds — once plain,
+/// once with the adaptive controller — and report both arms plus the
+/// controller's event log (`acpc adapt`). The spec's `adaptive` block
+/// configures the controller of the second arm (attached with defaults
+/// when absent); the baseline arm runs with it stripped. Each arm gets a
+/// fresh predictor, so fine-tuning in the adaptive arm cannot leak into
+/// the baseline.
+pub fn run_compare(spec: &RunSpec) -> Result<CompareOutput> {
+    let mut baseline_spec = spec.clone();
+    baseline_spec.adaptive = None;
+    let mut adaptive_spec = spec.clone();
+    if adaptive_spec.adaptive.is_none() {
+        adaptive_spec.adaptive = Some(AdaptSpec::default());
+    }
+    let baseline = Runner::new(baseline_spec)?.run()?;
+    let adaptive = Runner::new(adaptive_spec)?.run()?;
+    Ok(CompareOutput {
+        baseline: baseline.result,
+        adaptive: adaptive.result,
+        summary: ControllerSummary::merge(adaptive.controllers),
+        predictor_effective_baseline: baseline.predictor_effective,
+        predictor_effective_adaptive: adaptive.predictor_effective,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PredictorKind;
+
+    #[test]
+    fn compare_runs_both_arms_on_one_seed() {
+        let spec = RunSpec::builder()
+            .scenario("multi-tenant-mix")
+            .policy("acpc")
+            .predictor(PredictorKind::Heuristic)
+            .accesses(60_000)
+            .seed(42)
+            .adaptive_spec(AdaptSpec {
+                window_accesses: Some(2048),
+                warmup_windows: Some(2),
+                cooldown_windows: Some(2),
+                recover_windows: Some(2),
+                ..AdaptSpec::default()
+            })
+            .build()
+            .unwrap();
+        let out = run_compare(&spec).unwrap();
+        assert_eq!(out.baseline.report.accesses, 60_000);
+        assert_eq!(out.adaptive.report.accesses, 60_000);
+        assert!(out.summary.windows_observed > 0);
+        let j = out.to_json();
+        for key in ["baseline", "adaptive", "adaptation", "deltas"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert!(j.get("deltas").unwrap().get("hit_rate").unwrap().as_f64().is_some());
+    }
+}

@@ -1,0 +1,499 @@
+//! [`Runner`] — the crate's one run entrypoint — and the versioned
+//! [`RunReport`] it produces.
+//!
+//! The runner owns every piece of resolution that used to be duplicated
+//! across the CLI commands: scenario-registry lookup, predictor
+//! construction with artifact fallback (including the per-thread TCN
+//! cache), sharded-vs-single dispatch, and adaptive-controller wiring.
+//! `simulate`, `adapt`, each `sweep` cell, `acpc run --spec` and the
+//! examples all execute through [`Runner::run`]; the legacy
+//! `sim::run_workload*` functions survive only as crate-internal delegates.
+
+use super::spec::{Resolved, RunSpec, SCHEMA};
+use crate::adapt::{AdaptiveController, ControllerSummary};
+use crate::config::PredictorKind;
+use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
+use crate::sim::shard::{run_workload_sharded, PredictorReclaim};
+use crate::sim::SimResult;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A predictor constructor invoked once per worker thread (shard `k` gets
+/// `factory(k)`); predictors must be built *inside* the thread that runs
+/// them — PJRT handles are thread-affine. This is the parameter type of
+/// [`Runner::with_predictor_factory`].
+pub type PredictorFactory = Arc<dyn Fn(usize) -> PredictorBox + Send + Sync>;
+
+/// Where the runner gets its predictor(s) from.
+enum PredictorSource {
+    /// Built from the spec (kind + optional artifact-model override), with
+    /// heuristic fallback and per-thread TCN caching where safe.
+    Spec,
+    /// A caller-supplied predictor instance (single-shard runs only —
+    /// PJRT handles are thread-affine). Consumed by the first `run()`.
+    Owned(RefCell<Option<PredictorBox>>),
+    /// A caller-supplied factory, invoked inside each worker thread.
+    Factory(PredictorFactory),
+}
+
+/// Executes a resolved [`RunSpec`]. Construct with [`Runner::new`], run
+/// with [`Runner::run`] — the single public run entrypoint of the crate.
+///
+/// ```no_run
+/// use acpc::api::{Runner, RunSpec};
+/// use acpc::config::PredictorKind;
+///
+/// let spec = RunSpec::builder()
+///     .scenario("multi-tenant-mix")
+///     .policy("acpc")
+///     .predictor(PredictorKind::Tcn) // falls back to the heuristic sans artifacts
+///     .shards(4)
+///     .adaptive(true)
+///     .build()?;
+/// let report = Runner::new(spec)?.run()?;
+/// println!("{}", report.to_json().to_pretty());
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub struct Runner {
+    resolved: Resolved,
+    source: PredictorSource,
+}
+
+impl Runner {
+    /// Resolve and validate a spec. Errors cover unknown
+    /// policies/scenarios/profiles, bad geometry, unshardable hierarchies
+    /// and predictor-less adaptive runs — nothing is deferred to mid-run.
+    pub fn new(spec: RunSpec) -> Result<Runner> {
+        Ok(Runner { resolved: spec.resolve()?, source: PredictorSource::Spec })
+    }
+
+    /// [`Runner::new`] from a spec file (`acpc run --spec`).
+    pub fn from_spec_file(path: &std::path::Path) -> Result<Runner> {
+        Self::new(RunSpec::from_file(path)?)
+    }
+
+    /// Supply a concrete predictor instance (e.g. a model with fine-tuned
+    /// weights loaded from a checkpoint) instead of building one from the
+    /// spec. Single-shard runs only; consumed by the first [`run`](Self::run).
+    pub fn with_predictor(mut self, predictor: PredictorBox) -> Self {
+        self.source = PredictorSource::Owned(RefCell::new(Some(predictor)));
+        self
+    }
+
+    /// Supply a predictor factory invoked once per worker thread (sharded
+    /// runs construct predictors *inside* each shard thread — PJRT handles
+    /// are thread-affine).
+    pub fn with_predictor_factory(mut self, factory: PredictorFactory) -> Self {
+        self.source = PredictorSource::Factory(factory);
+        self
+    }
+
+    /// The fully-resolved spec this runner executes (also embedded in the
+    /// report).
+    pub fn spec(&self) -> &RunSpec {
+        &self.resolved.spec
+    }
+
+    /// May this run share the per-thread cached TCN? Only when the spec
+    /// asks for the default TCN artifact *and* nothing in the run can
+    /// mutate its weights (no adaptive retrains, no §3.4 interval
+    /// feedback).
+    fn cache_eligible(&self) -> bool {
+        self.resolved.cfg.predictor == PredictorKind::Tcn
+            && self.resolved.model.is_none()
+            && self.resolved.controller.is_none()
+            && self.resolved.cfg.feedback_interval == 0
+    }
+
+    /// Execute the run: resolve the predictor, dispatch single-threaded or
+    /// set-sharded, and assemble the [`RunReport`].
+    pub fn run(&self) -> Result<RunReport> {
+        let r = &self.resolved;
+        let cache = self.cache_eligible();
+        let mut workload = r.cfg.workload();
+
+        let (result, controllers) = if r.shards > 1 {
+            let mk: PredictorFactory = match &self.source {
+                PredictorSource::Factory(f) => Arc::clone(f),
+                PredictorSource::Owned(_) => bail!(
+                    "an owned predictor cannot drive a sharded run (PJRT handles are \
+                     thread-affine); use with_predictor_factory"
+                ),
+                PredictorSource::Spec => {
+                    let kind = r.cfg.predictor;
+                    let model = r.model.clone();
+                    Arc::new(move |_shard| build_in_thread(kind, model.as_deref(), cache).0)
+                }
+            };
+            // Loaded default-TCN boxes flow back into each shard thread's
+            // cache after the run; the shard threads persist across cells
+            // (sim::shard's pool), so a sweep pays the artifact load once
+            // per thread, not once per cell.
+            let reclaim: Option<PredictorReclaim> =
+                if cache && matches!(self.source, PredictorSource::Spec) {
+                    Some(Arc::new(|_shard, p: PredictorBox| {
+                        if matches!(p, PredictorBox::Model(_)) && p.name() == "tcn" {
+                            put_back_thread_tcn(p);
+                        }
+                    }))
+                } else {
+                    None
+                };
+            let run = run_workload_sharded(
+                &r.cfg,
+                workload.as_mut(),
+                r.shards,
+                &mk,
+                reclaim.as_ref(),
+                r.controller.as_ref(),
+            )?;
+            (run.result, run.controllers)
+        } else {
+            let (mut predictor, from_cache) = match &self.source {
+                PredictorSource::Spec => {
+                    build_in_thread(r.cfg.predictor, r.model.as_deref(), cache)
+                }
+                PredictorSource::Owned(slot) => {
+                    let p = slot.borrow_mut().take();
+                    match p {
+                        Some(p) => (p, false),
+                        None => bail!(
+                            "custom predictor already consumed by a previous run(); \
+                             construct a new Runner"
+                        ),
+                    }
+                }
+                PredictorSource::Factory(f) => (f(0), false),
+            };
+            let mut controller =
+                r.controller.clone().map(AdaptiveController::new);
+            let result = crate::sim::run_workload_adaptive(
+                &r.cfg,
+                workload.as_mut(),
+                &mut predictor,
+                controller.as_mut(),
+            );
+            if from_cache {
+                put_back_thread_tcn(predictor);
+            }
+            let controllers =
+                controller.map(|c| vec![c.into_summary()]).unwrap_or_default();
+            (result, controllers)
+        };
+
+        let predictor_effective =
+            effective_label(r.cfg.predictor, &result.predictor, r.controller.is_some());
+        Ok(RunReport {
+            spec: r.spec.clone(),
+            predictor_effective,
+            result,
+            controllers,
+        })
+    }
+}
+
+/// Provenance label for what actually ran: the predictor's own name,
+/// decorated with `(fallback)` when a learned predictor degraded to the
+/// heuristic and wrapped in `adaptive(..)` when a controller was attached.
+fn effective_label(requested: PredictorKind, ran: &str, adaptive: bool) -> String {
+    let learned = matches!(requested, PredictorKind::Dnn | PredictorKind::Tcn);
+    let base = if learned && ran == "heuristic" {
+        "heuristic(fallback)".to_string()
+    } else {
+        ran.to_string()
+    };
+    if adaptive {
+        format!("adaptive({base})")
+    } else {
+        base
+    }
+}
+
+// ---- predictor construction -------------------------------------------
+
+/// Build a predictor box for a kind, loading the model from the AOT
+/// artifacts when needed. Hard error on load failure — callers that want
+/// graceful degradation go through [`build_in_thread`].
+fn build_predictor(kind: PredictorKind, model_override: Option<&str>) -> Result<PredictorBox> {
+    match kind {
+        PredictorKind::None => Ok(PredictorBox::None),
+        PredictorKind::Heuristic => Ok(PredictorBox::Heuristic(HeuristicPredictor)),
+        PredictorKind::Dnn | PredictorKind::Tcn => {
+            let name = model_override.unwrap_or(match kind {
+                PredictorKind::Dnn => "dnn",
+                _ => "tcn",
+            });
+            let rt = ModelRuntime::load_from_artifacts(name)?;
+            Ok(PredictorBox::Model(Box::new(rt)))
+        }
+    }
+}
+
+/// Build a predictor in the *calling* thread with the runner's fallback
+/// policy: learned predictors degrade to the heuristic with a warning when
+/// the artifacts are absent or fail to load. Returns `(box, from_cache)`.
+fn build_in_thread(
+    kind: PredictorKind,
+    model: Option<&str>,
+    cache: bool,
+) -> (PredictorBox, bool) {
+    match kind {
+        PredictorKind::None => (PredictorBox::None, false),
+        PredictorKind::Heuristic => (PredictorBox::Heuristic(HeuristicPredictor), false),
+        PredictorKind::Tcn if cache && model.is_none() => match take_thread_tcn() {
+            Some(p) => (p, true),
+            // take_thread_tcn already warned, once per thread.
+            None => (PredictorBox::Heuristic(HeuristicPredictor), false),
+        },
+        kind => match build_predictor(kind, model) {
+            Ok(p) => (p, false),
+            Err(e) => {
+                crate::log_warn!(
+                    "runner: predictor '{}' failed to load ({e}); falling back to the \
+                     heuristic predictor",
+                    kind.label()
+                );
+                (PredictorBox::Heuristic(HeuristicPredictor), false)
+            }
+        },
+    }
+}
+
+fn build_tcn_in_thread() -> Option<PredictorBox> {
+    let rt = ModelRuntime::load_from_artifacts("tcn").ok()?;
+    Some(PredictorBox::Model(Box::new(rt)))
+}
+
+thread_local! {
+    /// Per-thread TCN cache: PJRT handles are thread-affine, and cache-
+    /// eligible runs never mutate weights, so one artifact load + PJRT
+    /// compile serves every eligible run this thread (sweep worker *or*
+    /// persistent shard worker) ever executes. Tri-state: outer `None` =
+    /// never probed; `Some(None)` = probe failed (permanent — a broken
+    /// PJRT setup is not retried per run); `Some(Some(_))` = loaded. The
+    /// box is taken for the duration of a run and put back afterwards.
+    static THREAD_TCN: RefCell<Option<Option<PredictorBox>>> =
+        const { RefCell::new(None) };
+}
+
+/// One process-wide warning for missing/broken TCN artifacts: a sweep can
+/// probe from dozens of worker + shard-pool threads, and one line says it
+/// all (the per-run provenance is in `predictor_effective`).
+static TCN_FALLBACK_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Fetch the thread's cached TCN, probing the artifacts at most once per
+/// thread (success *and* failure are both cached).
+fn take_thread_tcn() -> Option<PredictorBox> {
+    THREAD_TCN.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            let loaded = build_tcn_in_thread();
+            if loaded.is_none() && !TCN_FALLBACK_WARNED.swap(true, Ordering::Relaxed) {
+                crate::log_warn!(
+                    "runner: TCN artifacts unavailable; tcn runs fall back to the \
+                     heuristic predictor (reported once; see predictor_effective for \
+                     per-run provenance)"
+                );
+            }
+            *slot = Some(loaded);
+        }
+        slot.as_mut().unwrap().take()
+    })
+}
+
+fn put_back_thread_tcn(p: PredictorBox) {
+    THREAD_TCN.with(|c| *c.borrow_mut() = Some(Some(p)));
+}
+
+// ---- report ------------------------------------------------------------
+
+/// The versioned outcome of one [`Runner::run`] (schema `acpc-run-v1`).
+/// Embeds the fully-resolved [`RunSpec`], so feeding a report's `spec`
+/// object back through `acpc run --spec` (or [`RunSpec::from_json`])
+/// reproduces the run bit-for-bit — wall-clock fields aside. One caveat:
+/// runs that *injected* a predictor ([`Runner::with_predictor`] /
+/// [`Runner::with_predictor_factory`]) are reproducible only up to those
+/// weights — the spec records the requested predictor kind, not the
+/// injected parameters (check `predictor_effective` against the spec).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// The fully-resolved spec that produced this report.
+    pub spec: RunSpec,
+    /// Provenance of the predictor that actually ran (`tcn`,
+    /// `heuristic(fallback)`, `adaptive(heuristic)`, `mixed(..)`, ...).
+    pub predictor_effective: String,
+    pub result: SimResult,
+    /// Per-controller summaries of adaptive runs (one per shard; empty
+    /// otherwise).
+    pub controllers: Vec<ControllerSummary>,
+}
+
+impl RunReport {
+    /// Merged adaptation summary of an adaptive run (`None` otherwise).
+    pub fn adaptation(&self) -> Option<ControllerSummary> {
+        if self.controllers.is_empty() {
+            None
+        } else {
+            Some(ControllerSummary::merge(self.controllers.clone()))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let r = &self.result;
+        let mut j = Json::from_pairs(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("spec", self.spec.to_json()),
+            ("predictor_effective", Json::Str(self.predictor_effective.clone())),
+            ("metrics", r.report.to_json()),
+            ("prediction_batches", Json::Num(r.prediction_batches as f64)),
+            ("online_train_steps", Json::Num(r.online_train_steps as f64)),
+            ("adapt_windows", Json::Num(r.adapt_windows as f64)),
+            ("drift_events", Json::Num(r.drift_events as f64)),
+            ("predictor_swaps", Json::Num(r.predictor_swaps as f64)),
+            ("throttled_windows", Json::Num(r.throttled_windows as f64)),
+            ("wall_secs", Json::Num(r.wall_secs)),
+            ("accesses_per_sec", Json::Num(r.accesses_per_sec)),
+        ]);
+        if let Some(s) = self.adaptation() {
+            j.set("adaptation", s.to_json());
+        }
+        j
+    }
+
+    /// One-line counters summary (the CLI prints this under the metrics).
+    pub fn counters_line(&self) -> String {
+        let r = &self.result;
+        format!(
+            "predictor={} tokens={} emu={:.3} pred_batches={} online_steps={} \
+             wall={:.2}s ({:.2}M acc/s)",
+            self.predictor_effective,
+            r.tokens,
+            r.emu,
+            r.prediction_batches,
+            r.online_train_steps,
+            r.wall_secs,
+            r.accesses_per_sec / 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    /// Parity: the Runner's single-shard path must be byte-identical to
+    /// driving the crate-internal `run_workload` directly with the same
+    /// resolved configuration — the API is a front door, not a fork.
+    #[test]
+    fn runner_matches_internal_run_workload() {
+        let seed = 0x9A17;
+        let mut cfg = ExperimentConfig::for_scenario(
+            "decode-heavy",
+            "acpc",
+            PredictorKind::Heuristic,
+            seed,
+        )
+        .unwrap();
+        cfg.accesses = 60_000;
+        let mut workload = cfg.workload();
+        let mut predictor = PredictorBox::Heuristic(HeuristicPredictor);
+        let old = crate::sim::run_workload(&cfg, workload.as_mut(), &mut predictor);
+
+        let spec = RunSpec::builder()
+            .scenario("decode-heavy")
+            .policy("acpc")
+            .predictor(PredictorKind::Heuristic)
+            .accesses(60_000)
+            .seed(seed)
+            .build()
+            .unwrap();
+        let new = Runner::new(spec).unwrap().run().unwrap();
+        assert_eq!(
+            old.report.to_json().to_pretty(),
+            new.result.report.to_json().to_pretty(),
+            "runner must reproduce the direct engine path exactly"
+        );
+        assert_eq!(old.prediction_batches, new.result.prediction_batches);
+        assert_eq!(old.tokens, new.result.tokens);
+        assert_eq!(new.predictor_effective, "heuristic");
+    }
+
+    /// Parity for the sharded path against `run_workload_sharded`.
+    #[test]
+    fn runner_matches_internal_run_workload_sharded() {
+        let seed = 0x51AB;
+        let mut cfg =
+            ExperimentConfig::for_scenario("decode-heavy", "lru", PredictorKind::None, seed)
+                .unwrap();
+        cfg.accesses = 40_000;
+        let mut workload = cfg.workload();
+        let mk: PredictorFactory = Arc::new(|_| PredictorBox::None);
+        let old = run_workload_sharded(&cfg, workload.as_mut(), 4, &mk, None, None).unwrap();
+
+        let spec = RunSpec::builder()
+            .scenario("decode-heavy")
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .accesses(40_000)
+            .seed(seed)
+            .shards(4)
+            .build()
+            .unwrap();
+        let new = Runner::new(spec).unwrap().run().unwrap();
+        assert_eq!(
+            old.result.report.to_json().to_pretty(),
+            new.result.report.to_json().to_pretty()
+        );
+        assert_eq!(new.predictor_effective, "none");
+    }
+
+    #[test]
+    fn owned_predictor_is_single_use_and_single_shard() {
+        let spec = RunSpec::builder()
+            .preset("smoke")
+            .policy("acpc")
+            .accesses(20_000)
+            .build()
+            .unwrap();
+        let runner = Runner::new(spec)
+            .unwrap()
+            .with_predictor(PredictorBox::Heuristic(HeuristicPredictor));
+        assert!(runner.run().is_ok());
+        assert!(runner.run().is_err(), "owned predictor is consumed by the first run");
+
+        let sharded = RunSpec::builder()
+            .preset("smoke")
+            .policy("acpc")
+            .accesses(20_000)
+            .shards(2)
+            .build()
+            .unwrap();
+        let err = Runner::new(sharded)
+            .unwrap()
+            .with_predictor(PredictorBox::Heuristic(HeuristicPredictor))
+            .run();
+        assert!(err.is_err(), "owned predictors are thread-affine");
+    }
+
+    #[test]
+    fn effective_labels() {
+        assert_eq!(effective_label(PredictorKind::None, "none", false), "none");
+        assert_eq!(effective_label(PredictorKind::Tcn, "tcn", false), "tcn");
+        assert_eq!(
+            effective_label(PredictorKind::Tcn, "heuristic", false),
+            "heuristic(fallback)"
+        );
+        assert_eq!(
+            effective_label(PredictorKind::Heuristic, "heuristic", true),
+            "adaptive(heuristic)"
+        );
+        assert_eq!(
+            effective_label(PredictorKind::Tcn, "heuristic", true),
+            "adaptive(heuristic(fallback))"
+        );
+    }
+}

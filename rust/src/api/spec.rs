@@ -1,0 +1,971 @@
+//! [`RunSpec`] — the serializable description of one simulation run, and
+//! the single source of truth the [`super::Runner`] resolves and executes.
+//!
+//! A spec captures everything a run needs: policy, workload (scenario or
+//! model profile plus generator overrides), predictor kind and artifact
+//! override, hierarchy preset and geometry overrides, trace length,
+//! set-shard count, the adaptive-controller configuration, and the seed.
+//! Specs round-trip through JSON (schema [`SCHEMA`]) via the crate's own
+//! [`Json`] — `acpc run --spec file.json` and the library build the exact
+//! same run from the exact same bytes.
+//!
+//! Resolution ([`RunSpec::resolve`]) turns a spec into the concrete
+//! [`ExperimentConfig`] + shard count + [`ControllerConfig`] the engine
+//! consumes, validating everything at the boundary (unknown policies,
+//! scenario/profile conflicts, bad cache geometry, unshardable hierarchies)
+//! and deriving a *fully-resolved* copy of the spec — every defaulted
+//! scalar made explicit — which [`super::RunReport`] embeds so any report
+//! JSON reproduces its run bit-for-bit.
+
+use crate::adapt::ControllerConfig;
+use crate::config::{ExperimentConfig, PredictorKind};
+use crate::trace::ModelProfile;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Schema identifier stamped into spec and report JSON.
+pub const SCHEMA: &str = "acpc-run-v1";
+
+/// Workload-generator overrides layered on top of the scenario/profile.
+/// `None` = inherit whatever the resolved generator config says.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkloadSpec {
+    pub max_live_sessions: Option<usize>,
+    pub phase_period: Option<u64>,
+    pub max_ctx: Option<u32>,
+    pub arrival_p_hot: Option<f64>,
+    pub arrival_p_cold: Option<f64>,
+}
+
+/// Hierarchy overrides layered on top of the preset. Sizes are in KiB
+/// (matching the CLI/JSON config convention).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HierarchySpec {
+    pub preset: Option<String>,
+    pub prefetcher: Option<String>,
+    pub l3_policy: Option<String>,
+    pub l1_kb: Option<u64>,
+    pub l2_kb: Option<u64>,
+    pub l3_kb: Option<u64>,
+    pub l1_assoc: Option<usize>,
+    pub l2_assoc: Option<usize>,
+    pub l3_assoc: Option<usize>,
+    pub dram_latency: Option<u64>,
+}
+
+impl HierarchySpec {
+    fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+}
+
+/// Adaptive-controller configuration as spec fields: `None` = the
+/// [`ControllerConfig`] default, except `seed`, which defaults to the
+/// *run* seed at resolution time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdaptSpec {
+    pub window_accesses: Option<u64>,
+    pub ph_delta: Option<f64>,
+    pub ph_lambda: Option<f64>,
+    pub warmup_windows: Option<u64>,
+    pub cooldown_windows: Option<u64>,
+    pub unhealthy_windows_to_throttle: Option<u64>,
+    pub recover_windows: Option<u64>,
+    pub throttle_hit_ratio: Option<f64>,
+    pub pollution_margin: Option<f64>,
+    pub train_steps_on_drift: Option<usize>,
+    pub replay_horizon: Option<u64>,
+    pub seed: Option<u64>,
+}
+
+impl AdaptSpec {
+    /// Spec view of a concrete controller config (every field explicit) —
+    /// e.g. `AdaptSpec::from_config(&ControllerConfig::passive())`.
+    pub fn from_config(c: &ControllerConfig) -> Self {
+        Self {
+            window_accesses: Some(c.window_accesses),
+            ph_delta: Some(c.ph_delta),
+            ph_lambda: Some(c.ph_lambda),
+            warmup_windows: Some(c.warmup_windows),
+            cooldown_windows: Some(c.cooldown_windows),
+            unhealthy_windows_to_throttle: Some(c.unhealthy_windows_to_throttle),
+            recover_windows: Some(c.recover_windows),
+            throttle_hit_ratio: Some(c.throttle_hit_ratio),
+            pollution_margin: Some(c.pollution_margin),
+            train_steps_on_drift: Some(c.train_steps_on_drift),
+            replay_horizon: Some(c.replay_horizon),
+            seed: Some(c.seed),
+        }
+    }
+
+    /// Concrete controller config; unset fields take defaults, the seed
+    /// takes the run seed.
+    pub fn resolve(&self, run_seed: u64) -> ControllerConfig {
+        let d = ControllerConfig::default();
+        ControllerConfig {
+            window_accesses: self.window_accesses.unwrap_or(d.window_accesses),
+            ph_delta: self.ph_delta.unwrap_or(d.ph_delta),
+            ph_lambda: self.ph_lambda.unwrap_or(d.ph_lambda),
+            warmup_windows: self.warmup_windows.unwrap_or(d.warmup_windows),
+            cooldown_windows: self.cooldown_windows.unwrap_or(d.cooldown_windows),
+            unhealthy_windows_to_throttle: self
+                .unhealthy_windows_to_throttle
+                .unwrap_or(d.unhealthy_windows_to_throttle),
+            recover_windows: self.recover_windows.unwrap_or(d.recover_windows),
+            throttle_hit_ratio: self.throttle_hit_ratio.unwrap_or(d.throttle_hit_ratio),
+            pollution_margin: self.pollution_margin.unwrap_or(d.pollution_margin),
+            train_steps_on_drift: self.train_steps_on_drift.unwrap_or(d.train_steps_on_drift),
+            replay_horizon: self.replay_horizon.unwrap_or(d.replay_horizon),
+            seed: self.seed.unwrap_or(run_seed),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        if let Some(v) = self.window_accesses {
+            j.set("window_accesses", Json::Num(v as f64));
+        }
+        if let Some(v) = self.ph_delta {
+            j.set("ph_delta", f64_json(v));
+        }
+        if let Some(v) = self.ph_lambda {
+            j.set("ph_lambda", f64_json(v));
+        }
+        if let Some(v) = self.warmup_windows {
+            j.set("warmup_windows", Json::Num(v as f64));
+        }
+        if let Some(v) = self.cooldown_windows {
+            j.set("cooldown_windows", Json::Num(v as f64));
+        }
+        if let Some(v) = self.unhealthy_windows_to_throttle {
+            j.set("unhealthy_windows_to_throttle", Json::Num(v as f64));
+        }
+        if let Some(v) = self.recover_windows {
+            j.set("recover_windows", Json::Num(v as f64));
+        }
+        if let Some(v) = self.throttle_hit_ratio {
+            j.set("throttle_hit_ratio", f64_json(v));
+        }
+        if let Some(v) = self.pollution_margin {
+            j.set("pollution_margin", f64_json(v));
+        }
+        if let Some(v) = self.train_steps_on_drift {
+            j.set("train_steps_on_drift", Json::Num(v as f64));
+        }
+        if let Some(v) = self.replay_horizon {
+            j.set("replay_horizon", Json::Num(v as f64));
+        }
+        if let Some(v) = self.seed {
+            j.set("seed", Json::Str(v.to_string()));
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("'adaptive' must be an object or bool"))?;
+        let mut s = Self::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "window_accesses" => s.window_accesses = Some(u64_field(v, k)?),
+                "ph_delta" => s.ph_delta = Some(f64_field(v, k)?),
+                "ph_lambda" => s.ph_lambda = Some(f64_field(v, k)?),
+                "warmup_windows" => s.warmup_windows = Some(u64_field(v, k)?),
+                "cooldown_windows" => s.cooldown_windows = Some(u64_field(v, k)?),
+                "unhealthy_windows_to_throttle" => {
+                    s.unhealthy_windows_to_throttle = Some(u64_field(v, k)?)
+                }
+                "recover_windows" => s.recover_windows = Some(u64_field(v, k)?),
+                "throttle_hit_ratio" => s.throttle_hit_ratio = Some(f64_field(v, k)?),
+                "pollution_margin" => s.pollution_margin = Some(f64_field(v, k)?),
+                "train_steps_on_drift" => {
+                    s.train_steps_on_drift = Some(u64_field(v, k)? as usize)
+                }
+                "replay_horizon" => s.replay_horizon = Some(u64_field(v, k)?),
+                "seed" => s.seed = Some(u64_field(v, k)?),
+                other => bail!("unknown adaptive key '{other}'"),
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// Everything needed to reproduce one run — the public front door's input.
+/// Build with [`RunSpec::builder`], load with [`RunSpec::from_file`] /
+/// [`RunSpec::from_json`], execute with [`super::Runner`].
+///
+/// ```
+/// use acpc::api::{Runner, RunSpec};
+/// use acpc::config::PredictorKind;
+///
+/// let spec = RunSpec::builder()
+///     .scenario("decode-heavy")
+///     .policy("acpc")
+///     .predictor(PredictorKind::Heuristic)
+///     .accesses(50_000)
+///     .seed(7)
+///     .build()
+///     .unwrap();
+/// let report = Runner::new(spec).unwrap().run().unwrap();
+/// assert_eq!(report.result.report.accesses, 50_000);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// Base preset the spec layers onto: `table1` (the paper's full-scale
+    /// defaults) or `smoke` (tiny generator for tests).
+    pub preset: String,
+    /// Run name; `None` derives `{scenario}-{policy}` / `{preset}-{policy}`.
+    pub name: Option<String>,
+    /// L2 replacement policy under test.
+    pub policy: String,
+    pub predictor: PredictorKind,
+    /// Artifact-model override for learned predictors (`tcn_flat`, ...).
+    pub model: Option<String>,
+    /// Scenario-registry workload (mutually exclusive with `profile`).
+    pub scenario: Option<String>,
+    /// Model-profile workload (mutually exclusive with `scenario`).
+    pub profile: Option<String>,
+    pub workload: WorkloadSpec,
+    pub hierarchy: HierarchySpec,
+    pub accesses: Option<usize>,
+    pub predict_batch: Option<usize>,
+    /// Legacy §3.4 interval feedback (ignored when `adaptive` is set).
+    pub feedback_interval: Option<usize>,
+    /// Set-shard count (power of two; 1 = single-threaded).
+    pub shards: usize,
+    /// Attach an adaptive controller (`Some`), optionally overriding its
+    /// thresholds.
+    pub adaptive: Option<AdaptSpec>,
+    pub seed: Option<u64>,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self {
+            preset: "table1".into(),
+            name: None,
+            policy: "acpc".into(),
+            predictor: PredictorKind::Heuristic,
+            model: None,
+            scenario: None,
+            profile: None,
+            workload: WorkloadSpec::default(),
+            hierarchy: HierarchySpec::default(),
+            accesses: None,
+            predict_batch: None,
+            feedback_interval: None,
+            shards: 1,
+            adaptive: None,
+            seed: None,
+        }
+    }
+}
+
+/// A spec resolved against presets/registries: what the [`super::Runner`]
+/// actually executes.
+pub(crate) struct Resolved {
+    pub cfg: ExperimentConfig,
+    pub shards: usize,
+    pub controller: Option<ControllerConfig>,
+    pub model: Option<String>,
+    /// The input spec with every defaulted scalar made explicit — embedded
+    /// in reports so they re-run bit-for-bit.
+    pub spec: RunSpec,
+}
+
+impl RunSpec {
+    pub fn builder() -> RunSpecBuilder {
+        RunSpecBuilder { spec: RunSpec::default() }
+    }
+
+    /// Validate without running (resolution side effects discarded).
+    pub fn validate(&self) -> Result<()> {
+        self.resolve().map(|_| ())
+    }
+
+    /// Resolve against the presets and registries into the concrete
+    /// experiment configuration (+ shards + controller), validating at the
+    /// boundary.
+    pub(crate) fn resolve(&self) -> Result<Resolved> {
+        if crate::policy::make_policy(&self.policy, 2, 2, 0).is_none() {
+            bail!("unknown policy '{}' (see `acpc policies`)", self.policy);
+        }
+        if self.scenario.is_some() && self.profile.is_some() {
+            bail!("'scenario' and 'profile' are mutually exclusive");
+        }
+        if self.model.is_some()
+            && !matches!(self.predictor, PredictorKind::Dnn | PredictorKind::Tcn)
+        {
+            bail!(
+                "'model' overrides the artifact of a learned predictor — predictor '{}' \
+                 does not load one",
+                self.predictor.label()
+            );
+        }
+        let mut cfg = match self.preset.as_str() {
+            "table1" => ExperimentConfig::table1(&self.policy, self.predictor),
+            "smoke" => {
+                let mut c = ExperimentConfig::smoke(&self.policy);
+                c.predictor = self.predictor;
+                c
+            }
+            other => bail!("unknown preset '{other}' (table1|smoke)"),
+        };
+
+        // Seed first: scenario/profile resolution stamps it into the
+        // generator they build.
+        if let Some(seed) = self.seed {
+            cfg.seed = seed;
+            cfg.generator.seed = seed;
+        }
+        if let Some(sc) = &self.scenario {
+            cfg.set_scenario(sc)?;
+        }
+        if let Some(p) = &self.profile {
+            let profile = ModelProfile::by_name(p)
+                .ok_or_else(|| anyhow!("unknown model profile '{p}'"))?;
+            cfg.generator = crate::trace::GeneratorConfig::new(profile, cfg.seed);
+            cfg.scenario = None;
+        }
+        let w = &self.workload;
+        if let Some(v) = w.max_live_sessions {
+            cfg.generator.max_live_sessions = v;
+        }
+        if let Some(v) = w.phase_period {
+            cfg.generator.phase_period = v;
+        }
+        if let Some(v) = w.max_ctx {
+            cfg.generator.max_ctx = v;
+        }
+        if let Some(v) = w.arrival_p_hot {
+            cfg.generator.arrival_p_hot = v;
+        }
+        if let Some(v) = w.arrival_p_cold {
+            cfg.generator.arrival_p_cold = v;
+        }
+
+        let h = &self.hierarchy;
+        if let Some(name) = &h.preset {
+            cfg.hierarchy = crate::mem::HierarchyConfig::by_name(name)
+                .ok_or_else(|| anyhow!("unknown hierarchy preset '{name}'"))?;
+        }
+        if let Some(p) = &h.prefetcher {
+            if crate::mem::prefetch::make_prefetcher(p, 0).is_none() {
+                bail!("unknown prefetcher '{p}'");
+            }
+            cfg.hierarchy.prefetcher = p.clone();
+        }
+        if let Some(p) = &h.l3_policy {
+            if crate::policy::make_policy(p, 2, 2, 0).is_none() {
+                bail!("unknown l3_policy '{p}'");
+            }
+            cfg.hierarchy.l3_policy = p.clone();
+        }
+        if let Some(v) = h.l1_kb {
+            cfg.hierarchy.l1.size_bytes = v * 1024;
+        }
+        if let Some(v) = h.l2_kb {
+            cfg.hierarchy.l2.size_bytes = v * 1024;
+        }
+        if let Some(v) = h.l3_kb {
+            cfg.hierarchy.l3.size_bytes = v * 1024;
+        }
+        if let Some(v) = h.l1_assoc {
+            cfg.hierarchy.l1.assoc = v;
+        }
+        if let Some(v) = h.l2_assoc {
+            cfg.hierarchy.l2.assoc = v;
+        }
+        if let Some(v) = h.l3_assoc {
+            cfg.hierarchy.l3.assoc = v;
+        }
+        if let Some(v) = h.dram_latency {
+            cfg.hierarchy.dram_latency = v;
+        }
+        cfg.hierarchy.validate().map_err(|e| anyhow!("invalid hierarchy geometry: {e}"))?;
+
+        if let Some(n) = self.accesses {
+            if n == 0 {
+                bail!("accesses must be > 0");
+            }
+            cfg.accesses = n;
+        }
+        if let Some(n) = self.predict_batch {
+            cfg.predict_batch = n;
+        }
+        if let Some(n) = self.feedback_interval {
+            cfg.feedback_interval = n;
+        }
+        cfg.name = self.name.clone().unwrap_or_else(|| match &self.scenario {
+            Some(sc) => format!("{sc}-{}", self.policy),
+            None => format!("{}-{}", self.preset, self.policy),
+        });
+
+        if self.shards == 0 {
+            bail!("shards must be ≥ 1");
+        }
+        if self.shards > 1 {
+            cfg.hierarchy
+                .validate_shards(self.shards)
+                .map_err(|e| anyhow!("shards: {e}"))?;
+        }
+
+        let controller = match &self.adaptive {
+            Some(a) => {
+                if self.predictor == PredictorKind::None {
+                    bail!(
+                        "an adaptive run needs a predictor (got 'none'): the controller \
+                         has no predictions to throttle and no model to retrain"
+                    );
+                }
+                Some(a.resolve(cfg.seed))
+            }
+            None => None,
+        };
+
+        let mut spec = self.clone();
+        spec.name = Some(cfg.name.clone());
+        spec.seed = Some(cfg.seed);
+        spec.accesses = Some(cfg.accesses);
+        spec.predict_batch = Some(cfg.predict_batch);
+        spec.feedback_interval = Some(cfg.feedback_interval);
+        spec.adaptive = controller.as_ref().map(AdaptSpec::from_config);
+
+        Ok(Resolved { cfg, shards: self.shards, controller, model: self.model.clone(), spec })
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    /// Serialize (schema-stamped). Unset optional fields are omitted; a
+    /// resolved spec (as embedded in reports) has its scalars explicit.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Str(SCHEMA.into()));
+        j.set("preset", Json::Str(self.preset.clone()));
+        if let Some(n) = &self.name {
+            j.set("name", Json::Str(n.clone()));
+        }
+        j.set("policy", Json::Str(self.policy.clone()));
+        j.set("predictor", Json::Str(self.predictor.label().into()));
+        if let Some(m) = &self.model {
+            j.set("model", Json::Str(m.clone()));
+        }
+        if let Some(n) = self.accesses {
+            j.set("accesses", Json::Num(n as f64));
+        }
+        if let Some(n) = self.predict_batch {
+            j.set("predict_batch", Json::Num(n as f64));
+        }
+        if let Some(n) = self.feedback_interval {
+            j.set("feedback_interval", Json::Num(n as f64));
+        }
+        // String, not Num: u64 seeds exceed f64's exact-integer range.
+        if let Some(s) = self.seed {
+            j.set("seed", Json::Str(s.to_string()));
+        }
+        j.set("shards", Json::Num(self.shards as f64));
+        if let Some(a) = &self.adaptive {
+            j.set("adaptive", a.to_json());
+        }
+        let mut workload = Json::obj();
+        if let Some(sc) = &self.scenario {
+            workload.set("scenario", Json::Str(sc.clone()));
+        }
+        if let Some(p) = &self.profile {
+            workload.set("profile", Json::Str(p.clone()));
+        }
+        let w = &self.workload;
+        if let Some(v) = w.max_live_sessions {
+            workload.set("max_live_sessions", Json::Num(v as f64));
+        }
+        if let Some(v) = w.phase_period {
+            workload.set("phase_period", Json::Num(v as f64));
+        }
+        if let Some(v) = w.max_ctx {
+            workload.set("max_ctx", Json::Num(v as f64));
+        }
+        if let Some(v) = w.arrival_p_hot {
+            workload.set("arrival_p_hot", f64_json(v));
+        }
+        if let Some(v) = w.arrival_p_cold {
+            workload.set("arrival_p_cold", f64_json(v));
+        }
+        if workload != Json::obj() {
+            j.set("workload", workload);
+        }
+        let h = &self.hierarchy;
+        if !h.is_empty() {
+            let mut hv = Json::obj();
+            if let Some(v) = &h.preset {
+                hv.set("preset", Json::Str(v.clone()));
+            }
+            if let Some(v) = &h.prefetcher {
+                hv.set("prefetcher", Json::Str(v.clone()));
+            }
+            if let Some(v) = &h.l3_policy {
+                hv.set("l3_policy", Json::Str(v.clone()));
+            }
+            if let Some(v) = h.l1_kb {
+                hv.set("l1_kb", Json::Num(v as f64));
+            }
+            if let Some(v) = h.l2_kb {
+                hv.set("l2_kb", Json::Num(v as f64));
+            }
+            if let Some(v) = h.l3_kb {
+                hv.set("l3_kb", Json::Num(v as f64));
+            }
+            if let Some(v) = h.l1_assoc {
+                hv.set("l1_assoc", Json::Num(v as f64));
+            }
+            if let Some(v) = h.l2_assoc {
+                hv.set("l2_assoc", Json::Num(v as f64));
+            }
+            if let Some(v) = h.l3_assoc {
+                hv.set("l3_assoc", Json::Num(v as f64));
+            }
+            if let Some(v) = h.dram_latency {
+                hv.set("dram_latency", Json::Num(v as f64));
+            }
+            j.set("hierarchy", hv);
+        }
+        j
+    }
+
+    /// Parse a spec. Unknown keys are errors (typo protection). The legacy
+    /// `acpc simulate --config` JSON format uses the same keys, so old
+    /// config files parse — but note the *defaults for omitted keys*
+    /// changed: a file that names no `policy`/`predictor` now runs
+    /// `acpc`+`heuristic` (the spec default), where the pre-API loader
+    /// defaulted to `lru` with no predictor.
+    pub fn from_json(j: &Json) -> Result<RunSpec> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("run spec root must be an object"))?;
+        let mut spec = RunSpec::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "schema" => {
+                    let s = v.as_str().ok_or_else(|| anyhow!("schema must be a string"))?;
+                    if s != SCHEMA {
+                        bail!("unsupported spec schema '{s}' (expected '{SCHEMA}')");
+                    }
+                }
+                "preset" => {
+                    spec.preset =
+                        v.as_str().ok_or_else(|| anyhow!("preset"))?.to_string()
+                }
+                "name" => spec.name = Some(str_field(v, k)?),
+                "policy" => spec.policy = str_field(v, k)?,
+                "predictor" => {
+                    spec.predictor =
+                        PredictorKind::parse(v.as_str().ok_or_else(|| anyhow!("predictor"))?)?
+                }
+                "model" => spec.model = Some(str_field(v, k)?),
+                "accesses" => spec.accesses = Some(u64_field(v, k)? as usize),
+                "predict_batch" => spec.predict_batch = Some(u64_field(v, k)? as usize),
+                "feedback_interval" => {
+                    spec.feedback_interval = Some(u64_field(v, k)? as usize)
+                }
+                "seed" => spec.seed = Some(u64_field(v, k)?),
+                "shards" => spec.shards = u64_field(v, k)? as usize,
+                "adaptive" => {
+                    spec.adaptive = match v {
+                        Json::Bool(true) => Some(AdaptSpec::default()),
+                        Json::Bool(false) => None,
+                        other => Some(AdaptSpec::from_json(other)?),
+                    }
+                }
+                "workload" => parse_workload(&mut spec, v)?,
+                "hierarchy" => parse_hierarchy(&mut spec, v)?,
+                other => bail!("unknown run-spec key '{other}'"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> Result<RunSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+}
+
+fn parse_workload(spec: &mut RunSpec, j: &Json) -> Result<()> {
+    let obj = j.as_obj().ok_or_else(|| anyhow!("'workload' must be an object"))?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "scenario" => spec.scenario = Some(str_field(v, k)?),
+            "profile" => spec.profile = Some(str_field(v, k)?),
+            "max_live_sessions" => {
+                spec.workload.max_live_sessions = Some(u64_field(v, k)? as usize)
+            }
+            "phase_period" => spec.workload.phase_period = Some(u64_field(v, k)?),
+            "max_ctx" => spec.workload.max_ctx = Some(u64_field(v, k)? as u32),
+            "arrival_p_hot" => spec.workload.arrival_p_hot = Some(f64_field(v, k)?),
+            "arrival_p_cold" => spec.workload.arrival_p_cold = Some(f64_field(v, k)?),
+            other => bail!("unknown workload key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+fn parse_hierarchy(spec: &mut RunSpec, j: &Json) -> Result<()> {
+    let obj = j.as_obj().ok_or_else(|| anyhow!("'hierarchy' must be an object"))?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "preset" => spec.hierarchy.preset = Some(str_field(v, k)?),
+            "prefetcher" => spec.hierarchy.prefetcher = Some(str_field(v, k)?),
+            "l3_policy" => spec.hierarchy.l3_policy = Some(str_field(v, k)?),
+            "l1_kb" => spec.hierarchy.l1_kb = Some(u64_field(v, k)?),
+            "l2_kb" => spec.hierarchy.l2_kb = Some(u64_field(v, k)?),
+            "l3_kb" => spec.hierarchy.l3_kb = Some(u64_field(v, k)?),
+            "l1_assoc" => spec.hierarchy.l1_assoc = Some(u64_field(v, k)? as usize),
+            "l2_assoc" => spec.hierarchy.l2_assoc = Some(u64_field(v, k)? as usize),
+            "l3_assoc" => spec.hierarchy.l3_assoc = Some(u64_field(v, k)? as usize),
+            "dram_latency" => spec.hierarchy.dram_latency = Some(u64_field(v, k)?),
+            other => bail!("unknown hierarchy key '{other}'"),
+        }
+    }
+    Ok(())
+}
+
+// ---- field helpers -----------------------------------------------------
+
+fn str_field(v: &Json, what: &str) -> Result<String> {
+    v.as_str().map(|s| s.to_string()).ok_or_else(|| anyhow!("'{what}' must be a string"))
+}
+
+/// u64 from a JSON number *or* decimal string (u64 seeds exceed f64's 2^53
+/// exact range, so seeds round-trip as strings). Fractional values and
+/// numbers past f64's exact-integer range are rejected, not truncated —
+/// a spec must mean exactly what it says.
+fn u64_field(v: &Json, what: &str) -> Result<u64> {
+    const F64_EXACT_MAX: f64 = 9_007_199_254_740_992.0; // 2^53
+    match v {
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= F64_EXACT_MAX => Ok(*x as u64),
+        Json::Num(x) => bail!(
+            "'{what}' must be a non-negative integer exactly representable in JSON \
+             (got {x}; write values beyond 2^53 as strings)"
+        ),
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow!("'{what}' must be a non-negative integer, got '{s}'")),
+        _ => bail!("'{what}' must be a non-negative integer"),
+    }
+}
+
+fn f64_field(v: &Json, what: &str) -> Result<f64> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        // JSON has no Infinity token; passive-controller thresholds
+        // round-trip as the strings "inf"/"-inf".
+        Json::Str(s) if s == "inf" => Ok(f64::INFINITY),
+        Json::Str(s) if s == "-inf" => Ok(f64::NEG_INFINITY),
+        _ => bail!("'{what}' must be a number"),
+    }
+}
+
+fn f64_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+// ---- builder -----------------------------------------------------------
+
+/// Fluent construction of a [`RunSpec`]; [`build`](Self::build) validates
+/// by resolving against the presets/registries.
+#[derive(Debug, Clone)]
+pub struct RunSpecBuilder {
+    spec: RunSpec,
+}
+
+impl RunSpecBuilder {
+    pub fn preset(mut self, preset: &str) -> Self {
+        self.spec.preset = preset.to_string();
+        self
+    }
+
+    pub fn name(mut self, name: &str) -> Self {
+        self.spec.name = Some(name.to_string());
+        self
+    }
+
+    pub fn policy(mut self, policy: &str) -> Self {
+        self.spec.policy = policy.to_string();
+        self
+    }
+
+    pub fn predictor(mut self, kind: PredictorKind) -> Self {
+        self.spec.predictor = kind;
+        self
+    }
+
+    pub fn model(mut self, model: &str) -> Self {
+        self.spec.model = Some(model.to_string());
+        self
+    }
+
+    pub fn scenario(mut self, scenario: &str) -> Self {
+        self.spec.scenario = Some(scenario.to_string());
+        self
+    }
+
+    pub fn profile(mut self, profile: &str) -> Self {
+        self.spec.profile = Some(profile.to_string());
+        self
+    }
+
+    pub fn accesses(mut self, n: usize) -> Self {
+        self.spec.accesses = Some(n);
+        self
+    }
+
+    pub fn predict_batch(mut self, n: usize) -> Self {
+        self.spec.predict_batch = Some(n);
+        self
+    }
+
+    pub fn feedback_interval(mut self, n: usize) -> Self {
+        self.spec.feedback_interval = Some(n);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = Some(seed);
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.spec.shards = shards;
+        self
+    }
+
+    /// Attach (or detach) an adaptive controller with default thresholds.
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.spec.adaptive = if on { Some(AdaptSpec::default()) } else { None };
+        self
+    }
+
+    /// Attach an adaptive controller with an explicit configuration.
+    pub fn controller(mut self, cfg: ControllerConfig) -> Self {
+        self.spec.adaptive = Some(AdaptSpec::from_config(&cfg));
+        self
+    }
+
+    /// Attach an adaptive controller from partial spec fields.
+    pub fn adaptive_spec(mut self, a: AdaptSpec) -> Self {
+        self.spec.adaptive = Some(a);
+        self
+    }
+
+    pub fn hierarchy_preset(mut self, preset: &str) -> Self {
+        self.spec.hierarchy.preset = Some(preset.to_string());
+        self
+    }
+
+    pub fn prefetcher(mut self, prefetcher: &str) -> Self {
+        self.spec.hierarchy.prefetcher = Some(prefetcher.to_string());
+        self
+    }
+
+    pub fn l3_policy(mut self, policy: &str) -> Self {
+        self.spec.hierarchy.l3_policy = Some(policy.to_string());
+        self
+    }
+
+    pub fn l2_kb(mut self, kb: u64) -> Self {
+        self.spec.hierarchy.l2_kb = Some(kb);
+        self
+    }
+
+    pub fn max_live_sessions(mut self, n: usize) -> Self {
+        self.spec.workload.max_live_sessions = Some(n);
+        self
+    }
+
+    pub fn phase_period(mut self, period: u64) -> Self {
+        self.spec.workload.phase_period = Some(period);
+        self
+    }
+
+    pub fn max_ctx(mut self, ctx: u32) -> Self {
+        self.spec.workload.max_ctx = Some(ctx);
+        self
+    }
+
+    /// Validate (full resolution against presets/registries) and return
+    /// the spec.
+    pub fn build(self) -> Result<RunSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_and_roundtrips() {
+        let spec = RunSpec::builder()
+            .scenario("decode-heavy")
+            .policy("acpc")
+            .predictor(PredictorKind::Heuristic)
+            .accesses(10_000)
+            .seed(0xFFFF_FFFF_FFFF_FFF1) // > 2^53: must survive JSON
+            .shards(2)
+            .adaptive(true)
+            .prefetcher("stride")
+            .max_ctx(256)
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(back.seed, Some(0xFFFF_FFFF_FFFF_FFF1));
+    }
+
+    #[test]
+    fn builder_rejects_invalid_specs() {
+        assert!(RunSpec::builder().policy("nope").build().is_err());
+        assert!(RunSpec::builder().scenario("no-such-scenario").build().is_err());
+        assert!(RunSpec::builder()
+            .scenario("decode-heavy")
+            .profile("gpt3ish")
+            .build()
+            .is_err(), "scenario+profile is ambiguous");
+        assert!(RunSpec::builder().shards(3).build().is_err(), "non-power-of-two shards");
+        assert!(RunSpec::builder().shards(0).build().is_err());
+        assert!(RunSpec::builder().accesses(0).build().is_err());
+        assert!(RunSpec::builder()
+            .predictor(PredictorKind::None)
+            .adaptive(true)
+            .build()
+            .is_err(), "adaptive needs a predictor");
+        assert!(RunSpec::builder().hierarchy_preset("nope").build().is_err());
+        assert!(RunSpec::builder().prefetcher("warp-drive").build().is_err());
+        assert!(RunSpec::builder().l3_policy("nope").build().is_err());
+        assert!(RunSpec::builder().model("tcn_flat").build().is_err(),
+            "model override without a learned predictor");
+        // 96 KiB / 8-way / 64 B lines → 192 sets: not a power of two.
+        assert!(RunSpec::builder().l2_kb(96).build().is_err());
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        for text in [
+            r#"{"polcy": "lru"}"#,
+            r#"{"workload": {"scneario": "decode-heavy"}}"#,
+            r#"{"hierarchy": {"l9_kb": 1}}"#,
+            r#"{"adaptive": {"window": 1}}"#,
+            r#"{"schema": "acpc-run-v0"}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(RunSpec::from_json(&j).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn imprecise_numbers_rejected_not_truncated() {
+        // Fractional counts and numeric seeds past 2^53 silently losing
+        // precision would make a spec mean something other than it says.
+        for text in [
+            r#"{"accesses": 2.5}"#,
+            r#"{"seed": 18446744073709551615}"#,
+            r#"{"shards": -1}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(RunSpec::from_json(&j).is_err(), "{text}");
+        }
+        // The same seed as a string is exact and accepted.
+        let j = Json::parse(r#"{"seed": "18446744073709551615"}"#).unwrap();
+        assert_eq!(RunSpec::from_json(&j).unwrap().seed, Some(u64::MAX));
+    }
+
+    #[test]
+    fn resolution_derives_names_and_seeds() {
+        let spec = RunSpec::builder()
+            .scenario("rag-embedding")
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .seed(9)
+            .build()
+            .unwrap();
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.cfg.name, "rag-embedding-lru");
+        assert_eq!(r.cfg.seed, 9);
+        assert_eq!(r.cfg.generator.seed, 9);
+        assert_eq!(r.cfg.scenario.as_deref(), Some("rag-embedding"));
+        // The resolved copy makes the derived scalars explicit.
+        assert_eq!(r.spec.name.as_deref(), Some("rag-embedding-lru"));
+        assert_eq!(r.spec.accesses, Some(r.cfg.accesses));
+        assert_eq!(r.spec.seed, Some(9));
+
+        let plain = RunSpec::builder().policy("lru").predictor(PredictorKind::None).build().unwrap();
+        assert_eq!(plain.resolve().unwrap().cfg.name, "table1-lru");
+        let smoke = RunSpec::builder()
+            .preset("smoke")
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .build()
+            .unwrap();
+        let rs = smoke.resolve().unwrap();
+        assert_eq!(rs.cfg.name, "smoke-lru");
+        assert_eq!(rs.cfg.accesses, 50_000);
+    }
+
+    #[test]
+    fn resolved_spec_reresolves_identically() {
+        let spec = RunSpec::builder()
+            .scenario("multi-tenant-mix")
+            .policy("acpc")
+            .predictor(PredictorKind::Heuristic)
+            .accesses(30_000)
+            .shards(2)
+            .adaptive(true)
+            .build()
+            .unwrap();
+        let r1 = spec.resolve().unwrap();
+        // Round-trip the resolved copy through JSON and re-resolve.
+        let back = RunSpec::from_json(&r1.spec.to_json()).unwrap();
+        let r2 = back.resolve().unwrap();
+        assert_eq!(format!("{:?}", r1.cfg), format!("{:?}", r2.cfg));
+        assert_eq!(format!("{:?}", r1.controller), format!("{:?}", r2.controller));
+        assert_eq!(r1.shards, r2.shards);
+    }
+
+    #[test]
+    fn passive_controller_thresholds_survive_json() {
+        let spec = RunSpec::builder()
+            .scenario("decode-heavy")
+            .controller(ControllerConfig::passive())
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json(&spec.to_json()).unwrap();
+        let cc = back.adaptive.as_ref().unwrap().resolve(1);
+        assert!(cc.ph_lambda.is_infinite());
+        assert!(cc.pollution_margin.is_infinite());
+        assert_eq!(cc.throttle_hit_ratio, 0.0);
+    }
+
+    #[test]
+    fn legacy_config_format_parses() {
+        // The pre-API `acpc simulate --config` format is a subset.
+        let j = Json::parse(
+            r#"{"preset": "smoke", "policy": "srrip", "accesses": 30000,
+                "hierarchy": {"prefetcher": "stride"},
+                "workload": {"profile": "t5", "max_ctx": 128}}"#,
+        )
+        .unwrap();
+        let spec = RunSpec::from_json(&j).unwrap();
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.cfg.policy, "srrip");
+        assert_eq!(r.cfg.accesses, 30_000);
+        assert_eq!(r.cfg.generator.profile.name, "t5ish");
+        assert_eq!(r.cfg.generator.max_ctx, 128);
+        assert_eq!(r.cfg.hierarchy.prefetcher, "stride");
+    }
+}

@@ -1,12 +1,13 @@
 //! `acpc adapt` — replay one scenario with the adaptive controller ON vs
 //! OFF on the same seed and report the comparison (windows, drift points,
-//! swap count, hit-rate delta) as a table and optional JSON.
+//! swap count, hit-rate delta) as a table and optional JSON. Both arms
+//! execute through the unified [`crate::api::Runner`]
+//! ([`crate::api::run_compare`]).
 
-use super::build_predictor;
-use crate::adapt::{run_compare, run_compare_sharded, ControllerConfig};
+use crate::adapt::ControllerConfig;
+use crate::api::{run_compare, AdaptSpec, RunSpec};
 use crate::cli::Args;
-use crate::config::{ExperimentConfig, PredictorKind};
-use crate::predictor::PredictorBox;
+use crate::config::PredictorKind;
 use crate::util::json::Json;
 use anyhow::Result;
 
@@ -17,7 +18,8 @@ Replays the scenario twice with identical seeds: once plain, once with the
 adaptive controller (windowed pollution telemetry → Page–Hinkley drift
 detection → replay-buffer retrain for trainable predictors, throttle
 back-off otherwise). Prints the per-arm metrics, the adaptation event log,
-and the deltas; --json emits the full comparison.
+and the deltas; --json emits the full comparison, --telemetry the
+per-window series for plotting.
 
 OPTIONS:
     --scenario <name>     scenario-registry workload [default: multi-tenant-mix]
@@ -32,6 +34,8 @@ OPTIONS:
                           threads, one controller per shard [default: 1]
     --seed <n>            RNG seed
     --json <path>         write the comparison JSON
+    --telemetry <path>    write the adaptive arm's per-window telemetry
+                          series (schema acpc-adapt-telemetry-v1)
     --help";
 
 pub fn run(args: &mut Args) -> Result<i32> {
@@ -41,7 +45,7 @@ pub fn run(args: &mut Args) -> Result<i32> {
     }
     args.ensure_known(&[
         "scenario", "policy", "predictor", "accesses", "window", "ph-delta", "ph-lambda",
-        "train-steps", "shards", "seed", "json", "help",
+        "train-steps", "shards", "seed", "json", "telemetry", "help",
     ])?;
 
     let scenario = args.opt_or("scenario", "multi-tenant-mix");
@@ -54,56 +58,59 @@ pub fn run(args: &mut Args) -> Result<i32> {
         );
     }
     let seed = args.u64_or("seed", 0xADA7_2026)?;
-    let mut cfg = ExperimentConfig::for_scenario(&scenario, &policy, kind, seed)?;
-    cfg.accesses = args.usize_or("accesses", 400_000)?;
-    if crate::policy::make_policy(&cfg.policy, 2, 2, 0).is_none() {
-        anyhow::bail!("unknown policy '{}' (see `acpc policies`)", cfg.policy);
-    }
-
-    let base = ControllerConfig::default();
-    let ccfg = ControllerConfig {
-        window_accesses: args.u64_or("window", base.window_accesses)?.max(256),
-        ph_delta: args.f64_or("ph-delta", base.ph_delta)?,
-        ph_lambda: args.f64_or("ph-lambda", base.ph_lambda)?,
-        train_steps_on_drift: args.usize_or("train-steps", base.train_steps_on_drift)?,
-        seed,
-        ..base
-    };
-
+    let accesses = args.usize_or("accesses", 400_000)?;
     let shards = args.usize_or("shards", 1)?;
-    if shards > 1 {
-        cfg.hierarchy
-            .validate_shards(shards)
-            .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
-    }
+
+    // Defaults come from the controller itself, so the CLI cannot drift
+    // from `acpc run`/`acpc sweep` adaptive specs.
+    let base = ControllerConfig::default();
+    let adapt = AdaptSpec {
+        window_accesses: Some(args.u64_or("window", base.window_accesses)?.max(256)),
+        ph_delta: args.opt("ph-delta").map(|_| args.f64_or("ph-delta", 0.0)).transpose()?,
+        ph_lambda: args.opt("ph-lambda").map(|_| args.f64_or("ph-lambda", 0.0)).transpose()?,
+        train_steps_on_drift: args
+            .opt("train-steps")
+            .map(|_| args.usize_or("train-steps", 0))
+            .transpose()?,
+        seed: Some(seed),
+        ..AdaptSpec::default()
+    };
+    let spec = RunSpec::builder()
+        .scenario(&scenario)
+        .policy(&policy)
+        .predictor(kind)
+        .accesses(accesses)
+        .seed(seed)
+        .shards(shards.max(1))
+        .adaptive_spec(adapt)
+        .build()?;
+    // Resolve once for the provenance JSON below (the compare harness
+    // resolves per arm internally).
+    let resolved = spec.resolve()?.spec;
+    let window_accesses = resolved
+        .adaptive
+        .as_ref()
+        .and_then(|a| a.window_accesses)
+        .unwrap_or(base.window_accesses);
 
     println!(
         "adapt: scenario={} policy={} predictor={} accesses={} window={} shards={} \
          (2 arms, same seed)",
         scenario,
-        cfg.policy,
+        policy,
         kind.label(),
-        cfg.accesses,
-        ccfg.window_accesses,
+        accesses,
+        window_accesses,
         shards.max(1)
     );
-    let out = if shards > 1 {
-        let mk = move |_shard: usize| -> PredictorBox {
-            super::build_predictor_or_heuristic(kind, None, "adapt")
-        };
-        run_compare_sharded(&cfg, &ccfg, shards, &mk)?
-    } else {
-        // One fresh predictor per arm so the adaptive arm's fine-tuning
-        // cannot leak into the baseline. Built up front so artifact errors
-        // surface as CLI errors, not mid-run panics.
-        let mut pool: Vec<PredictorBox> =
-            vec![build_predictor(kind, None)?, build_predictor(kind, None)?];
-        run_compare(&cfg, &ccfg, move || pool.pop().expect("two prebuilt arms"))
-    };
+    let out = run_compare(&spec)?;
 
-    println!("\n== controller OFF (baseline) ==");
+    println!(
+        "\n== controller OFF (baseline) == [predictor: {}]",
+        out.predictor_effective_baseline
+    );
     println!("{}", out.baseline.report.summary());
-    println!("== controller ON ==");
+    println!("== controller ON == [predictor: {}]", out.predictor_effective_adaptive);
     println!("{}", out.adaptive.report.summary());
     let s = &out.summary;
     println!(
@@ -134,14 +141,23 @@ pub fn run(args: &mut Args) -> Result<i32> {
 
     if let Some(path) = args.opt("json") {
         let mut j = out.to_json();
-        j.set("scenario", Json::Str(scenario.clone()));
-        j.set("policy", Json::Str(cfg.policy.clone()));
-        j.set("predictor", Json::Str(kind.label().into()));
-        // String, not Num: u64 seeds exceed f64's exact-integer range.
-        j.set("seed", Json::Str(seed.to_string()));
-        j.set("accesses", Json::Num(cfg.accesses as f64));
-        j.set("window_accesses", Json::Num(ccfg.window_accesses as f64));
+        j.set("spec", resolved.to_json());
         std::fs::write(path, j.to_pretty())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.opt("telemetry") {
+        // Per-window series of the adaptive arm — the plotting input
+        // (fig-style): columnar arrays aligned on the window log.
+        let mut t = out.summary.telemetry_json();
+        t.set("scenario", Json::Str(scenario.clone()));
+        t.set("policy", Json::Str(policy.clone()));
+        // What actually ran (artifact fallback included), plus the request.
+        t.set("predictor", Json::Str(out.predictor_effective_adaptive.clone()));
+        t.set("predictor_requested", Json::Str(kind.label().into()));
+        // String, not Num: u64 seeds exceed f64's exact-integer range.
+        t.set("seed", Json::Str(seed.to_string()));
+        t.set("window_accesses", Json::Num(window_accesses as f64));
+        std::fs::write(path, t.to_pretty())?;
         println!("wrote {path}");
     }
     Ok(0)

@@ -1,53 +1,19 @@
 //! CLI subcommand implementations.
+//!
+//! Every simulation-shaped command (`simulate`, `adapt`, `sweep` cells,
+//! `run`) assembles a [`crate::api::RunSpec`] and executes it through the
+//! unified [`crate::api::Runner`] — predictor loading, artifact fallback
+//! and sharded dispatch live there, not here.
 
 pub mod adapt;
 pub mod policies;
+pub mod run;
 pub mod serve;
 pub mod simulate;
 pub mod sweep;
 pub mod table1;
 pub mod trace_stats;
 pub mod train;
-
-use crate::config::PredictorKind;
-use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
-use anyhow::Result;
-
-/// Build a predictor box for a kind, loading the model from the AOT
-/// artifacts when needed.
-pub fn build_predictor(kind: PredictorKind, model_override: Option<&str>) -> Result<PredictorBox> {
-    match kind {
-        PredictorKind::None => Ok(PredictorBox::None),
-        PredictorKind::Heuristic => Ok(PredictorBox::Heuristic(HeuristicPredictor)),
-        PredictorKind::Dnn | PredictorKind::Tcn => {
-            let name = model_override.unwrap_or(match kind {
-                PredictorKind::Dnn => "dnn",
-                _ => "tcn",
-            });
-            let rt = ModelRuntime::load_from_artifacts(name)?;
-            Ok(PredictorBox::Model(Box::new(rt)))
-        }
-    }
-}
-
-/// [`build_predictor`] with the sharded-run fallback policy: learned
-/// predictors are loaded *inside* each shard thread (PJRT handles are
-/// thread-affine), and a load failure there degrades to the heuristic with
-/// a warning instead of aborting the whole run mid-flight. `ctx` names the
-/// command for the log line.
-pub fn build_predictor_or_heuristic(
-    kind: PredictorKind,
-    model_override: Option<&str>,
-    ctx: &str,
-) -> PredictorBox {
-    build_predictor(kind, model_override).unwrap_or_else(|e| {
-        crate::log_warn!(
-            "{ctx}: predictor load failed in a shard thread ({e}); falling back to the \
-             heuristic predictor"
-        );
-        PredictorBox::Heuristic(HeuristicPredictor)
-    })
-}
 
 /// ASCII plot of a loss curve (y auto-scaled), for terminal-friendly Fig 2.
 pub fn ascii_plot(curve: &[f64], width: usize, height: usize) -> String {

@@ -1,0 +1,86 @@
+//! `acpc run` — execute a reproducible `RunSpec` file through the unified
+//! [`crate::api::Runner`]: the CLI face of the library's one front door.
+
+use crate::api::{RunSpec, Runner};
+use crate::cli::Args;
+use anyhow::Result;
+use std::path::Path;
+
+const HELP: &str = "\
+acpc run — execute a RunSpec file (schema acpc-run-v1)
+
+A RunSpec describes one run completely: policy, workload (scenario or
+profile + generator overrides), predictor kind + artifact override,
+hierarchy, accesses, set-shards, adaptive controller, seed. The report
+embeds the fully-resolved spec, so `--json out.json` then re-running the
+report's `spec` object reproduces the run bit-for-bit. See the README's
+\"Library API\" section for the spec format; `acpc simulate --config`
+accepts the same files.
+
+OPTIONS:
+    --spec <file.json>    the RunSpec to execute (required)
+    --seed <n>            override the spec's seed
+    --accesses <n>        override the spec's trace length
+    --shards <n>          override the spec's set-shard count
+    --json <path>         write the RunReport JSON (schema acpc-run-v1)
+    --spec-out <path>     write the fully-resolved spec JSON
+    --help
+
+Example:
+    echo '{\"policy\": \"acpc\", \"workload\": {\"scenario\": \"decode-heavy\"},
+           \"accesses\": 200000, \"seed\": \"7\"}' > run.json
+    acpc run --spec run.json --json report.json";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&["spec", "seed", "accesses", "shards", "json", "spec-out", "help"])?;
+    let Some(path) = args.opt("spec") else {
+        anyhow::bail!("--spec <file.json> is required (see `acpc run --help`)");
+    };
+    let mut spec = RunSpec::from_file(Path::new(path))?;
+    if args.opt("seed").is_some() {
+        spec.seed = Some(args.u64_or("seed", 0)?);
+    }
+    if args.opt("accesses").is_some() {
+        spec.accesses = Some(args.usize_or("accesses", 0)?);
+    }
+    if args.opt("shards").is_some() {
+        spec.shards = args.usize_or("shards", 1)?;
+    }
+
+    let runner = Runner::new(spec)?;
+    {
+        let s = runner.spec();
+        println!(
+            "run: name={} policy={} predictor={} accesses={} shards={} adaptive={}",
+            s.name.as_deref().unwrap_or("-"),
+            s.policy,
+            s.predictor.label(),
+            s.accesses.unwrap_or(0),
+            s.shards,
+            s.adaptive.is_some(),
+        );
+    }
+    let report = runner.run()?;
+
+    println!("\n{}", report.result.report.summary());
+    println!("{}", report.counters_line());
+    if let Some(a) = report.adaptation() {
+        println!(
+            "adaptation: windows={} drift_events={} swaps={} throttled_windows={}",
+            a.windows_observed, a.drift_events, a.swaps, a.throttled_windows
+        );
+    }
+    if let Some(out) = args.opt("spec-out") {
+        std::fs::write(out, report.spec.to_json().to_pretty())?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = args.opt("json") {
+        std::fs::write(out, report.to_json().to_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(0)
+}

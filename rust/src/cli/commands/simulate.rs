@@ -1,10 +1,16 @@
-//! `acpc simulate` — one simulation run with full metric output.
+//! `acpc simulate` — one cache simulation with full metric output.
+//!
+//! Flags assemble a [`crate::api::RunSpec`] which the unified
+//! [`crate::api::Runner`] executes — the same code path as `acpc run`,
+//! `acpc adapt`, the sweep cells and the library API. `--config` accepts a
+//! spec file (the pre-API `simulate --config` keys all parse; files that
+//! omit `policy`/`predictor` now take the spec defaults `acpc`/`heuristic`
+//! instead of the old loader's `lru`/none); explicit CLI flags override
+//! the file.
 
-use super::build_predictor;
+use crate::api::{RunSpec, Runner};
 use crate::cli::Args;
-use crate::config::{ExperimentConfig, PredictorKind};
-use crate::predictor::PredictorBox;
-use crate::sim::{run_experiment, run_workload_sharded};
+use crate::config::PredictorKind;
 use anyhow::Result;
 use std::path::Path;
 
@@ -20,12 +26,13 @@ OPTIONS:
     --scenario <name>     scenario-registry workload (see `acpc policies`)
     --prefetcher <name>   none|nextline|stride|correlation|composite
     --hierarchy <preset>  scaled|epyc7763 [default: scaled]
-    --config <file.json>  JSON config overrides (see config module)
+    --config <file.json>  RunSpec file to start from (see `acpc run --help`)
     --feedback <n>        online-learning interval in accesses (0 = off)
     --shards <n>          split the run across n set-partitioned worker
                           threads (power of two; exact aggregate stats) [default: 1]
     --seed <n>            RNG seed
-    --json <path>         write the metrics report as JSON
+    --json <path>         write the RunReport as JSON (schema acpc-run-v1,
+                          embeds the resolved spec)
     --help";
 
 pub fn run(args: &mut Args) -> Result<i32> {
@@ -41,96 +48,67 @@ pub fn run(args: &mut Args) -> Result<i32> {
         anyhow::bail!("--profile and --scenario are mutually exclusive");
     }
 
-    let mut kind = PredictorKind::parse(&args.opt_or("predictor", "heuristic"))?;
-    let mut cfg = ExperimentConfig::table1(&args.opt_or("policy", "acpc"), kind);
-    if let Some(path) = args.opt("config") {
-        cfg = ExperimentConfig::from_file(Path::new(path))?;
-        // Explicitly-given CLI flags beat the file; otherwise the file is
-        // authoritative — including for the predictor actually built below,
-        // so the run matches the provenance the report records.
-        if let Some(p) = args.opt("policy") {
-            cfg.policy = p.to_string();
-        }
-        if args.opt("predictor").is_some() {
-            cfg.predictor = kind;
-        } else {
-            kind = cfg.predictor;
-        }
+    // The config file (if any) is the base; explicit flags override it.
+    let mut spec = match args.opt("config") {
+        Some(path) => RunSpec::from_file(Path::new(path))?,
+        None => RunSpec::default(),
+    };
+    if let Some(p) = args.opt("policy") {
+        spec.policy = p.to_string();
     }
-    cfg.accesses = args.usize_or("accesses", cfg.accesses)?;
-    cfg.feedback_interval = args.usize_or("feedback", cfg.feedback_interval)?;
-    cfg.seed = args.u64_or("seed", cfg.seed)?;
-    cfg.generator.seed = cfg.seed;
+    if let Some(k) = args.opt("predictor") {
+        spec.predictor = PredictorKind::parse(k)?;
+    }
+    if let Some(m) = args.opt("model") {
+        spec.model = Some(m.to_string());
+    }
+    if args.opt("accesses").is_some() {
+        spec.accesses = Some(args.usize_or("accesses", 0)?);
+    }
     if let Some(p) = args.opt("profile") {
-        let profile = crate::trace::ModelProfile::by_name(p)
-            .ok_or_else(|| anyhow::anyhow!("unknown profile '{p}'"))?;
-        cfg.generator = crate::trace::GeneratorConfig::new(profile, cfg.seed);
-        // A --config file may have set a scenario; the profile replaces
-        // its generator wholesale, so drop the stale provenance.
-        cfg.scenario = None;
+        spec.profile = Some(p.to_string());
+        // A config file may have set a scenario; an explicit profile
+        // replaces the workload wholesale.
+        spec.scenario = None;
     }
     if let Some(s) = args.opt("scenario") {
-        cfg.set_scenario(s)?;
+        spec.scenario = Some(s.to_string());
+        spec.profile = None;
     }
     if let Some(p) = args.opt("prefetcher") {
-        cfg.hierarchy.prefetcher = p.to_string();
+        spec.hierarchy.prefetcher = Some(p.to_string());
     }
     if let Some(h) = args.opt("hierarchy") {
-        let pf = cfg.hierarchy.prefetcher.clone();
-        cfg.hierarchy = crate::mem::HierarchyConfig::by_name(h)
-            .ok_or_else(|| anyhow::anyhow!("unknown hierarchy '{h}'"))?;
-        cfg.hierarchy.prefetcher = pf;
+        spec.hierarchy.preset = Some(h.to_string());
     }
-    if crate::policy::make_policy(&cfg.policy, 2, 2, 0).is_none() {
-        anyhow::bail!("unknown policy '{}' (see `acpc policies`)", cfg.policy);
+    if args.opt("feedback").is_some() {
+        spec.feedback_interval = Some(args.usize_or("feedback", 0)?);
     }
-    cfg.hierarchy.validate().map_err(|e| anyhow::anyhow!("invalid hierarchy geometry: {e}"))?;
-    let shards = args.usize_or("shards", 1)?;
-    if shards > 1 {
-        cfg.hierarchy
-            .validate_shards(shards)
-            .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
+    if args.opt("seed").is_some() {
+        spec.seed = Some(args.u64_or("seed", 0)?);
+    }
+    if args.opt("shards").is_some() {
+        spec.shards = args.usize_or("shards", 1)?;
     }
 
-    let res = if shards > 1 {
-        let model = args.opt("model").map(|s| s.to_string());
-        let mk = move |_shard: usize| -> PredictorBox {
-            super::build_predictor_or_heuristic(kind, model.as_deref(), "simulate")
-        };
+    let runner = Runner::new(spec)?;
+    {
+        let s = runner.spec();
         println!(
-            "simulating: policy={} predictor={} accesses={} workload={} prefetcher={} shards={}",
-            cfg.policy,
-            kind.label(),
-            cfg.accesses,
-            cfg.generator.profile.name,
-            cfg.hierarchy.prefetcher,
-            shards
+            "simulating: policy={} predictor={} accesses={} workload={} shards={}",
+            s.policy,
+            s.predictor.label(),
+            s.accesses.unwrap_or(0),
+            s.scenario.as_deref().or_else(|| s.profile.as_deref()).unwrap_or("gpt3ish"),
+            s.shards,
         );
-        let mut workload = cfg.workload();
-        run_workload_sharded(&cfg, workload.as_mut(), shards, &mk, None)?.result
-    } else {
-        let mut predictor = build_predictor(kind, args.opt("model"))?;
-        println!(
-            "simulating: policy={} predictor={} accesses={} workload={} prefetcher={}",
-            cfg.policy, predictor.name(), cfg.accesses, cfg.generator.profile.name, cfg.hierarchy.prefetcher
-        );
-        run_experiment(&cfg, &mut predictor)
-    };
+    }
+    let report = runner.run()?;
 
-    println!("\n{}", res.report.summary());
-    println!(
-        "tokens={} emu={:.3} pred_batches={} online_steps={} wall={:.2}s ({:.2}M acc/s)",
-        res.tokens,
-        res.emu,
-        res.prediction_batches,
-        res.online_train_steps,
-        res.wall_secs,
-        res.accesses_per_sec / 1e6
-    );
+    println!("\n{}", report.result.report.summary());
+    println!("{}", report.counters_line());
     if let Some(path) = args.opt("json") {
-        let mut j = res.report.to_json();
-        j.set("config", cfg.to_json());
-        std::fs::write(path, j.to_pretty())?;
+        std::fs::write(path, report.to_json().to_pretty())?;
         println!("wrote {path}");
     }
     Ok(0)

@@ -15,6 +15,7 @@ USAGE:
     acpc <COMMAND> [OPTIONS]
 
 COMMANDS:
+    run          execute a reproducible RunSpec file (the library's front door)
     simulate     run one cache simulation (policy × predictor × workload)
     sweep        parallel policy×scenario experiment grid
     adapt        closed-loop adaptation: controller ON vs OFF on one seed
@@ -40,6 +41,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         }
     };
     match cmd.as_str() {
+        "run" => commands::run::run(&mut args),
         "simulate" => commands::simulate::run(&mut args),
         "sweep" => commands::sweep::run(&mut args),
         "adapt" => commands::adapt::run(&mut args),

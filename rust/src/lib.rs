@@ -18,8 +18,15 @@
 //!   coordinator ([`coordinator`]), and the paper's metrics ([`metrics`]).
 //!
 //! Python never executes on the simulation/serving path.
+//!
+//! **Run API:** every experiment goes through one front door — build a
+//! serializable [`api::RunSpec`], hand it to an [`api::Runner`], get a
+//! versioned [`api::RunReport`] whose embedded resolved spec reproduces
+//! the run bit-for-bit. See the [`api`] module docs and the README's
+//! "Library API" section.
 
 pub mod adapt;
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

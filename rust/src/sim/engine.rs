@@ -131,8 +131,9 @@ const EMU_SAMPLE_PERIOD: u64 = 8192;
 
 /// The shared access-driving core: hierarchy + feature extraction + metric
 /// sampling. Every consumer calls [`Engine::step`] per access and harvests
-/// a [`MetricsReport`] at the end; the batch-mode entry points
-/// ([`run_experiment`] / [`run_workload`]) wrap the loop.
+/// a [`MetricsReport`] at the end; the crate-internal batch-mode entry
+/// points (`run_experiment` / `run_workload`, delegates of
+/// [`crate::api::Runner::run`]) wrap the loop.
 pub struct Engine {
     /// The simulated memory system (public: consumers harvest raw stats).
     pub hier: Hierarchy,
@@ -258,14 +259,18 @@ impl Engine {
 /// Run one experiment on the workload the config describes (scenario or
 /// profile). The predictor is taken by value inside `PredictorBox` so
 /// learned runs can feed the online learner.
-pub fn run_experiment(cfg: &ExperimentConfig, predictor: &mut PredictorBox) -> SimResult {
+///
+/// Crate-internal since the `RunSpec` API landed: external callers go
+/// through [`crate::api::Runner::run`], for which this is a delegate.
+pub(crate) fn run_experiment(cfg: &ExperimentConfig, predictor: &mut PredictorBox) -> SimResult {
     let mut workload = cfg.workload();
     run_workload(cfg, workload.as_mut(), predictor)
 }
 
 /// Run one experiment driving an explicit [`Workload`] through the shared
 /// [`Engine`] — the single batch-mode access loop in the codebase.
-pub fn run_workload(
+/// Crate-internal delegate of [`crate::api::Runner::run`].
+pub(crate) fn run_workload(
     cfg: &ExperimentConfig,
     workload: &mut dyn Workload,
     predictor: &mut PredictorBox,
@@ -434,7 +439,8 @@ impl<'a> AccessDriver<'a> {
 /// plain run. With a controller attached, the controller's drift-triggered
 /// learner replaces the legacy fixed-interval §3.4 feedback
 /// (`cfg.feedback_interval` is ignored).
-pub fn run_workload_adaptive(
+/// Crate-internal delegate of [`crate::api::Runner::run`].
+pub(crate) fn run_workload_adaptive(
     cfg: &ExperimentConfig,
     workload: &mut dyn Workload,
     predictor: &mut PredictorBox,

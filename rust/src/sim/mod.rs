@@ -1,28 +1,31 @@
 //! End-to-end experiment driver: workload → feature extractor → (batched)
-//! predictor → cache hierarchy (+prefetcher) → metrics. This is the module
-//! the CLI, benches, coordinator and examples call into.
+//! predictor → cache hierarchy (+prefetcher) → metrics.
+//!
+//! Since the `RunSpec` API landed, the public run entrypoint is
+//! [`crate::api::Runner::run`] — this module provides the machinery under
+//! it:
 //!
 //! - [`Engine`] — the shared per-access driving core (any [`crate::trace::Workload`]);
-//! - [`run_experiment`] / [`run_workload`] — batch-mode runs producing a [`SimResult`];
-//! - [`run_workload_adaptive`] — same loop with an [`crate::adapt::AdaptiveController`];
-//! - [`shard`] — set-sharded single-cell simulation: one run split across
-//!   N worker threads by cache-set partition, with exact stat merging;
-//! - [`sweep`] — the multi-threaded policy×scenario×predictor grid runner;
+//! - `run_experiment` / `run_workload` / `run_workload_adaptive` —
+//!   crate-internal batch-mode delegates producing a [`SimResult`];
+//! - `shard` — set-sharded single-cell simulation: one run split across
+//!   N worker threads by cache-set partition, with exact stat merging and
+//!   a persistent per-thread worker pool;
+//! - [`sweep`] — the multi-threaded policy×scenario×predictor grid runner
+//!   (each cell executes through the [`crate::api::Runner`]);
 //! - [`table1`] — the paper's Table 1 pipeline built on the above.
 
 mod engine;
 mod oracle;
-pub mod shard;
+pub(crate) mod shard;
 pub mod sweep;
 pub mod table1;
 
 // `OnlineLearner` moved to `crate::adapt`; re-exported here for the
 // historical `sim::OnlineLearner` path.
 pub use crate::adapt::OnlineLearner;
-pub use engine::{
-    run_experiment, run_workload, run_workload_adaptive, Engine, PredictionBatch, SimResult,
-};
+pub use engine::{Engine, PredictionBatch, SimResult};
+pub(crate) use engine::{run_experiment, run_workload, run_workload_adaptive};
 pub use oracle::annotate_next_use;
-pub use shard::{run_workload_sharded, ShardedRun};
 pub use sweep::{cell_seed, run_sweep, SweepCell, SweepConfig};
 pub use table1::{run_table1, Table1Output, Table1Scale};

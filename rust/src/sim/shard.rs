@@ -11,7 +11,15 @@
 //! extractor, prediction batch and (optionally) adaptive-controller window.
 //! The workload stream is produced once, in order, and routed into bounded
 //! lock-free SPSC rings ([`crate::util::spsc`]) as per-shard chunks, so the
-//! access path takes no locks.
+//! access path takes no locks. Drained chunk buffers flow *back* to the
+//! producer through a second ring per shard, so the steady-state routing
+//! path allocates no fresh chunk vectors.
+//!
+//! Shard workers are **persistent per calling thread**: the first sharded
+//! run on a thread spawns its pool, later runs reuse it (and the pool dies
+//! with the thread). Predictor factories therefore run on long-lived
+//! threads, which is what lets the runner's per-thread TCN cache amortize
+//! one artifact load across every sharded sweep cell a thread executes.
 //!
 //! Aggregation is exact: [`CacheStats`](crate::mem::CacheStats) /
 //! [`SimResult`] merge by summing monotone counters and recomputing derived
@@ -38,6 +46,8 @@ use crate::predictor::{GeometryHints, PredictorBox};
 use crate::trace::{Access, Workload};
 use crate::util::spsc;
 use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// Accesses per routed chunk: big enough that ring-atomic traffic is
@@ -51,6 +61,16 @@ const SHARD_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// One access plus its Belady next-use annotation (`u64::MAX` = none).
 type Item = (Access, u64);
+
+/// Constructs a shard's predictor *inside* the shard's worker thread
+/// (PJRT handles are thread-affine). The canonical (public) alias lives in
+/// the API layer: [`crate::api::PredictorFactory`].
+pub(crate) use crate::api::PredictorFactory;
+
+/// Called with each shard's predictor after its run completes — the hook
+/// the runner uses to return cached (weight-untouched) models to the
+/// worker thread's TCN cache.
+pub(crate) type PredictorReclaim = Arc<dyn Fn(usize, PredictorBox) + Send + Sync>;
 
 /// Everything a finished shard hands back for the exact merge.
 struct ShardOut {
@@ -72,22 +92,102 @@ pub struct ShardedRun {
     pub controllers: Vec<ControllerSummary>,
 }
 
+// ---- persistent shard-worker pool --------------------------------------
+
+type ShardJob = Box<dyn FnOnce() + Send>;
+
+struct PoolWorker {
+    tx: Option<mpsc::Sender<ShardJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Long-lived shard workers owned by one calling thread. Worker `k` always
+/// executes shard `k`, so per-thread state (the runner's TCN cache) maps
+/// stably onto shard indices across runs.
+struct ShardPool {
+    workers: Vec<PoolWorker>,
+}
+
+impl ShardPool {
+    fn new() -> Self {
+        Self { workers: Vec::new() }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        while self.workers.len() < n {
+            let idx = self.workers.len();
+            let (tx, rx) = mpsc::channel::<ShardJob>();
+            let handle = std::thread::Builder::new()
+                .name(format!("acpc-shard-{idx}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn shard worker");
+            self.workers.push(PoolWorker { tx: Some(tx), handle: Some(handle) });
+        }
+    }
+
+    fn submit(&self, k: usize, job: ShardJob) {
+        self.workers[k]
+            .tx
+            .as_ref()
+            .expect("pool worker sender present")
+            .send(job)
+            .expect("shard worker accepting jobs");
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // Close the job channels first so every worker's recv loop ends,
+        // then join. A worker that panicked reports a join error, which is
+        // ignored here — the run that observed the panic already surfaced
+        // it.
+        for w in &mut self.workers {
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// The calling thread's persistent pool; created lazily by the first
+    /// sharded run and reused (growing as needed) afterwards. Dropped with
+    /// the thread — sweep worker threads keep their shard workers for the
+    /// whole sweep.
+    static SHARD_POOL: RefCell<Option<ShardPool>> = const { RefCell::new(None) };
+}
+
+// ------------------------------------------------------------------------
+
 /// Run one simulation cell split across `shards` worker threads by L2 set
-/// index. `mk_predictor` is invoked once *inside* each shard thread (PJRT
-/// executables are thread-affine); `ccfg` attaches a per-shard
-/// [`AdaptiveController`] (seeded per shard). `shards <= 1` is exactly the
-/// single-threaded [`run_workload_adaptive`] path.
-pub fn run_workload_sharded(
+/// index. `mk_predictor` is invoked once *inside* each shard's worker
+/// thread; `reclaim` (if any) receives each shard's predictor after the
+/// run; `ccfg` attaches a per-shard [`AdaptiveController`] (seeded per
+/// shard). `shards <= 1` is exactly the single-threaded
+/// [`run_workload_adaptive`] path. Crate-internal delegate of
+/// [`crate::api::Runner::run`].
+pub(crate) fn run_workload_sharded(
     cfg: &ExperimentConfig,
     workload: &mut dyn Workload,
     shards: usize,
-    mk_predictor: &(dyn Fn(usize) -> PredictorBox + Sync),
+    mk_predictor: &PredictorFactory,
+    reclaim: Option<&PredictorReclaim>,
     ccfg: Option<&ControllerConfig>,
 ) -> Result<ShardedRun> {
     if shards <= 1 {
         let mut predictor = mk_predictor(0);
         let mut controller = ccfg.map(|c| AdaptiveController::new(c.clone()));
         let result = run_workload_adaptive(cfg, workload, &mut predictor, controller.as_mut());
+        if let Some(r) = reclaim {
+            r(0, predictor);
+        }
         let controllers = controller.map(|c| vec![c.into_summary()]).unwrap_or_default();
         return Ok(ShardedRun { result, controllers });
     }
@@ -110,89 +210,167 @@ pub fn run_workload_sharded(
         (None, None)
     };
 
+    let mut pool = SHARD_POOL.with(|p| p.borrow_mut().take()).unwrap_or_else(ShardPool::new);
+    pool.ensure(shards);
+
+    let (res_tx, res_rx) = mpsc::channel::<(usize, ShardOut)>();
     let mut producers = Vec::with_capacity(shards);
-    let mut consumers = Vec::with_capacity(shards);
-    for _ in 0..shards {
+    let mut returns = Vec::with_capacity(shards);
+    for k in 0..shards {
         let (tx, rx) = spsc::channel::<Vec<Item>>(RING_CHUNKS);
+        // Return ring: the worker pushes drained (cleared) chunk buffers
+        // back; the producer reuses them instead of allocating per chunk.
+        let (ret_tx, ret_rx) = spsc::channel::<Vec<Item>>(RING_CHUNKS);
         producers.push(tx);
-        consumers.push(rx);
+        returns.push(ret_rx);
+        pool.submit(
+            k,
+            shard_job(ShardArgs {
+                cfg: cfg.clone(),
+                k,
+                shards,
+                geom,
+                rx,
+                ret_tx,
+                mk: Arc::clone(mk_predictor),
+                reclaim: reclaim.cloned(),
+                ccfg: ccfg.cloned(),
+                res_tx: res_tx.clone(),
+            }),
+        );
+    }
+    // Jobs hold clones; dropping the original lets a worker panic surface
+    // as a receive error instead of a hang.
+    drop(res_tx);
+
+    // Producer: route the single ordered stream into per-shard chunks.
+    let mut staging: Vec<Vec<Item>> = (0..shards).map(|_| Vec::with_capacity(CHUNK)).collect();
+    for i in 0..cfg.accesses {
+        let a = match &trace_vec {
+            Some(tv) => tv[i],
+            None => workload.next_access(),
+        };
+        let nu = next_use.as_ref().map(|v| v[i]).unwrap_or(u64::MAX);
+        let k = (a.line() & mask) as usize;
+        staging[k].push((a, nu));
+        if staging[k].len() == CHUNK {
+            let fresh = recycled_chunk(&mut returns[k]);
+            let chunk = std::mem::replace(&mut staging[k], fresh);
+            producers[k].push(chunk);
+        }
+    }
+    for (k, st) in staging.into_iter().enumerate() {
+        if !st.is_empty() {
+            producers[k].push(st);
+        }
+    }
+    for p in &mut producers {
+        p.close();
     }
 
-    let outs: Vec<ShardOut> = std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(shards);
-        for (k, mut rx) in consumers.into_iter().enumerate() {
-            handles.push(s.spawn(move || {
-                let hier = Hierarchy::new_sharded(cfg.hierarchy.clone(), &cfg.policy, k, shards);
-                let mut predictor = mk_predictor(k);
-                let pw = if predictor.is_some() { predictor.window().max(1) } else { 0 };
-                let engine = Engine::with_hierarchy(hier, geom, pw);
-                let mut controller = ccfg.map(|c| {
-                    let mut cc = c.clone();
-                    cc.seed ^= (k as u64).wrapping_mul(SHARD_SEED_MIX);
-                    AdaptiveController::new(cc)
-                });
-                let mut driver =
-                    AccessDriver::new(cfg, engine, &mut predictor, controller.as_mut());
-                while let Some(chunk) = rx.pop() {
-                    for (a, nu) in chunk {
-                        driver.drive(&a, (nu != u64::MAX).then_some(nu));
-                    }
-                }
-                let out = driver.finish();
-                let (emu_acc, emu_samples) = out.engine.emu_parts();
-                let steps = out.engine.steps();
-                let (adapt, controller_steps, summary) = match controller {
-                    Some(c) => {
-                        let counters =
-                            (c.windows(), c.drift_count(), c.swap_count(), c.throttled_windows());
-                        let steps = c.online_train_steps();
-                        (Some(counters), steps, Some(c.into_summary()))
-                    }
-                    None => (None, 0, None),
-                };
-                ShardOut {
-                    hier: out.engine.hier,
-                    emu_acc,
-                    emu_samples,
-                    steps,
-                    prediction_batches: out.prediction_batches,
-                    train_steps: out.learner_steps + controller_steps,
-                    predictor_name: predictor.name(),
-                    adapt,
-                    summary,
-                }
-            }));
-        }
-
-        // Producer: route the single ordered stream into per-shard chunks.
-        let mut staging: Vec<Vec<Item>> =
-            (0..shards).map(|_| Vec::with_capacity(CHUNK)).collect();
-        for i in 0..cfg.accesses {
-            let a = match &trace_vec {
-                Some(tv) => tv[i],
-                None => workload.next_access(),
-            };
-            let nu = next_use.as_ref().map(|v| v[i]).unwrap_or(u64::MAX);
-            let k = (a.line() & mask) as usize;
-            staging[k].push((a, nu));
-            if staging[k].len() == CHUNK {
-                let chunk = std::mem::replace(&mut staging[k], Vec::with_capacity(CHUNK));
-                producers[k].push(chunk);
+    let mut outs: Vec<Option<ShardOut>> = Vec::new();
+    outs.resize_with(shards, || None);
+    for _ in 0..shards {
+        match res_rx.recv() {
+            Ok((k, out)) => outs[k] = Some(out),
+            Err(_) => {
+                // A worker died without reporting: its thread is gone, so
+                // the pool cannot be reused. Unblock any still-running
+                // workers (closed rings), discard the pool (joins the
+                // survivors) and surface the failure exactly like the old
+                // scoped-thread implementation did.
+                drop(producers);
+                drop(returns);
+                drop(pool);
+                panic!("shard worker panicked");
             }
         }
-        for (k, st) in staging.into_iter().enumerate() {
-            if !st.is_empty() {
-                producers[k].push(st);
-            }
-        }
-        for p in &mut producers {
-            p.close();
-        }
-
-        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
-    });
+    }
+    SHARD_POOL.with(|p| *p.borrow_mut() = Some(pool));
+    let outs: Vec<ShardOut> =
+        outs.into_iter().map(|o| o.expect("every shard reported")).collect();
 
     Ok(merge_shards(cfg, outs, workload.tokens_done(), t0.elapsed().as_secs_f64()))
+}
+
+/// Pop a recycled chunk buffer off a shard's return ring (already cleared
+/// by the worker), falling back to a fresh allocation when the ring is
+/// momentarily empty.
+fn recycled_chunk(ret: &mut spsc::Consumer<Vec<Item>>) -> Vec<Item> {
+    ret.try_pop().unwrap_or_else(|| Vec::with_capacity(CHUNK))
+}
+
+/// Everything one shard's job needs, owned ('static: the job outlives the
+/// call on a persistent worker thread).
+struct ShardArgs {
+    cfg: ExperimentConfig,
+    k: usize,
+    shards: usize,
+    geom: GeometryHints,
+    rx: spsc::Consumer<Vec<Item>>,
+    ret_tx: spsc::Producer<Vec<Item>>,
+    mk: PredictorFactory,
+    reclaim: Option<PredictorReclaim>,
+    ccfg: Option<ControllerConfig>,
+    res_tx: mpsc::Sender<(usize, ShardOut)>,
+}
+
+/// One shard's work: drain the ring through the shared [`AccessDriver`]
+/// loop body — identical to the single-threaded path — and report the
+/// harvest.
+fn shard_job(args: ShardArgs) -> ShardJob {
+    Box::new(move || {
+        let ShardArgs { cfg, k, shards, geom, mut rx, mut ret_tx, mk, reclaim, ccfg, res_tx } =
+            args;
+        let hier = Hierarchy::new_sharded(cfg.hierarchy.clone(), &cfg.policy, k, shards);
+        let mut predictor = mk(k);
+        let pw = if predictor.is_some() { predictor.window().max(1) } else { 0 };
+        let engine = Engine::with_hierarchy(hier, geom, pw);
+        let mut controller = ccfg.map(|c| {
+            let mut cc = c;
+            cc.seed ^= (k as u64).wrapping_mul(SHARD_SEED_MIX);
+            AdaptiveController::new(cc)
+        });
+        let mut driver = AccessDriver::new(&cfg, engine, &mut predictor, controller.as_mut());
+        while let Some(mut chunk) = rx.pop() {
+            for (a, nu) in &chunk {
+                driver.drive(a, (*nu != u64::MAX).then_some(*nu));
+            }
+            // Recycle the drained buffer (ring full ⇒ just drop it).
+            chunk.clear();
+            let _ = ret_tx.try_push(chunk);
+        }
+        let out = driver.finish();
+        let (emu_acc, emu_samples) = out.engine.emu_parts();
+        let steps = out.engine.steps();
+        let (adapt, controller_steps, summary) = match controller {
+            Some(c) => {
+                let counters =
+                    (c.windows(), c.drift_count(), c.swap_count(), c.throttled_windows());
+                let steps = c.online_train_steps();
+                (Some(counters), steps, Some(c.into_summary()))
+            }
+            None => (None, 0, None),
+        };
+        let predictor_name = predictor.name();
+        if let Some(r) = &reclaim {
+            r(k, predictor);
+        }
+        let _ = res_tx.send((
+            k,
+            ShardOut {
+                hier: out.engine.hier,
+                emu_acc,
+                emu_samples,
+                steps,
+                prediction_batches: out.prediction_batches,
+                train_steps: out.learner_steps + controller_steps,
+                predictor_name,
+                adapt,
+                summary,
+            },
+        ));
+    })
 }
 
 /// Exact merge of the per-shard outcomes into one [`SimResult`].
@@ -247,5 +425,75 @@ fn merge_shards(cfg: &ExperimentConfig, outs: Vec<ShardOut>, tokens: u64, wall: 
             throttled_windows: tw,
         },
         controllers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PredictorKind;
+
+    fn mk_none() -> PredictorFactory {
+        Arc::new(|_| PredictorBox::None)
+    }
+
+    /// The persistent pool must survive (and stay correct across) repeated
+    /// sharded runs from one thread, including a shard-count change.
+    #[test]
+    fn pool_reuse_is_deterministic_across_runs_and_shard_counts() {
+        let mut cfg = ExperimentConfig::for_scenario(
+            "decode-heavy",
+            "lru",
+            PredictorKind::None,
+            0xBEEF,
+        )
+        .unwrap();
+        cfg.accesses = 30_000;
+        let mk = mk_none();
+        let run = |shards: usize| {
+            let mut w = cfg.workload();
+            run_workload_sharded(&cfg, w.as_mut(), shards, &mk, None, None)
+                .expect("sharded run")
+        };
+        let a = run(2);
+        let b = run(2); // reuses the 2-worker pool
+        let c = run(4); // grows the pool in place
+        let d = run(4);
+        assert_eq!(
+            a.result.report.to_json().to_pretty(),
+            b.result.report.to_json().to_pretty(),
+            "pool reuse must not change results"
+        );
+        assert_eq!(
+            c.result.report.to_json().to_pretty(),
+            d.result.report.to_json().to_pretty()
+        );
+        assert_eq!(a.result.report.accesses, 30_000);
+        assert_eq!(c.result.report.accesses, 30_000);
+    }
+
+    /// Chunk-buffer recycling must be transparent: results identical to the
+    /// reference single-shard run for a set-local config.
+    #[test]
+    fn return_ring_preserves_exactness() {
+        let mut cfg = ExperimentConfig::for_scenario(
+            "decode-heavy",
+            "srrip",
+            PredictorKind::None,
+            0x51AB,
+        )
+        .unwrap();
+        cfg.accesses = 60_000;
+        cfg.hierarchy.prefetcher = "none".into();
+        cfg.hierarchy.l3_policy = "srrip".into();
+        let mk = mk_none();
+        let mut w1 = cfg.workload();
+        let one = run_workload_sharded(&cfg, w1.as_mut(), 1, &mk, None, None).unwrap();
+        let mut w8 = cfg.workload();
+        let eight = run_workload_sharded(&cfg, w8.as_mut(), 8, &mk, None, None).unwrap();
+        assert_eq!(
+            one.result.report.to_json().to_pretty(),
+            eight.result.report.to_json().to_pretty()
+        );
     }
 }

@@ -1,29 +1,30 @@
 //! Multi-threaded policy×scenario sweep runner.
 //!
 //! Fans the full experiment grid out over a scoped thread pool
-//! ([`crate::util::pool`]): one cell = one policy run against one scenario
-//! workload through the shared [`super::Engine`]. Cells are completely
-//! independent — each derives its own seed deterministically from the base
-//! seed and the cell coordinates ([`cell_seed`]), builds its own workload,
-//! hierarchy and predictor inside the worker thread, and returns a
-//! [`SimResult`]. Results come back in grid order regardless of the thread
-//! count, so a sweep at `-j 1` and `-j 8` is byte-identical (asserted by
+//! ([`crate::util::pool`]): one cell = one [`crate::api::RunSpec`] executed
+//! through the [`crate::api::Runner`] — the same front door the CLI and the
+//! library use, so a sweep cell cannot drift from a standalone run. Cells
+//! are completely independent — each derives its own seed deterministically
+//! from the base seed and the cell coordinates ([`cell_seed`]), and its
+//! runner builds workload, hierarchy and predictor inside the worker
+//! thread. Results come back in grid order regardless of the thread count,
+//! so a sweep at `-j 1` and `-j 8` is byte-identical (asserted by
 //! `tests/integration_sweep.rs`).
 //!
 //! The per-cell predictor is selectable (`--predictor`): `auto`/`heuristic`
 //! (artifact-free, the default), `tcn` (the compiled TCN loaded from the
 //! artifacts *inside* each worker thread — PJRT handles are thread-affine —
-//! falling back to the heuristic with a warning when artifacts are absent),
-//! `adaptive` (heuristic + a per-cell [`AdaptiveController`] closing the
-//! loop), or `none`. Classic policies ignore the predictor entirely.
+//! falling back to the heuristic with a warning when artifacts are absent;
+//! the runner caches the load per worker thread, including the persistent
+//! shard-worker threads of `--shards` cells), `adaptive` (heuristic + a
+//! per-cell drift controller closing the loop), or `none`. Classic policies
+//! ignore the predictor entirely.
 
-use super::engine::{run_experiment, run_workload_adaptive, SimResult};
-use super::shard::run_workload_sharded;
-use crate::adapt::{AdaptiveController, ControllerConfig};
-use crate::config::{ExperimentConfig, PredictorKind};
+use super::engine::SimResult;
+use crate::api::{Runner, RunSpec};
+use crate::config::PredictorKind;
 use crate::metrics::{render_sweep, SweepRowView};
 use crate::policy;
-use crate::predictor::{HeuristicPredictor, PredictorBox};
 use crate::trace::{Scenario, SCENARIO_NAMES};
 use crate::util::pool::{default_threads, run_parallel};
 use anyhow::{bail, Result};
@@ -46,7 +47,7 @@ pub struct SweepConfig {
     /// Per-cell predictor spec (see [`PREDICTOR_SPECS`]). Only affects
     /// utility-consuming policies; classic policies run predictor-free.
     pub predictor: String,
-    /// Set-shards *per cell* ([`crate::sim::shard`]): total worker threads
+    /// Set-shards *per cell* (`crate::sim::shard`): total worker threads
     /// ≈ `threads × shards`, letting a sweep use idle cores when the grid
     /// is smaller than the machine. 1 = classic single-threaded cells.
     pub shards: usize,
@@ -131,50 +132,9 @@ fn resolve_spec(spec: &str, policy: &str) -> (PredictorKind, bool) {
     }
 }
 
-/// Load the compiled TCN inside the calling (worker) thread. `None` when
-/// the AOT artifacts are unavailable or fail to load.
-fn build_tcn_in_thread() -> Option<PredictorBox> {
-    let rt = crate::predictor::ModelRuntime::load_from_artifacts("tcn").ok()?;
-    Some(PredictorBox::Model(Box::new(rt)))
-}
-
-thread_local! {
-    /// Per-worker-thread TCN cache: PJRT handles are thread-affine, and
-    /// sweep cells never mutate weights (no online feedback in sweeps), so
-    /// one artifact load + PJRT compile serves every cell the thread runs.
-    /// Tri-state: outer `None` = never probed; `Some(None)` = probe failed
-    /// (also permanent — a broken PJRT setup is not retried per cell);
-    /// `Some(Some(_))` = loaded. The box is taken for the duration of a
-    /// cell and put back afterwards.
-    static THREAD_TCN: std::cell::RefCell<Option<Option<PredictorBox>>> =
-        const { std::cell::RefCell::new(None) };
-}
-
-/// Fetch the thread's cached TCN, probing the artifacts at most once per
-/// thread (success *and* failure are both cached).
-fn take_thread_tcn() -> Option<PredictorBox> {
-    THREAD_TCN.with(|c| {
-        let mut slot = c.borrow_mut();
-        if slot.is_none() {
-            let loaded = build_tcn_in_thread();
-            if loaded.is_none() {
-                crate::log_warn!(
-                    "sweep: TCN load failed in this worker thread; its tcn cells fall back \
-                     to the heuristic predictor"
-                );
-            }
-            *slot = Some(loaded);
-        }
-        slot.as_mut().unwrap().take()
-    })
-}
-
-fn put_back_thread_tcn(p: PredictorBox) {
-    THREAD_TCN.with(|c| *c.borrow_mut() = Some(Some(p)));
-}
-
-/// Validate the grid, then run every cell on the pool. Results are in grid
-/// order (scenarios outer, policies inner) independent of `threads`.
+/// Validate the grid, then run every cell through the [`Runner`] on the
+/// pool. Results are in grid order (scenarios outer, policies inner)
+/// independent of `threads`.
 pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepCell>> {
     if cfg.policies.is_empty() || cfg.scenarios.is_empty() {
         bail!("sweep grid is empty (need at least one policy and one scenario)");
@@ -194,24 +154,13 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepCell>> {
     }
     if cfg.shards > 1 {
         // Fast-fail against the preset every cell currently uses
-        // (`ExperimentConfig::for_scenario` → table1 → scaled). This is a
-        // convenience check only: `run_workload_sharded` re-validates each
-        // cell's actual hierarchy, so a future per-cell geometry override
-        // still errors correctly — just later, inside the cell.
+        // (scenario cells resolve onto the scaled hierarchy). This is a
+        // convenience check only: each cell's runner re-validates its
+        // actual hierarchy, so a future per-cell geometry override still
+        // errors correctly — just later, inside the cell.
         crate::mem::HierarchyConfig::scaled()
             .validate_shards(cfg.shards)
             .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
-    }
-    // Probe artifact availability once for the whole grid, not once per
-    // cell: when the bundle is absent every tcn cell would repeat the
-    // filesystem walk and the fallback warning.
-    let tcn_unavailable =
-        cfg.predictor == "tcn" && !crate::runtime::artifacts_available();
-    if tcn_unavailable {
-        crate::log_warn!(
-            "sweep: AOT artifacts unavailable; --predictor tcn cells fall back to the \
-             heuristic predictor"
-        );
     }
 
     let mut jobs = Vec::with_capacity(cfg.policies.len() * cfg.scenarios.len());
@@ -226,117 +175,25 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepCell>> {
             let shards = cfg.shards.max(1);
             jobs.push(move || -> Result<SweepCell> {
                 let (kind, adaptive) = resolve_spec(&spec, &policy);
-                let mut ecfg = ExperimentConfig::for_scenario(&scenario, &policy, kind, seed)?;
-                ecfg.accesses = accesses;
-                ecfg.predict_batch = predict_batch;
-                if shards > 1 {
-                    // Sharded cell: the predictor is constructed inside each
-                    // shard thread (PJRT handles are thread-affine), so the
-                    // per-sweep-thread TCN cache does not apply here — tcn
-                    // cells reload the artifacts per shard thread, falling
-                    // back to the heuristic on load failure.
-                    let (kind_eff, mut effective) = match kind {
-                        PredictorKind::Tcn if tcn_unavailable => {
-                            (PredictorKind::Heuristic, "heuristic(fallback)".to_string())
-                        }
-                        // Probe a real load once (cached per sweep thread) so
-                        // the provenance label reflects loadability, not just
-                        // the manifest's presence on disk. Individual shard
-                        // threads can still fail and fall back with a warning.
-                        PredictorKind::Tcn => match take_thread_tcn() {
-                            Some(p) => {
-                                put_back_thread_tcn(p);
-                                (PredictorKind::Tcn, "tcn".to_string())
-                            }
-                            None => {
-                                (PredictorKind::Heuristic, "heuristic(fallback)".to_string())
-                            }
-                        },
-                        PredictorKind::Heuristic => {
-                            (PredictorKind::Heuristic, "heuristic".to_string())
-                        }
-                        _ => (PredictorKind::None, "none".to_string()),
-                    };
-                    ecfg.predictor = kind_eff;
-                    let mk = move |_shard: usize| -> PredictorBox {
-                        match kind_eff {
-                            PredictorKind::Tcn => build_tcn_in_thread().unwrap_or_else(|| {
-                                crate::log_warn!(
-                                    "sweep: TCN load failed in a shard thread; falling back to \
-                                     the heuristic predictor for this shard"
-                                );
-                                PredictorBox::Heuristic(HeuristicPredictor)
-                            }),
-                            PredictorKind::Heuristic => {
-                                PredictorBox::Heuristic(HeuristicPredictor)
-                            }
-                            _ => PredictorBox::None,
-                        }
-                    };
-                    let ccfg = if adaptive {
-                        effective = format!("adaptive({effective})");
-                        Some(ControllerConfig::default())
-                    } else {
-                        None
-                    };
-                    let mut workload = ecfg.workload();
-                    let run = run_workload_sharded(
-                        &ecfg,
-                        workload.as_mut(),
-                        shards,
-                        &mk,
-                        ccfg.as_ref(),
-                    )?;
-                    return Ok(SweepCell {
-                        policy,
-                        scenario,
-                        seed,
-                        predictor: effective,
-                        result: run.result,
-                    });
+                let mut builder = RunSpec::builder()
+                    .scenario(&scenario)
+                    .policy(&policy)
+                    .predictor(kind)
+                    .accesses(accesses)
+                    .predict_batch(predict_batch)
+                    .seed(seed)
+                    .shards(shards);
+                if adaptive {
+                    builder = builder.adaptive(true);
                 }
-                let (mut predictor, mut effective) = match kind {
-                    PredictorKind::Tcn => {
-                        let loaded = if tcn_unavailable { None } else { take_thread_tcn() };
-                        match loaded {
-                            Some(p) => (p, "tcn".to_string()),
-                            // Fallback already warned about: grid-level for
-                            // absent artifacts, once per thread for load
-                            // failures (take_thread_tcn).
-                            None => {
-                                ecfg.predictor = PredictorKind::Heuristic;
-                                (
-                                    PredictorBox::Heuristic(HeuristicPredictor),
-                                    "heuristic(fallback)".to_string(),
-                                )
-                            }
-                        }
-                    }
-                    PredictorKind::Heuristic => {
-                        (PredictorBox::Heuristic(HeuristicPredictor), "heuristic".to_string())
-                    }
-                    _ => (PredictorBox::None, "none".to_string()),
-                };
-                let result = if adaptive {
-                    effective = format!("adaptive({effective})");
-                    let mut controller = AdaptiveController::new(ControllerConfig::default());
-                    let mut workload = ecfg.workload();
-                    run_workload_adaptive(
-                        &ecfg,
-                        workload.as_mut(),
-                        &mut predictor,
-                        Some(&mut controller),
-                    )
-                } else {
-                    run_experiment(&ecfg, &mut predictor)
-                };
-                if effective == "tcn" {
-                    // Return the loaded model to the thread cache for the
-                    // next cell (weights untouched — sweeps run no online
-                    // feedback, so reuse cannot leak state between cells).
-                    put_back_thread_tcn(predictor);
-                }
-                Ok(SweepCell { policy, scenario, seed, predictor: effective, result })
+                let report = Runner::new(builder.build()?)?.run()?;
+                Ok(SweepCell {
+                    policy,
+                    scenario,
+                    seed,
+                    predictor: report.predictor_effective,
+                    result: report.result,
+                })
             });
         }
     }

@@ -1,19 +1,26 @@
-//! Integration tests for the adaptive-control subsystem: a passive
-//! controller must not perturb the simulation, the drift/event log must be
-//! deterministic under a fixed seed, the `acpc adapt` comparison JSON must
-//! keep its schema, and the predictor hot-swap plumbing must be
-//! metric-transparent when the swapped-in weights are identical.
+//! Integration tests for the adaptive-control subsystem, driven through
+//! the public `RunSpec` → `Runner` API: a passive controller must not
+//! perturb the simulation, the drift/event log must be deterministic under
+//! a fixed seed, the `acpc adapt` comparison JSON must keep its schema, and
+//! the predictor hot-swap plumbing must be metric-transparent when the
+//! swapped-in weights are identical.
 
-use acpc::adapt::{run_compare, AdaptiveController, ControllerConfig};
-use acpc::config::{ExperimentConfig, PredictorKind};
-use acpc::predictor::{HeuristicPredictor, PredictorBox};
-use acpc::sim::{run_workload, run_workload_adaptive};
+use acpc::adapt::ControllerConfig;
+use acpc::api::{run_compare, AdaptSpec, RunSpec, Runner};
+use acpc::config::PredictorKind;
+use acpc::predictor::PredictorBox;
 
-fn scenario_cfg(scenario: &str, accesses: usize, seed: u64) -> ExperimentConfig {
-    let mut cfg =
-        ExperimentConfig::for_scenario(scenario, "acpc", PredictorKind::Heuristic, seed).unwrap();
-    cfg.accesses = accesses;
-    cfg
+fn scenario_spec(scenario: &str, accesses: usize, seed: u64) -> acpc::api::RunSpecBuilder {
+    RunSpec::builder()
+        .scenario(scenario)
+        .policy("acpc")
+        .predictor(PredictorKind::Heuristic)
+        .accesses(accesses)
+        .seed(seed)
+}
+
+fn quick_adapt() -> AdaptSpec {
+    AdaptSpec::from_config(&ControllerConfig::quick())
 }
 
 /// A controller that only observes (thresholds disabled) must leave the
@@ -21,37 +28,44 @@ fn scenario_cfg(scenario: &str, accesses: usize, seed: u64) -> ExperimentConfig 
 /// the versioned-handle plumbing cannot perturb metrics.
 #[test]
 fn passive_controller_is_metric_transparent() {
-    let cfg = scenario_cfg("multi-tenant-mix", 80_000, 0xA11CE);
-
-    let mut plain_pred = PredictorBox::Heuristic(HeuristicPredictor);
-    let mut w1 = cfg.workload();
-    let plain = run_workload(&cfg, w1.as_mut(), &mut plain_pred);
-
-    let mut adapt_pred = PredictorBox::Heuristic(HeuristicPredictor);
-    let mut controller = AdaptiveController::new(ControllerConfig::passive());
-    let mut w2 = cfg.workload();
-    let adaptive = run_workload_adaptive(&cfg, w2.as_mut(), &mut adapt_pred, Some(&mut controller));
+    let plain = Runner::new(scenario_spec("multi-tenant-mix", 80_000, 0xA11CE).build().unwrap())
+        .unwrap()
+        .run()
+        .unwrap();
+    let adaptive = Runner::new(
+        scenario_spec("multi-tenant-mix", 80_000, 0xA11CE)
+            .controller(ControllerConfig::passive())
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .run()
+    .unwrap();
 
     assert_eq!(
-        plain.report.to_json().to_pretty(),
-        adaptive.report.to_json().to_pretty(),
+        plain.result.report.to_json().to_pretty(),
+        adaptive.result.report.to_json().to_pretty(),
         "passive controller must not change metrics"
     );
-    assert_eq!(plain.prediction_batches, adaptive.prediction_batches);
-    assert!(adaptive.adapt_windows > 0, "telemetry still collected");
-    assert_eq!(adaptive.predictor_swaps, 0);
-    assert_eq!(adaptive.drift_events, 0);
-    assert_eq!(controller.swap_count(), 0);
+    assert_eq!(plain.result.prediction_batches, adaptive.result.prediction_batches);
+    assert!(adaptive.result.adapt_windows > 0, "telemetry still collected");
+    assert_eq!(adaptive.result.predictor_swaps, 0);
+    assert_eq!(adaptive.result.drift_events, 0);
+    let summary = adaptive.adaptation().expect("adaptive run carries a summary");
+    assert_eq!(summary.swaps, 0);
+    assert_eq!(adaptive.predictor_effective, "adaptive(heuristic)");
 }
 
 /// Same seed + same thresholds ⇒ identical drift windows, events and
 /// metrics — the whole control loop is wall-clock-free.
 #[test]
 fn drift_detection_deterministic_under_fixed_seed() {
-    let cfg = scenario_cfg("multi-tenant-mix", 120_000, 0xD51F7);
-    let ccfg = ControllerConfig::quick();
-    let a = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
-    let b = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+    let spec = scenario_spec("multi-tenant-mix", 120_000, 0xD51F7)
+        .adaptive_spec(quick_adapt())
+        .build()
+        .unwrap();
+    let a = run_compare(&spec).unwrap();
+    let b = run_compare(&spec).unwrap();
     assert_eq!(a.summary.drift_windows, b.summary.drift_windows);
     assert_eq!(a.summary.swaps, b.summary.swaps);
     assert_eq!(a.summary.throttled_windows, b.summary.throttled_windows);
@@ -66,9 +80,11 @@ fn drift_detection_deterministic_under_fixed_seed() {
 /// comparison must quantify a hit-rate delta between the two arms.
 #[test]
 fn multi_tenant_mix_trips_the_drift_detector() {
-    let cfg = scenario_cfg("multi-tenant-mix", 150_000, 0xBEE5);
-    let ccfg = ControllerConfig::quick();
-    let out = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+    let spec = scenario_spec("multi-tenant-mix", 150_000, 0xBEE5)
+        .adaptive_spec(quick_adapt())
+        .build()
+        .unwrap();
+    let out = run_compare(&spec).unwrap();
     assert!(out.summary.windows_observed > 10);
     assert!(
         out.summary.drift_events >= 1,
@@ -85,17 +101,28 @@ fn multi_tenant_mix_trips_the_drift_detector() {
     }
 }
 
-/// `acpc adapt --json` schema: the keys the docs promise must exist.
+/// `acpc adapt --json` schema: the keys the docs promise must exist; the
+/// `--telemetry` series must align with the window log.
 #[test]
 fn adapt_comparison_json_schema() {
-    let cfg = scenario_cfg("decode-heavy", 40_000, 7);
-    let mut ccfg = ControllerConfig::quick();
-    ccfg.window_accesses = 4096;
-    let out = run_compare(&cfg, &ccfg, || PredictorBox::Heuristic(HeuristicPredictor));
+    let spec = scenario_spec("decode-heavy", 40_000, 7)
+        .adaptive_spec(AdaptSpec { window_accesses: Some(4096), ..quick_adapt() })
+        .build()
+        .unwrap();
+    let out = run_compare(&spec).unwrap();
     let j = out.to_json();
-    for key in ["baseline", "adaptive", "adaptation", "deltas"] {
+    for key in ["baseline", "adaptive", "predictor_effective", "adaptation", "deltas"] {
         assert!(j.get(key).is_some(), "missing top-level key {key}");
     }
+    // Effective-predictor provenance: what actually ran in each arm.
+    assert_eq!(
+        j.get("predictor_effective").unwrap().get("baseline").unwrap().as_str(),
+        Some("heuristic")
+    );
+    assert_eq!(
+        j.get("predictor_effective").unwrap().get("adaptive").unwrap().as_str(),
+        Some("adaptive(heuristic)")
+    );
     let adaptation = j.get("adaptation").unwrap();
     for key in [
         "windows_observed",
@@ -119,6 +146,14 @@ fn adapt_comparison_json_schema() {
     for key in ["index", "hit_rate", "pollution", "prefetch_accuracy", "reuse_p50_log2"] {
         assert!(windows[0].get(key).is_some(), "missing window key {key}");
     }
+    // The columnar telemetry series (acpc adapt --telemetry) aligns with
+    // the window log.
+    let t = out.summary.telemetry_json();
+    assert_eq!(t.get("schema").unwrap().as_str(), Some("acpc-adapt-telemetry-v1"));
+    assert_eq!(
+        t.get("hit_rate").unwrap().as_arr().unwrap().len(),
+        out.summary.windows.len()
+    );
 }
 
 /// Hot-swap transparency with the *real* compiled model: a passive
@@ -137,21 +172,31 @@ fn tcn_hot_swap_plumbing_is_metric_transparent() {
         let rt = acpc::predictor::ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
         PredictorBox::Model(Box::new(rt))
     };
-    let mut cfg = scenario_cfg("decode-heavy", 40_000, 0x7C2);
-    cfg.predictor = PredictorKind::Tcn;
+    let base = || {
+        RunSpec::builder()
+            .scenario("decode-heavy")
+            .policy("acpc")
+            .predictor(PredictorKind::Tcn)
+            .accesses(40_000)
+            .seed(0x7C2)
+    };
 
-    let mut plain_pred = load();
-    let mut w1 = cfg.workload();
-    let plain = run_workload(&cfg, w1.as_mut(), &mut plain_pred);
-
-    let mut adapt_pred = load();
-    let mut controller = AdaptiveController::new(ControllerConfig::passive());
-    let mut w2 = cfg.workload();
-    let adaptive = run_workload_adaptive(&cfg, w2.as_mut(), &mut adapt_pred, Some(&mut controller));
+    let plain = Runner::new(base().build().unwrap())
+        .unwrap()
+        .with_predictor(load())
+        .run()
+        .unwrap();
+    let adaptive = Runner::new(
+        base().controller(ControllerConfig::passive()).build().unwrap(),
+    )
+    .unwrap()
+    .with_predictor(load())
+    .run()
+    .unwrap();
 
     assert_eq!(
-        plain.report.to_json().to_pretty(),
-        adaptive.report.to_json().to_pretty(),
+        plain.result.report.to_json().to_pretty(),
+        adaptive.result.report.to_json().to_pretty(),
         "identical weights through the swap handle must give identical metrics"
     );
 }

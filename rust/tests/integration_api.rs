@@ -1,0 +1,196 @@
+//! Integration tests for the public run API: `RunSpec` JSON round-trips,
+//! builder validation, report-embedded-spec reproducibility, and the
+//! `acpc run --spec` CLI golden path. (Byte-level parity of the Runner
+//! against the crate-internal `run_workload`/`run_workload_sharded`
+//! delegates is asserted by unit tests inside `api::runner`, which can
+//! reach the internals.)
+
+use acpc::api::{RunSpec, Runner, SCHEMA};
+use acpc::config::PredictorKind;
+use acpc::util::json::Json;
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("acpc_api_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A spec with every block populated survives JSON round-trips exactly.
+#[test]
+fn spec_json_roundtrip_is_lossless() {
+    let spec = RunSpec::builder()
+        .name("roundtrip")
+        .scenario("long-context")
+        .policy("acpc")
+        .predictor(PredictorKind::Heuristic)
+        .accesses(25_000)
+        .predict_batch(128)
+        .seed(0xDEAD_BEEF_CAFE_F00D) // > 2^53
+        .shards(2)
+        .adaptive(true)
+        .prefetcher("stride")
+        .l3_policy("srrip")
+        .l2_kb(256)
+        .max_live_sessions(6)
+        .phase_period(5_000)
+        .build()
+        .unwrap();
+    let j = spec.to_json();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+    let text = j.to_pretty();
+    let back = RunSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(spec, back);
+}
+
+/// The report's embedded resolved spec re-runs to identical stats — the
+/// reproducibility contract of `acpc-run-v1`.
+#[test]
+fn report_embedded_spec_reruns_identically() {
+    let spec = RunSpec::builder()
+        .scenario("multi-tenant-mix")
+        .policy("acpc")
+        .predictor(PredictorKind::Heuristic)
+        .accesses(50_000)
+        .seed(0xF00D)
+        .shards(2)
+        .adaptive(true)
+        .build()
+        .unwrap();
+    let first = Runner::new(spec).unwrap().run().unwrap();
+    let report_json = first.to_json();
+
+    // Re-hydrate the spec exactly as an external consumer would: from the
+    // serialized report.
+    let embedded = report_json.get("spec").expect("report embeds its spec");
+    let respec = RunSpec::from_json(embedded).unwrap();
+    let second = Runner::new(respec).unwrap().run().unwrap();
+
+    assert_eq!(
+        first.result.report.to_json().to_pretty(),
+        second.result.report.to_json().to_pretty(),
+        "embedded spec must reproduce the run"
+    );
+    assert_eq!(first.result.prediction_batches, second.result.prediction_batches);
+    assert_eq!(first.result.drift_events, second.result.drift_events);
+    assert_eq!(first.predictor_effective, second.predictor_effective);
+}
+
+/// Schema stability: the report JSON carries the keys the docs promise.
+#[test]
+fn report_json_schema() {
+    let spec = RunSpec::builder()
+        .preset("smoke")
+        .policy("lru")
+        .predictor(PredictorKind::None)
+        .accesses(20_000)
+        .build()
+        .unwrap();
+    let report = Runner::new(spec).unwrap().run().unwrap();
+    let j = report.to_json();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some("acpc-run-v1"));
+    for key in [
+        "spec",
+        "predictor_effective",
+        "metrics",
+        "prediction_batches",
+        "online_train_steps",
+        "wall_secs",
+        "accesses_per_sec",
+    ] {
+        assert!(j.get(key).is_some(), "missing report key {key}");
+    }
+    assert_eq!(
+        j.get("metrics").unwrap().get("accesses").unwrap().as_usize(),
+        Some(20_000)
+    );
+    // Non-adaptive runs carry no adaptation block.
+    assert!(j.get("adaptation").is_none());
+}
+
+/// Golden test for `acpc run --spec`: the CLI writes a schema-stamped
+/// report whose metrics match a library run of the same spec file, and
+/// repeat invocations are byte-identical on the deterministic fields.
+#[test]
+fn cli_run_spec_golden() {
+    let spec_path = tmp_path("golden_spec.json");
+    let out1 = tmp_path("golden_report_1.json");
+    let out2 = tmp_path("golden_report_2.json");
+    std::fs::write(
+        &spec_path,
+        r#"{
+  "policy": "acpc",
+  "predictor": "heuristic",
+  "accesses": 30000,
+  "seed": "4242",
+  "workload": {"scenario": "decode-heavy"}
+}"#,
+    )
+    .unwrap();
+
+    let argv = |out: &std::path::Path| {
+        vec![
+            "run".to_string(),
+            "--spec".to_string(),
+            spec_path.to_string_lossy().into_owned(),
+            "--json".to_string(),
+            out.to_string_lossy().into_owned(),
+        ]
+    };
+    let code = acpc::cli::run(argv(&out1)).expect("cli run");
+    assert_eq!(code, 0);
+    let code = acpc::cli::run(argv(&out2)).expect("cli rerun");
+    assert_eq!(code, 0);
+
+    let j1 = Json::parse(&std::fs::read_to_string(&out1).unwrap()).unwrap();
+    let j2 = Json::parse(&std::fs::read_to_string(&out2).unwrap()).unwrap();
+    assert_eq!(j1.get("schema").unwrap().as_str(), Some("acpc-run-v1"));
+    assert_eq!(
+        j1.get("metrics").unwrap().to_pretty(),
+        j2.get("metrics").unwrap().to_pretty(),
+        "CLI runs of one spec must be deterministic"
+    );
+    assert_eq!(
+        j1.get("spec").unwrap().to_pretty(),
+        j2.get("spec").unwrap().to_pretty()
+    );
+
+    // The CLI's metrics must equal a library run of the same file.
+    let lib = Runner::from_spec_file(&spec_path).unwrap().run().unwrap();
+    assert_eq!(
+        j1.get("metrics").unwrap().to_pretty(),
+        lib.result.report.to_json().to_pretty()
+    );
+
+    // CLI overrides beat the file: --accesses changes the run length.
+    let out3 = tmp_path("golden_report_3.json");
+    let mut argv3 = argv(&out3);
+    argv3.push("--accesses".into());
+    argv3.push("10000".into());
+    assert_eq!(acpc::cli::run(argv3).unwrap(), 0);
+    let j3 = Json::parse(&std::fs::read_to_string(&out3).unwrap()).unwrap();
+    assert_eq!(
+        j3.get("metrics").unwrap().get("accesses").unwrap().as_usize(),
+        Some(10_000)
+    );
+
+    for p in [spec_path, out1, out2, out3] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// `acpc run` rejects missing/invalid specs with an error, not a panic.
+#[test]
+fn cli_run_rejects_bad_specs() {
+    // Missing --spec.
+    assert!(acpc::cli::run(vec!["run".into()]).is_err());
+    // Unknown key in the file.
+    let bad = tmp_path("bad_spec.json");
+    std::fs::write(&bad, r#"{"polcy": "lru"}"#).unwrap();
+    assert!(acpc::cli::run(vec![
+        "run".into(),
+        "--spec".into(),
+        bad.to_string_lossy().into_owned()
+    ])
+    .is_err());
+    std::fs::remove_file(bad).ok();
+}

@@ -127,7 +127,8 @@ fn checkpoint_restores_predictions() {
 
 /// The trained TCN drives the full ACPC simulation and beats LRU — the
 /// complete three-layer stack, end to end (trace → features → compiled TCN
-/// via PJRT → PARM → metrics).
+/// via PJRT → PARM → metrics), through the public `Runner` API with an
+/// injected (trained) predictor.
 #[test]
 fn full_stack_tcn_simulation_beats_lru() {
     let dir = need_artifacts!();
@@ -142,23 +143,39 @@ fn full_stack_tcn_simulation_beats_lru() {
         &TrainConfig { epochs: 8, patience: 0, max_batches_per_epoch: 20, seed: 2, verbose_every: 0 },
     );
 
-    use acpc::config::{ExperimentConfig, PredictorKind};
-    let mut acpc_cfg = ExperimentConfig::smoke("acpc");
-    acpc_cfg.accesses = 120_000;
-    acpc_cfg.predictor = PredictorKind::Tcn;
-    let mut tcn_box = PredictorBox::Model(Box::new(rt));
-    let acpc_run = acpc::sim::run_experiment(&acpc_cfg, &mut tcn_box);
+    use acpc::api::{RunSpec, Runner};
+    use acpc::config::PredictorKind;
+    let acpc_spec = RunSpec::builder()
+        .preset("smoke")
+        .policy("acpc")
+        .predictor(PredictorKind::Tcn)
+        .accesses(120_000)
+        .build()
+        .unwrap();
+    let acpc_run = Runner::new(acpc_spec)
+        .unwrap()
+        .with_predictor(PredictorBox::Model(Box::new(rt)))
+        .run()
+        .unwrap();
 
-    let mut lru_cfg = ExperimentConfig::smoke("lru");
-    lru_cfg.accesses = 120_000;
-    let lru_run = acpc::sim::run_experiment(&lru_cfg, &mut PredictorBox::None);
+    let lru_spec = RunSpec::builder()
+        .preset("smoke")
+        .policy("lru")
+        .predictor(PredictorKind::None)
+        .accesses(120_000)
+        .build()
+        .unwrap();
+    let lru_run = Runner::new(lru_spec).unwrap().run().unwrap();
 
-    assert!(acpc_run.prediction_batches > 0);
+    assert!(acpc_run.result.prediction_batches > 0);
+    assert_eq!(acpc_run.predictor_effective, "tcn");
     assert!(
-        acpc_run.report.l2_hit_rate > lru_run.report.l2_hit_rate,
+        acpc_run.result.report.l2_hit_rate > lru_run.result.report.l2_hit_rate,
         "tcn-acpc {:.4} vs lru {:.4}",
-        acpc_run.report.l2_hit_rate,
-        lru_run.report.l2_hit_rate
+        acpc_run.result.report.l2_hit_rate,
+        lru_run.result.report.l2_hit_rate
     );
-    assert!(acpc_run.report.l2_pollution_ratio < lru_run.report.l2_pollution_ratio);
+    assert!(
+        acpc_run.result.report.l2_pollution_ratio < lru_run.result.report.l2_pollution_ratio
+    );
 }

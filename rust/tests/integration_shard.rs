@@ -1,13 +1,13 @@
-//! Integration tests for the set-sharded simulator: exact aggregate
+//! Integration tests for the set-sharded simulator, driven through the
+//! public `RunSpec` → `Runner` API (`shards > 1`): exact aggregate
 //! invariance across shard counts for set-local configurations,
 //! per-shard-count determinism for ML-predictor and adaptive runs, and
 //! validation of unshardable inputs.
 
-use acpc::adapt::{run_compare_sharded, ControllerConfig};
-use acpc::config::{ExperimentConfig, PredictorKind};
+use acpc::adapt::ControllerConfig;
+use acpc::api::{run_compare, AdaptSpec, RunReport, RunSpec, Runner};
+use acpc::config::PredictorKind;
 use acpc::metrics::MetricsReport;
-use acpc::predictor::{HeuristicPredictor, PredictorBox};
-use acpc::sim::{run_workload_sharded, ShardedRun};
 
 /// Assert every aggregate metric is bit-identical, *except* EMU: EMU is a
 /// time-sampled statistic and the sampling instants are shard-local (every
@@ -36,37 +36,34 @@ fn assert_reports_match(a: &MetricsReport, b: &MetricsReport, ctx: &str) {
     assert_eq!(a.total_latency, b.total_latency, "{ctx}: total_latency");
 }
 
-fn cfg_for(
+fn spec_for(
     policy: &str,
     predictor: PredictorKind,
     prefetcher: &str,
     accesses: usize,
-) -> ExperimentConfig {
-    let mut cfg =
-        ExperimentConfig::for_scenario("decode-heavy", policy, predictor, 0x51AB_D5EE).unwrap();
-    cfg.accesses = accesses;
-    cfg.hierarchy.prefetcher = prefetcher.into();
-    cfg
+) -> acpc::api::RunSpecBuilder {
+    RunSpec::builder()
+        .scenario("decode-heavy")
+        .policy(policy)
+        .predictor(predictor)
+        .accesses(accesses)
+        .seed(0x51AB_D5EE)
+        .prefetcher(prefetcher)
 }
 
 /// A fully set-local configuration: every level's policy is per-set state
 /// only (the default DRRIP LLC carries a global PSEL + RNG and is therefore
 /// only deterministic per shard count, not shard-count-invariant).
-fn set_local_cfg(policy: &str, accesses: usize) -> ExperimentConfig {
-    let mut cfg = cfg_for(policy, PredictorKind::None, "none", accesses);
-    cfg.hierarchy.l3_policy = "srrip".into();
-    cfg
+fn set_local_spec(policy: &str, accesses: usize, shards: usize) -> RunSpec {
+    spec_for(policy, PredictorKind::None, "none", accesses)
+        .l3_policy("srrip")
+        .shards(shards)
+        .build()
+        .expect("valid set-local spec")
 }
 
-fn run_sharded(cfg: &ExperimentConfig, shards: usize, kind: PredictorKind) -> ShardedRun {
-    let mk = move |_s: usize| -> PredictorBox {
-        match kind {
-            PredictorKind::Heuristic => PredictorBox::Heuristic(HeuristicPredictor),
-            _ => PredictorBox::None,
-        }
-    };
-    let mut w = cfg.workload();
-    run_workload_sharded(cfg, w.as_mut(), shards, &mk, None).expect("sharded run")
+fn run(spec: RunSpec) -> RunReport {
+    Runner::new(spec).expect("resolve").run().expect("sharded run")
 }
 
 /// Classic set-local policies with the prefetcher off: aggregate metrics
@@ -75,17 +72,16 @@ fn run_sharded(cfg: &ExperimentConfig, shards: usize, kind: PredictorKind) -> Sh
 #[test]
 fn classic_policies_invariant_across_shard_counts() {
     for policy in ["lru", "srrip"] {
-        let cfg = set_local_cfg(policy, 120_000);
-        let reference = run_sharded(&cfg, 1, PredictorKind::None);
+        let reference = run(set_local_spec(policy, 120_000, 1));
         for shards in [2usize, 8] {
-            let run = run_sharded(&cfg, shards, PredictorKind::None);
+            let sharded = run(set_local_spec(policy, 120_000, shards));
             assert_reports_match(
-                &run.result.report,
+                &sharded.result.report,
                 &reference.result.report,
                 &format!("{policy} @ {shards} shards"),
             );
-            assert_eq!(run.result.report.accesses, 120_000, "{policy}");
-            assert_eq!(run.result.tokens, reference.result.tokens, "{policy}");
+            assert_eq!(sharded.result.report.accesses, 120_000, "{policy}");
+            assert_eq!(sharded.result.tokens, reference.result.tokens, "{policy}");
         }
     }
 }
@@ -94,9 +90,8 @@ fn classic_policies_invariant_across_shard_counts() {
 /// stay comparable inside each set — sharded belady must match too.
 #[test]
 fn belady_oracle_invariant_across_shard_counts() {
-    let cfg = set_local_cfg("belady", 60_000);
-    let a = run_sharded(&cfg, 1, PredictorKind::None);
-    let b = run_sharded(&cfg, 4, PredictorKind::None);
+    let a = run(set_local_spec("belady", 60_000, 1));
+    let b = run(set_local_spec("belady", 60_000, 4));
     assert_reports_match(&a.result.report, &b.result.report, "belady @ 4 shards");
 }
 
@@ -105,9 +100,14 @@ fn belady_oracle_invariant_across_shard_counts() {
 /// count must stay fully deterministic, and every access must be simulated.
 #[test]
 fn prefetching_runs_deterministic_per_shard_count() {
-    let cfg = cfg_for("lru", PredictorKind::None, "composite", 80_000);
-    let a = run_sharded(&cfg, 4, PredictorKind::None);
-    let b = run_sharded(&cfg, 4, PredictorKind::None);
+    let mk = || {
+        spec_for("lru", PredictorKind::None, "composite", 80_000)
+            .shards(4)
+            .build()
+            .unwrap()
+    };
+    let a = run(mk());
+    let b = run(mk());
     assert_eq!(
         a.result.report.to_json().to_pretty(),
         b.result.report.to_json().to_pretty()
@@ -120,9 +120,14 @@ fn prefetching_runs_deterministic_per_shard_count() {
 /// full stream, and actually exercises the prediction pipeline per shard.
 #[test]
 fn heuristic_predictor_deterministic_per_shard_count() {
-    let cfg = cfg_for("acpc", PredictorKind::Heuristic, "composite", 100_000);
-    let a = run_sharded(&cfg, 8, PredictorKind::Heuristic);
-    let b = run_sharded(&cfg, 8, PredictorKind::Heuristic);
+    let mk = || {
+        spec_for("acpc", PredictorKind::Heuristic, "composite", 100_000)
+            .shards(8)
+            .build()
+            .unwrap()
+    };
+    let a = run(mk());
+    let b = run(mk());
     assert_eq!(
         a.result.report.to_json().to_pretty(),
         b.result.report.to_json().to_pretty()
@@ -137,19 +142,21 @@ fn heuristic_predictor_deterministic_per_shard_count() {
 /// carries the per-shard telemetry.
 #[test]
 fn sharded_adaptive_drift_is_deterministic() {
-    let mut cfg = ExperimentConfig::for_scenario(
-        "multi-tenant-mix",
-        "acpc",
-        PredictorKind::Heuristic,
-        0xD51F7,
-    )
-    .unwrap();
-    cfg.accesses = 120_000;
-    let mut ccfg = ControllerConfig::quick();
-    ccfg.window_accesses = 2048;
-    let mk = |_s: usize| PredictorBox::Heuristic(HeuristicPredictor);
-    let a = run_compare_sharded(&cfg, &ccfg, 4, &mk).unwrap();
-    let b = run_compare_sharded(&cfg, &ccfg, 4, &mk).unwrap();
+    let spec = RunSpec::builder()
+        .scenario("multi-tenant-mix")
+        .policy("acpc")
+        .predictor(PredictorKind::Heuristic)
+        .accesses(120_000)
+        .seed(0xD51F7)
+        .shards(4)
+        .adaptive_spec(AdaptSpec {
+            window_accesses: Some(2048),
+            ..AdaptSpec::from_config(&ControllerConfig::quick())
+        })
+        .build()
+        .unwrap();
+    let a = run_compare(&spec).unwrap();
+    let b = run_compare(&spec).unwrap();
     assert_eq!(a.summary.drift_windows, b.summary.drift_windows);
     assert_eq!(a.summary.swaps, b.summary.swaps);
     assert_eq!(a.summary.throttled_windows, b.summary.throttled_windows);
@@ -164,19 +171,16 @@ fn sharded_adaptive_drift_is_deterministic() {
     assert_eq!(a.adaptive.report.accesses, 120_000);
 }
 
-/// Unshardable inputs are rejected up front, not deep in a worker thread.
+/// Unshardable inputs are rejected at spec resolution, not deep in a
+/// worker thread.
 #[test]
 fn invalid_shard_counts_rejected() {
-    let cfg = cfg_for("lru", PredictorKind::None, "none", 10_000);
-    let mk = |_s: usize| PredictorBox::None;
-    let mut w = cfg.workload();
     assert!(
-        run_workload_sharded(&cfg, w.as_mut(), 3, &mk, None).is_err(),
+        spec_for("lru", PredictorKind::None, "none", 10_000).shards(3).build().is_err(),
         "non-power-of-two shard count"
     );
-    let mut w = cfg.workload();
     assert!(
-        run_workload_sharded(&cfg, w.as_mut(), 64, &mk, None).is_err(),
+        spec_for("lru", PredictorKind::None, "none", 10_000).shards(64).build().is_err(),
         "more shards than the smallest level's set count"
     );
 }

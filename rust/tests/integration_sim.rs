@@ -1,18 +1,20 @@
-//! Integration tests: the full simulation pipeline (no artifacts required)
-//! — policy orderings the paper's narrative depends on, metric coherence,
-//! config plumbing, oracle dominance.
+//! Integration tests: the full simulation pipeline through the public
+//! `RunSpec` → `Runner` API (no artifacts required) — policy orderings the
+//! paper's narrative depends on, metric coherence, spec-file plumbing,
+//! oracle dominance.
 
-use acpc::config::{ExperimentConfig, PredictorKind};
-use acpc::predictor::{HeuristicPredictor, PredictorBox};
-use acpc::sim::run_experiment;
+use acpc::api::{RunReport, RunSpec, Runner};
+use acpc::config::PredictorKind;
 
-fn run(policy: &str, accesses: usize, heuristic: bool) -> acpc::sim::SimResult {
+fn run(policy: &str, accesses: usize, heuristic: bool) -> RunReport {
     let kind = if heuristic { PredictorKind::Heuristic } else { PredictorKind::None };
-    let mut cfg = ExperimentConfig::table1(policy, kind);
-    cfg.accesses = accesses;
-    let mut p =
-        if heuristic { PredictorBox::Heuristic(HeuristicPredictor) } else { PredictorBox::None };
-    run_experiment(&cfg, &mut p)
+    let spec = RunSpec::builder()
+        .policy(policy)
+        .predictor(kind)
+        .accesses(accesses)
+        .build()
+        .expect("valid spec");
+    Runner::new(spec).expect("resolve").run().expect("run")
 }
 
 /// The paper's core qualitative claims on the full (non-tiny) workload:
@@ -25,25 +27,31 @@ fn paper_orderings_hold_on_full_workload() {
     let acpc = run("acpc", n, true);
 
     assert!(
-        srrip.report.l2_hit_rate > lru.report.l2_hit_rate,
+        srrip.result.report.l2_hit_rate > lru.result.report.l2_hit_rate,
         "srrip {:.3} vs lru {:.3}",
-        srrip.report.l2_hit_rate,
-        lru.report.l2_hit_rate
+        srrip.result.report.l2_hit_rate,
+        lru.result.report.l2_hit_rate
     );
     assert!(
-        acpc.report.l2_hit_rate > lru.report.l2_hit_rate + 0.01,
+        acpc.result.report.l2_hit_rate > lru.result.report.l2_hit_rate + 0.01,
         "acpc {:.3} vs lru {:.3}",
-        acpc.report.l2_hit_rate,
-        lru.report.l2_hit_rate
+        acpc.result.report.l2_hit_rate,
+        lru.result.report.l2_hit_rate
     );
     assert!(
-        acpc.report.l2_pollution_ratio < lru.report.l2_pollution_ratio * 0.6,
+        acpc.result.report.l2_pollution_ratio < lru.result.report.l2_pollution_ratio * 0.6,
         "pollution acpc {:.3} vs lru {:.3}",
-        acpc.report.l2_pollution_ratio,
-        lru.report.l2_pollution_ratio
+        acpc.result.report.l2_pollution_ratio,
+        lru.result.report.l2_pollution_ratio
     );
     // Miss-penalty reduction positive for the better policies.
-    assert!(acpc.report.miss_penalty_reduction_vs(&lru.report).expect("lru misses") > 0.0);
+    assert!(
+        acpc.result
+            .report
+            .miss_penalty_reduction_vs(&lru.result.report)
+            .expect("lru misses")
+            > 0.0
+    );
 }
 
 /// AMAT must decrease as hit rates increase (metric coherence).
@@ -52,8 +60,13 @@ fn amat_tracks_hit_rate() {
     let n = 200_000;
     let lru = run("lru", n, false);
     let acpc = run("acpc", n, true);
-    assert!(acpc.report.l2_hit_rate > lru.report.l2_hit_rate);
-    assert!(acpc.report.amat < lru.report.amat, "{} vs {}", acpc.report.amat, lru.report.amat);
+    assert!(acpc.result.report.l2_hit_rate > lru.result.report.l2_hit_rate);
+    assert!(
+        acpc.result.report.amat < lru.result.report.amat,
+        "{} vs {}",
+        acpc.result.report.amat,
+        lru.result.report.amat
+    );
 }
 
 /// Belady dominates every realizable policy on L2 hit rate.
@@ -64,10 +77,10 @@ fn belady_dominates_realizable_policies() {
     for policy in ["lru", "srrip", "dip"] {
         let r = run(policy, n, false);
         assert!(
-            bel.report.l2_hit_rate >= r.report.l2_hit_rate - 0.01,
+            bel.result.report.l2_hit_rate >= r.result.report.l2_hit_rate - 0.01,
             "belady {:.4} vs {policy} {:.4}",
-            bel.report.l2_hit_rate,
-            r.report.l2_hit_rate
+            bel.result.report.l2_hit_rate,
+            r.result.report.l2_hit_rate
         );
     }
 }
@@ -77,38 +90,43 @@ fn belady_dominates_realizable_policies() {
 #[test]
 fn prefetcher_tradeoff_visible() {
     let n = 200_000;
-    let mut with_pf = ExperimentConfig::table1("lru", PredictorKind::None);
-    with_pf.accesses = n;
-    let mut no_pf = with_pf.clone();
-    no_pf.hierarchy.prefetcher = "none".into();
-    let w = run_experiment(&with_pf, &mut PredictorBox::None);
-    let wo = run_experiment(&no_pf, &mut PredictorBox::None);
+    let with_pf = run("lru", n, false);
+    let no_pf_spec = RunSpec::builder()
+        .policy("lru")
+        .predictor(PredictorKind::None)
+        .accesses(n)
+        .prefetcher("none")
+        .build()
+        .unwrap();
+    let no_pf = Runner::new(no_pf_spec).unwrap().run().unwrap();
     // Prefetching produces nonzero pollution…
-    assert!(w.report.l2_pollution_ratio > 0.02);
-    assert_eq!(wo.report.l2_pollution_ratio, 0.0);
+    assert!(with_pf.result.report.l2_pollution_ratio > 0.02);
+    assert_eq!(no_pf.result.report.l2_pollution_ratio, 0.0);
     // …and nonzero useful coverage (accuracy defined).
-    assert!(w.report.l2_prefetch_accuracy > 0.05);
+    assert!(with_pf.result.report.l2_prefetch_accuracy > 0.05);
 }
 
-/// Config-file plumbing end-to-end: JSON overrides change the simulation.
+/// Spec-file plumbing end-to-end: a JSON spec changes the simulation, and
+/// the legacy `--config` format is a working subset of the spec format.
 #[test]
-fn config_file_roundtrip() {
-    let dir = std::env::temp_dir().join("acpc_cfg_test");
+fn spec_file_roundtrip() {
+    let dir = std::env::temp_dir().join("acpc_spec_test");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("exp.json");
     std::fs::write(
         &path,
-        r#"{"preset": "smoke", "policy": "srrip", "accesses": 30000,
+        r#"{"preset": "smoke", "policy": "srrip", "predictor": "none", "accesses": 30000,
             "hierarchy": {"prefetcher": "stride"},
             "workload": {"profile": "t5", "max_ctx": 128}}"#,
     )
     .unwrap();
-    let cfg = ExperimentConfig::from_file(&path).unwrap();
-    assert_eq!(cfg.policy, "srrip");
-    assert_eq!(cfg.accesses, 30_000);
-    assert_eq!(cfg.generator.profile.name, "t5ish");
-    let r = run_experiment(&cfg, &mut PredictorBox::None);
-    assert_eq!(r.report.accesses, 30_000);
+    let spec = RunSpec::from_file(&path).unwrap();
+    let runner = Runner::new(spec).unwrap();
+    assert_eq!(runner.spec().policy, "srrip");
+    assert_eq!(runner.spec().accesses, Some(30_000));
+    let r = runner.run().unwrap();
+    assert_eq!(r.result.report.accesses, 30_000);
+    assert_eq!(r.spec.profile.as_deref(), Some("t5"));
     std::fs::remove_file(path).ok();
 }
 
@@ -118,12 +136,15 @@ fn config_file_roundtrip() {
 fn profiles_differ_materially() {
     let mut rates = Vec::new();
     for profile in ["gpt3ish", "llama2ish", "t5ish"] {
-        let mut cfg = ExperimentConfig::table1("lru", PredictorKind::None);
-        cfg.accesses = 150_000;
-        let p = acpc::trace::ModelProfile::by_name(profile).unwrap();
-        cfg.generator = acpc::trace::GeneratorConfig::new(p, cfg.seed);
-        let r = run_experiment(&cfg, &mut PredictorBox::None);
-        rates.push(r.report.l2_hit_rate);
+        let spec = RunSpec::builder()
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .profile(profile)
+            .accesses(150_000)
+            .build()
+            .unwrap();
+        let r = Runner::new(spec).unwrap().run().unwrap();
+        rates.push(r.result.report.l2_hit_rate);
     }
     let spread = rates.iter().cloned().fold(f64::MIN, f64::max)
         - rates.iter().cloned().fold(f64::MAX, f64::min);
@@ -133,14 +154,19 @@ fn profiles_differ_materially() {
 /// Seeds matter and are honored end-to-end.
 #[test]
 fn seed_sensitivity_and_reproducibility() {
-    let mut a = ExperimentConfig::table1("lru", PredictorKind::None);
-    a.accesses = 60_000;
-    let mut b = a.clone();
-    b.seed ^= 0xFFFF;
-    b.generator.seed = b.seed;
-    let ra = run_experiment(&a, &mut PredictorBox::None);
-    let ra2 = run_experiment(&a, &mut PredictorBox::None);
-    let rb = run_experiment(&b, &mut PredictorBox::None);
-    assert_eq!(ra.report.l2_miss_cycles, ra2.report.l2_miss_cycles);
-    assert_ne!(ra.report.l2_miss_cycles, rb.report.l2_miss_cycles);
+    let mk = |seed: u64| {
+        let spec = RunSpec::builder()
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .accesses(60_000)
+            .seed(seed)
+            .build()
+            .unwrap();
+        Runner::new(spec).unwrap().run().unwrap()
+    };
+    let ra = mk(0xAC9C_2025);
+    let ra2 = mk(0xAC9C_2025);
+    let rb = mk(0xAC9C_2025 ^ 0xFFFF);
+    assert_eq!(ra.result.report.l2_miss_cycles, ra2.result.report.l2_miss_cycles);
+    assert_ne!(ra.result.report.l2_miss_cycles, rb.result.report.l2_miss_cycles);
 }
