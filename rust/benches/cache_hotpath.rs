@@ -8,8 +8,8 @@
 //! end-to-end per-access cost, not a bench-only replica of it.
 //!
 //! `ACPC_BENCH_SCALE=smoke` shrinks the trace for CI; results land in
-//! `BENCH_sim.json` (schema `acpc-bench-v1`) for the machine-readable perf
-//! trajectory.
+//! the `BENCH_sim.json` history (schema `acpc-bench-v2`) for the
+//! machine-readable perf trajectory.
 
 use acpc::mem::HierarchyConfig;
 use acpc::predictor::GeometryHints;

@@ -150,6 +150,48 @@ impl AdaptationEvent {
         }
         Json::from_pairs(pairs)
     }
+
+    /// Inverse of [`Self::to_json`] (report-store rehydration). A retrain
+    /// event without a serialized `mean_loss` decodes it as NaN, which the
+    /// serializer omits again — the round-trip is byte-exact.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let f = |key: &str| -> anyhow::Result<f64> {
+            match j.req(key)? {
+                Json::Null => Ok(f64::NAN),
+                v => v.as_f64().ok_or_else(|| anyhow::anyhow!("event.{key}: expected number")),
+            }
+        };
+        let u = |key: &str| -> anyhow::Result<u64> {
+            let v = f(key)?;
+            if v.is_finite() && v >= 0.0 && v.fract() == 0.0 {
+                Ok(v as u64)
+            } else {
+                anyhow::bail!("event.{key}: expected non-negative integer")
+            }
+        };
+        let label = j.req("action")?.as_str().unwrap_or_default().to_string();
+        let action = match label.as_str() {
+            "retrain" => AdaptationAction::Retrain {
+                steps: u("steps")?,
+                mean_loss: match j.get("mean_loss") {
+                    Some(v) => v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("event.mean_loss: expected number"))?,
+                    None => f64::NAN,
+                },
+            },
+            "throttle" => AdaptationAction::Throttle,
+            "resume" => AdaptationAction::Resume,
+            other => anyhow::bail!("event.action: unknown label {other:?}"),
+        };
+        Ok(Self {
+            window: u("window")?,
+            access: u("access")?,
+            action,
+            hit_rate: f("hit_rate")?,
+            predictor_version: u("predictor_version")?,
+        })
+    }
 }
 
 /// What [`AdaptiveController::maybe_window`] decided this window (callers
@@ -584,6 +626,52 @@ impl ControllerSummary {
             ("windows", Json::Arr(self.windows.iter().map(|w| w.to_json()).collect())),
         ])
     }
+
+    /// Inverse of [`Self::to_json`] (report-store rehydration). The
+    /// rehydrated summary re-serializes byte-identically: `merge` of a
+    /// single already-merged summary is the identity (stable sorts over
+    /// already-sorted logs), which the store's byte-identity tests pin.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let u = |key: &str| -> anyhow::Result<u64> {
+            j.req(key)?
+                .as_f64()
+                .filter(|v| v.is_finite() && *v >= 0.0 && v.fract() == 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow::anyhow!("adaptation.{key}: expected non-negative integer"))
+        };
+        let arr = |key: &str| -> anyhow::Result<&[Json]> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("adaptation.{key}: expected array"))
+        };
+        let drift_windows = arr("drift_windows")?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| anyhow::anyhow!("adaptation.drift_windows: expected integers"))
+            })
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+        let events = arr("events")?
+            .iter()
+            .map(AdaptationEvent::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let windows = arr("windows")?
+            .iter()
+            .map(WindowStats::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
+            windows_observed: u("windows_observed")?,
+            drift_events: u("drift_events")?,
+            swaps: u("swaps")?,
+            throttled_windows: u("throttled_windows")?,
+            online_train_steps: u("online_train_steps")?,
+            drift_windows,
+            events,
+            windows,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -654,6 +742,18 @@ mod tests {
             assert_eq!(arr.len(), n, "column {key} must align with the window log");
         }
         assert!(j.get("events").unwrap().as_arr().is_some());
+    }
+
+    /// Rehydrating a serialized summary and re-merging it (as the report
+    /// store does on a cache hit) reproduces the original bytes.
+    #[test]
+    fn summary_json_roundtrip_is_byte_exact() {
+        let s = drive(ControllerConfig::quick(), 120_000, 11).into_summary();
+        let merged = ControllerSummary::merge(vec![s]);
+        let text = merged.to_json().to_pretty();
+        let back = ControllerSummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_pretty(), text);
+        assert_eq!(ControllerSummary::merge(vec![back]).to_json().to_pretty(), text);
     }
 
     #[test]

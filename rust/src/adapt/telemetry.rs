@@ -76,6 +76,35 @@ impl WindowStats {
             ("reuse_p50_log2", Json::Num(self.reuse_p50_log2 as f64)),
         ])
     }
+
+    /// Inverse of [`Self::to_json`] (report-store rehydration). Numeric
+    /// `null` decodes as NaN, matching the serializer's non-finite → `null`
+    /// convention.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let f = |key: &str| -> anyhow::Result<f64> {
+            match j.req(key)? {
+                Json::Null => Ok(f64::NAN),
+                v => v.as_f64().ok_or_else(|| anyhow::anyhow!("window.{key}: expected number")),
+            }
+        };
+        let u = |key: &str| -> anyhow::Result<u64> {
+            let v = f(key)?;
+            if v.is_finite() && v >= 0.0 && v.fract() == 0.0 {
+                Ok(v as u64)
+            } else {
+                anyhow::bail!("window.{key}: expected non-negative integer")
+            }
+        };
+        Ok(Self {
+            index: u("index")?,
+            accesses: u("accesses")?,
+            l2_demand: u("l2_demand")?,
+            hit_rate: f("hit_rate")?,
+            pollution: f("pollution")?,
+            prefetch_accuracy: f("prefetch_accuracy")?,
+            reuse_p50_log2: u("reuse_p50_log2")?.min(u8::MAX as u64) as u8,
+        })
+    }
 }
 
 /// Bounded last-touch map + log2-bucketed histogram of line reuse

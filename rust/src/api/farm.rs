@@ -1,0 +1,296 @@
+//! The experiment farm: execute many [`RunSpec`]s on the sweep thread
+//! pool, every cell routed through the content-addressed report store.
+//!
+//! `acpc run --manifest <dir-or-file>` and `sim::run_sweep` both lower to
+//! [`run_farm`]: label the specs, hash them, dedupe identical cells,
+//! simulate only the misses (in parallel, on the persistent per-thread
+//! shard pools), and fan the reports back out in input order with per-cell
+//! hit provenance. A warm second invocation of the same manifest performs
+//! **zero** simulation.
+//!
+//! ## Manifest format
+//!
+//! A manifest is either a directory of `*.json` spec files (processed in
+//! name order) or a single file. Each file may contain:
+//!
+//! - one spec object (`{"policy": "acpc", ...}`),
+//! - an array of spec objects, or
+//! - `{"runs": [ <spec>, ... ]}`.
+//!
+//! Entries are labeled by the spec's `name` when present, else by the file
+//! stem (suffixed `#k` for the k-th spec of a multi-spec file). Specs
+//! without a `seed` get a deterministic one derived from the farm's base
+//! seed and the entry's label+position — repeat invocations therefore hash
+//! (and cache) identically.
+
+use super::runner::{RunReport, Runner};
+use super::spec::RunSpec;
+use super::store::{CacheMode, ReportStore};
+use crate::util::json::Json;
+use crate::util::pool::{default_threads, run_parallel};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Default base seed for manifest entries that specify none.
+pub const FARM_BASE_SEED: u64 = 0xFA23_5EED;
+
+/// One labeled spec in a farm invocation.
+#[derive(Debug, Clone)]
+pub struct FarmEntry {
+    pub label: String,
+    pub spec: RunSpec,
+}
+
+/// How [`run_farm`] executes: parallelism, store attachment, and the base
+/// seed for seedless specs.
+#[derive(Debug, Clone)]
+pub struct FarmConfig {
+    /// Worker threads (each cell may additionally shard internally).
+    pub threads: usize,
+    /// Report store consulted per `cache`; `None` disables caching.
+    pub store: Option<ReportStore>,
+    pub cache: CacheMode,
+    /// Base seed mixed into derived per-entry seeds.
+    pub base_seed: u64,
+}
+
+impl Default for FarmConfig {
+    fn default() -> Self {
+        Self {
+            threads: default_threads(),
+            store: None,
+            cache: CacheMode::Off,
+            base_seed: FARM_BASE_SEED,
+        }
+    }
+}
+
+/// One executed (or cache-served) farm cell, in manifest order.
+#[derive(Debug, Clone)]
+pub struct FarmCell {
+    pub label: String,
+    /// Content address of the resolved spec (the store key).
+    pub spec_hash: String,
+    /// `true` when the report came from the store or from an identical
+    /// cell earlier in the same manifest — i.e. this cell simulated
+    /// nothing.
+    pub cached: bool,
+    pub report: RunReport,
+}
+
+/// Load a manifest (directory of `*.json` files, or one file) into
+/// labeled, seeded entries. See the module docs for the accepted shapes.
+pub fn load_manifest(path: &Path, base_seed: u64) -> Result<Vec<FarmEntry>> {
+    let mut entries = Vec::new();
+    if path.is_dir() {
+        let mut files: Vec<_> = std::fs::read_dir(path)
+            .with_context(|| format!("reading manifest dir {}", path.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            bail!("manifest dir {} contains no .json files", path.display());
+        }
+        for f in files {
+            load_manifest_file(&f, &mut entries)?;
+        }
+    } else {
+        load_manifest_file(path, &mut entries)?;
+    }
+    // Seed seedless specs deterministically so repeat invocations hash —
+    // and therefore cache — identically.
+    for (i, e) in entries.iter_mut().enumerate() {
+        if e.spec.seed.is_none() {
+            e.spec.seed = Some(crate::sim::cell_seed(base_seed, &e.label, &i.to_string()));
+        }
+    }
+    Ok(entries)
+}
+
+fn load_manifest_file(path: &Path, out: &mut Vec<FarmEntry>) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest file {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let stem = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+    let specs: Vec<&Json> = if let Some(arr) = j.as_arr() {
+        arr.iter().collect()
+    } else if let Some(runs) = j.get("runs") {
+        runs.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{}: \"runs\" must be an array", path.display()))?
+            .iter()
+            .collect()
+    } else {
+        vec![&j]
+    };
+    if specs.is_empty() {
+        bail!("{}: no specs", path.display());
+    }
+    let multi = specs.len() > 1;
+    for (k, sj) in specs.into_iter().enumerate() {
+        let spec = RunSpec::from_json(sj)
+            .with_context(|| format!("{} (spec #{k})", path.display()))?;
+        let label = match &spec.name {
+            Some(n) if !n.is_empty() => n.clone(),
+            _ if multi => format!("{stem}#{k}"),
+            _ => stem.clone(),
+        };
+        out.push(FarmEntry { label, spec });
+    }
+    Ok(())
+}
+
+/// Execute labeled specs per `cfg`: hash, dedupe, simulate the misses on
+/// the thread pool, and return cells in input order. Spec validation
+/// errors fail fast (before any simulation); store read errors are misses
+/// by construction, and store write failures degrade to a warning.
+pub fn run_farm(entries: Vec<FarmEntry>, cfg: &FarmConfig) -> Result<Vec<FarmCell>> {
+    // Hash everything up front — validates every spec before work starts.
+    let mut hashes = Vec::with_capacity(entries.len());
+    for e in &entries {
+        let h = super::store::spec_hash(&e.spec)
+            .with_context(|| format!("farm entry '{}'", e.label))?;
+        hashes.push(h);
+    }
+    // Dedupe identical cells within this invocation: the first occurrence
+    // runs; duplicates reuse its report.
+    let mut first_of: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut unique: Vec<usize> = Vec::new();
+    for (i, h) in hashes.iter().enumerate() {
+        first_of.entry(h.as_str()).or_insert_with(|| {
+            unique.push(i);
+            unique.len() - 1
+        });
+    }
+    let jobs: Vec<_> = unique
+        .iter()
+        .map(|&i| {
+            let spec = entries[i].spec.clone();
+            let store = cfg.store.clone();
+            let cache = cfg.cache;
+            move || -> Result<(RunReport, bool)> {
+                let mut runner = Runner::new(spec)?;
+                if let Some(s) = store {
+                    runner = runner.with_store(s, cache);
+                }
+                runner.run_cached()
+            }
+        })
+        .collect();
+    let outs = run_parallel(cfg.threads, jobs);
+    let mut ran: Vec<(RunReport, bool)> = Vec::with_capacity(outs.len());
+    for (slot, out) in unique.iter().zip(outs) {
+        ran.push(out.with_context(|| format!("farm entry '{}'", entries[*slot].label))?);
+    }
+
+    let mut cells = Vec::with_capacity(entries.len());
+    for (i, e) in entries.into_iter().enumerate() {
+        let slot = first_of[hashes[i].as_str()];
+        let (report, store_hit) = &ran[slot];
+        let duplicate = unique[slot] != i;
+        cells.push(FarmCell {
+            label: e.label,
+            spec_hash: hashes[i].clone(),
+            cached: *store_hit || duplicate,
+            report: report.clone(),
+        });
+    }
+    Ok(cells)
+}
+
+/// Serialize farm cells for `acpc run --manifest --json` (schema
+/// `acpc-farm-v1`): one entry per cell, in manifest order, embedding the
+/// full report plus hit provenance.
+pub fn cells_to_json(cells: &[FarmCell]) -> Json {
+    Json::from_pairs(vec![
+        ("schema", Json::Str("acpc-farm-v1".into())),
+        (
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        Json::from_pairs(vec![
+                            ("label", Json::Str(c.label.clone())),
+                            ("spec_hash", Json::Str(c.spec_hash.clone())),
+                            ("cached", Json::Bool(c.cached)),
+                            ("report", c.report.to_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PredictorKind;
+
+    fn entry(label: &str, seed: u64) -> FarmEntry {
+        FarmEntry {
+            label: label.into(),
+            spec: RunSpec::builder()
+                .preset("smoke")
+                .policy("lru")
+                .predictor(PredictorKind::None)
+                .accesses(5_000)
+                .seed(seed)
+                .build()
+                .unwrap(),
+        }
+    }
+
+    /// Identical cells inside one manifest run once; duplicates are marked
+    /// cached even with no store attached.
+    #[test]
+    fn duplicate_cells_dedupe_within_one_invocation() {
+        let entries = vec![entry("a", 1), entry("b", 2), entry("a-again", 1)];
+        let cells = run_farm(entries, &FarmConfig { threads: 2, ..Default::default() }).unwrap();
+        assert_eq!(cells.len(), 3);
+        assert!(!cells[0].cached && !cells[1].cached);
+        assert!(cells[2].cached, "identical later cell must reuse the first");
+        assert_eq!(cells[0].spec_hash, cells[2].spec_hash);
+        assert_ne!(cells[0].spec_hash, cells[1].spec_hash);
+        assert_eq!(
+            cells[0].report.to_json().to_pretty(),
+            cells[2].report.to_json().to_pretty()
+        );
+    }
+
+    #[test]
+    fn manifest_loading_labels_and_seeds_deterministically() {
+        let dir = std::env::temp_dir().join("acpc_farm_unit_manifest");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("b_pair.json"),
+            r#"{"runs": [
+                {"policy": "lru", "predictor": "none", "accesses": 5000},
+                {"policy": "srrip", "predictor": "none", "accesses": 5000, "name": "named"}
+            ]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("a_single.json"),
+            r#"{"policy": "lfu", "predictor": "none", "accesses": 5000, "seed": "9"}"#,
+        )
+        .unwrap();
+        let entries = load_manifest(&dir, FARM_BASE_SEED).unwrap();
+        // Directory order is name-sorted; labels fall back to file stems.
+        let labels: Vec<&str> = entries.iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(labels, vec!["a_single", "b_pair#0", "named"]);
+        // Explicit seed is kept; missing seeds are derived deterministically.
+        assert_eq!(entries[0].spec.seed, Some(9));
+        assert!(entries[1].spec.seed.is_some());
+        let again = load_manifest(&dir, FARM_BASE_SEED).unwrap();
+        assert_eq!(entries[1].spec.seed, again[1].spec.seed);
+        // A different base seed re-seeds the seedless entries only.
+        let other = load_manifest(&dir, 1).unwrap();
+        assert_ne!(other[1].spec.seed, entries[1].spec.seed);
+        assert_eq!(other[0].spec.seed, Some(9));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -20,11 +20,17 @@
 //! `sim::run_experiment` / `run_workload` / `run_workload_adaptive` /
 //! `run_workload_sharded` functions are crate-internal delegates now.
 
+pub mod farm;
 mod runner;
 mod spec;
+pub mod store;
 
+pub use farm::{
+    cells_to_json, load_manifest, run_farm, FarmCell, FarmConfig, FarmEntry, FARM_BASE_SEED,
+};
 pub use runner::{PredictorFactory, RunReport, Runner};
 pub use spec::{AdaptSpec, HierarchySpec, RunSpec, RunSpecBuilder, WorkloadSpec, SCHEMA};
+pub use store::{spec_hash, CacheMode, ReportStore};
 
 use crate::adapt::{CompareOutput, ControllerSummary};
 use anyhow::Result;

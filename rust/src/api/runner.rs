@@ -10,8 +10,10 @@
 //! `sim::run_workload*` functions survive only as crate-internal delegates.
 
 use super::spec::{Resolved, RunSpec, SCHEMA};
+use super::store::{CacheMode, ReportStore};
 use crate::adapt::{AdaptiveController, ControllerSummary};
 use crate::config::PredictorKind;
+use crate::metrics::MetricsReport;
 use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
 use crate::sim::shard::{run_workload_sharded, PredictorReclaim};
 use crate::sim::SimResult;
@@ -60,6 +62,7 @@ enum PredictorSource {
 pub struct Runner {
     resolved: Resolved,
     source: PredictorSource,
+    store: Option<(ReportStore, CacheMode)>,
 }
 
 impl Runner {
@@ -67,7 +70,7 @@ impl Runner {
     /// policies/scenarios/profiles, bad geometry, unshardable hierarchies
     /// and predictor-less adaptive runs — nothing is deferred to mid-run.
     pub fn new(spec: RunSpec) -> Result<Runner> {
-        Ok(Runner { resolved: spec.resolve()?, source: PredictorSource::Spec })
+        Ok(Runner { resolved: spec.resolve()?, source: PredictorSource::Spec, store: None })
     }
 
     /// [`Runner::new`] from a spec file (`acpc run --spec`).
@@ -91,6 +94,23 @@ impl Runner {
         self
     }
 
+    /// Attach a content-addressed [`ReportStore`]: [`run`](Self::run)
+    /// consults it per `mode` before simulating. Only spec-built predictor
+    /// runs use the store — a run with an *injected* predictor
+    /// ([`with_predictor`](Self::with_predictor) /
+    /// [`with_predictor_factory`](Self::with_predictor_factory)) is not
+    /// reproducible from the spec alone and always simulates.
+    pub fn with_store(mut self, store: ReportStore, mode: CacheMode) -> Self {
+        self.store = Some((store, mode));
+        self
+    }
+
+    /// The content address of this runner's resolved spec (the report
+    /// store key; see [`super::store::spec_hash`] for the derivation).
+    pub fn spec_hash(&self) -> String {
+        super::store::resolved_spec_hash(&self.resolved.spec)
+    }
+
     /// The fully-resolved spec this runner executes (also embedded in the
     /// report).
     pub fn spec(&self) -> &RunSpec {
@@ -108,9 +128,35 @@ impl Runner {
             && self.resolved.cfg.feedback_interval == 0
     }
 
-    /// Execute the run: resolve the predictor, dispatch single-threaded or
-    /// set-sharded, and assemble the [`RunReport`].
+    /// Execute the run: consult the attached report store (if any), else
+    /// resolve the predictor, dispatch single-threaded or set-sharded, and
+    /// assemble the [`RunReport`].
     pub fn run(&self) -> Result<RunReport> {
+        Ok(self.run_cached()?.0)
+    }
+
+    /// Like [`run`](Self::run), additionally reporting provenance: `true`
+    /// when the report was served from the store without simulating.
+    pub fn run_cached(&self) -> Result<(RunReport, bool)> {
+        if let Some((store, mode)) = &self.store {
+            if mode.reads() && matches!(self.source, PredictorSource::Spec) {
+                let hash = self.spec_hash();
+                if let Some(report) = store.get(&hash) {
+                    return Ok((report, true));
+                }
+                let report = self.execute()?;
+                if mode.writes() {
+                    if let Err(e) = store.put(&hash, &report) {
+                        crate::log_warn!("report store: failed to persist entry {hash}: {e}");
+                    }
+                }
+                return Ok((report, false));
+            }
+        }
+        Ok((self.execute()?, false))
+    }
+
+    fn execute(&self) -> Result<RunReport> {
         let r = &self.resolved;
         let cache = self.cache_eligible();
         let mut workload = r.cfg.workload();
@@ -193,6 +239,18 @@ impl Runner {
             controllers,
         })
     }
+}
+
+/// Inverse of [`effective_label`]'s decoration: the bare name of the
+/// predictor that ran, recovered from a serialized `predictor_effective`
+/// (report-store rehydration — `SimResult::predictor` is not serialized
+/// separately).
+fn base_predictor_name(effective: &str) -> String {
+    let s = effective
+        .strip_prefix("adaptive(")
+        .and_then(|x| x.strip_suffix(')'))
+        .unwrap_or(effective);
+    s.strip_suffix("(fallback)").unwrap_or(s).to_string()
 }
 
 /// Provenance label for what actually ran: the predictor's own name,
@@ -363,6 +421,61 @@ impl RunReport {
         j
     }
 
+    /// Inverse of [`Self::to_json`] — how the report store rehydrates a
+    /// cached run. The round-trip is byte-exact: serializing the returned
+    /// report reproduces the stored text, so a cache hit is
+    /// indistinguishable from the cold run that produced it (including its
+    /// recorded `wall_secs` — provenance is reported separately by
+    /// [`Runner::run_cached`]).
+    pub fn from_json(j: &Json) -> Result<RunReport> {
+        match j.req("schema")?.as_str() {
+            Some(SCHEMA) => {}
+            other => bail!("report schema mismatch: expected {SCHEMA:?}, got {other:?}"),
+        }
+        let spec = RunSpec::from_json(j.req("spec")?)?;
+        let predictor_effective = j
+            .req("predictor_effective")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("predictor_effective: expected string"))?
+            .to_string();
+        let report = MetricsReport::from_json(j.req("metrics")?)?;
+        let f = |key: &str| -> Result<f64> {
+            match j.req(key)? {
+                Json::Null => Ok(f64::NAN),
+                v => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("report.{key}: expected number")),
+            }
+        };
+        let u = |key: &str| -> Result<u64> {
+            let v = f(key)?;
+            if v.is_finite() && v >= 0.0 && v.fract() == 0.0 {
+                Ok(v as u64)
+            } else {
+                bail!("report.{key}: expected non-negative integer")
+            }
+        };
+        let controllers = match j.get("adaptation") {
+            Some(a) => vec![ControllerSummary::from_json(a)?],
+            None => Vec::new(),
+        };
+        let result = SimResult {
+            tokens: report.tokens,
+            emu: report.emu,
+            predictor: base_predictor_name(&predictor_effective),
+            prediction_batches: u("prediction_batches")?,
+            online_train_steps: u("online_train_steps")?,
+            wall_secs: f("wall_secs")?,
+            accesses_per_sec: f("accesses_per_sec")?,
+            adapt_windows: u("adapt_windows")?,
+            drift_events: u("drift_events")?,
+            predictor_swaps: u("predictor_swaps")?,
+            throttled_windows: u("throttled_windows")?,
+            report,
+        };
+        Ok(RunReport { spec, predictor_effective, result, controllers })
+    }
+
     /// One-line counters summary (the CLI prints this under the metrics).
     pub fn counters_line(&self) -> String {
         let r = &self.result;
@@ -477,6 +590,36 @@ mod tests {
             .with_predictor(PredictorBox::Heuristic(HeuristicPredictor))
             .run();
         assert!(err.is_err(), "owned predictors are thread-affine");
+    }
+
+    /// Report JSON rehydration is byte-exact — the invariant the report
+    /// store's cache hits rely on (here for an adaptive run, whose
+    /// `adaptation` block is the hardest part to round-trip).
+    #[test]
+    fn report_json_roundtrip_is_byte_exact() {
+        let spec = RunSpec::builder()
+            .scenario("bursty-batch")
+            .policy("acpc")
+            .predictor(PredictorKind::Heuristic)
+            .accesses(50_000)
+            .seed(0xBEE5)
+            .adaptive(true)
+            .build()
+            .unwrap();
+        let report = Runner::new(spec).unwrap().run().unwrap();
+        let text = report.to_json().to_pretty();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_pretty(), text);
+        assert_eq!(back.result.predictor, "heuristic");
+    }
+
+    #[test]
+    fn base_predictor_names_invert_decoration() {
+        assert_eq!(base_predictor_name("none"), "none");
+        assert_eq!(base_predictor_name("tcn"), "tcn");
+        assert_eq!(base_predictor_name("heuristic(fallback)"), "heuristic");
+        assert_eq!(base_predictor_name("adaptive(heuristic)"), "heuristic");
+        assert_eq!(base_predictor_name("adaptive(heuristic(fallback))"), "heuristic");
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Content-addressed report store: spec-hash → cached [`RunReport`].
+//!
+//! PR 4 made `RunSpec` → `RunReport` bit-for-bit reproducible, which means
+//! a report is fully determined by its *resolved* spec — so re-simulating a
+//! cell whose spec we have already run is pure waste. This module turns
+//! that determinism into a cache: [`spec_hash`] derives a stable SHA-256
+//! key from the canonical JSON of the resolved spec, and [`ReportStore`]
+//! maps that key to the serialized report on disk. [`crate::api::Runner`]
+//! consults the store behind a [`CacheMode`]; the sweep and the manifest
+//! farm route every cell through it, so a warm second run does **zero**
+//! simulation.
+//!
+//! ## Key derivation (cache invalidation rules)
+//!
+//! The hashed material is, line by line:
+//!
+//! 1. the hash-schema tag (`acpc-spec-hash-v1`) — bumping it invalidates
+//!    every existing entry at once;
+//! 2. the crate version — a new release never trusts an old store;
+//! 3. the compact canonical JSON of the **resolved** spec. Resolution makes
+//!    every defaulted scalar explicit, so a spec that omits `predict_batch`
+//!    and one that spells out the default hash identically; the JSON
+//!    object is a `BTreeMap`, so key order never varies;
+//! 4. for learned predictors (`tcn`/`dnn` or a `model` override): a
+//!    fingerprint of the AOT artifact manifest (`artifacts:<sha256>`, or
+//!    `artifacts:absent`). Retraining a model rewrites the manifest and
+//!    therefore misses; so does installing artifacts where there were none
+//!    (the fallback-to-heuristic run stops being representative).
+//!
+//! What the key deliberately does **not** cover: engine code changes within
+//! one crate version. A development workflow that edits the simulator must
+//! clear the store (`rm -rf .acpc-store`) or run with `CacheMode::Off`;
+//! CI sidesteps the issue by keying its cached store on the source tree.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! <root>/                   # $ACPC_STORE, default ./.acpc-store
+//!   ab/                     # first two hex digits of the key
+//!     ab3f…e2.json          # full 64-hex-digit key, pretty-printed report
+//! ```
+//!
+//! Entries are written atomically (temp file + rename), so a crashed run
+//! never leaves a half-written entry under its final name. Reads are
+//! paranoid: a corrupt, truncated, schema-mismatched, or wrongly-addressed
+//! entry is a **miss, never an error** — the runner falls back to
+//! simulation and overwrites the bad entry on the way out.
+
+use super::runner::RunReport;
+use super::spec::RunSpec;
+use crate::util::hash::sha256_hex;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Version tag mixed into every key; bump to invalidate all entries.
+const HASH_SCHEMA: &str = "acpc-spec-hash-v1";
+
+/// How a [`crate::api::Runner`] uses its attached [`ReportStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheMode {
+    /// Ignore the store entirely: always simulate, never read or write.
+    Off,
+    /// Serve hits from the store but never write new entries (useful
+    /// against a read-only shared store).
+    Read,
+    /// Serve hits and persist every fresh result — the farm default.
+    ReadWrite,
+}
+
+impl CacheMode {
+    /// Parse a CLI-facing label: `off`, `read`, `read-write` (or `rw`).
+    pub fn parse(s: &str) -> Result<CacheMode> {
+        match s {
+            "off" => Ok(CacheMode::Off),
+            "read" => Ok(CacheMode::Read),
+            "read-write" | "rw" => Ok(CacheMode::ReadWrite),
+            other => anyhow::bail!(
+                "unknown cache mode '{other}' (expected off, read, or read-write)"
+            ),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CacheMode::Off => "off",
+            CacheMode::Read => "read",
+            CacheMode::ReadWrite => "read-write",
+        }
+    }
+
+    /// May cached entries satisfy a run?
+    pub fn reads(self) -> bool {
+        !matches!(self, CacheMode::Off)
+    }
+
+    /// Are fresh results persisted?
+    pub fn writes(self) -> bool {
+        matches!(self, CacheMode::ReadWrite)
+    }
+}
+
+/// Stable content address of a spec: resolves it (validating on the way),
+/// then hashes the canonical resolved JSON per the module-level rules.
+/// Two specs that resolve identically — regardless of field order, or of
+/// spelling out vs omitting defaults — share a hash.
+pub fn spec_hash(spec: &RunSpec) -> Result<String> {
+    Ok(resolved_spec_hash(&spec.resolve()?.spec))
+}
+
+/// Hash of an already-resolved spec (the runner calls this to avoid a
+/// second resolution; `get` calls it to verify an entry's address).
+pub(crate) fn resolved_spec_hash(resolved: &RunSpec) -> String {
+    let mut material = format!(
+        "{HASH_SCHEMA}\n{}\n{}\n",
+        env!("CARGO_PKG_VERSION"),
+        resolved.to_json().to_string()
+    );
+    use crate::config::PredictorKind;
+    if matches!(resolved.predictor, PredictorKind::Tcn | PredictorKind::Dnn)
+        || resolved.model.is_some()
+    {
+        material.push_str(&artifact_fingerprint());
+        material.push('\n');
+    }
+    sha256_hex(material.as_bytes())
+}
+
+/// Content digest of the AOT artifact manifest, or `artifacts:absent` when
+/// no artifacts directory is configured/readable. Learned-predictor specs
+/// mix this into their key so retrained weights (or newly installed
+/// artifacts) invalidate cached runs.
+fn artifact_fingerprint() -> String {
+    let manifest = crate::runtime::artifacts_dir().map(|d| d.join("manifest.json"));
+    match manifest.and_then(|p| std::fs::read(p).ok()) {
+        Some(bytes) => format!("artifacts:{}", sha256_hex(&bytes)),
+        None => "artifacts:absent".to_string(),
+    }
+}
+
+/// A directory of content-addressed [`RunReport`]s (see the module docs
+/// for layout and invalidation semantics). Cloning is cheap — the store is
+/// just a root path; all state lives on disk.
+#[derive(Debug, Clone)]
+pub struct ReportStore {
+    root: PathBuf,
+}
+
+impl ReportStore {
+    /// Open (lazily — nothing is created until the first write) a store
+    /// rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> ReportStore {
+        ReportStore { root: root.into() }
+    }
+
+    /// The default root: `$ACPC_STORE` when set, else `.acpc-store` under
+    /// the current directory.
+    pub fn default_root() -> PathBuf {
+        match std::env::var_os("ACPC_STORE") {
+            Some(p) if !p.is_empty() => PathBuf::from(p),
+            _ => PathBuf::from(".acpc-store"),
+        }
+    }
+
+    /// [`ReportStore::open`] at [`ReportStore::default_root`].
+    pub fn open_default() -> ReportStore {
+        Self::open(Self::default_root())
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Where an entry for `hash` lives: `<root>/<hash[..2]>/<hash>.json`.
+    pub fn entry_path(&self, hash: &str) -> PathBuf {
+        let shard = hash.get(..2).unwrap_or("__");
+        self.root.join(shard).join(format!("{hash}.json"))
+    }
+
+    /// Fetch and validate the entry for `hash`. Any defect — unreadable
+    /// file, truncated/corrupt JSON, wrong report schema, or an embedded
+    /// spec that no longer hashes to `hash` (tampering, or artifacts that
+    /// changed since the entry was written) — is a miss (`None`), never an
+    /// error.
+    pub fn get(&self, hash: &str) -> Option<RunReport> {
+        let text = std::fs::read_to_string(self.entry_path(hash)).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let report = RunReport::from_json(&j).ok()?;
+        if resolved_spec_hash(&report.spec) != hash {
+            return None;
+        }
+        Some(report)
+    }
+
+    /// Persist `report` under `hash`, atomically (temp file + rename).
+    pub fn put(&self, hash: &str, report: &RunReport) -> std::io::Result<PathBuf> {
+        let path = self.entry_path(hash);
+        let dir = path.parent().expect("entry path has a parent");
+        std::fs::create_dir_all(dir)?;
+        let tmp = dir.join(format!(".{hash}.tmp{}", std::process::id()));
+        std::fs::write(&tmp, report.to_json().to_pretty())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// All entry hashes currently in the store (sorted).
+    pub fn hashes(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let Ok(shards) = std::fs::read_dir(&self.root) else { return out };
+        for shard in shards.flatten() {
+            let Ok(files) = std::fs::read_dir(shard.path()) else { continue };
+            for f in files.flatten() {
+                let name = f.file_name();
+                let name = name.to_string_lossy();
+                if let Some(stem) = name.strip_suffix(".json") {
+                    if stem.len() == 64 && stem.bytes().all(|b| b.is_ascii_hexdigit()) {
+                        out.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Number of entries on disk.
+    pub fn len(&self) -> usize {
+        self.hashes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hashes().is_empty()
+    }
+
+    /// Resolve a (possibly abbreviated) hex hash to the unique stored
+    /// entry it prefixes. `None` when nothing — or more than one entry —
+    /// matches (`acpc diff` uses this for git-style short hashes).
+    pub fn find(&self, prefix: &str) -> Option<String> {
+        let mut matches = self.hashes().into_iter().filter(|h| h.starts_with(prefix));
+        let first = matches.next()?;
+        if matches.next().is_some() {
+            return None;
+        }
+        Some(first)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Runner;
+    use crate::config::PredictorKind;
+
+    fn tmp_store(name: &str) -> ReportStore {
+        let dir = std::env::temp_dir().join("acpc_store_unit").join(name);
+        std::fs::remove_dir_all(&dir).ok();
+        ReportStore::open(dir)
+    }
+
+    fn tiny_spec(seed: u64) -> RunSpec {
+        RunSpec::builder()
+            .preset("smoke")
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .accesses(5_000)
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn cache_mode_parses_and_labels() {
+        assert_eq!(CacheMode::parse("off").unwrap(), CacheMode::Off);
+        assert_eq!(CacheMode::parse("read").unwrap(), CacheMode::Read);
+        assert_eq!(CacheMode::parse("read-write").unwrap(), CacheMode::ReadWrite);
+        assert_eq!(CacheMode::parse("rw").unwrap(), CacheMode::ReadWrite);
+        assert!(CacheMode::parse("sometimes").is_err());
+        assert!(!CacheMode::Off.reads() && !CacheMode::Off.writes());
+        assert!(CacheMode::Read.reads() && !CacheMode::Read.writes());
+        assert!(CacheMode::ReadWrite.reads() && CacheMode::ReadWrite.writes());
+        for m in [CacheMode::Off, CacheMode::Read, CacheMode::ReadWrite] {
+            assert_eq!(CacheMode::parse(m.label()).unwrap(), m);
+        }
+    }
+
+    /// Key-order independence and omitted-vs-explicit defaults: all three
+    /// spellings resolve identically and therefore share one hash.
+    #[test]
+    fn spec_hash_is_stable_across_field_order_and_defaults() {
+        let a = RunSpec::from_json(
+            &Json::parse(r#"{"policy": "lru", "predictor": "none", "accesses": 5000, "seed": "7"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let b = RunSpec::from_json(
+            &Json::parse(r#"{"seed": "7", "accesses": 5000, "predictor": "none", "policy": "lru"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let c = RunSpec::from_json(
+            &Json::parse(
+                r#"{"policy": "lru", "predictor": "none", "accesses": 5000, "seed": "7",
+                    "shards": 1}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let ha = spec_hash(&a).unwrap();
+        assert_eq!(ha.len(), 64);
+        assert_eq!(ha, spec_hash(&b).unwrap());
+        assert_eq!(ha, spec_hash(&c).unwrap(), "explicit default shards must not change the key");
+        // And a genuinely different spec gets a different key.
+        let mut d = a.clone();
+        d.seed = Some(8);
+        assert_ne!(ha, spec_hash(&d).unwrap());
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_addressing() {
+        let store = tmp_store("roundtrip");
+        let runner = Runner::new(tiny_spec(3)).unwrap();
+        let report = runner.run().unwrap();
+        let hash = runner.spec_hash();
+        assert!(store.get(&hash).is_none(), "empty store must miss");
+        let path = store.put(&hash, &report).unwrap();
+        assert!(path.starts_with(store.root()));
+        assert_eq!(store.len(), 1);
+        let back = store.get(&hash).expect("stored entry must hit");
+        assert_eq!(back.to_json().to_pretty(), report.to_json().to_pretty());
+        // Short-hash resolution.
+        assert_eq!(store.find(&hash[..8]).as_deref(), Some(hash.as_str()));
+        assert_eq!(store.find("zz"), None);
+    }
+
+    /// Corruption in every flavor is a miss, never an error.
+    #[test]
+    fn corrupt_entries_are_misses() {
+        let store = tmp_store("corrupt");
+        let runner = Runner::new(tiny_spec(5)).unwrap();
+        let report = runner.run().unwrap();
+        let hash = runner.spec_hash();
+        store.put(&hash, &report).unwrap();
+
+        let path = store.entry_path(&hash);
+        let good = std::fs::read_to_string(&path).unwrap();
+
+        // Truncated JSON.
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(store.get(&hash).is_none());
+        // Valid JSON, wrong schema.
+        std::fs::write(&path, r#"{"schema": "acpc-run-v0"}"#).unwrap();
+        assert!(store.get(&hash).is_none());
+        // Valid report stored at the wrong address.
+        let other = Runner::new(tiny_spec(6)).unwrap();
+        store.put(&hash, &other.run().unwrap()).unwrap();
+        assert!(store.get(&hash).is_none(), "entry must hash to its own address");
+        // Restore → hit again.
+        std::fs::write(&path, &good).unwrap();
+        assert!(store.get(&hash).is_some());
+    }
+}

@@ -1,0 +1,318 @@
+//! `acpc diff` — compare two run reports (files or store entries) as a
+//! keyed metric-delta table, or two `BENCH_sim.json` trajectories as the
+//! CI perf-regression gate.
+
+use crate::api::ReportStore;
+use crate::cli::Args;
+use crate::util::bench::latest_snapshot;
+use crate::util::bench::print_table;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+const HELP: &str = "\
+acpc diff — compare two run reports, or gate on a perf trajectory
+
+Report mode:
+    acpc diff <a> <b> [--store <dir>] [--json <out>]
+
+<a>/<b> are RunReport JSON files (`acpc run --json`), or — when no such
+file exists — unique prefixes of report-store entry hashes (the
+`spec_hash` values printed by `acpc run --manifest` / `acpc sweep`).
+Prints every shared numeric metric with its absolute and relative delta.
+
+Bench mode (the CI regression gate):
+    acpc diff --bench <baseline.json> <current.json> [--tolerance 0.5]
+
+Compares the *latest* snapshot of each BENCH_sim.json history, case by
+case on mean_ns. Exit code 1 when any case in <current> is slower than
+<baseline> by more than the tolerance (fractional: 0.5 = 50% slower);
+snapshots at different scales (smoke vs full) are never gated.
+
+OPTIONS:
+    --bench <baseline>    trajectory baseline (enables bench mode)
+    --tolerance <f>       allowed fractional slowdown [default: 0.5]
+    --store <dir>         report store for hash operands
+                          [default: $ACPC_STORE or .acpc-store]
+    --json <out>          write the report-mode delta table as JSON
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&["bench", "tolerance", "store", "json", "help"])?;
+    if args.opt("bench").is_some() || args.flag("bench") {
+        return run_bench(args);
+    }
+
+    let a = args.next_positional().context("`acpc diff` needs two report arguments")?;
+    let b = args.next_positional().context("`acpc diff` needs two report arguments")?;
+    let ja = load_report(&a, args).with_context(|| format!("loading '{a}'"))?;
+    let jb = load_report(&b, args).with_context(|| format!("loading '{b}'"))?;
+
+    let ma = metric_rows(&ja);
+    let mb = metric_rows(&jb);
+    let mut keys: Vec<String> = ma.keys().cloned().collect();
+    keys.extend(mb.keys().filter(|k| !ma.contains_key(*k)).cloned());
+    keys.sort();
+    let mut rows = Vec::new();
+    let mut deltas = Json::obj();
+    for k in keys {
+        let (va, vb) = (ma.get(&k).copied(), mb.get(&k).copied());
+        let (sa, sb) = (fmt_opt(va), fmt_opt(vb));
+        let (d, pct) = match (va, vb) {
+            (Some(x), Some(y)) => {
+                let d = y - x;
+                let pct =
+                    if x.abs() > 1e-12 { format!("{:+.2}%", d / x * 100.0) } else { "-".into() };
+                (format!("{d:+.6}"), pct)
+            }
+            _ => ("-".into(), "-".into()),
+        };
+        if let (Some(x), Some(y)) = (va, vb) {
+            deltas.set(
+                &k,
+                Json::from_pairs(vec![
+                    ("a", Json::Num(x)),
+                    ("b", Json::Num(y)),
+                    ("delta", Json::Num(y - x)),
+                ]),
+            );
+        }
+        rows.push(vec![k, sa, sb, d, pct]);
+    }
+    print_table(&format!("diff: {a} → {b}"), &["metric", "a", "b", "delta", "delta %"], &rows);
+
+    if let Some(out) = args.opt("json") {
+        let j = Json::from_pairs(vec![
+            ("schema", Json::Str("acpc-diff-v1".into())),
+            ("a", Json::Str(a.clone())),
+            ("b", Json::Str(b.clone())),
+            ("deltas", deltas),
+        ]);
+        std::fs::write(out, j.to_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(0)
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.6}"),
+        None => "-".into(),
+    }
+}
+
+/// Resolve one diff operand: an existing report file wins; otherwise the
+/// token is treated as a (possibly abbreviated) store entry hash.
+fn load_report(token: &str, args: &Args) -> Result<Json> {
+    let path = Path::new(token);
+    if path.is_file() {
+        let text = std::fs::read_to_string(path)?;
+        return Json::parse(&text).map_err(Into::into);
+    }
+    let store = match args.opt("store") {
+        Some(p) => ReportStore::open(p),
+        None => ReportStore::open_default(),
+    };
+    let hash = store.find(token).with_context(|| {
+        format!(
+            "'{token}' is neither a file nor a unique hash prefix in store {}",
+            store.root().display()
+        )
+    })?;
+    let text = std::fs::read_to_string(store.entry_path(&hash))?;
+    Json::parse(&text).map_err(Into::into)
+}
+
+/// Every numeric metric a report exposes, keyed for the delta table: the
+/// full `metrics` block plus the top-level run counters. Non-finite values
+/// serialize as JSON null and are simply absent here.
+fn metric_rows(j: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if let Some(m) = j.get("metrics").and_then(|m| m.as_obj()) {
+        for (k, v) in m {
+            if let Some(x) = v.as_f64() {
+                out.insert(format!("metrics.{k}"), x);
+            }
+        }
+    }
+    for k in [
+        "prediction_batches",
+        "online_train_steps",
+        "adapt_windows",
+        "drift_events",
+        "predictor_swaps",
+        "throttled_windows",
+        "wall_secs",
+        "accesses_per_sec",
+    ] {
+        if let Some(x) = j.get(k).and_then(|v| v.as_f64()) {
+            out.insert(k.to_string(), x);
+        }
+    }
+    out
+}
+
+/// The trajectory regression gate: latest snapshot vs latest snapshot,
+/// case by case on mean_ns.
+fn run_bench(args: &mut Args) -> Result<i32> {
+    // `--bench <file>` carries the baseline as its value (flag-then-
+    // positional also works: both operands positional).
+    let a_path = match args.opt("bench") {
+        Some(p) => p.to_string(),
+        None => args.next_positional().context("bench mode needs two trajectory files")?,
+    };
+    let b_path = args.next_positional().context("bench mode needs two trajectory files")?;
+    let tolerance = args.f64_or("tolerance", 0.5)?;
+
+    let ja = Json::parse(&std::fs::read_to_string(&a_path)?)
+        .with_context(|| format!("parsing {a_path}"))?;
+    let jb = Json::parse(&std::fs::read_to_string(&b_path)?)
+        .with_context(|| format!("parsing {b_path}"))?;
+    let sa = latest_snapshot(&ja)
+        .with_context(|| format!("{a_path}: no snapshots (schema acpc-bench-v2 expected)"))?;
+    let sb = latest_snapshot(&jb)
+        .with_context(|| format!("{b_path}: no snapshots (schema acpc-bench-v2 expected)"))?;
+
+    let scale = |s: &Json| s.get("scale").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+    let (scale_a, scale_b) = (scale(sa), scale(sb));
+    if scale_a != scale_b {
+        println!(
+            "bench scales differ (baseline {scale_a}, current {scale_b}); nothing to gate on"
+        );
+        return Ok(0);
+    }
+
+    let ma = case_means(sa);
+    let mb = case_means(sb);
+    let mut rows = Vec::new();
+    let mut regressions = 0usize;
+    for (case, &bm) in &mb {
+        let Some(&am) = ma.get(case) else {
+            rows.push(vec![case.clone(), "-".into(), fmt_ms(bm), "-".into(), "new".into()]);
+            continue;
+        };
+        let ratio = bm / am.max(1e-9);
+        let verdict = if bm > am * (1.0 + tolerance) {
+            regressions += 1;
+            "REGRESSION"
+        } else {
+            "ok"
+        };
+        rows.push(vec![
+            case.clone(),
+            fmt_ms(am),
+            fmt_ms(bm),
+            format!("{ratio:.2}x"),
+            verdict.into(),
+        ]);
+    }
+    for case in ma.keys().filter(|c| !mb.contains_key(*c)) {
+        rows.push(vec![case.clone(), fmt_ms(ma[case]), "-".into(), "-".into(), "gone".into()]);
+    }
+    print_table(
+        &format!("perf trajectory: {a_path} → {b_path} (tolerance {tolerance:.2})"),
+        &["case", "baseline", "current", "ratio", "verdict"],
+        &rows,
+    );
+    if regressions > 0 {
+        eprintln!(
+            "\n{regressions} case(s) regressed beyond the {:.0}% tolerance",
+            tolerance * 100.0
+        );
+        return Ok(1);
+    }
+    println!("\nno regressions beyond the {:.0}% tolerance", tolerance * 100.0);
+    Ok(0)
+}
+
+fn fmt_ms(ns: f64) -> String {
+    if ns < 1e6 {
+        format!("{:.1}µs", ns / 1e3)
+    } else {
+        format!("{:.2}ms", ns / 1e6)
+    }
+}
+
+/// `bench/case` → mean_ns for every result in a snapshot.
+fn case_means(snapshot: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    let Some(benches) = snapshot.get("benches").and_then(|b| b.as_obj()) else { return out };
+    for (bench, sec) in benches {
+        let Some(results) = sec.get("results").and_then(|r| r.as_arr()) else { continue };
+        for r in results {
+            if let (Some(name), Some(mean)) =
+                (r.get("name").and_then(|n| n.as_str()), r.get("mean_ns").and_then(|m| m.as_f64()))
+            {
+                out.insert(format!("{bench}/{name}"), mean);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traj(path: &Path, mean_a: f64, mean_b: f64) {
+        let j = format!(
+            r#"{{"schema": "acpc-bench-v2", "snapshots": [
+                {{"id": "x", "scale": "smoke", "benches": {{
+                    "alpha": {{"results": [
+                        {{"name": "c1", "iters": 1, "mean_ns": {mean_a}, "ci95_ns": 0, "min_ns": {mean_a}}},
+                        {{"name": "c2", "iters": 1, "mean_ns": {mean_b}, "ci95_ns": 0, "min_ns": {mean_b}}}
+                    ]}}}}}}]}}"#
+        );
+        std::fs::write(path, j).unwrap();
+    }
+
+    /// The gate passes within tolerance and fails (exit 1) beyond it.
+    #[test]
+    fn bench_gate_detects_regressions() {
+        let dir = std::env::temp_dir().join("acpc_diff_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let ok = dir.join("ok.json");
+        let bad = dir.join("bad.json");
+        traj(&base, 1000.0, 1000.0);
+        traj(&ok, 1200.0, 900.0); // +20% and faster: inside 50% tolerance
+        traj(&bad, 1600.0, 1000.0); // +60%: regression
+
+        let run = |b: &Path| {
+            let argv: Vec<String> = [
+                "diff",
+                "--bench",
+                base.to_str().unwrap(),
+                b.to_str().unwrap(),
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+            let mut args = Args::new(argv);
+            assert_eq!(args.next_positional().as_deref(), Some("diff"));
+            super::run(&mut args).unwrap()
+        };
+        assert_eq!(run(&ok), 0);
+        assert_eq!(run(&bad), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metric_rows_flatten_metrics_and_counters() {
+        let j = Json::parse(
+            r#"{"metrics": {"l2_hit_rate": 0.5, "name": "x", "emu": null},
+                "wall_secs": 1.5, "spec": {"seed": "1"}}"#,
+        )
+        .unwrap();
+        let m = metric_rows(&j);
+        assert_eq!(m.get("metrics.l2_hit_rate"), Some(&0.5));
+        assert_eq!(m.get("wall_secs"), Some(&1.5));
+        assert!(!m.contains_key("metrics.name"), "strings are not metrics");
+        assert!(!m.contains_key("metrics.emu"), "null (NaN) carries no value");
+    }
+}

@@ -6,6 +6,7 @@
 //! and sharded dispatch live there, not here.
 
 pub mod adapt;
+pub mod diff;
 pub mod policies;
 pub mod run;
 pub mod serve;

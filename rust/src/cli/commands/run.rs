@@ -1,13 +1,21 @@
 //! `acpc run` — execute a reproducible `RunSpec` file through the unified
-//! [`crate::api::Runner`]: the CLI face of the library's one front door.
+//! [`crate::api::Runner`] (the CLI face of the library's one front door),
+//! or a whole manifest of specs through the experiment farm with
+//! content-addressed caching.
 
-use crate::api::{RunSpec, Runner};
+use crate::api::{
+    cells_to_json, load_manifest, run_farm, CacheMode, FarmConfig, ReportStore, RunSpec, Runner,
+    FARM_BASE_SEED,
+};
 use crate::cli::Args;
+use crate::util::bench::print_table;
+use crate::util::pool::default_threads;
 use anyhow::Result;
 use std::path::Path;
+use std::time::Instant;
 
 const HELP: &str = "\
-acpc run — execute a RunSpec file (schema acpc-run-v1)
+acpc run — execute a RunSpec file (schema acpc-run-v1) or a manifest
 
 A RunSpec describes one run completely: policy, workload (scenario or
 profile + generator overrides), predictor kind + artifact override,
@@ -17,28 +25,51 @@ report's `spec` object reproduces the run bit-for-bit. See the README's
 \"Library API\" section for the spec format; `acpc simulate --config`
 accepts the same files.
 
+With --manifest, every spec in a directory of *.json files (or in one
+file holding a spec, an array, or {\"runs\": [...]}) executes on the
+sweep thread pool, routed through the content-addressed report store:
+cells whose resolved spec was already run are served from the store
+(zero simulation), and a warm repeat of the same manifest is 100% cache
+hits. See the README's \"Experiment farm\" section.
+
 OPTIONS:
-    --spec <file.json>    the RunSpec to execute (required)
-    --seed <n>            override the spec's seed
-    --accesses <n>        override the spec's trace length
-    --shards <n>          override the spec's set-shard count
-    --json <path>         write the RunReport JSON (schema acpc-run-v1)
-    --spec-out <path>     write the fully-resolved spec JSON
+    --spec <file.json>    the RunSpec to execute
+    --manifest <path>     run every spec in a dir (or multi-spec file)
+    --seed <n>            override the spec's seed / farm base seed
+    --accesses <n>        override the spec's trace length (--spec only)
+    --shards <n>          override the spec's set-shard count (--spec only)
+    --cache <mode>        off | read | read-write
+                          [default: off for --spec, read-write for --manifest]
+    --store <dir>         report store root [default: $ACPC_STORE or .acpc-store]
+    -j, --jobs <n>        farm worker threads [default: cores-1]
+    --json <path>         write the RunReport JSON (or farm cells JSON)
+    --spec-out <path>     write the fully-resolved spec JSON (--spec only)
     --help
 
 Example:
     echo '{\"policy\": \"acpc\", \"workload\": {\"scenario\": \"decode-heavy\"},
-           \"accesses\": 200000, \"seed\": \"7\"}' > run.json
-    acpc run --spec run.json --json report.json";
+           \"accesses\": 200000, \"seed\": \"7\"}' > runs/a.json
+    acpc run --manifest runs --json farm.json   # 2nd invocation: all cached";
 
 pub fn run(args: &mut Args) -> Result<i32> {
     if args.flag("help") {
         println!("{HELP}");
         return Ok(0);
     }
-    args.ensure_known(&["spec", "seed", "accesses", "shards", "json", "spec-out", "help"])?;
+    args.ensure_known(&[
+        "spec", "manifest", "seed", "accesses", "shards", "cache", "store", "jobs", "j", "json",
+        "spec-out", "help",
+    ])?;
+    if let Some(manifest) = args.opt("manifest") {
+        if args.opt("spec").is_some() {
+            anyhow::bail!("--spec and --manifest are mutually exclusive");
+        }
+        return run_manifest(args, manifest.to_string());
+    }
     let Some(path) = args.opt("spec") else {
-        anyhow::bail!("--spec <file.json> is required (see `acpc run --help`)");
+        anyhow::bail!(
+            "--spec <file.json> or --manifest <path> is required (see `acpc run --help`)"
+        );
     };
     let mut spec = RunSpec::from_file(Path::new(path))?;
     if args.opt("seed").is_some() {
@@ -51,20 +82,28 @@ pub fn run(args: &mut Args) -> Result<i32> {
         spec.shards = args.usize_or("shards", 1)?;
     }
 
-    let runner = Runner::new(spec)?;
+    let mut runner = Runner::new(spec)?;
+    let cache = CacheMode::parse(&args.opt_or("cache", "off"))?;
+    if cache.reads() {
+        runner = runner.with_store(store_from(args), cache);
+    }
     {
         let s = runner.spec();
         println!(
-            "run: name={} policy={} predictor={} accesses={} shards={} adaptive={}",
+            "run: name={} policy={} predictor={} accesses={} shards={} adaptive={} cache={}",
             s.name.as_deref().unwrap_or("-"),
             s.policy,
             s.predictor.label(),
             s.accesses.unwrap_or(0),
             s.shards,
             s.adaptive.is_some(),
+            cache.label(),
         );
     }
-    let report = runner.run()?;
+    let (report, cached) = runner.run_cached()?;
+    if cached {
+        println!("(served from report store: {})", runner.spec_hash());
+    }
 
     println!("\n{}", report.result.report.summary());
     println!("{}", report.counters_line());
@@ -80,6 +119,68 @@ pub fn run(args: &mut Args) -> Result<i32> {
     }
     if let Some(out) = args.opt("json") {
         std::fs::write(out, report.to_json().to_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(0)
+}
+
+/// The store the CLI flags select: `--store <dir>`, else the default root.
+fn store_from(args: &Args) -> ReportStore {
+    match args.opt("store") {
+        Some(p) => ReportStore::open(p),
+        None => ReportStore::open_default(),
+    }
+}
+
+fn run_manifest(args: &Args, manifest: String) -> Result<i32> {
+    let base_seed = args.u64_or("seed", FARM_BASE_SEED)?;
+    let entries = load_manifest(Path::new(&manifest), base_seed)?;
+    let cache = CacheMode::parse(&args.opt_or("cache", "read-write"))?;
+    let store = cache.reads().then(|| store_from(args));
+    let threads = args.usize_or("j", args.usize_or("jobs", default_threads())?)?.max(1);
+    println!(
+        "farm: {} entries from {manifest}, cache={}{}, -j {threads}",
+        entries.len(),
+        cache.label(),
+        store.as_ref().map(|s| format!(" (store {})", s.root().display())).unwrap_or_default(),
+    );
+
+    let t0 = Instant::now();
+    let cells = run_farm(entries, &FarmConfig { threads, store, cache, base_seed })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            let r = &c.report.result.report;
+            vec![
+                c.label.clone(),
+                r.policy.clone(),
+                c.report.predictor_effective.clone(),
+                format!("{:.4}", r.l2_hit_rate),
+                format!("{:.4}", r.l2_pollution_ratio),
+                format!("{:.2}", r.amat),
+                if c.cached { "yes".into() } else { "no".into() },
+                c.spec_hash[..12].to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "experiment farm",
+        &["label", "policy", "predictor", "l2 hit", "pollution", "amat", "cached", "spec hash"],
+        &rows,
+    );
+
+    let hits = cells.iter().filter(|c| c.cached).count();
+    println!(
+        "\n{} cells ({} cached, {} simulated) in {:.2}s wall",
+        cells.len(),
+        hits,
+        cells.len() - hits,
+        wall
+    );
+    if let Some(out) = args.opt("json") {
+        std::fs::write(out, cells_to_json(&cells).to_pretty())?;
         println!("wrote {out}");
     }
     Ok(0)

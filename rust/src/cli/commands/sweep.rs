@@ -1,11 +1,13 @@
 //! `acpc sweep` — multi-threaded policy×scenario grid sweep.
 
+use crate::api::CacheMode;
 use crate::cli::Args;
 use crate::sim::sweep::{render_cells, run_sweep, SweepConfig};
 use crate::trace::SCENARIO_NAMES;
 use crate::util::json::Json;
 use crate::util::pool::default_threads;
 use anyhow::Result;
+use std::path::PathBuf;
 use std::time::Instant;
 
 const HELP: &str = "\
@@ -28,7 +30,12 @@ OPTIONS:
                           parallelism ≈ jobs × shards [default: 1]
     --accesses <n>        accesses per cell [default: 400000]
     --seed <n>            base seed (per-cell seeds derive from it)
-    --json <path>         write all cell reports as JSON
+    --cache <mode>        report-store use: off | read | read-write
+                          [default: read-write — a repeated sweep simulates
+                          nothing, every cell is served from the store]
+    --store <dir>         store root [default: $ACPC_STORE or .acpc-store]
+    --json <path>         write all cell reports as JSON (each row carries
+                          `cached` and `spec_hash` provenance)
     --help
 
 Scenarios: decode-heavy prefill-burst rag-embedding long-context
@@ -46,8 +53,8 @@ pub fn run(args: &mut Args) -> Result<i32> {
         return Ok(0);
     }
     args.ensure_known(&[
-        "policies", "scenarios", "predictor", "jobs", "j", "shards", "accesses", "seed", "json",
-        "help",
+        "policies", "scenarios", "predictor", "jobs", "j", "shards", "accesses", "seed", "cache",
+        "store", "json", "help",
     ])?;
 
     let policies = parse_list(&args.opt_or("policies", "lru,srrip,ship,acpc"));
@@ -61,17 +68,22 @@ pub fn run(args: &mut Args) -> Result<i32> {
     cfg.accesses = args.usize_or("accesses", cfg.accesses)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.predictor = args.opt_or("predictor", &cfg.predictor);
+    // The CLI sweeps through the report store by default: a repeated
+    // identical grid is pure cache hits. (The library default stays Off.)
+    cfg.cache = CacheMode::parse(&args.opt_or("cache", "read-write"))?;
+    cfg.store = args.opt("store").map(PathBuf::from);
 
     println!(
         "sweep: {} policies × {} scenarios = {} cells, {} accesses/cell, predictor={}, -j {}, \
-         shards/cell {}",
+         shards/cell {}, cache={}",
         cfg.policies.len(),
         cfg.scenarios.len(),
         cfg.policies.len() * cfg.scenarios.len(),
         cfg.accesses,
         cfg.predictor,
         cfg.threads,
-        cfg.shards
+        cfg.shards,
+        cfg.cache.label()
     );
     let t0 = Instant::now();
     let cells = run_sweep(&cfg)?;
@@ -79,9 +91,12 @@ pub fn run(args: &mut Args) -> Result<i32> {
 
     println!("\n{}", render_cells(&cells));
     let total_accesses: u64 = cells.iter().map(|c| c.result.report.accesses).sum();
+    let hits = cells.iter().filter(|c| c.cached).count();
     println!(
-        "{} cells in {:.2}s wall ({:.2}M accesses/s aggregate)",
+        "{} cells ({} cached, {} simulated) in {:.2}s wall ({:.2}M accesses/s aggregate)",
         cells.len(),
+        hits,
+        cells.len() - hits,
         wall,
         total_accesses as f64 / wall / 1e6
     );
@@ -97,6 +112,8 @@ pub fn run(args: &mut Args) -> Result<i32> {
                     // String, not Num: u64 seeds exceed f64's 2^53 integer
                     // range and must round-trip into `--seed` exactly.
                     ("seed", Json::Str(c.seed.to_string())),
+                    ("spec_hash", Json::Str(c.spec_hash.clone())),
+                    ("cached", Json::Bool(c.cached)),
                     ("tokens", Json::Num(c.result.tokens as f64)),
                     ("adapt_windows", Json::Num(c.result.adapt_windows as f64)),
                     ("drift_events", Json::Num(c.result.drift_events as f64)),

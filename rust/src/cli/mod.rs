@@ -15,9 +15,10 @@ USAGE:
     acpc <COMMAND> [OPTIONS]
 
 COMMANDS:
-    run          execute a reproducible RunSpec file (the library's front door)
+    run          execute a RunSpec file or a --manifest of specs (cached farm)
     simulate     run one cache simulation (policy × predictor × workload)
     sweep        parallel policy×scenario experiment grid
+    diff         compare two run reports, or gate on the perf trajectory
     adapt        closed-loop adaptation: controller ON vs OFF on one seed
     train        train a predictor with the compiled Adam step (Fig. 2)
     table1       reproduce the paper's Table 1 end-to-end
@@ -44,6 +45,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "run" => commands::run::run(&mut args),
         "simulate" => commands::simulate::run(&mut args),
         "sweep" => commands::sweep::run(&mut args),
+        "diff" => commands::diff::run(&mut args),
         "adapt" => commands::adapt::run(&mut args),
         "train" => commands::train::run(&mut args),
         "table1" => commands::table1::run(&mut args),

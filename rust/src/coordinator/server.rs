@@ -332,12 +332,22 @@ pub fn serve(
                                 &engine.hier,
                                 PredictorAccess::Remote,
                             );
-                            if decision == Some(ControlDecision::Throttled) {
-                                engine.hier.clear_utilities();
-                                // Drop rows captured pre-throttle: they
-                                // would otherwise flush after resume and
-                                // re-stamp old-regime predictions.
-                                let _ = batch.take();
+                            match decision {
+                                Some(ControlDecision::Throttled) => {
+                                    engine.hier.clear_utilities();
+                                    // Prefetching also turns conservative
+                                    // for the throttle's duration.
+                                    engine.hier.set_prefetch_throttled(true);
+                                    // Drop rows captured pre-throttle: they
+                                    // would otherwise flush after resume and
+                                    // re-stamp old-regime predictions.
+                                    let _ = batch.take();
+                                }
+                                Some(ControlDecision::Resumed)
+                                | Some(ControlDecision::Retrained) => {
+                                    engine.hier.set_prefetch_throttled(false);
+                                }
+                                None => {}
                             }
                         }
                         if full {

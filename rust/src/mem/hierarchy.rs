@@ -131,6 +131,12 @@ pub struct Hierarchy {
     /// pollution"): prefetch fills whose predicted utility is below the
     /// threshold are dropped outright. `None` disables filtering.
     pub prefetch_filter_threshold: Option<f32>,
+    /// The threshold as configured at construction; `set_prefetch_throttled`
+    /// restores it when the adaptive controller lifts a throttle.
+    base_prefetch_filter_threshold: Option<f32>,
+    /// Whether the adaptive controller currently holds prefetching in the
+    /// conservative (raised-threshold) regime.
+    prefetch_throttled: bool,
     pub prefetches_dropped: u64,
     /// Adaptive feedback (§3.4) on prefetch *sources*: per-PC (issued,
     /// useful) counts learned from observed outcomes; PCs with proven low
@@ -197,6 +203,8 @@ impl Hierarchy {
             pf_buf: Vec::with_capacity(8),
             utility: FastMap::default(),
             prefetch_filter_threshold,
+            base_prefetch_filter_threshold: prefetch_filter_threshold,
+            prefetch_throttled: false,
             prefetches_dropped: 0,
             pf_accuracy: FastMap::default(),
             pf_inflight: FastMap::default(),
@@ -396,6 +404,32 @@ impl Hierarchy {
     pub fn prefetches_issued(&self) -> u64 {
         self.prefetcher.issued()
     }
+
+    /// Adaptive-controller hook (§3.4): while throttled, prefetching turns
+    /// conservative — the filter threshold is raised so only high-confidence
+    /// candidates get through — and the original threshold is restored when
+    /// the throttle lifts. For policies that run unfiltered (no ACPC
+    /// threshold) a throttle *installs* a filter at 0.5, so even they stop
+    /// speculating on predicted-dead lines during unhealthy windows.
+    pub fn set_prefetch_throttled(&mut self, on: bool) {
+        if on == self.prefetch_throttled {
+            return;
+        }
+        self.prefetch_throttled = on;
+        self.prefetch_filter_threshold = if on {
+            Some(match self.base_prefetch_filter_threshold {
+                Some(base) => (base * 2.0).clamp(0.5, 0.95),
+                None => 0.5,
+            })
+        } else {
+            self.base_prefetch_filter_threshold
+        };
+    }
+
+    /// Is the conservative (throttled) prefetch regime currently active?
+    pub fn prefetch_throttled(&self) -> bool {
+        self.prefetch_throttled
+    }
 }
 
 #[cfg(test)]
@@ -534,6 +568,31 @@ mod tests {
         h.access(&a, &meta_for(&a));
         assert_eq!(h.l2.stats.prefetch_fills, 0, "no in-shard candidates");
         assert!(h.cross_shard_prefetches_dropped >= 1);
+    }
+
+    #[test]
+    fn throttle_raises_filter_threshold_and_restores_it() {
+        // ACPC: base 0.22 doubles (clamped up to 0.5) under throttle.
+        let mut h = Hierarchy::new(small(), "acpc");
+        let base = h.prefetch_filter_threshold;
+        assert_eq!(base, Some(0.22));
+        h.set_prefetch_throttled(true);
+        assert!(h.prefetch_throttled());
+        assert_eq!(h.prefetch_filter_threshold, Some(0.5));
+        h.set_prefetch_throttled(true); // idempotent
+        assert_eq!(h.prefetch_filter_threshold, Some(0.5));
+        h.set_prefetch_throttled(false);
+        assert!(!h.prefetch_throttled());
+        assert_eq!(h.prefetch_filter_threshold, base);
+
+        // Unfiltered policies get a filter installed for the throttle's
+        // duration, and go back to unfiltered afterwards.
+        let mut h = Hierarchy::new(small(), "lru");
+        assert_eq!(h.prefetch_filter_threshold, None);
+        h.set_prefetch_throttled(true);
+        assert_eq!(h.prefetch_filter_threshold, Some(0.5));
+        h.set_prefetch_throttled(false);
+        assert_eq!(h.prefetch_filter_threshold, None);
     }
 
     #[test]

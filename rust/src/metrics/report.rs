@@ -135,6 +135,11 @@ impl MetricsReport {
             ("l3_hit_rate", Json::Num(self.l3_hit_rate)),
             ("l2_pollution_ratio", Json::Num(self.l2_pollution_ratio)),
             ("l2_prefetch_accuracy", Json::Num(self.l2_prefetch_accuracy)),
+            ("l2_dead_prefetch_evictions", Json::Num(self.l2_dead_prefetch_evictions as f64)),
+            (
+                "l2_demand_evicted_by_prefetch",
+                Json::Num(self.l2_demand_evicted_by_prefetch as f64),
+            ),
             ("l2_miss_cycles", Json::Num(self.l2_miss_cycles as f64)),
             ("amat", Json::Num(self.amat)),
             ("emu", Json::Num(self.emu)),
@@ -143,7 +148,55 @@ impl MetricsReport {
                 "cross_shard_prefetches_dropped",
                 Json::Num(self.cross_shard_prefetches_dropped as f64),
             ),
+            ("total_latency", Json::Num(self.total_latency as f64)),
         ])
+    }
+
+    /// Inverse of [`Self::to_json`], used by the report store to rehydrate
+    /// cached runs. Numeric `null` decodes as NaN (the serializer writes
+    /// non-finite numbers as `null`), so a NaN field round-trips to the
+    /// same serialized bytes.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let str_field = |key: &str| -> anyhow::Result<String> {
+            let s = j
+                .req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("metrics.{key}: expected string"))?;
+            Ok(s.to_string())
+        };
+        let f64_field = |key: &str| -> anyhow::Result<f64> {
+            match j.req(key)? {
+                Json::Null => Ok(f64::NAN),
+                v => v.as_f64().ok_or_else(|| anyhow::anyhow!("metrics.{key}: expected number")),
+            }
+        };
+        let u64_field = |key: &str| -> anyhow::Result<u64> {
+            let v = f64_field(key)?;
+            if v.is_finite() && v >= 0.0 && v.fract() == 0.0 {
+                Ok(v as u64)
+            } else {
+                anyhow::bail!("metrics.{key}: expected non-negative integer")
+            }
+        };
+        Ok(Self {
+            name: str_field("name")?,
+            policy: str_field("policy")?,
+            accesses: u64_field("accesses")?,
+            tokens: u64_field("tokens")?,
+            l1_hit_rate: f64_field("l1_hit_rate")?,
+            l2_hit_rate: f64_field("l2_hit_rate")?,
+            l3_hit_rate: f64_field("l3_hit_rate")?,
+            l2_pollution_ratio: f64_field("l2_pollution_ratio")?,
+            l2_prefetch_accuracy: f64_field("l2_prefetch_accuracy")?,
+            l2_dead_prefetch_evictions: u64_field("l2_dead_prefetch_evictions")?,
+            l2_demand_evicted_by_prefetch: u64_field("l2_demand_evicted_by_prefetch")?,
+            l2_miss_cycles: u64_field("l2_miss_cycles")?,
+            amat: f64_field("amat")?,
+            emu: f64_field("emu")?,
+            prefetches_issued: u64_field("prefetches_issued")?,
+            cross_shard_prefetches_dropped: u64_field("cross_shard_prefetches_dropped")?,
+            total_latency: u64_field("total_latency")?,
+        })
     }
 
     pub fn summary(&self) -> String {
@@ -281,6 +334,21 @@ mod tests {
         assert_eq!(whole.to_json().to_pretty(), merged.to_json().to_pretty());
         assert_eq!(whole.total_latency, merged.total_latency);
         assert_eq!(whole.l2_miss_cycles, merged.l2_miss_cycles);
+    }
+
+    /// JSON round-trip is byte-exact, including NaN fields (NaN → `null`
+    /// → NaN → `null`) — the invariant the report store's byte-identical
+    /// cache hits rest on.
+    #[test]
+    fn json_roundtrip_is_byte_exact() {
+        let mut r = run_small("lru");
+        r.emu = f64::NAN;
+        let text = r.to_json().to_pretty();
+        let back =
+            MetricsReport::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(text, back.to_json().to_pretty());
+        assert!(back.emu.is_nan());
+        assert_eq!(back.total_latency, r.total_latency);
     }
 
     #[test]

@@ -403,11 +403,23 @@ impl<'a> AccessDriver<'a> {
                 // filled batch is dropped for the same reason: its rows
                 // were captured under the old regime and would re-stamp
                 // stale predictions after a later resume/flush.
-                Some(ControlDecision::Throttled) | Some(ControlDecision::Retrained) => {
+                // Throttling additionally turns prefetching conservative:
+                // the hierarchy raises its prefetch-filter threshold until
+                // the controller resumes or hot-swaps in fresh weights.
+                Some(ControlDecision::Throttled) => {
                     self.engine.hier.clear_utilities();
+                    self.engine.hier.set_prefetch_throttled(true);
                     self.batch.clear();
                 }
-                Some(ControlDecision::Resumed) | None => {}
+                Some(ControlDecision::Retrained) => {
+                    self.engine.hier.clear_utilities();
+                    self.engine.hier.set_prefetch_throttled(false);
+                    self.batch.clear();
+                }
+                Some(ControlDecision::Resumed) => {
+                    self.engine.hier.set_prefetch_throttled(false);
+                }
+                None => {}
             }
         }
 
@@ -582,6 +594,52 @@ mod tests {
             assert_eq!(r.report.accesses, 20_000, "{}", sc.name);
             assert!(r.tokens > 0, "{}", sc.name);
         }
+    }
+
+    /// The throttle satellite: a controller entering back-off must also
+    /// flip the hierarchy into the conservative prefetch regime (raised
+    /// filter threshold), not just stop applying utilities.
+    #[test]
+    fn throttled_windows_raise_prefetch_filter_threshold() {
+        use crate::adapt::{AdaptiveController, ControllerConfig};
+        let mut cfg = ExperimentConfig::smoke("acpc");
+        cfg.accesses = 12_000;
+        // Rigged health test: every scored window after the EWMA seeds is
+        // "unhealthy" (hit < ewma * 2.0), one such window throttles, and
+        // recovery is unreachable — the run must end throttled.
+        let ctl_cfg = ControllerConfig {
+            window_accesses: 2048,
+            warmup_windows: 1,
+            cooldown_windows: 0,
+            unhealthy_windows_to_throttle: 1,
+            recover_windows: u64::MAX,
+            throttle_hit_ratio: 2.0,
+            ph_lambda: f64::INFINITY,
+            ..ControllerConfig::default()
+        };
+        let mut controller = AdaptiveController::new(ctl_cfg);
+        let mut predictor = PredictorBox::Heuristic(HeuristicPredictor);
+        let geom = GeometryHints::from_generator(&cfg.generator);
+        let engine =
+            Engine::new(cfg.hierarchy.clone(), &cfg.policy, geom, predictor.window().max(1));
+        let base = engine.hier.prefetch_filter_threshold;
+        assert!(base.is_some(), "acpc runs filtered from the start");
+
+        let mut workload = cfg.workload();
+        let mut driver = AccessDriver::new(&cfg, engine, &mut predictor, Some(&mut controller));
+        for _ in 0..cfg.accesses {
+            let a = workload.next_access();
+            driver.drive(&a, None);
+        }
+        let out = driver.finish();
+        assert!(controller.throttled_windows() > 0, "rigged controller never throttled");
+        assert!(out.engine.hier.prefetch_throttled());
+        let raised = out.engine.hier.prefetch_filter_threshold.unwrap();
+        assert!(
+            raised > base.unwrap(),
+            "throttle must raise the filter threshold ({raised} vs {:?})",
+            base
+        );
     }
 
     #[test]

@@ -21,13 +21,14 @@
 //! ignore the predictor entirely.
 
 use super::engine::SimResult;
-use crate::api::{Runner, RunSpec};
+use crate::api::{run_farm, CacheMode, FarmConfig, FarmEntry, ReportStore, RunSpec};
 use crate::config::PredictorKind;
 use crate::metrics::{render_sweep, SweepRowView};
 use crate::policy;
 use crate::trace::{Scenario, SCENARIO_NAMES};
-use crate::util::pool::{default_threads, run_parallel};
+use crate::util::pool::default_threads;
 use anyhow::{bail, Result};
+use std::path::PathBuf;
 
 /// Predictor specs `--predictor` accepts.
 pub const PREDICTOR_SPECS: &[&str] = &["auto", "heuristic", "tcn", "adaptive", "none"];
@@ -51,6 +52,14 @@ pub struct SweepConfig {
     /// ≈ `threads × shards`, letting a sweep use idle cores when the grid
     /// is smaller than the machine. 1 = classic single-threaded cells.
     pub shards: usize,
+    /// Report-store mode for every cell ([`CacheMode::Off`] by default in
+    /// the library — the `acpc sweep` CLI defaults to read-write). With
+    /// caching on, a repeated grid serves every unchanged cell from the
+    /// store and simulates nothing.
+    pub cache: CacheMode,
+    /// Store root; `None` = [`ReportStore::default_root`]. Ignored when
+    /// `cache` is off.
+    pub store: Option<PathBuf>,
 }
 
 impl SweepConfig {
@@ -64,6 +73,8 @@ impl SweepConfig {
             predict_batch: 256,
             predictor: "auto".into(),
             shards: 1,
+            cache: CacheMode::Off,
+            store: None,
         }
     }
 
@@ -86,6 +97,11 @@ pub struct SweepCell {
     /// The predictor that actually ran (e.g. `tcn`, `heuristic`,
     /// `heuristic(fallback)`, `adaptive(heuristic)`, `none`).
     pub predictor: String,
+    /// Content address of the cell's resolved spec (the report-store key).
+    pub spec_hash: String,
+    /// `true` when the cell was served without simulation — from the
+    /// report store, or deduped against an identical cell in this grid.
+    pub cached: bool,
     pub result: SimResult,
 }
 
@@ -163,41 +179,59 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepCell>> {
             .map_err(|e| anyhow::anyhow!("--shards: {e}"))?;
     }
 
-    let mut jobs = Vec::with_capacity(cfg.policies.len() * cfg.scenarios.len());
+    // The sweep is a special case of the experiment farm: each cell builds
+    // a RunSpec up front, the farm hashes/dedupes/executes them on the
+    // pool (through the report store when caching is on), and results come
+    // back in grid order (scenarios outer, policies inner).
+    let n = cfg.policies.len() * cfg.scenarios.len();
+    let mut entries = Vec::with_capacity(n);
+    let mut coords = Vec::with_capacity(n);
     for scenario in &cfg.scenarios {
         for policy in &cfg.policies {
-            let policy = policy.clone();
-            let scenario = scenario.clone();
-            let spec = cfg.predictor.clone();
-            let seed = cell_seed(cfg.seed, &policy, &scenario);
-            let accesses = cfg.accesses;
-            let predict_batch = cfg.predict_batch;
-            let shards = cfg.shards.max(1);
-            jobs.push(move || -> Result<SweepCell> {
-                let (kind, adaptive) = resolve_spec(&spec, &policy);
-                let mut builder = RunSpec::builder()
-                    .scenario(&scenario)
-                    .policy(&policy)
-                    .predictor(kind)
-                    .accesses(accesses)
-                    .predict_batch(predict_batch)
-                    .seed(seed)
-                    .shards(shards);
-                if adaptive {
-                    builder = builder.adaptive(true);
-                }
-                let report = Runner::new(builder.build()?)?.run()?;
-                Ok(SweepCell {
-                    policy,
-                    scenario,
-                    seed,
-                    predictor: report.predictor_effective,
-                    result: report.result,
-                })
+            let (kind, adaptive) = resolve_spec(&cfg.predictor, policy);
+            let seed = cell_seed(cfg.seed, policy, scenario);
+            let mut builder = RunSpec::builder()
+                .scenario(scenario)
+                .policy(policy)
+                .predictor(kind)
+                .accesses(cfg.accesses)
+                .predict_batch(cfg.predict_batch)
+                .seed(seed)
+                .shards(cfg.shards.max(1));
+            if adaptive {
+                builder = builder.adaptive(true);
+            }
+            entries.push(FarmEntry {
+                label: format!("{scenario}/{policy}"),
+                spec: builder.build()?,
             });
+            coords.push((policy.clone(), scenario.clone(), seed));
         }
     }
-    run_parallel(cfg.threads.max(1), jobs).into_iter().collect()
+    let store = if cfg.cache.reads() {
+        Some(match &cfg.store {
+            Some(root) => ReportStore::open(root.clone()),
+            None => ReportStore::open_default(),
+        })
+    } else {
+        None
+    };
+    let farm =
+        FarmConfig { threads: cfg.threads.max(1), store, cache: cfg.cache, base_seed: cfg.seed };
+    let cells = run_farm(entries, &farm)?;
+    Ok(cells
+        .into_iter()
+        .zip(coords)
+        .map(|(c, (policy, scenario, seed))| SweepCell {
+            policy,
+            scenario,
+            seed,
+            predictor: c.report.predictor_effective.clone(),
+            spec_hash: c.spec_hash,
+            cached: c.cached,
+            result: c.report.result,
+        })
+        .collect())
 }
 
 /// Render the finished grid as the aggregated metrics table (per-scenario
@@ -289,6 +323,38 @@ mod tests {
             again[0].result.report.to_json().to_pretty(),
             "sharded cells must be deterministic per shard count"
         );
+    }
+
+    /// A repeated grid with the store attached simulates nothing: every
+    /// cell comes back `cached` with byte-identical metrics.
+    #[test]
+    fn repeated_sweep_is_fully_cached_and_byte_identical() {
+        let dir = std::env::temp_dir().join("acpc_sweep_store_unit");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = SweepConfig::new(
+            vec!["lru".into(), "acpc".into()],
+            vec!["decode-heavy".into()],
+        );
+        cfg.accesses = 10_000;
+        cfg.threads = 2;
+        cfg.cache = CacheMode::ReadWrite;
+        cfg.store = Some(dir.clone());
+        let cold = run_sweep(&cfg).unwrap();
+        assert!(cold.iter().all(|c| !c.cached), "cold grid must simulate");
+        let warm = run_sweep(&cfg).unwrap();
+        assert!(warm.iter().all(|c| c.cached), "warm grid must serve from the store");
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.spec_hash, b.spec_hash);
+            assert_eq!(
+                a.result.report.to_json().to_pretty(),
+                b.result.report.to_json().to_pretty()
+            );
+        }
+        // CacheMode::Off bypasses the store entirely.
+        cfg.cache = CacheMode::Off;
+        let off = run_sweep(&cfg).unwrap();
+        assert!(off.iter().all(|c| !c.cached));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

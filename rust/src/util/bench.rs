@@ -3,9 +3,10 @@
 //! warmup + repeated timed runs, reporting mean ± 95% CI, min, and throughput.
 //!
 //! Benches that feed the repo's perf trajectory additionally record their
-//! results through [`BenchJson`], which merges them into a machine-readable
-//! `BENCH_sim.json` (schema `acpc-bench-v1`) so CI can archive
-//! accesses/second and shard-scaling curves across commits.
+//! results through [`BenchJson`], which appends them to a machine-readable
+//! `BENCH_sim.json` history (schema `acpc-bench-v2`) so the committed
+//! trajectory accumulates accesses/second and shard-scaling curves across
+//! commits, and `acpc diff --bench` can gate regressions against it.
 
 use super::json::Json;
 use super::stats::Welford;
@@ -121,34 +122,55 @@ pub fn bench_scale() -> &'static str {
     }
 }
 
+/// Trajectory schema identifier (snapshot history).
+pub const BENCH_SCHEMA: &str = "acpc-bench-v2";
+/// Oldest snapshots are dropped past this bound.
+const SNAPSHOT_CAP: usize = 50;
+
 /// Machine-readable perf-trajectory sink: collects one bench binary's
 /// results plus arbitrary extra series (e.g. a shard-scaling curve) and
-/// merges them into `BENCH_sim.json` under a stable schema:
+/// appends them to the `BENCH_sim.json` **history**:
 ///
 /// ```json
 /// {
-///   "schema": "acpc-bench-v1",
-///   "benches": {
-///     "<bench>": { "scale": "full|smoke",
-///                  "results": [{"name", "iters", "mean_ns", "ci95_ns",
-///                               "min_ns", "items_per_sec"?}, ...],
-///                  ...extra keys... }
-///   }
+///   "schema": "acpc-bench-v2",
+///   "snapshots": [
+///     { "id": "<run id>", "scale": "full|smoke",
+///       "benches": {
+///         "<bench>": { "results": [{"name", "iters", "mean_ns", "ci95_ns",
+///                                   "min_ns", "items_per_sec"?}, ...],
+///                      ...extra keys... }
+///       } },
+///     ...
+///   ]
 /// }
 /// ```
 ///
-/// The file path is `$ACPC_BENCH_JSON` or `BENCH_sim.json` in the working
-/// directory; other benches' sections are preserved on merge, so running
-/// the bench suite accumulates one trajectory file.
+/// The run id comes from `$ACPC_BENCH_RUN_ID` (CI sets the commit SHA;
+/// default `"local"`). Consecutive writes under the same id + scale merge
+/// their bench sections into one snapshot — running the whole bench suite
+/// produces a single trajectory point — while a new id appends a snapshot,
+/// preserving history (capped at the [`SNAPSHOT_CAP`] most recent). Files
+/// in the retired `acpc-bench-v1` layout are migrated as one `"legacy"`
+/// snapshot. The file path is `$ACPC_BENCH_JSON` or `BENCH_sim.json` in
+/// the working directory.
 pub struct BenchJson {
     bench: String,
+    run_id: String,
     results: Vec<Json>,
     extra: Vec<(String, Json)>,
 }
 
 impl BenchJson {
     pub fn new(bench: &str) -> Self {
-        Self { bench: bench.to_string(), results: Vec::new(), extra: Vec::new() }
+        let run_id = std::env::var("ACPC_BENCH_RUN_ID").unwrap_or_else(|_| "local".to_string());
+        Self { bench: bench.to_string(), run_id, results: Vec::new(), extra: Vec::new() }
+    }
+
+    /// Override the snapshot id (tests; avoids racing on the env var).
+    pub fn with_run_id(mut self, id: &str) -> Self {
+        self.run_id = id.to_string();
+        self
     }
 
     /// Record one timed case.
@@ -177,29 +199,76 @@ impl BenchJson {
 
     /// [`write`](Self::write) to an explicit path (tests / custom sinks).
     pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
-        // Start from the existing file when it parses; a corrupt or absent
-        // file is replaced wholesale.
-        let mut root = std::fs::read_to_string(path)
-            .ok()
-            .and_then(|text| Json::parse(&text).ok())
-            .filter(|j| j.as_obj().is_some())
-            .unwrap_or_else(Json::obj);
-        root.set("schema", Json::Str("acpc-bench-v1".into()));
-        let mut benches = root.get("benches").cloned().unwrap_or_else(Json::obj);
-        if benches.as_obj().is_none() {
-            benches = Json::obj();
-        }
-        let mut section = Json::from_pairs(vec![
-            ("scale", Json::Str(bench_scale().into())),
-            ("results", Json::Arr(self.results.clone())),
-        ]);
+        // Start from the existing history when it parses; a corrupt or
+        // absent file restarts the trajectory.
+        let existing = std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok());
+        let mut snapshots: Vec<Json> = match &existing {
+            Some(j) if j.get("schema").and_then(|s| s.as_str()) == Some(BENCH_SCHEMA) => {
+                j.get("snapshots")
+                    .and_then(|s| s.as_arr())
+                    .map(<[Json]>::to_vec)
+                    .unwrap_or_default()
+            }
+            // v1 files carried a single un-versioned point under "benches";
+            // carry it over so the history survives the schema bump.
+            Some(j) if j.get("benches").and_then(|b| b.as_obj()).is_some() => {
+                let benches = j.get("benches").cloned().unwrap_or_else(Json::obj);
+                let scale = benches
+                    .as_obj()
+                    .and_then(|m| m.values().next())
+                    .and_then(|sec| sec.get("scale"))
+                    .and_then(|s| s.as_str())
+                    .unwrap_or("full")
+                    .to_string();
+                vec![Json::from_pairs(vec![
+                    ("id", Json::Str("legacy".into())),
+                    ("scale", Json::Str(scale)),
+                    ("benches", benches),
+                ])]
+            }
+            _ => Vec::new(),
+        };
+
+        let mut section = Json::from_pairs(vec![("results", Json::Arr(self.results.clone()))]);
         for (k, v) in &self.extra {
             section.set(k, v.clone());
         }
-        benches.set(&self.bench, section);
-        root.set("benches", benches);
+
+        let scale = bench_scale();
+        let merge_into_last = snapshots.last().is_some_and(|s| {
+            s.get("id").and_then(|v| v.as_str()) == Some(self.run_id.as_str())
+                && s.get("scale").and_then(|v| v.as_str()) == Some(scale)
+        });
+        if merge_into_last {
+            let last = snapshots.last_mut().unwrap();
+            let mut benches = last.get("benches").cloned().unwrap_or_else(Json::obj);
+            benches.set(&self.bench, section);
+            last.set("benches", benches);
+        } else {
+            let mut benches = Json::obj();
+            benches.set(&self.bench, section);
+            snapshots.push(Json::from_pairs(vec![
+                ("id", Json::Str(self.run_id.clone())),
+                ("scale", Json::Str(scale.into())),
+                ("benches", benches),
+            ]));
+        }
+        if snapshots.len() > SNAPSHOT_CAP {
+            let excess = snapshots.len() - SNAPSHOT_CAP;
+            snapshots.drain(..excess);
+        }
+
+        let mut root = Json::obj();
+        root.set("schema", Json::Str(BENCH_SCHEMA.into()));
+        root.set("snapshots", Json::Arr(snapshots));
         std::fs::write(path, root.to_pretty())
     }
+}
+
+/// The most recent snapshot of a parsed trajectory file (`acpc diff
+/// --bench` compares these between two histories).
+pub fn latest_snapshot(root: &Json) -> Option<&Json> {
+    root.get("snapshots")?.as_arr()?.last()
 }
 
 /// Prevent the optimizer from discarding a computed value
@@ -259,47 +328,92 @@ mod tests {
         assert!(fmt_ns(5e10).contains('s'));
     }
 
-    /// Two benches writing to the same trajectory file must each keep their
-    /// section, and a rewrite must replace (not duplicate) a section.
+    fn case(name: &str, mean_ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 5,
+            mean_ns,
+            ci95_ns: 10.0,
+            min_ns: mean_ns * 0.9,
+            throughput: Some(1e6),
+        }
+    }
+
+    /// Benches writing under one run id share a snapshot; a new run id
+    /// appends a snapshot, and a same-id rewrite replaces (not duplicates)
+    /// the bench's section.
     #[test]
-    fn bench_json_merges_sections() {
+    fn bench_json_snapshots_merge_and_append() {
         let dir = std::env::temp_dir().join("acpc_bench_json_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("BENCH_sim.json");
         let _ = std::fs::remove_file(&path);
 
-        let r = BenchResult {
-            name: "case_a".into(),
-            iters: 5,
-            mean_ns: 1000.0,
-            ci95_ns: 10.0,
-            min_ns: 900.0,
-            throughput: Some(1e6),
-        };
-        let mut a = BenchJson::new("alpha");
+        let r = case("case_a", 1000.0);
+        let mut a = BenchJson::new("alpha").with_run_id("run1");
         a.push(&r);
         a.set("extra_curve", Json::array_f64(&[1.0, 2.0]));
         a.write_to(&path).unwrap();
 
-        let mut b = BenchJson::new("beta");
+        let mut b = BenchJson::new("beta").with_run_id("run1");
         b.push(&r);
         b.write_to(&path).unwrap();
 
-        // Re-run alpha: replaces its section.
+        // Re-run alpha under the same id: replaces its section in place.
         a.write_to(&path).unwrap();
 
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
-        assert_eq!(j.get("schema").unwrap().as_str(), Some("acpc-bench-v1"));
-        let benches = j.get("benches").unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
+        let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
+        assert_eq!(snaps.len(), 1, "one id + one scale = one snapshot");
+        let benches = snaps[0].get("benches").unwrap();
         for name in ["alpha", "beta"] {
             let sec = benches.get(name).unwrap_or_else(|| panic!("missing {name}"));
-            assert!(sec.get("scale").is_some());
             let results = sec.get("results").unwrap().as_arr().unwrap();
             assert_eq!(results.len(), 1);
             assert_eq!(results[0].get("name").unwrap().as_str(), Some("case_a"));
             assert!(results[0].get("items_per_sec").unwrap().as_f64().unwrap() > 0.0);
         }
         assert!(benches.get("alpha").unwrap().get("extra_curve").is_some());
+
+        // A second run id appends a new trajectory point.
+        let mut a2 = BenchJson::new("alpha").with_run_id("run2");
+        a2.push(&case("case_a", 1200.0));
+        a2.write_to(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[1].get("id").unwrap().as_str(), Some("run2"));
+        let latest = latest_snapshot(&j).unwrap();
+        assert_eq!(latest.get("id").unwrap().as_str(), Some("run2"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A v1 trajectory file is migrated into the history as a "legacy"
+    /// snapshot rather than discarded.
+    #[test]
+    fn bench_json_migrates_v1_files() {
+        let dir = std::env::temp_dir().join("acpc_bench_json_v1_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_sim.json");
+        std::fs::write(
+            &path,
+            r#"{"schema": "acpc-bench-v1",
+                "benches": {"alpha": {"scale": "smoke", "results": []}}}"#,
+        )
+        .unwrap();
+
+        let mut b = BenchJson::new("beta").with_run_id("run1");
+        b.push(&case("case_b", 500.0));
+        b.write_to(&path).unwrap();
+
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let snaps = j.get("snapshots").unwrap().as_arr().unwrap();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].get("id").unwrap().as_str(), Some("legacy"));
+        assert_eq!(snaps[0].get("scale").unwrap().as_str(), Some("smoke"));
+        assert!(snaps[0].get("benches").unwrap().get("alpha").is_some());
+        assert!(snaps[1].get("benches").unwrap().get("beta").is_some());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,155 @@
+//! Integration tests for the experiment farm: content-addressed caching
+//! end-to-end through the `Runner`, the manifest CLI, and the store. The
+//! acceptance contract of the farm is asserted here: a second identical
+//! invocation completes with 100% cache hits, zero re-simulation, and
+//! byte-identical reports.
+
+use acpc::api::{CacheMode, ReportStore, RunSpec, Runner};
+use acpc::config::PredictorKind;
+use acpc::util::json::Json;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("acpc_farm_itest").join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec(policy: &str, seed: u64, shards: usize) -> RunSpec {
+    RunSpec::builder()
+        .scenario("decode-heavy")
+        .policy(policy)
+        .predictor(if policy == "acpc" { PredictorKind::Heuristic } else { PredictorKind::None })
+        .accesses(20_000)
+        .seed(seed)
+        .shards(shards)
+        .build()
+        .unwrap()
+}
+
+/// A cache hit must be byte-for-byte the report the cold run produced —
+/// for the single-shard path and the set-sharded path alike.
+#[test]
+fn warm_runner_hit_is_byte_identical_single_and_sharded() {
+    let dir = tmp_dir("runner_hits");
+    let store = ReportStore::open(dir.join("store"));
+    for shards in [1usize, 2] {
+        let mk = || {
+            Runner::new(spec("acpc", 0xBEEF, shards))
+                .unwrap()
+                .with_store(store.clone(), CacheMode::ReadWrite)
+        };
+        let (cold, was_cached) = mk().run_cached().unwrap();
+        assert!(!was_cached, "{shards} shards: first run must simulate");
+        let (warm, was_cached) = mk().run_cached().unwrap();
+        assert!(was_cached, "{shards} shards: second run must hit");
+        assert_eq!(
+            cold.to_json().to_pretty(),
+            warm.to_json().to_pretty(),
+            "{shards} shards: hit must be byte-identical"
+        );
+    }
+    // Distinct shard counts resolve to distinct specs → distinct entries.
+    assert_eq!(store.len(), 2);
+}
+
+/// `CacheMode::Off` never reads nor writes; `Read` serves hits but leaves
+/// misses unpersisted.
+#[test]
+fn cache_modes_gate_reads_and_writes() {
+    let dir = tmp_dir("modes");
+    let store = ReportStore::open(dir.join("store"));
+    let mk = |mode| {
+        Runner::new(spec("lru", 7, 1)).unwrap().with_store(store.clone(), mode)
+    };
+    let (_, cached) = mk(CacheMode::Off).run_cached().unwrap();
+    assert!(!cached);
+    assert!(store.is_empty(), "Off must not write");
+    let (_, cached) = mk(CacheMode::Read).run_cached().unwrap();
+    assert!(!cached);
+    assert!(store.is_empty(), "Read must not write");
+    let (_, cached) = mk(CacheMode::ReadWrite).run_cached().unwrap();
+    assert!(!cached);
+    assert_eq!(store.len(), 1);
+    let (_, cached) = mk(CacheMode::Read).run_cached().unwrap();
+    assert!(cached, "Read serves existing entries");
+}
+
+/// The acceptance contract end-to-end through the CLI: the second
+/// identical `acpc run --manifest` completes with 100% cache hits and
+/// byte-identical cell reports.
+#[test]
+fn warm_manifest_cli_run_is_all_hits_and_byte_identical() {
+    let dir = tmp_dir("cli_manifest");
+    let manifest = dir.join("runs");
+    std::fs::create_dir_all(&manifest).unwrap();
+    std::fs::write(
+        manifest.join("grid.json"),
+        r#"{"runs": [
+            {"policy": "lru", "predictor": "none",
+             "workload": {"scenario": "decode-heavy"}, "accesses": 20000},
+            {"policy": "acpc", "predictor": "heuristic",
+             "workload": {"scenario": "decode-heavy"}, "accesses": 20000}
+        ]}"#,
+    )
+    .unwrap();
+    let store = dir.join("store");
+    let out1 = dir.join("farm1.json");
+    let out2 = dir.join("farm2.json");
+
+    let invoke = |out: &std::path::Path| {
+        let argv: Vec<String> = [
+            "run",
+            "--manifest",
+            manifest.to_str().unwrap(),
+            "--store",
+            store.to_str().unwrap(),
+            "--json",
+            out.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        acpc::cli::run(argv).unwrap()
+    };
+    assert_eq!(invoke(&out1), 0);
+    assert_eq!(invoke(&out2), 0);
+
+    let parse = |p: &std::path::Path| {
+        Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap()
+    };
+    let (j1, j2) = (parse(&out1), parse(&out2));
+    for j in [&j1, &j2] {
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("acpc-farm-v1"));
+        assert_eq!(j.get("cells").unwrap().as_arr().unwrap().len(), 2);
+    }
+    let cells1 = j1.get("cells").unwrap().as_arr().unwrap();
+    let cells2 = j2.get("cells").unwrap().as_arr().unwrap();
+    for (c1, c2) in cells1.iter().zip(cells2) {
+        assert_eq!(c1.get("cached").unwrap().as_bool(), Some(false), "cold run simulates");
+        assert_eq!(c2.get("cached").unwrap().as_bool(), Some(true), "warm run is 100% hits");
+        assert_eq!(c1.get("spec_hash").unwrap().as_str(), c2.get("spec_hash").unwrap().as_str());
+        assert_eq!(
+            c1.get("report").unwrap().to_pretty(),
+            c2.get("report").unwrap().to_pretty(),
+            "cached report must be byte-identical to the fresh one"
+        );
+    }
+}
+
+/// Deleting the artifacts-independent store between invocations brings the
+/// simulation back — the cache is an accelerator, not a dependency.
+#[test]
+fn cleared_store_falls_back_to_simulation() {
+    let dir = tmp_dir("clear");
+    let store_dir = dir.join("store");
+    let store = ReportStore::open(&store_dir);
+    let mk = || {
+        Runner::new(spec("lru", 11, 1)).unwrap().with_store(store.clone(), CacheMode::ReadWrite)
+    };
+    let (first, _) = mk().run_cached().unwrap();
+    std::fs::remove_dir_all(&store_dir).unwrap();
+    let (again, cached) = mk().run_cached().unwrap();
+    assert!(!cached, "emptied store must re-simulate");
+    assert_eq!(first.to_json().to_pretty(), again.to_json().to_pretty());
+}
