@@ -13,7 +13,7 @@ use acpc::util::bench::print_table;
 
 fn main() {
     let Some(dir) = acpc::runtime::artifacts_dir() else {
-        eprintln!("ablation_dilation: artifacts/ missing — run `make artifacts`");
+        acpc::log_warn!("ablation_dilation: artifacts/ missing — run `make artifacts`");
         std::process::exit(0);
     };
     let smoke = matches!(std::env::var("ACPC_BENCH_SCALE").as_deref(), Ok("smoke"));

@@ -92,6 +92,6 @@ fn main() {
 
     match sink.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
-        Err(e) => eprintln!("BENCH_sim.json write failed: {e}"),
+        Err(e) => acpc::log_error!("BENCH_sim.json write failed: {e}"),
     }
 }

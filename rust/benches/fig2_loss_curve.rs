@@ -15,7 +15,7 @@ use acpc::util::json::Json;
 
 fn main() {
     let Some(dir) = acpc::runtime::artifacts_dir() else {
-        eprintln!("fig2 bench: artifacts/ missing — run `make artifacts` first");
+        acpc::log_warn!("fig2 bench: artifacts/ missing — run `make artifacts` first");
         std::process::exit(0);
     };
     let smoke = matches!(std::env::var("ACPC_BENCH_SCALE").as_deref(), Ok("smoke"));

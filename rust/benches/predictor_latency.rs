@@ -10,7 +10,7 @@ use acpc::util::bench::{black_box, Bench};
 
 fn main() {
     let Some(dir) = acpc::runtime::artifacts_dir() else {
-        eprintln!("predictor_latency: artifacts/ missing — run `make artifacts`");
+        acpc::log_warn!("predictor_latency: artifacts/ missing — run `make artifacts`");
         std::process::exit(0);
     };
     let manifest = Manifest::load(&dir).unwrap();

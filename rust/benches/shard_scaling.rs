@@ -126,6 +126,6 @@ fn main() {
     sink.set("exactness_checked", Json::Bool(true));
     match sink.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
-        Err(e) => eprintln!("BENCH_sim.json write failed: {e}"),
+        Err(e) => acpc::log_error!("BENCH_sim.json write failed: {e}"),
     }
 }

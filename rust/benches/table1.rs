@@ -16,7 +16,7 @@ fn main() {
         _ => Table1Scale::full(),
     };
     if acpc::runtime::artifacts_dir().is_none() {
-        eprintln!("table1 bench: artifacts/ missing — run `make artifacts` first");
+        acpc::log_warn!("table1 bench: artifacts/ missing — run `make artifacts` first");
         std::process::exit(0);
     }
     let t0 = std::time::Instant::now();

@@ -23,7 +23,7 @@ use acpc::training::{train, TrainConfig};
 
 fn main() -> anyhow::Result<()> {
     let Some(dir) = acpc::runtime::artifacts_dir() else {
-        eprintln!("online_adaptation: run `make artifacts` first");
+        acpc::log_error!("online_adaptation: run `make artifacts` first");
         std::process::exit(1);
     };
     let manifest = Manifest::load(&dir).expect("manifest");

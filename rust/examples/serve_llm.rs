@@ -28,7 +28,7 @@ use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let Some(dir) = acpc::runtime::artifacts_dir() else {
-        eprintln!("serve_llm: run `make artifacts` first");
+        acpc::log_error!("serve_llm: run `make artifacts` first");
         std::process::exit(1);
     };
     let manifest = Manifest::load(&dir).expect("manifest");

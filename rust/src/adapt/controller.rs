@@ -262,6 +262,9 @@ pub struct AdaptiveController {
     ewma_pollution: f64,
     ewma_ready: bool,
     window_log: Vec<WindowStats>,
+    /// Most recently harvested window, independent of the capped
+    /// `window_log` (telemetry streaming reads this at every boundary).
+    last_window: Option<WindowStats>,
     events: Vec<AdaptationEvent>,
     drift_windows: Vec<u64>,
     throttled_windows: u64,
@@ -292,6 +295,7 @@ impl AdaptiveController {
             ewma_pollution: 0.0,
             ewma_ready: false,
             window_log: Vec::new(),
+            last_window: None,
             events: Vec::new(),
             drift_windows: Vec::new(),
             throttled_windows: 0,
@@ -364,6 +368,12 @@ impl AdaptiveController {
         &self.window_log
     }
 
+    /// The most recently harvested window, even past the retained-log cap.
+    /// `None` before the first boundary.
+    pub fn last_window(&self) -> Option<WindowStats> {
+        self.last_window
+    }
+
     fn record(&mut self, w: &WindowStats, access: u64, action: AdaptationAction) {
         self.version += 1;
         self.events.push(AdaptationEvent {
@@ -390,6 +400,7 @@ impl AdaptiveController {
             return None;
         }
         let w = self.telemetry.harvest(hier);
+        self.last_window = Some(w);
         if self.window_log.len() < WINDOW_LOG_CAP {
             self.window_log.push(w);
         }

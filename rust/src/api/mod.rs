@@ -30,7 +30,7 @@ pub use farm::{
 };
 pub use runner::{PredictorFactory, RunReport, Runner};
 pub use spec::{AdaptSpec, HierarchySpec, RunSpec, RunSpecBuilder, WorkloadSpec, SCHEMA};
-pub use store::{spec_hash, CacheMode, ReportStore};
+pub use store::{spec_hash, CacheMode, ReportStore, StoreEntry};
 
 use crate::adapt::{CompareOutput, ControllerSummary};
 use anyhow::Result;

@@ -14,6 +14,7 @@ use super::store::{CacheMode, ReportStore};
 use crate::adapt::{AdaptiveController, ControllerSummary};
 use crate::config::PredictorKind;
 use crate::metrics::MetricsReport;
+use crate::obs::{SourceId, TelemetryBus};
 use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
 use crate::sim::shard::{run_workload_sharded, PredictorReclaim};
 use crate::sim::SimResult;
@@ -63,6 +64,7 @@ pub struct Runner {
     resolved: Resolved,
     source: PredictorSource,
     store: Option<(ReportStore, CacheMode)>,
+    bus: Option<TelemetryBus>,
 }
 
 impl Runner {
@@ -70,7 +72,12 @@ impl Runner {
     /// policies/scenarios/profiles, bad geometry, unshardable hierarchies
     /// and predictor-less adaptive runs — nothing is deferred to mid-run.
     pub fn new(spec: RunSpec) -> Result<Runner> {
-        Ok(Runner { resolved: spec.resolve()?, source: PredictorSource::Spec, store: None })
+        Ok(Runner {
+            resolved: spec.resolve()?,
+            source: PredictorSource::Spec,
+            store: None,
+            bus: None,
+        })
     }
 
     /// [`Runner::new`] from a spec file (`acpc run --spec`).
@@ -102,6 +109,19 @@ impl Runner {
     /// reproducible from the spec alone and always simulates.
     pub fn with_store(mut self, store: ReportStore, mode: CacheMode) -> Self {
         self.store = Some((store, mode));
+        self
+    }
+
+    /// Attach a [`TelemetryBus`]: the run streams window stats, drift
+    /// events, adaptation actions and periodic cache-health samples onto it
+    /// (source `sim/k` per shard, `sim/0` single-threaded). Attaching a bus
+    /// never perturbs the run — a subscribed run's [`RunReport`] is
+    /// byte-identical to an unsubscribed one (asserted by
+    /// `tests/integration_obs.rs`). Note that a report served from an
+    /// attached store ([`with_store`](Self::with_store)) skips simulation
+    /// and therefore emits no events.
+    pub fn with_telemetry(mut self, bus: TelemetryBus) -> Self {
+        self.bus = Some(bus);
         self
     }
 
@@ -195,6 +215,7 @@ impl Runner {
                 &mk,
                 reclaim.as_ref(),
                 r.controller.as_ref(),
+                self.bus.as_ref(),
             )?;
             (run.result, run.controllers)
         } else {
@@ -216,11 +237,13 @@ impl Runner {
             };
             let mut controller =
                 r.controller.clone().map(AdaptiveController::new);
+            let publisher = self.bus.as_ref().map(|b| b.publisher(SourceId::sim(0)));
             let result = crate::sim::run_workload_adaptive(
                 &r.cfg,
                 workload.as_mut(),
                 &mut predictor,
                 controller.as_mut(),
+                publisher,
             );
             if from_cache {
                 put_back_thread_tcn(predictor);
@@ -545,7 +568,8 @@ mod tests {
         cfg.accesses = 40_000;
         let mut workload = cfg.workload();
         let mk: PredictorFactory = Arc::new(|_| PredictorBox::None);
-        let old = run_workload_sharded(&cfg, workload.as_mut(), 4, &mk, None, None).unwrap();
+        let old =
+            run_workload_sharded(&cfg, workload.as_mut(), 4, &mk, None, None, None).unwrap();
 
         let spec = RunSpec::builder()
             .scenario("decode-heavy")

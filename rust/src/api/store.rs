@@ -138,6 +138,19 @@ fn artifact_fingerprint() -> String {
     }
 }
 
+/// One on-disk report as surfaced by [`ReportStore::entries`] (`acpc store
+/// ls` / `gc`): identity, location, size, age, and the schema + spec name
+/// read from the entry (`-` when unreadable).
+#[derive(Debug, Clone)]
+pub struct StoreEntry {
+    pub hash: String,
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub age_days: f64,
+    pub schema: String,
+    pub label: String,
+}
+
 /// A directory of content-addressed [`RunReport`]s (see the module docs
 /// for layout and invalidation semantics). Cloning is cheap — the store is
 /// just a root path; all state lives on disk.
@@ -230,6 +243,58 @@ impl ReportStore {
 
     pub fn is_empty(&self) -> bool {
         self.hashes().is_empty()
+    }
+
+    /// Everything on disk, one [`StoreEntry`] per report, sorted by hash
+    /// (`acpc store ls`). Unreadable or corrupt entries still appear —
+    /// with `-` placeholders — so `gc` can reclaim them.
+    pub fn entries(&self) -> Vec<StoreEntry> {
+        let now = std::time::SystemTime::now();
+        self.hashes()
+            .into_iter()
+            .map(|hash| {
+                let path = self.entry_path(&hash);
+                let meta = std::fs::metadata(&path).ok();
+                let bytes = meta.as_ref().map(|m| m.len()).unwrap_or(0);
+                let age_days = meta
+                    .and_then(|m| m.modified().ok())
+                    .and_then(|t| now.duration_since(t).ok())
+                    .map(|d| d.as_secs_f64() / 86_400.0)
+                    .unwrap_or(0.0);
+                let parsed = std::fs::read_to_string(&path)
+                    .ok()
+                    .and_then(|text| Json::parse(&text).ok());
+                let field = |keys: &[&str]| -> String {
+                    let mut j = parsed.as_ref();
+                    for k in keys {
+                        j = j.and_then(|j| j.get(k));
+                    }
+                    j.and_then(Json::as_str).unwrap_or("-").to_string()
+                };
+                let schema = field(&["schema"]);
+                let label = field(&["spec", "name"]);
+                StoreEntry { hash, path, bytes, age_days, schema, label }
+            })
+            .collect()
+    }
+
+    /// Entries last written more than `keep_days` ago. With `apply` false
+    /// (the `acpc store gc` default) this is a dry run: nothing is deleted,
+    /// the doomed entries are only returned. With `apply` true they are
+    /// removed (and emptied shard directories pruned).
+    pub fn gc(&self, keep_days: f64, apply: bool) -> std::io::Result<Vec<StoreEntry>> {
+        let doomed: Vec<StoreEntry> =
+            self.entries().into_iter().filter(|e| e.age_days > keep_days).collect();
+        if apply {
+            for e in &doomed {
+                std::fs::remove_file(&e.path)?;
+                if let Some(dir) = e.path.parent() {
+                    // Succeeds only once the shard directory is empty.
+                    let _ = std::fs::remove_dir(dir);
+                }
+            }
+        }
+        Ok(doomed)
     }
 
     /// Resolve a (possibly abbreviated) hex hash to the unique stored
@@ -330,6 +395,35 @@ mod tests {
         // Short-hash resolution.
         assert_eq!(store.find(&hash[..8]).as_deref(), Some(hash.as_str()));
         assert_eq!(store.find("zz"), None);
+    }
+
+    #[test]
+    fn entries_list_and_gc_dry_run_vs_apply() {
+        let store = tmp_store("gc");
+        let runner = Runner::new(tiny_spec(11)).unwrap();
+        let report = runner.run().unwrap();
+        let hash = runner.spec_hash();
+        store.put(&hash, &report).unwrap();
+
+        let entries = store.entries();
+        assert_eq!(entries.len(), 1);
+        let e = &entries[0];
+        assert_eq!(e.hash, hash);
+        assert!(e.bytes > 0);
+        assert!(e.age_days >= 0.0 && e.age_days < 1.0, "freshly written: {}", e.age_days);
+        assert_eq!(e.schema, "acpc-run-v1");
+
+        // Dry run never deletes, even with keep_days < age.
+        let doomed = store.gc(-1.0, false).unwrap();
+        assert_eq!(doomed.len(), 1);
+        assert_eq!(store.len(), 1, "dry run must not delete");
+        // Young entries survive an applied gc with a generous window…
+        assert_eq!(store.gc(7.0, true).unwrap().len(), 0);
+        assert_eq!(store.len(), 1);
+        // …and fall to one with keep_days in the past.
+        assert_eq!(store.gc(-1.0, true).unwrap().len(), 1);
+        assert_eq!(store.len(), 0);
+        assert!(!store.entry_path(&hash).exists());
     }
 
     /// Corruption in every flavor is a miss, never an error.

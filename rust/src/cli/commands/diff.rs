@@ -220,8 +220,8 @@ fn run_bench(args: &mut Args) -> Result<i32> {
         &rows,
     );
     if regressions > 0 {
-        eprintln!(
-            "\n{regressions} case(s) regressed beyond the {:.0}% tolerance",
+        crate::log_error!(
+            "{regressions} case(s) regressed beyond the {:.0}% tolerance",
             tolerance * 100.0
         );
         return Ok(1);

@@ -7,10 +7,12 @@
 
 pub mod adapt;
 pub mod diff;
+pub mod monitor;
 pub mod policies;
 pub mod run;
 pub mod serve;
 pub mod simulate;
+pub mod store;
 pub mod sweep;
 pub mod table1;
 pub mod trace_stats;

@@ -1,0 +1,188 @@
+//! `acpc monitor` — live telemetry: wrap a RunSpec with a subscribed bus,
+//! attach to a running serve dashboard, or schema-validate an NDJSON
+//! capture. Events follow the `acpc-telemetry-v1` schema.
+
+use crate::api::{RunSpec, Runner};
+use crate::cli::Args;
+use crate::obs::http::{http_get, DASHBOARD_SCHEMA};
+use crate::obs::{
+    validate_ndjson, MonitorState, TelemetryBus, TelemetryEvent, TelemetrySubscriber,
+};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+const HELP: &str = "\
+acpc monitor — live telemetry (schema acpc-telemetry-v1)
+
+Wraps a RunSpec with a subscribed telemetry bus and renders a refreshing
+per-source health table while it runs; or attaches to the dashboard of a
+live `acpc serve --dashboard <port>`; or validates a captured NDJSON
+stream. With --ndjson, stdout carries exactly one event JSON per line
+(the firehose) and all status goes to stderr — pipe it to a file, then
+check it with --validate.
+
+OPTIONS:
+    --spec <file.json>   run the RunSpec with telemetry attached
+    --attach <addr>      follow a serve dashboard (e.g. 127.0.0.1:7199)
+    --validate <file>    schema-check an NDJSON capture and exit
+    --ndjson             raw event stream on stdout instead of the table
+    --interval-ms <n>    refresh/poll interval [default: 500]
+    --seed <n>           override the spec's seed (--spec only)
+    --accesses <n>       override the spec's trace length (--spec only)
+    --shards <n>         override the spec's set-shard count (--spec only)
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    args.ensure_known(&[
+        "spec", "attach", "validate", "ndjson", "interval-ms", "seed", "accesses", "shards",
+        "help",
+    ])?;
+    let modes = [args.opt("spec"), args.opt("attach"), args.opt("validate")];
+    if modes.iter().flatten().count() != 1 {
+        anyhow::bail!(
+            "exactly one of --spec, --attach, or --validate is required \
+             (see `acpc monitor --help`)"
+        );
+    }
+    let ndjson = args.flag("ndjson");
+    let interval = Duration::from_millis(args.u64_or("interval-ms", 500)?);
+
+    if let Some(path) = args.opt("validate") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let n = validate_ndjson(&text)
+            .with_context(|| format!("{path}: invalid acpc-telemetry-v1 stream"))?;
+        println!("{path}: {n} events, schema acpc-telemetry-v1 OK");
+        return Ok(0);
+    }
+    if let Some(addr) = args.opt("attach") {
+        return attach(addr, ndjson, interval);
+    }
+
+    let path = args.opt("spec").expect("mode checked above");
+    let mut spec = RunSpec::from_file(Path::new(path))?;
+    if args.opt("seed").is_some() {
+        spec.seed = Some(args.u64_or("seed", 0)?);
+    }
+    if args.opt("accesses").is_some() {
+        spec.accesses = Some(args.usize_or("accesses", 0)?);
+    }
+    if args.opt("shards").is_some() {
+        spec.shards = args.usize_or("shards", 1)?;
+    }
+
+    let bus = TelemetryBus::new();
+    let sub = bus.subscribe();
+    let runner = Runner::new(spec)?.with_telemetry(bus);
+    crate::log_info!(
+        "monitor: running {} with telemetry attached",
+        runner.spec().name.as_deref().unwrap_or(path)
+    );
+    // The run stays on this thread (predictors may be thread-affine); the
+    // monitor renders from its own.
+    let stop = AtomicBool::new(false);
+    let (report, state) = std::thread::scope(|s| {
+        let handle = s.spawn(|| monitor_loop(sub, &stop, ndjson, interval));
+        let report = runner.run();
+        stop.store(true, Ordering::Release);
+        let state = handle.join().expect("monitor thread panicked");
+        (report, state)
+    });
+    let report = report?;
+    if ndjson {
+        crate::log_info!(
+            "monitor: run complete — {} events, {} dropped",
+            state.events,
+            state.dropped
+        );
+    } else {
+        println!("\n{}", report.result.report.summary());
+        println!("{}", report.counters_line());
+    }
+    Ok(0)
+}
+
+/// Drain the subscriber until `stop`, rendering the table (or echoing
+/// NDJSON) as events arrive; returns the final folded state.
+fn monitor_loop(
+    mut sub: TelemetrySubscriber,
+    stop: &AtomicBool,
+    ndjson: bool,
+    interval: Duration,
+) -> MonitorState {
+    let mut state = MonitorState::new();
+    let mut events = Vec::new();
+    let stdout = std::io::stdout();
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        events.clear();
+        sub.drain(&mut events);
+        state.dropped = sub.dropped();
+        let mut out = stdout.lock();
+        for ev in &events {
+            state.apply(ev);
+            if ndjson {
+                let _ = writeln!(out, "{}", ev.to_json().to_string());
+            }
+        }
+        if !ndjson && (!events.is_empty() || stopping) {
+            // Home + clear so the table refreshes in place.
+            let _ = write!(out, "\x1b[H\x1b[2J{}", state.render_table());
+        }
+        let _ = out.flush();
+        drop(out);
+        if stopping {
+            return state;
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// Follow a live dashboard: poll `/events?since=<n>` and fold locally, so
+/// the table is the same one a `--spec` run renders.
+fn attach(addr: &str, ndjson: bool, interval: Duration) -> Result<i32> {
+    let health = http_get(addr, "/health")
+        .with_context(|| format!("no dashboard at {addr} (serve with --dashboard <port>?)"))?;
+    let h = Json::parse(health.trim()).context("malformed /health body")?;
+    let schema = h.get("schema").and_then(Json::as_str).unwrap_or("?");
+    if schema != DASHBOARD_SCHEMA {
+        anyhow::bail!("{addr} speaks '{schema}', expected '{DASHBOARD_SCHEMA}'");
+    }
+    crate::log_info!("monitor: attached to http://{addr}/");
+    let mut state = MonitorState::new();
+    let mut since = 0u64;
+    loop {
+        // The dashboard disappearing (serve finished its linger) is the
+        // normal way this loop ends.
+        let body = match http_get(addr, &format!("/events?since={since}")) {
+            Ok(b) => b,
+            Err(e) => {
+                crate::log_info!("monitor: dashboard gone ({e:#}); exiting");
+                return Ok(0);
+            }
+        };
+        let mut out = std::io::stdout().lock();
+        for line in body.lines().filter(|l| !l.trim().is_empty()) {
+            let ev = TelemetryEvent::from_json(&Json::parse(line)?)
+                .context("dashboard sent a non-telemetry line")?;
+            state.apply(&ev);
+            since += 1;
+            if ndjson {
+                let _ = writeln!(out, "{line}");
+            }
+        }
+        if !ndjson {
+            let _ = write!(out, "\x1b[H\x1b[2J{}", state.render_table());
+        }
+        let _ = out.flush();
+        drop(out);
+        std::thread::sleep(interval);
+    }
+}

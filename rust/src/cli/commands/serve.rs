@@ -27,6 +27,12 @@ OPTIONS:
     --deadline-us <n>    batching deadline [default: 2000]
     --arrival-us <n>     inter-arrival pacing [default: 100]
     --seed <n>
+    --dashboard <port>   HTTP dashboard on 127.0.0.1:<port> for the run's
+                         duration (/health, /metrics.json, /events; 0 = any)
+    --dashboard-linger-ms <n>  keep the dashboard up n ms after the run
+                         drains (for external scrapers) [default: 0]
+    --json <path>        write the ServeReport JSON (schema acpc-serve-v1,
+                         includes the full adaptation-event list)
     --help";
 
 pub fn run(args: &mut Args) -> Result<i32> {
@@ -36,7 +42,8 @@ pub fn run(args: &mut Args) -> Result<i32> {
     }
     args.ensure_known(&[
         "workers", "sessions", "policy", "predictor", "router", "profile", "scenario",
-        "adaptive", "batch", "deadline-us", "arrival-us", "seed", "help",
+        "adaptive", "batch", "deadline-us", "arrival-us", "seed", "dashboard",
+        "dashboard-linger-ms", "json", "help",
     ])?;
     if args.opt("profile").is_some() && args.opt("scenario").is_some() {
         anyhow::bail!("--profile and --scenario are mutually exclusive");
@@ -72,6 +79,14 @@ pub fn run(args: &mut Args) -> Result<i32> {
         scenario,
         adaptive: args.flag("adaptive"),
         adapt: crate::adapt::ControllerConfig::default(),
+        dashboard_port: match args.opt("dashboard") {
+            Some(v) => Some(
+                v.parse::<u16>()
+                    .map_err(|_| anyhow::anyhow!("--dashboard expects a port, got '{v}'"))?,
+            ),
+            None => None,
+        },
+        dashboard_linger: Duration::from_millis(args.u64_or("dashboard-linger-ms", 0)?),
     };
 
     // Window + thread-local factory (PJRT is !Send).
@@ -118,9 +133,16 @@ pub fn run(args: &mut Args) -> Result<i32> {
     );
     if cfg.adaptive {
         println!(
-            "adaptation: windows={} drift_events={} throttled_windows={}",
-            rep.adapt_windows, rep.drift_events, rep.throttled_windows
+            "adaptation: windows={} drift_events={} throttled_windows={} events={}",
+            rep.adapt_windows,
+            rep.drift_events,
+            rep.throttled_windows,
+            rep.adaptation_events.len()
         );
+    }
+    if let Some(out) = args.opt("json") {
+        std::fs::write(out, rep.to_json().to_pretty())?;
+        println!("wrote {out}");
     }
     Ok(0)
 }

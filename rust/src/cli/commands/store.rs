@@ -1,0 +1,88 @@
+//! `acpc store` — housekeeping for the content-addressed report store:
+//! `ls` lists what's on disk, `gc` reclaims entries older than a cutoff
+//! (dry run by default; `--apply` deletes).
+
+use crate::api::ReportStore;
+use crate::cli::Args;
+use crate::util::bench::print_table;
+use anyhow::Result;
+
+const HELP: &str = "\
+acpc store — inspect / garbage-collect the report store
+
+USAGE:
+    acpc store ls [--store <dir>]
+    acpc store gc [--keep-days <n>] [--apply] [--store <dir>]
+
+`gc` without --apply is a dry run: it lists what would be deleted and
+touches nothing.
+
+OPTIONS:
+    --store <dir>       store root [default: $ACPC_STORE or .acpc-store]
+    --keep-days <n>     gc cutoff: drop entries older than n days [default: 30]
+    --apply             actually delete (gc defaults to a dry run)
+    --help";
+
+pub fn run(args: &mut Args) -> Result<i32> {
+    if args.flag("help") {
+        println!("{HELP}");
+        return Ok(0);
+    }
+    let Some(action) = args.next_positional() else {
+        println!("{HELP}");
+        return Ok(2);
+    };
+    args.ensure_known(&["store", "keep-days", "apply", "help"])?;
+    let store = match args.opt("store") {
+        Some(p) => ReportStore::open(p),
+        None => ReportStore::open_default(),
+    };
+    match action.as_str() {
+        "ls" => ls(&store),
+        "gc" => gc(&store, args.f64_or("keep-days", 30.0)?, args.flag("apply")),
+        other => anyhow::bail!("unknown store action '{other}' (expected ls or gc)"),
+    }
+}
+
+fn ls(store: &ReportStore) -> Result<i32> {
+    let entries = store.entries();
+    if entries.is_empty() {
+        println!("report store {}: empty", store.root().display());
+        return Ok(0);
+    }
+    let rows: Vec<Vec<String>> = entries
+        .iter()
+        .map(|e| {
+            vec![
+                e.hash[..12].to_string(),
+                e.schema.clone(),
+                e.label.clone(),
+                format!("{:.1}", e.age_days),
+                format!("{:.1}", e.bytes as f64 / 1024.0),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("report store {}", store.root().display()),
+        &["hash", "schema", "label", "age (days)", "size (KiB)"],
+        &rows,
+    );
+    let total: u64 = entries.iter().map(|e| e.bytes).sum();
+    println!("\n{} entries, {:.1} KiB total", entries.len(), total as f64 / 1024.0);
+    Ok(0)
+}
+
+fn gc(store: &ReportStore, keep_days: f64, apply: bool) -> Result<i32> {
+    let doomed = store.gc(keep_days, apply)?;
+    let verb = if apply { "deleted" } else { "would delete" };
+    for e in &doomed {
+        println!("{verb} {} ({}, {:.1} days old)", &e.hash[..12], e.label, e.age_days);
+    }
+    println!(
+        "gc --keep-days {keep_days}: {verb} {} of {} entries{}",
+        doomed.len(),
+        store.len() + if apply { doomed.len() } else { 0 },
+        if apply { "" } else { " (dry run; pass --apply to delete)" }
+    );
+    Ok(0)
+}

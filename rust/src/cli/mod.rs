@@ -23,6 +23,8 @@ COMMANDS:
     train        train a predictor with the compiled Adam step (Fig. 2)
     table1       reproduce the paper's Table 1 end-to-end
     serve        multi-worker serving-node simulation (router + batcher)
+    monitor      live telemetry: wrap a RunSpec or attach to a serve dashboard
+    store        report-store housekeeping (ls, gc)
     trace-stats  characterize a generated workload trace
     policies     list replacement policies / prefetchers / profiles / scenarios
     help         show this message
@@ -50,6 +52,8 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "train" => commands::train::run(&mut args),
         "table1" => commands::table1::run(&mut args),
         "serve" => commands::serve::run(&mut args),
+        "monitor" => commands::monitor::run(&mut args),
+        "store" => commands::store::run(&mut args),
         "trace-stats" => commands::trace_stats::run(&mut args),
         "policies" => commands::policies::run(),
         "help" | "--help" | "-h" => {
@@ -57,7 +61,8 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
             Ok(0)
         }
         other => {
-            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            crate::log_error!("unknown command '{other}'");
+            println!("{USAGE}");
             Ok(2)
         }
     }

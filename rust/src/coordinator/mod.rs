@@ -16,4 +16,6 @@ pub mod server;
 
 pub use batcher::DynamicBatcher;
 pub use router::{Router, RouterPolicy};
-pub use server::{serve, ServeConfig, ServeReport};
+pub use server::{
+    serve, serve_with_bus, ServeConfig, ServeReport, WorkerAdaptationEvent, SERVE_SCHEMA,
+};

@@ -30,8 +30,12 @@
 
 use super::batcher::DynamicBatcher;
 use super::router::{Router, RouterPolicy};
-use crate::adapt::{AdaptiveController, ControlDecision, ControllerConfig, PredictorAccess};
+use crate::adapt::{
+    AdaptationEvent, AdaptiveController, ControlDecision, ControllerConfig, PredictorAccess,
+};
 use crate::mem::HierarchyConfig;
+use crate::obs::{start_dashboard, Payload, SourceId, TelemetryBus, SAMPLE_PERIOD};
+use crate::util::json::Json;
 use crate::predictor::{GeometryHints, PredictorBox, FEATURE_DIM};
 use crate::sim::{Engine, PredictionBatch};
 use crate::trace::{GeneratorConfig, Scenario, TraceGenerator, Workload};
@@ -63,6 +67,13 @@ pub struct ServeConfig {
     pub adaptive: bool,
     /// Controller thresholds when `adaptive` is on.
     pub adapt: ControllerConfig,
+    /// Serve an HTTP dashboard (`/health`, `/metrics.json`, `/events`) on
+    /// `127.0.0.1:<port>` for the run's duration (port 0 picks a free one).
+    pub dashboard_port: Option<u16>,
+    /// Keep the dashboard answering for this long after the run drains —
+    /// lets external probes (CI smoke, `acpc monitor --attach`) scrape the
+    /// final state before shutdown.
+    pub dashboard_linger: Duration,
 }
 
 impl ServeConfig {
@@ -88,6 +99,8 @@ impl ServeConfig {
             scenario: None,
             adaptive: false,
             adapt: ControllerConfig::default(),
+            dashboard_port: None,
+            dashboard_linger: Duration::ZERO,
         }
     }
 
@@ -140,6 +153,60 @@ pub struct ServeReport {
     /// Worker-windows spent with predictions throttled (timing-dependent;
     /// see [`Self::adapt_windows`]).
     pub throttled_windows: u64,
+    /// Every adaptation event each worker's controller emitted, tagged with
+    /// the worker index and sorted by `(worker, access, window)`. The full
+    /// list behind the three counters above (same timing caveat).
+    pub adaptation_events: Vec<WorkerAdaptationEvent>,
+}
+
+/// One controller [`AdaptationEvent`] attributed to its serving worker.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerAdaptationEvent {
+    pub worker: usize,
+    pub event: AdaptationEvent,
+}
+
+impl WorkerAdaptationEvent {
+    pub fn to_json(&self) -> Json {
+        let mut j = self.event.to_json();
+        j.set("worker", Json::Num(self.worker as f64));
+        j
+    }
+}
+
+/// Schema tag for [`ServeReport::to_json`].
+pub const SERVE_SCHEMA: &str = "acpc-serve-v1";
+
+impl ServeReport {
+    /// Machine-readable report (`acpc serve --json`), schema
+    /// [`SERVE_SCHEMA`]. Adaptation events are the full per-worker list,
+    /// not just the summed counters.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("schema", Json::Str(SERVE_SCHEMA.into())),
+            ("sessions_admitted", Json::Num(self.sessions_admitted as f64)),
+            ("sessions_completed", Json::Num(self.sessions_completed as f64)),
+            ("sessions_rejected", Json::Num(self.sessions_rejected as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("accesses", Json::Num(self.accesses as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("tokens_per_sec_wall", Json::Num(self.tokens_per_sec_wall)),
+            ("l2_hit_rate", Json::Num(self.l2_hit_rate)),
+            ("l2_pollution_ratio", Json::Num(self.l2_pollution_ratio)),
+            ("session_latency_ms_p50", Json::Num(self.session_latency_ms_p50)),
+            ("session_latency_ms_p95", Json::Num(self.session_latency_ms_p95)),
+            ("prediction_batches", Json::Num(self.prediction_batches as f64)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+            ("router_imbalance_max", Json::Num(self.router_imbalance_max as f64)),
+            ("adapt_windows", Json::Num(self.adapt_windows as f64)),
+            ("drift_events", Json::Num(self.drift_events as f64)),
+            ("throttled_windows", Json::Num(self.throttled_windows as f64)),
+            (
+                "adaptation_events",
+                Json::Arr(self.adaptation_events.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
 }
 
 enum Event {
@@ -149,6 +216,7 @@ enum Event {
 
 #[derive(Debug, Clone)]
 struct WorkerStats {
+    worker: usize,
     accesses: u64,
     tokens: u64,
     l2_hits: u64,
@@ -158,6 +226,7 @@ struct WorkerStats {
     adapt_windows: u64,
     drift_events: u64,
     throttled_windows: u64,
+    events: Vec<AdaptationEvent>,
 }
 
 struct PredictReq {
@@ -185,7 +254,60 @@ pub fn serve(
     predictor_window: usize,
     predictor_factory: impl FnOnce() -> PredictorBox + Send,
 ) -> ServeReport {
+    serve_with_bus(cfg, predictor_window, predictor_factory, None)
+}
+
+/// [`serve`], streaming each worker's telemetry (source `serve/w`) onto
+/// `bus`. When [`ServeConfig::dashboard_port`] is set, an HTTP dashboard is
+/// served for the run's duration (plus `dashboard_linger`) — fed from the
+/// caller's bus, or from an internally created one when `bus` is `None`.
+pub fn serve_with_bus(
+    cfg: &ServeConfig,
+    predictor_window: usize,
+    predictor_factory: impl FnOnce() -> PredictorBox + Send,
+    bus: Option<&TelemetryBus>,
+) -> ServeReport {
     let t0 = Instant::now();
+    // The dashboard needs a bus to subscribe to; synthesize one when the
+    // caller wants the endpoint but didn't attach their own.
+    let internal_bus =
+        (bus.is_none() && cfg.dashboard_port.is_some()).then(TelemetryBus::new);
+    let bus = bus.or(internal_bus.as_ref());
+    let dashboard = cfg.dashboard_port.and_then(|port| {
+        let sub = bus.expect("dashboard_port implies a bus").subscribe();
+        match start_dashboard(port, sub) {
+            Ok(h) => {
+                crate::log_info!("dashboard: listening on http://{}/", h.addr());
+                Some(h)
+            }
+            Err(e) => {
+                crate::log_warn!("dashboard: disabled: {e:#}");
+                None
+            }
+        }
+    });
+    let report = serve_inner(cfg, predictor_window, predictor_factory, bus, t0);
+    if let Some(dash) = dashboard {
+        if !cfg.dashboard_linger.is_zero() {
+            crate::log_info!(
+                "dashboard: run drained; lingering {:?} at http://{}/",
+                cfg.dashboard_linger,
+                dash.addr()
+            );
+            std::thread::sleep(cfg.dashboard_linger);
+        }
+        dash.shutdown();
+    }
+    report
+}
+
+fn serve_inner(
+    cfg: &ServeConfig,
+    predictor_window: usize,
+    predictor_factory: impl FnOnce() -> PredictorBox + Send,
+    bus: Option<&TelemetryBus>,
+    t0: Instant,
+) -> ServeReport {
     let done = Arc::new(AtomicBool::new(false));
     let use_pred = predictor_window > 0;
     let window = predictor_window.max(1);
@@ -276,6 +398,9 @@ pub fn serve(
             let policy = cfg.policy.clone();
             let adaptive = cfg.adaptive;
             let acfg = cfg.adapt.clone();
+            // Created dispatcher-side so the per-source (serve/w) sequence
+            // counter has exactly one owner.
+            let mut publisher = bus.map(|b| b.publisher(SourceId::serve(w)));
             s.spawn(move || {
                 // The shared engine drives this worker's accesses; its
                 // feature rows are shipped to the predictor service rather
@@ -327,11 +452,31 @@ pub fn serve(
                         };
                         if let Some(c) = controller.as_mut() {
                             c.observe_access(engine.steps(), a.line());
+                            let (windows_before, drifts_before, events_before) =
+                                (c.windows(), c.drift_count(), c.events().len());
                             let decision = c.maybe_window(
                                 engine.steps(),
                                 &engine.hier,
                                 PredictorAccess::Remote,
                             );
+                            if let Some(p) = publisher.as_mut() {
+                                let steps = engine.steps();
+                                if c.windows() > windows_before {
+                                    if let Some(stats) = c.last_window() {
+                                        p.publish(
+                                            steps,
+                                            Payload::Window { stats, throttled: c.throttled() },
+                                        );
+                                        if c.drift_count() > drifts_before {
+                                            let drift = Payload::Drift { window: stats.index };
+                                            p.publish(steps, drift);
+                                        }
+                                    }
+                                }
+                                for e in &c.events()[events_before..] {
+                                    p.publish(steps, Payload::Adaptation(*e));
+                                }
+                            }
                             match decision {
                                 Some(ControlDecision::Throttled) => {
                                     engine.hier.clear_utilities();
@@ -348,6 +493,20 @@ pub fn serve(
                                     engine.hier.set_prefetch_throttled(false);
                                 }
                                 None => {}
+                            }
+                        }
+                        if publisher.is_some() && engine.steps() % SAMPLE_PERIOD == 0 {
+                            let throttled =
+                                controller.as_ref().map(|c| c.throttled()).unwrap_or(false);
+                            let l2 = &engine.hier.l2;
+                            let sample = Payload::Sample {
+                                occupancy: l2.occupancy(),
+                                hit_rate: l2.stats.hit_rate(),
+                                pollution: l2.stats.pollution_ratio(),
+                                throttled,
+                            };
+                            if let Some(p) = publisher.as_mut() {
+                                p.publish(engine.steps(), sample);
                             }
                         }
                         if full {
@@ -375,11 +534,14 @@ pub fn serve(
                         std::thread::sleep(Duration::from_micros(50));
                     }
                 }
-                let (adapt_windows, drift_events, throttled_windows) = controller
-                    .map(|c| (c.windows(), c.drift_count(), c.throttled_windows()))
-                    .unwrap_or((0, 0, 0));
+                let (adapt_windows, drift_events, throttled_windows, events) = controller
+                    .map(|c| {
+                        (c.windows(), c.drift_count(), c.throttled_windows(), c.events().to_vec())
+                    })
+                    .unwrap_or((0, 0, 0, Vec::new()));
                 let l2 = &engine.hier.l2.stats;
                 let stats = WorkerStats {
+                    worker: w,
                     accesses: engine.hier.accesses,
                     tokens: workload.tokens_done(),
                     l2_hits: l2.demand_hits,
@@ -389,6 +551,7 @@ pub fn serve(
                     adapt_windows,
                     drift_events,
                     throttled_windows,
+                    events,
                 };
                 let _ = ev_tx.send(Event::Finished { stats });
             });
@@ -475,6 +638,13 @@ pub fn serve(
         let adapt_windows: u64 = stats.iter().map(|s| s.adapt_windows).sum();
         let drift_events: u64 = stats.iter().map(|s| s.drift_events).sum();
         let throttled_windows: u64 = stats.iter().map(|s| s.throttled_windows).sum();
+        let mut adaptation_events: Vec<WorkerAdaptationEvent> = stats
+            .iter()
+            .flat_map(|s| {
+                s.events.iter().map(|&event| WorkerAdaptationEvent { worker: s.worker, event })
+            })
+            .collect();
+        adaptation_events.sort_by_key(|e| (e.worker, e.event.access, e.event.window));
 
         ServeReport {
             sessions_admitted: admitted,
@@ -498,6 +668,7 @@ pub fn serve(
             adapt_windows,
             drift_events,
             throttled_windows,
+            adaptation_events,
         }
     })
 }
@@ -557,5 +728,59 @@ mod tests {
         let rep = serve(&cfg, 1, || PredictorBox::Heuristic(HeuristicPredictor));
         assert!(rep.sessions_completed >= 10, "completed {}", rep.sessions_completed);
         assert!(rep.adapt_windows > 0, "workers must harvest telemetry windows");
+    }
+
+    #[test]
+    fn serve_with_bus_streams_worker_windows_and_reports_events() {
+        let mut cfg = ServeConfig::quick("acpc");
+        cfg.total_sessions = 12;
+        cfg.adaptive = true;
+        cfg.adapt = crate::adapt::ControllerConfig::quick();
+        cfg.adapt.window_accesses = 1024;
+        let bus = TelemetryBus::new();
+        let mut sub = bus.subscribe();
+        let rep = serve_with_bus(
+            &cfg,
+            1,
+            || PredictorBox::Heuristic(HeuristicPredictor),
+            Some(&bus),
+        );
+        assert!(rep.adapt_windows > 0, "workers must harvest telemetry windows");
+
+        let mut events = Vec::new();
+        sub.drain(&mut events);
+        let windows = events
+            .iter()
+            .filter(|e| matches!(e.payload, Payload::Window { .. }))
+            .count() as u64;
+        // Every controller window publishes exactly one Window event (the
+        // ring only drops under a lagging subscriber, not at this scale).
+        if sub.dropped() == 0 {
+            assert_eq!(windows, rep.adapt_windows);
+        }
+        assert!(windows > 0, "window events must reach the bus");
+        assert!(events.iter().all(|e| e.source.kind == crate::obs::SourceKind::Serve));
+
+        // The report carries the full per-worker event list, sorted.
+        assert!(rep
+            .adaptation_events
+            .windows(2)
+            .all(|p| (p[0].worker, p[0].event.access) <= (p[1].worker, p[1].event.access)));
+        let j = rep.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SERVE_SCHEMA));
+        assert_eq!(
+            j.get("adaptation_events").unwrap().as_arr().unwrap().len(),
+            rep.adaptation_events.len()
+        );
+    }
+
+    #[test]
+    fn serve_with_dashboard_port_completes_clean() {
+        let mut cfg = ServeConfig::quick("srrip");
+        cfg.total_sessions = 6;
+        cfg.dashboard_port = Some(0); // free port; endpoint exercised via obs::http tests
+        cfg.dashboard_linger = Duration::ZERO;
+        let rep = serve(&cfg, 0, || PredictorBox::None);
+        assert_eq!(rep.sessions_admitted, 6);
     }
 }

@@ -32,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod mem;
 pub mod metrics;
+pub mod obs;
 pub mod policy;
 pub mod predictor;
 pub mod runtime;

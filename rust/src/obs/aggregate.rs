@@ -1,0 +1,365 @@
+//! Subscriber-side aggregation: fold a telemetry stream into per-source
+//! live state, render the monitor table, and compute the composite cache
+//! health score.
+//!
+//! Both consumers of the stream — `acpc monitor` and the serve
+//! coordinator's `/metrics.json` dashboard endpoint — share this one
+//! folder, so the table a terminal shows and the JSON a dashboard serves
+//! can never disagree.
+//!
+//! ## Cache health score
+//!
+//! A composite in `[0, 1]` per source, weighing the three signals the
+//! paper's controller acts on:
+//!
+//! ```text
+//! health = 0.5 * hit_rate                 (latest window, else cumulative sample)
+//!        + 0.3 * (1 - min(1, pollution))
+//!        + 0.2 * stability
+//! stability = 0                            while throttled
+//!           = min(1, windows_since_last_drift / 8)   after a drift
+//!           = 1                            with no drift observed
+//! ```
+//!
+//! Hit rate dominates (it is the paper's primary metric), pollution is the
+//! signal ACPC exists to suppress, and drift-recency makes a recently
+//! destabilized source visibly "unhealthy" even after its averages recover.
+
+use super::event::{Payload, SourceId, TelemetryEvent};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Health-score weights (documented in the module docs and the README).
+pub const HEALTH_WEIGHT_HIT: f64 = 0.5;
+pub const HEALTH_WEIGHT_POLLUTION: f64 = 0.3;
+pub const HEALTH_WEIGHT_STABILITY: f64 = 0.2;
+/// Windows of drift-free operation for stability to fully recover.
+pub const HEALTH_STABILITY_WINDOWS: u64 = 8;
+
+/// Live state of one event source, folded from its stream.
+#[derive(Debug, Clone, Default)]
+pub struct SourceState {
+    /// Events seen from this source.
+    pub events: u64,
+    /// Highest per-source sequence number seen.
+    pub last_seq: u64,
+    /// Source engine's access count at the last event.
+    pub access: u64,
+    /// Telemetry windows seen (window events).
+    pub windows: u64,
+    /// Latest window hit rate / pollution (NaN before the first window or
+    /// sample).
+    pub hit_rate: f64,
+    pub pollution: f64,
+    /// Latest sampled L2 occupancy (NaN before the first sample).
+    pub occupancy: f64,
+    /// Index of the latest harvested window (for drift recency).
+    pub last_window_index: u64,
+    pub drift_events: u64,
+    /// Window index of the most recent drift, if any.
+    pub last_drift_window: Option<u64>,
+    pub retrains: u64,
+    pub throttles: u64,
+    pub resumes: u64,
+    pub throttled: bool,
+}
+
+impl SourceState {
+    fn new() -> SourceState {
+        let nan = f64::NAN;
+        SourceState { hit_rate: nan, pollution: nan, occupancy: nan, ..Default::default() }
+    }
+
+    /// Composite cache health score in `[0, 1]` (see the module docs).
+    pub fn health(&self) -> f64 {
+        let hit = if self.hit_rate.is_finite() { self.hit_rate.clamp(0.0, 1.0) } else { 0.0 };
+        let pollution =
+            if self.pollution.is_finite() { self.pollution.clamp(0.0, 1.0) } else { 0.0 };
+        let stability = if self.throttled {
+            0.0
+        } else {
+            match self.last_drift_window {
+                Some(d) => {
+                    let since = self.last_window_index.saturating_sub(d);
+                    (since as f64 / HEALTH_STABILITY_WINDOWS as f64).min(1.0)
+                }
+                None => 1.0,
+            }
+        };
+        HEALTH_WEIGHT_HIT * hit
+            + HEALTH_WEIGHT_POLLUTION * (1.0 - pollution)
+            + HEALTH_WEIGHT_STABILITY * stability
+    }
+
+    /// One-word controller state for the monitor table.
+    pub fn state_label(&self) -> &'static str {
+        if self.throttled {
+            "throttled"
+        } else if self.last_drift_window.is_some()
+            && self.last_window_index.saturating_sub(self.last_drift_window.unwrap_or(0))
+                < HEALTH_STABILITY_WINDOWS
+        {
+            "recovering"
+        } else {
+            "ok"
+        }
+    }
+}
+
+/// Aggregated monitor state: every source seen so far, in deterministic
+/// (`BTreeMap`) order, plus stream-level accounting.
+#[derive(Debug, Clone, Default)]
+pub struct MonitorState {
+    sources: BTreeMap<SourceId, SourceState>,
+    /// Events folded in.
+    pub events: u64,
+    /// Events the feeding subscriber reported dropped (set by the caller).
+    pub dropped: u64,
+}
+
+impl MonitorState {
+    pub fn new() -> MonitorState {
+        MonitorState::default()
+    }
+
+    pub fn sources(&self) -> impl Iterator<Item = (&SourceId, &SourceState)> {
+        self.sources.iter()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sources.is_empty()
+    }
+
+    /// Fold one event in.
+    pub fn apply(&mut self, ev: &TelemetryEvent) {
+        self.events += 1;
+        let s = self.sources.entry(ev.source).or_insert_with(SourceState::new);
+        s.events += 1;
+        s.last_seq = s.last_seq.max(ev.seq);
+        s.access = s.access.max(ev.access);
+        match &ev.payload {
+            Payload::Window { stats, throttled } => {
+                s.windows += 1;
+                s.last_window_index = stats.index;
+                s.hit_rate = stats.hit_rate;
+                s.pollution = stats.pollution;
+                s.throttled = *throttled;
+            }
+            Payload::Drift { window } => {
+                s.drift_events += 1;
+                s.last_drift_window = Some(*window);
+            }
+            Payload::Adaptation(e) => {
+                use crate::adapt::AdaptationAction;
+                match e.action {
+                    AdaptationAction::Retrain { .. } => {
+                        s.retrains += 1;
+                        s.throttled = false;
+                    }
+                    AdaptationAction::Throttle => {
+                        s.throttles += 1;
+                        s.throttled = true;
+                    }
+                    AdaptationAction::Resume => {
+                        s.resumes += 1;
+                        s.throttled = false;
+                    }
+                }
+            }
+            Payload::Sample { occupancy, hit_rate, pollution, throttled } => {
+                s.occupancy = *occupancy;
+                // Windows carry sharper (per-window) signals; only fall
+                // back to cumulative sample rates for sources that never
+                // emit windows (non-adaptive runs).
+                if s.windows == 0 {
+                    s.hit_rate = *hit_rate;
+                    s.pollution = *pollution;
+                }
+                s.throttled = *throttled;
+            }
+        }
+    }
+
+    /// The dashboard's `/metrics.json` body (schema `acpc-metrics-v1`):
+    /// per-source snapshots with health scores plus stream accounting.
+    pub fn metrics_json(&self) -> Json {
+        let sources: Vec<Json> = self
+            .sources
+            .iter()
+            .map(|(id, s)| {
+                let mut j = Json::from_pairs(vec![
+                    ("source", Json::Str(id.label())),
+                    ("events", Json::Num(s.events as f64)),
+                    ("last_seq", Json::Num(s.last_seq as f64)),
+                    ("access", Json::Num(s.access as f64)),
+                    ("windows", Json::Num(s.windows as f64)),
+                    ("hit_rate", Json::Num(s.hit_rate)),
+                    ("pollution", Json::Num(s.pollution)),
+                    ("occupancy", Json::Num(s.occupancy)),
+                    ("drift_events", Json::Num(s.drift_events as f64)),
+                    ("retrains", Json::Num(s.retrains as f64)),
+                    ("throttles", Json::Num(s.throttles as f64)),
+                    ("resumes", Json::Num(s.resumes as f64)),
+                    ("throttled", Json::Bool(s.throttled)),
+                    ("state", Json::Str(s.state_label().into())),
+                    ("health", Json::Num(s.health())),
+                ]);
+                if let Some(d) = s.last_drift_window {
+                    j.set("last_drift_window", Json::Num(d as f64));
+                }
+                j
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("schema", Json::Str("acpc-metrics-v1".into())),
+            ("events", Json::Num(self.events as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("sources", Json::Arr(sources)),
+        ])
+    }
+
+    /// Render the refreshing monitor table.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let header = format!(
+            "{:<9} {:>10} {:>7} {:>6} {:>6} {:>5} {:>4} {:>4} {:>4} {:<10} {:>6}\n",
+            "source", "access", "windows", "hit", "poll", "occ", "drft", "rtrn", "thr", "state",
+            "health"
+        );
+        out.push_str(&header);
+        out.push_str(&"-".repeat(header.len().saturating_sub(1)));
+        out.push('\n');
+        let pct = |v: f64| if v.is_finite() { format!("{:.1}%", v * 100.0) } else { "-".into() };
+        for (id, s) in &self.sources {
+            out.push_str(&format!(
+                "{:<9} {:>10} {:>7} {:>6} {:>6} {:>5} {:>4} {:>4} {:>4} {:<10} {:>6.3}\n",
+                id.label(),
+                s.access,
+                s.windows,
+                pct(s.hit_rate),
+                pct(s.pollution),
+                pct(s.occupancy),
+                s.drift_events,
+                s.retrains,
+                s.throttles,
+                s.state_label(),
+                s.health(),
+            ));
+        }
+        out.push_str(&format!("events={} dropped={}\n", self.events, self.dropped));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::{AdaptationAction, AdaptationEvent, WindowStats};
+
+    fn window(index: u64, hit: f64, pollution: f64) -> Payload {
+        Payload::Window {
+            stats: WindowStats {
+                index,
+                accesses: 8192,
+                l2_demand: 1000,
+                hit_rate: hit,
+                pollution,
+                prefetch_accuracy: 0.5,
+                reuse_p50_log2: 8,
+            },
+            throttled: false,
+        }
+    }
+
+    fn ev(source: SourceId, seq: u64, payload: Payload) -> TelemetryEvent {
+        TelemetryEvent { source, seq, access: (seq + 1) * 8192, payload }
+    }
+
+    #[test]
+    fn health_score_composition() {
+        let mut m = MonitorState::new();
+        let s = SourceId::sim(0);
+        m.apply(&ev(s, 0, window(0, 0.8, 0.1)));
+        let st = m.sources.get(&s).unwrap();
+        // No drift, not throttled: 0.5*0.8 + 0.3*0.9 + 0.2*1.0
+        assert!((st.health() - (0.4 + 0.27 + 0.2)).abs() < 1e-12);
+        assert_eq!(st.state_label(), "ok");
+
+        // A drift zeroes stability proportionally to recency.
+        m.apply(&ev(s, 1, Payload::Drift { window: 0 }));
+        let st = m.sources.get(&s).unwrap();
+        assert!((st.health() - (0.4 + 0.27)).abs() < 1e-12, "fresh drift → stability 0");
+        assert_eq!(st.state_label(), "recovering");
+
+        // 8 clean windows later stability is fully recovered.
+        for i in 1..=8 {
+            m.apply(&ev(s, 1 + i, window(i, 0.8, 0.1)));
+        }
+        let st = m.sources.get(&s).unwrap();
+        assert!((st.health() - (0.4 + 0.27 + 0.2)).abs() < 1e-12);
+        assert_eq!(st.state_label(), "ok");
+    }
+
+    #[test]
+    fn throttle_zeroes_stability_until_resume() {
+        let mut m = MonitorState::new();
+        let s = SourceId::serve(1);
+        m.apply(&ev(s, 0, window(0, 0.6, 0.0)));
+        let act = |action| {
+            Payload::Adaptation(AdaptationEvent {
+                window: 1,
+                access: 16384,
+                action,
+                hit_rate: 0.5,
+                predictor_version: 1,
+            })
+        };
+        m.apply(&ev(s, 1, act(AdaptationAction::Throttle)));
+        let st = m.sources.get(&s).unwrap();
+        assert!(st.throttled);
+        assert_eq!(st.state_label(), "throttled");
+        assert!((st.health() - (0.3 + 0.3)).abs() < 1e-12);
+        m.apply(&ev(s, 2, act(AdaptationAction::Resume)));
+        assert!(!m.sources.get(&s).unwrap().throttled);
+    }
+
+    #[test]
+    fn samples_feed_sources_without_windows_only() {
+        let mut m = MonitorState::new();
+        let s = SourceId::sim(2);
+        let sample = Payload::Sample {
+            occupancy: 0.9,
+            hit_rate: 0.7,
+            pollution: 0.05,
+            throttled: false,
+        };
+        m.apply(&ev(s, 0, sample));
+        assert!((m.sources.get(&s).unwrap().hit_rate - 0.7).abs() < 1e-12);
+        // Once a window arrives, its per-window rate wins over cumulative.
+        m.apply(&ev(s, 1, window(0, 0.5, 0.0)));
+        m.apply(&ev(s, 2, sample));
+        assert!((m.sources.get(&s).unwrap().hit_rate - 0.5).abs() < 1e-12);
+        assert!((m.sources.get(&s).unwrap().occupancy - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_json_shape_and_table_render() {
+        let mut m = MonitorState::new();
+        m.apply(&ev(SourceId::sim(0), 0, window(0, 0.8, 0.1)));
+        m.apply(&ev(SourceId::sim(1), 0, window(0, 0.7, 0.2)));
+        m.dropped = 3;
+        let j = m.metrics_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("acpc-metrics-v1"));
+        assert_eq!(j.get("events").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("dropped").unwrap().as_f64(), Some(3.0));
+        let sources = j.get("sources").unwrap().as_arr().unwrap();
+        assert_eq!(sources.len(), 2);
+        for s in sources {
+            assert!(s.get("health").unwrap().as_f64().is_some());
+            assert!(s.get("state").unwrap().as_str().is_some());
+        }
+        let table = m.render_table();
+        assert!(table.contains("sim/0") && table.contains("sim/1"));
+        assert!(table.contains("dropped=3"));
+    }
+}

@@ -1,0 +1,348 @@
+//! Lock-free broadcast ring: bounded, drop-counting, zero-allocation
+//! publish.
+//!
+//! The bus is a power-of-two array of seqlock-guarded slots over a single
+//! monotone ticket counter (`tail`). A publisher claims ticket `t` with one
+//! `fetch_add`, marks slot `t & mask` as *writing* (`2t+1`), memcpys the
+//! `Copy` event in, and marks it *ready* (`2t+2`). No locks, no waiting, no
+//! heap: a full ring overwrites the oldest slot instead of blocking the
+//! simulation hot path (observation must never perturb the run).
+//!
+//! Subscribers are independent cursors. A subscriber that keeps up sees
+//! every event in ticket order; one that falls more than a ring's capacity
+//! behind loses the oldest events and *counts* them
+//! ([`TelemetrySubscriber::dropped`]) — losses are always accounted, never
+//! silent, and a torn slot (overwritten mid-read, detected by seq
+//! revalidation) is likewise counted and skipped, never surfaced.
+//!
+//! Slot payload reads/writes use volatile copies guarded by the per-slot
+//! sequence word (crossbeam's seqlock discipline): writers bump to odd
+//! before touching the payload and to even after, readers validate the
+//! sequence on both sides of the copy and discard racy reads.
+
+use super::event::{SourceId, TelemetryEvent};
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Default ring capacity (events). Enough to absorb a full adaptive sweep
+/// cell's event stream without drops when the subscriber polls at any
+/// human-scale interval.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+struct Slot {
+    /// Seqlock word: `0` = never written; `2t+1` = ticket `t` being
+    /// written; `2t+2` = ticket `t` ready.
+    seq: AtomicU64,
+    data: UnsafeCell<MaybeUninit<TelemetryEvent>>,
+}
+
+struct Inner {
+    mask: u64,
+    /// Next ticket to claim == total events ever published.
+    tail: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+// Slot payloads are `Copy` + `Send`; all cross-thread access is mediated by
+// the seqlock words.
+unsafe impl Send for Inner {}
+unsafe impl Sync for Inner {}
+
+/// The shared telemetry bus. Cheap to clone (an `Arc` around the ring);
+/// create publishers with [`publisher`](Self::publisher) and cursors with
+/// [`subscribe`](Self::subscribe).
+#[derive(Clone)]
+pub struct TelemetryBus {
+    inner: Arc<Inner>,
+}
+
+impl Default for TelemetryBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TelemetryBus {
+    /// Bus with the [`DEFAULT_CAPACITY`].
+    pub fn new() -> TelemetryBus {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Bus holding at least `capacity` events (rounded up to a power of
+    /// two, minimum 2).
+    pub fn with_capacity(capacity: usize) -> TelemetryBus {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot { seq: AtomicU64::new(0), data: UnsafeCell::new(MaybeUninit::uninit()) })
+            .collect();
+        TelemetryBus {
+            inner: Arc::new(Inner {
+                mask: cap as u64 - 1,
+                tail: AtomicU64::new(0),
+                slots: slots.into_boxed_slice(),
+            }),
+        }
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.inner.mask as usize + 1
+    }
+
+    /// Total events ever published (monotone; independent of subscribers).
+    pub fn published(&self) -> u64 {
+        self.inner.tail.load(Ordering::Acquire)
+    }
+
+    /// A publisher handle for one event source. The handle owns the
+    /// source's monotone sequence counter, so create exactly one per
+    /// (shard, worker, …) stream — two handles for the same source would
+    /// interleave duplicate sequence numbers.
+    pub fn publisher(&self, source: SourceId) -> TelemetryPublisher {
+        TelemetryPublisher { inner: Arc::clone(&self.inner), source, seq: 0 }
+    }
+
+    /// A cursor starting at the current bus position (future events only).
+    pub fn subscribe(&self) -> TelemetrySubscriber {
+        TelemetrySubscriber {
+            cursor: self.inner.tail.load(Ordering::Acquire),
+            inner: Arc::clone(&self.inner),
+            dropped: 0,
+        }
+    }
+}
+
+fn publish_inner(inner: &Inner, ev: TelemetryEvent) {
+    let t = inner.tail.fetch_add(1, Ordering::AcqRel);
+    let slot = &inner.slots[(t & inner.mask) as usize];
+    slot.seq.store(2 * t + 1, Ordering::Relaxed);
+    fence(Ordering::Release);
+    // SAFETY: between the odd and even seq stores this writer owns the
+    // payload; concurrent readers revalidate seq and discard torn copies,
+    // and a lapped writer racing on the same slot resolves through the seq
+    // word too (readers accept a slot only when seq exactly matches the
+    // ticket they expect).
+    unsafe { std::ptr::write_volatile((*slot.data.get()).as_mut_ptr(), ev) };
+    slot.seq.store(2 * t + 2, Ordering::Release);
+}
+
+/// Write handle for one source's event stream. Not `Clone` — the per-source
+/// sequence counter must have a single owner (see
+/// [`TelemetryBus::publisher`]). `Send`, so shard/worker threads can own
+/// theirs.
+pub struct TelemetryPublisher {
+    inner: Arc<Inner>,
+    source: SourceId,
+    seq: u64,
+}
+
+impl TelemetryPublisher {
+    pub fn source(&self) -> SourceId {
+        self.source
+    }
+
+    /// Events published through this handle so far (== the next seq).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Publish one payload, stamping the source identity and the next
+    /// per-source sequence number. Never blocks, never allocates.
+    pub fn publish(&mut self, access: u64, payload: super::event::Payload) {
+        let ev = TelemetryEvent { source: self.source, seq: self.seq, access, payload };
+        self.seq += 1;
+        publish_inner(&self.inner, ev);
+    }
+}
+
+/// Read cursor over the bus. Each subscriber advances independently;
+/// falling behind loses the oldest events (counted in
+/// [`dropped`](Self::dropped)), and the simulation is never back-pressured.
+pub struct TelemetrySubscriber {
+    inner: Arc<Inner>,
+    /// Next ticket to read.
+    cursor: u64,
+    dropped: u64,
+}
+
+impl TelemetrySubscriber {
+    /// Events this cursor has lost to ring wrap-around (bounded-buffer
+    /// drop accounting).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Events currently available without blocking (approximate under
+    /// concurrent publishing).
+    pub fn backlog(&self) -> u64 {
+        self.inner.tail.load(Ordering::Acquire).saturating_sub(self.cursor)
+    }
+
+    /// Next event, or `None` when caught up (or the next ticket is still
+    /// being written). Skips over — and counts — events lost to wrap.
+    pub fn poll(&mut self) -> Option<TelemetryEvent> {
+        loop {
+            let tail = self.inner.tail.load(Ordering::Acquire);
+            if self.cursor >= tail {
+                return None;
+            }
+            // More than a ring behind: the oldest backlog is gone.
+            let cap = self.inner.mask + 1;
+            if tail - self.cursor > cap {
+                let skip = tail - cap - self.cursor;
+                self.dropped += skip;
+                self.cursor += skip;
+            }
+            let t = self.cursor;
+            let slot = &self.inner.slots[(t & self.inner.mask) as usize];
+            let ready = 2 * t + 2;
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == ready {
+                // SAFETY: seq said ticket t is ready; the copy is validated
+                // below — a concurrent overwrite flips seq first, so a
+                // matching re-read proves the copy was not torn.
+                let ev = unsafe { std::ptr::read_volatile((*slot.data.get()).as_ptr()) };
+                fence(Ordering::Acquire);
+                if slot.seq.load(Ordering::Relaxed) == ready {
+                    self.cursor += 1;
+                    return Some(ev);
+                }
+                // Overwritten mid-read: ticket t is lost.
+                self.dropped += 1;
+                self.cursor += 1;
+            } else if s1 < ready {
+                // Claimed but not yet ready (writer mid-flight).
+                return None;
+            } else {
+                // A later ticket already owns the slot: t was lapped.
+                self.dropped += 1;
+                self.cursor += 1;
+            }
+        }
+    }
+
+    /// Drain everything currently available into `out`; returns the number
+    /// of events appended.
+    pub fn drain(&mut self, out: &mut Vec<TelemetryEvent>) -> usize {
+        let mut n = 0;
+        while let Some(ev) = self.poll() {
+            out.push(ev);
+            n += 1;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::Payload;
+
+    fn sample(p: u64) -> Payload {
+        Payload::Sample { occupancy: 1.0, hit_rate: p as f64, pollution: 0.0, throttled: false }
+    }
+
+    #[test]
+    fn publish_poll_in_order_with_source_seqs() {
+        let bus = TelemetryBus::with_capacity(64);
+        let mut sub = bus.subscribe();
+        let mut p = bus.publisher(SourceId::sim(0));
+        for i in 0..10 {
+            p.publish(i * 100, sample(i));
+        }
+        assert_eq!(bus.published(), 10);
+        let mut got = Vec::new();
+        sub.drain(&mut got);
+        assert_eq!(got.len(), 10);
+        for (i, ev) in got.iter().enumerate() {
+            assert_eq!(ev.seq, i as u64);
+            assert_eq!(ev.access, i as u64 * 100);
+            assert_eq!(ev.source, SourceId::sim(0));
+        }
+        assert_eq!(sub.dropped(), 0);
+        assert!(sub.poll().is_none());
+    }
+
+    #[test]
+    fn slow_subscriber_drops_oldest_and_accounts() {
+        let bus = TelemetryBus::with_capacity(8);
+        let mut sub = bus.subscribe();
+        let mut p = bus.publisher(SourceId::sim(0));
+        for i in 0..100 {
+            p.publish(i, sample(i));
+        }
+        let mut got = Vec::new();
+        sub.drain(&mut got);
+        assert_eq!(got.len(), 8, "only one ring's worth survives");
+        assert_eq!(sub.dropped(), 92, "every lost event is counted");
+        // The survivors are the newest, in order.
+        let seqs: Vec<u64> = got.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (92..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn subscribers_are_independent_cursors() {
+        let bus = TelemetryBus::with_capacity(32);
+        let mut a = bus.subscribe();
+        let mut p = bus.publisher(SourceId::sim(0));
+        p.publish(0, sample(0));
+        // b subscribes after the first event: sees only what follows.
+        let mut b = bus.subscribe();
+        p.publish(1, sample(1));
+        let (mut va, mut vb) = (Vec::new(), Vec::new());
+        a.drain(&mut va);
+        b.drain(&mut vb);
+        assert_eq!(va.len(), 2);
+        assert_eq!(vb.len(), 1);
+        assert_eq!(vb[0].seq, 1);
+    }
+
+    #[test]
+    fn concurrent_publishers_lose_nothing_when_ring_is_big_enough() {
+        let bus = TelemetryBus::with_capacity(4096);
+        let mut sub = bus.subscribe();
+        let threads = 4;
+        let per = 500u64;
+        std::thread::scope(|s| {
+            for k in 0..threads {
+                let mut p = bus.publisher(SourceId::sim(k));
+                s.spawn(move || {
+                    for i in 0..per {
+                        p.publish(i, sample(i));
+                    }
+                });
+            }
+        });
+        let mut got = Vec::new();
+        sub.drain(&mut got);
+        assert_eq!(got.len(), (threads as u64 * per) as usize);
+        assert_eq!(sub.dropped(), 0);
+        // Per-source streams are gapless and ordered even though the global
+        // interleave is arbitrary.
+        for k in 0..threads {
+            let seqs: Vec<u64> =
+                got.iter().filter(|e| e.source == SourceId::sim(k)).map(|e| e.seq).collect();
+            assert_eq!(seqs, (0..per).collect::<Vec<u64>>(), "source {k}");
+        }
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(TelemetryBus::with_capacity(100).capacity(), 128);
+        assert_eq!(TelemetryBus::with_capacity(1).capacity(), 2);
+        assert_eq!(TelemetryBus::new().capacity(), DEFAULT_CAPACITY);
+    }
+
+    #[test]
+    fn raw_publish_preserves_stamped_event() {
+        let bus = TelemetryBus::with_capacity(4);
+        let mut sub = bus.subscribe();
+        publish_inner(
+            &bus.inner,
+            TelemetryEvent { source: SourceId::serve(0), seq: 7, access: 1, payload: sample(1) },
+        );
+        assert_eq!(sub.poll().unwrap().seq, 7);
+    }
+}

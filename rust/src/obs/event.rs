@@ -1,0 +1,328 @@
+//! Telemetry event model (wire schema `acpc-telemetry-v1`).
+//!
+//! A [`TelemetryEvent`] is a fixed-size `Copy` value: publishing one onto
+//! the [`super::TelemetryBus`] is a plain memcpy into a pre-allocated ring
+//! slot — no `String`, no `Vec`, no heap traffic on the hot path (asserted
+//! by `tests/alloc_publish.rs`). Serialization to JSON/NDJSON happens only
+//! on the *subscriber* side (the monitor, the dashboard), never where the
+//! event is produced.
+//!
+//! Every event is tagged with its [`SourceId`] (which shard/worker of which
+//! subsystem emitted it) and a per-source sequence number that the
+//! publisher derives monotonically — so for a fixed spec and seed, the
+//! `(source, seq) → payload` mapping is deterministic across reruns even
+//! though the *global* interleaving on the bus is transport-order only.
+//! Streams from different sources merge without coordination: sort by
+//! `(source, seq)`.
+
+use crate::adapt::{AdaptationEvent, WindowStats};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Wire-schema tag carried by every serialized event line.
+pub const TELEMETRY_SCHEMA: &str = "acpc-telemetry-v1";
+
+/// Which subsystem an event came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SourceKind {
+    /// A batch-simulation shard (shard 0 covers the single-threaded path).
+    Sim,
+    /// A serving-coordinator worker.
+    Serve,
+}
+
+impl SourceKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SourceKind::Sim => "sim",
+            SourceKind::Serve => "serve",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" => Ok(SourceKind::Sim),
+            "serve" => Ok(SourceKind::Serve),
+            other => bail!("telemetry source kind '{other}' (expected sim|serve)"),
+        }
+    }
+}
+
+/// Identity of one event stream: subsystem + shard/worker index. Renders as
+/// `sim/3` or `serve/0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SourceId {
+    pub kind: SourceKind,
+    pub index: u32,
+}
+
+impl SourceId {
+    /// Simulation shard `k` (0 for single-threaded runs).
+    pub fn sim(k: usize) -> SourceId {
+        SourceId { kind: SourceKind::Sim, index: k as u32 }
+    }
+
+    /// Serving-coordinator worker `w`.
+    pub fn serve(w: usize) -> SourceId {
+        SourceId { kind: SourceKind::Serve, index: w as u32 }
+    }
+
+    /// `kind/index` label (allocates — subscriber-side only).
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.kind.label(), self.index)
+    }
+
+    /// Inverse of [`Self::label`].
+    pub fn parse(s: &str) -> Result<SourceId> {
+        let (kind, index) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow!("telemetry source '{s}': expected kind/index"))?;
+        Ok(SourceId {
+            kind: SourceKind::parse(kind)?,
+            index: index.parse().map_err(|_| anyhow!("telemetry source '{s}': bad index"))?,
+        })
+    }
+}
+
+/// What happened. All variants are `Copy` — see the module docs.
+#[derive(Debug, Clone, Copy)]
+pub enum Payload {
+    /// A controller telemetry window was harvested.
+    Window { stats: WindowStats, throttled: bool },
+    /// The Page–Hinkley drift detector fired at `window`.
+    Drift { window: u64 },
+    /// The controller acted (retrain / throttle / resume).
+    Adaptation(AdaptationEvent),
+    /// Periodic cache-health sample (cumulative counters), emitted every
+    /// [`SAMPLE_PERIOD`](crate::obs::SAMPLE_PERIOD) accesses — the only
+    /// event kind non-adaptive runs produce.
+    Sample { occupancy: f64, hit_rate: f64, pollution: f64, throttled: bool },
+}
+
+impl Payload {
+    /// The serialized `type` tag.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Window { .. } => "window",
+            Payload::Drift { .. } => "drift",
+            Payload::Adaptation(_) => "adaptation",
+            Payload::Sample { .. } => "sample",
+        }
+    }
+}
+
+/// One telemetry event: source identity, per-source sequence number, the
+/// emitting engine's access count, and the payload.
+#[derive(Debug, Clone, Copy)]
+pub struct TelemetryEvent {
+    pub source: SourceId,
+    /// Monotone per-source sequence number (0-based), assigned by the
+    /// publisher handle — deterministic across reruns of the same spec.
+    pub seq: u64,
+    /// Source engine's access count when the event was emitted.
+    pub access: u64,
+    pub payload: Payload,
+}
+
+impl TelemetryEvent {
+    /// Serialize to one `acpc-telemetry-v1` JSON object (one NDJSON line
+    /// via [`Json::to_string`]).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::from_pairs(vec![
+            ("schema", Json::Str(TELEMETRY_SCHEMA.into())),
+            ("source", Json::Str(self.source.label())),
+            ("seq", Json::Num(self.seq as f64)),
+            ("access", Json::Num(self.access as f64)),
+            ("type", Json::Str(self.payload.kind().into())),
+        ]);
+        match &self.payload {
+            Payload::Window { stats, throttled } => {
+                j.set("window", stats.to_json());
+                j.set("throttled", Json::Bool(*throttled));
+            }
+            Payload::Drift { window } => {
+                j.set("window", Json::Num(*window as f64));
+            }
+            Payload::Adaptation(e) => {
+                j.set("event", e.to_json());
+            }
+            Payload::Sample { occupancy, hit_rate, pollution, throttled } => {
+                j.set("occupancy", Json::Num(*occupancy));
+                j.set("hit_rate", Json::Num(*hit_rate));
+                j.set("pollution", Json::Num(*pollution));
+                j.set("throttled", Json::Bool(*throttled));
+            }
+        }
+        j
+    }
+
+    /// Inverse of [`Self::to_json`]: parse + schema-validate one event
+    /// object (the `acpc monitor --validate` / `--attach` decode path).
+    pub fn from_json(j: &Json) -> Result<TelemetryEvent> {
+        match j.req("schema")?.as_str() {
+            Some(TELEMETRY_SCHEMA) => {}
+            other => {
+                bail!("telemetry schema mismatch: expected {TELEMETRY_SCHEMA:?}, got {other:?}")
+            }
+        }
+        let source = SourceId::parse(
+            j.req("source")?.as_str().ok_or_else(|| anyhow!("telemetry source: expected string"))?,
+        )?;
+        let u = |key: &str| -> Result<u64> {
+            j.req(key)?
+                .as_f64()
+                .filter(|v| v.is_finite() && *v >= 0.0 && v.fract() == 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow!("telemetry.{key}: expected non-negative integer"))
+        };
+        let f = |key: &str| -> Result<f64> {
+            match j.req(key)? {
+                Json::Null => Ok(f64::NAN),
+                v => v.as_f64().ok_or_else(|| anyhow!("telemetry.{key}: expected number")),
+            }
+        };
+        let b = |key: &str| -> Result<bool> {
+            j.req(key)?.as_bool().ok_or_else(|| anyhow!("telemetry.{key}: expected bool"))
+        };
+        let payload = match j.req("type")?.as_str() {
+            Some("window") => Payload::Window {
+                stats: WindowStats::from_json(j.req("window")?)?,
+                throttled: b("throttled")?,
+            },
+            Some("drift") => Payload::Drift { window: u("window")? },
+            Some("adaptation") => Payload::Adaptation(AdaptationEvent::from_json(j.req("event")?)?),
+            Some("sample") => Payload::Sample {
+                occupancy: f("occupancy")?,
+                hit_rate: f("hit_rate")?,
+                pollution: f("pollution")?,
+                throttled: b("throttled")?,
+            },
+            other => bail!("telemetry.type: unknown event type {other:?}"),
+        };
+        Ok(TelemetryEvent { source, seq: u("seq")?, access: u("access")?, payload })
+    }
+}
+
+/// Validate an NDJSON telemetry stream: every non-empty line must parse as
+/// a schema-`acpc-telemetry-v1` event, and per-source sequence numbers must
+/// be strictly increasing. Returns the number of validated events.
+/// (`acpc monitor --validate`, also the CI smoke gate.)
+pub fn validate_ndjson(text: &str) -> Result<usize> {
+    use std::collections::BTreeMap;
+    let mut last_seq: BTreeMap<SourceId, u64> = BTreeMap::new();
+    let mut n = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        let ev = TelemetryEvent::from_json(&j).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        if let Some(&prev) = last_seq.get(&ev.source) {
+            if ev.seq <= prev {
+                bail!(
+                    "line {}: source {} seq {} not strictly increasing (prev {})",
+                    lineno + 1,
+                    ev.source.label(),
+                    ev.seq,
+                    prev
+                );
+            }
+        }
+        last_seq.insert(ev.source, ev.seq);
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::AdaptationAction;
+
+    fn sample_events() -> Vec<TelemetryEvent> {
+        let w = WindowStats {
+            index: 3,
+            accesses: 8192,
+            l2_demand: 4000,
+            hit_rate: 0.71,
+            pollution: 0.04,
+            prefetch_accuracy: 0.5,
+            reuse_p50_log2: 9,
+        };
+        vec![
+            TelemetryEvent {
+                source: SourceId::sim(0),
+                seq: 0,
+                access: 32768,
+                payload: Payload::Window { stats: w, throttled: false },
+            },
+            TelemetryEvent {
+                source: SourceId::sim(0),
+                seq: 1,
+                access: 32768,
+                payload: Payload::Drift { window: 3 },
+            },
+            TelemetryEvent {
+                source: SourceId::serve(2),
+                seq: 0,
+                access: 40960,
+                payload: Payload::Adaptation(AdaptationEvent {
+                    window: 4,
+                    access: 40960,
+                    action: AdaptationAction::Throttle,
+                    hit_rate: 0.41,
+                    predictor_version: 1,
+                }),
+            },
+            TelemetryEvent {
+                source: SourceId::serve(2),
+                seq: 1,
+                access: 49152,
+                payload: Payload::Sample {
+                    occupancy: 0.97,
+                    hit_rate: 0.66,
+                    pollution: 0.02,
+                    throttled: true,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_exact() {
+        for ev in sample_events() {
+            let text = ev.to_json().to_string();
+            let back = TelemetryEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), text);
+            assert_eq!(back.source, ev.source);
+            assert_eq!(back.seq, ev.seq);
+        }
+    }
+
+    #[test]
+    fn source_labels_roundtrip() {
+        for s in [SourceId::sim(0), SourceId::sim(15), SourceId::serve(3)] {
+            assert_eq!(SourceId::parse(&s.label()).unwrap(), s);
+        }
+        assert!(SourceId::parse("bogus/1").is_err());
+        assert!(SourceId::parse("sim").is_err());
+    }
+
+    #[test]
+    fn ndjson_validation_accepts_valid_and_rejects_defects() {
+        let good: String =
+            sample_events().iter().map(|e| e.to_json().to_string() + "\n").collect();
+        assert_eq!(validate_ndjson(&good).unwrap(), 4);
+        // Blank lines are tolerated.
+        assert_eq!(validate_ndjson(&format!("\n{good}\n")).unwrap(), 4);
+        // Schema mismatch.
+        assert!(validate_ndjson(r#"{"schema":"nope","type":"drift"}"#).is_err());
+        // Truncated JSON.
+        assert!(validate_ndjson(&good[..good.len() / 2]).is_err());
+        // Non-monotone per-source seq.
+        let ev = &sample_events()[1];
+        let dup = format!("{}\n{}\n", ev.to_json().to_string(), ev.to_json().to_string());
+        assert!(validate_ndjson(&dup).is_err());
+    }
+}

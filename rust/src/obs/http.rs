@@ -1,0 +1,325 @@
+//! Dependency-free HTTP/JSON dashboard endpoint (`std::net` only).
+//!
+//! [`start_dashboard`] spawns one background thread that owns a
+//! [`TelemetrySubscriber`]: it continuously drains the bus into a
+//! [`MonitorState`] plus a bounded replay log, and answers plain HTTP/1.1
+//! GETs:
+//!
+//! | route                 | body                                         |
+//! |-----------------------|----------------------------------------------|
+//! | `/health`             | `{"schema":"acpc-dashboard-v1","status":"ok",…}` |
+//! | `/metrics.json`       | [`MonitorState::metrics_json`] (`acpc-metrics-v1`) |
+//! | `/events?since=<n>`   | NDJSON replay of retained events with replay index ≥ n |
+//!
+//! The listener is non-blocking so one thread can interleave accepting
+//! connections with draining the subscriber; requests are served serially
+//! (this is an introspection port, not a serving path). Stop via
+//! [`DashboardHandle::shutdown`], which drains once more and joins.
+
+use super::aggregate::MonitorState;
+use super::bus::TelemetrySubscriber;
+use super::event::TelemetryEvent;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Retained events for `/events` replay; older events are discarded (the
+/// replay index keeps counting, so clients detect the gap).
+const EVENT_LOG_CAP: usize = 65536;
+
+/// Schema tag served by `/health`.
+pub const DASHBOARD_SCHEMA: &str = "acpc-dashboard-v1";
+
+/// Handle to a running dashboard thread. Dropping without calling
+/// [`shutdown`](Self::shutdown) detaches the thread (it stops at the next
+/// poll tick after the flag is set by drop).
+pub struct DashboardHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl DashboardHandle {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the server thread to stop, drain remaining events, and join.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for DashboardHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start the dashboard endpoint on `127.0.0.1:port` (port 0 picks a free
+/// one), serving state folded from `sub`.
+pub fn start_dashboard(port: u16, sub: TelemetrySubscriber) -> Result<DashboardHandle> {
+    let listener = TcpListener::bind(("127.0.0.1", port))
+        .with_context(|| format!("dashboard: bind 127.0.0.1:{port}"))?;
+    listener.set_nonblocking(true).context("dashboard: set_nonblocking")?;
+    let addr = listener.local_addr().context("dashboard: local_addr")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let join = std::thread::Builder::new()
+        .name("acpc-dashboard".into())
+        .spawn(move || serve_loop(listener, sub, stop2))
+        .context("dashboard: spawn server thread")?;
+    Ok(DashboardHandle { addr, stop, join: Some(join) })
+}
+
+struct EventLog {
+    /// Replay index of `buf[0]` (total events ever logged minus retained).
+    base: u64,
+    buf: std::collections::VecDeque<TelemetryEvent>,
+}
+
+impl EventLog {
+    fn push(&mut self, ev: TelemetryEvent) {
+        if self.buf.len() == EVENT_LOG_CAP {
+            self.buf.pop_front();
+            self.base += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    fn ndjson_since(&self, since: u64) -> String {
+        let skip = since.saturating_sub(self.base) as usize;
+        let mut out = String::new();
+        for ev in self.buf.iter().skip(skip) {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn serve_loop(listener: TcpListener, mut sub: TelemetrySubscriber, stop: Arc<AtomicBool>) {
+    let mut state = MonitorState::new();
+    let mut log = EventLog { base: 0, buf: std::collections::VecDeque::new() };
+    let mut scratch = Vec::new();
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        scratch.clear();
+        sub.drain(&mut scratch);
+        for ev in &scratch {
+            state.apply(ev);
+            log.push(*ev);
+        }
+        state.dropped = sub.dropped();
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Err(e) = handle_conn(stream, &state, &log) {
+                    crate::log_debug!("dashboard: connection error: {e:#}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if stopping {
+                    return; // drained once after the flag — safe to exit
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                crate::log_warn!("dashboard: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, state: &MonitorState, log: &EventLog) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(2000)))?;
+    let mut buf = [0u8; 2048];
+    let mut req = Vec::new();
+    // Read until the end of the request head (we ignore any body).
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        req.extend_from_slice(&buf[..n]);
+        if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 16 * 1024 {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&req);
+    let line = head.lines().next().unwrap_or_default();
+    let mut parts = line.split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut stream, 405, "text/plain", "method not allowed\n");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    match path {
+        "/health" => {
+            let body = Json::from_pairs(vec![
+                ("schema", Json::Str(DASHBOARD_SCHEMA.into())),
+                ("status", Json::Str("ok".into())),
+                ("events", Json::Num(state.events as f64)),
+                ("dropped", Json::Num(state.dropped as f64)),
+                ("sources", Json::Num(state.sources().count() as f64)),
+            ]);
+            respond(&mut stream, 200, "application/json", &(body.to_string() + "\n"))
+        }
+        "/metrics.json" => {
+            let body = state.metrics_json().to_pretty() + "\n";
+            respond(&mut stream, 200, "application/json", &body)
+        }
+        "/events" => {
+            let since = query
+                .and_then(|q| {
+                    q.split('&').find_map(|kv| kv.strip_prefix("since=")).map(str::parse::<u64>)
+                })
+                .transpose()
+                .map_err(|_| anyhow!("bad since= value"));
+            match since {
+                Ok(since) => respond(
+                    &mut stream,
+                    200,
+                    "application/x-ndjson",
+                    &log.ndjson_since(since.unwrap_or(0)),
+                ),
+                Err(_) => respond(&mut stream, 400, "text/plain", "bad since= value\n"),
+            }
+        }
+        _ => respond(&mut stream, 404, "text/plain", "not found\n"),
+    }
+}
+
+fn respond(stream: &mut TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\ncontent-type: {ctype}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Minimal HTTP GET returning the response body (the `acpc monitor
+/// --attach` client; also the CI smoke check's fallback to `curl`).
+pub fn http_get(addr: &str, path: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    write!(stream, "GET {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp)?;
+    let text = String::from_utf8_lossy(&resp);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response from {addr}{path}"))?;
+    let status = head.split_whitespace().nth(1).unwrap_or("");
+    if status != "200" {
+        bail!("GET {addr}{path}: HTTP {status}");
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::WindowStats;
+    use crate::obs::event::{Payload, SourceId};
+    use crate::obs::TelemetryBus;
+
+    fn publish_windows(bus: &TelemetryBus, n: u64) {
+        let mut p = bus.publisher(SourceId::sim(0));
+        for i in 0..n {
+            p.publish(
+                (i + 1) * 8192,
+                Payload::Window {
+                    stats: WindowStats {
+                        index: i,
+                        accesses: 8192,
+                        l2_demand: 100,
+                        hit_rate: 0.5,
+                        pollution: 0.1,
+                        prefetch_accuracy: 0.5,
+                        reuse_p50_log2: 8,
+                    },
+                    throttled: false,
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn dashboard_serves_health_metrics_and_events() {
+        let bus = TelemetryBus::new();
+        let handle = start_dashboard(0, bus.subscribe()).unwrap();
+        let addr = handle.addr().to_string();
+        publish_windows(&bus, 5);
+
+        // The server drains asynchronously; retry briefly until folded.
+        let mut health = Json::Null;
+        for _ in 0..100 {
+            let body = http_get(&addr, "/health").unwrap();
+            health = Json::parse(body.trim()).unwrap();
+            if health.get("events").and_then(Json::as_f64) == Some(5.0) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(health.get("schema").unwrap().as_str(), Some(DASHBOARD_SCHEMA));
+        assert_eq!(health.get("events").unwrap().as_f64(), Some(5.0));
+
+        let metrics = Json::parse(http_get(&addr, "/metrics.json").unwrap().trim()).unwrap();
+        assert_eq!(metrics.get("schema").unwrap().as_str(), Some("acpc-metrics-v1"));
+        assert_eq!(metrics.get("sources").unwrap().as_arr().unwrap().len(), 1);
+
+        let ndjson = http_get(&addr, "/events?since=0").unwrap();
+        assert_eq!(crate::obs::validate_ndjson(&ndjson).unwrap(), 5);
+        let tail = http_get(&addr, "/events?since=3").unwrap();
+        assert_eq!(crate::obs::validate_ndjson(&tail).unwrap(), 2);
+
+        assert!(http_get(&addr, "/nope").is_err());
+        handle.shutdown();
+    }
+
+    #[test]
+    fn event_log_replay_indexing() {
+        let mut log = EventLog { base: 0, buf: std::collections::VecDeque::new() };
+        let mk = |seq| TelemetryEvent {
+            source: SourceId::sim(0),
+            seq,
+            access: seq,
+            payload: Payload::Drift { window: seq },
+        };
+        for i in 0..10 {
+            log.push(mk(i));
+        }
+        assert_eq!(log.ndjson_since(0).lines().count(), 10);
+        assert_eq!(log.ndjson_since(7).lines().count(), 3);
+        assert_eq!(log.ndjson_since(99).lines().count(), 0);
+    }
+}

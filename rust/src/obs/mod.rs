@@ -1,0 +1,50 @@
+//! Live observability: a lock-free telemetry bus plus the consumers that
+//! make an in-flight run visible.
+//!
+//! The paper's pitch is that ACPC *recognizes* pollution and drift as they
+//! happen; this module makes that recognition observable while a run or
+//! serve session is in flight instead of only post-hoc in a report.
+//!
+//! ## Architecture
+//!
+//! ```text
+//! AccessDriver ──┐                       ┌── acpc monitor (table / --ndjson)
+//! shard workers ─┤→ TelemetryBus (ring) ─┤── serve dashboard (/health, /metrics.json, /events)
+//! serve workers ─┘        │              └── any TelemetrySubscriber
+//!                    drop-counting,
+//!                    zero-alloc publish
+//! ```
+//!
+//! - [`TelemetryBus`] is a bounded multi-producer broadcast ring
+//!   (seqlock slots). Publishing is wait-free and allocation-free: a
+//!   [`TelemetryEvent`] is `Copy` and lands in a pre-allocated slot.
+//!   Publishers NEVER block on slow subscribers — a lapped subscriber
+//!   skips ahead and counts the overwritten events as
+//!   [`dropped`](TelemetrySubscriber::dropped).
+//! - Events carry a [`SourceId`] (`sim/3`, `serve/0`) and a per-source
+//!   monotone `seq` assigned by the owning [`TelemetryPublisher`], so a
+//!   fixed spec+seed yields the same per-source event sequence on every
+//!   rerun; independent streams merge by sorting on `(source, seq)`.
+//! - Attaching a subscriber must not perturb results: a subscribed run's
+//!   `RunReport` is byte-identical to an unsubscribed one (asserted in
+//!   `tests/integration_obs.rs`).
+//!
+//! The wire schema is [`TELEMETRY_SCHEMA`] (`acpc-telemetry-v1`); see
+//! [`event`] for the event model, [`aggregate`] for the monitor/dashboard
+//! fold (including the composite cache health score), and [`http`] for the
+//! dependency-free dashboard endpoint.
+
+pub mod aggregate;
+pub mod bus;
+pub mod event;
+pub mod http;
+
+pub use aggregate::{MonitorState, SourceState};
+pub use bus::{TelemetryBus, TelemetryPublisher, TelemetrySubscriber};
+pub use event::{validate_ndjson, Payload, SourceId, SourceKind, TelemetryEvent, TELEMETRY_SCHEMA};
+pub use http::{start_dashboard, DashboardHandle};
+
+/// Accesses between periodic [`Payload::Sample`] events on the sim/serve
+/// hot paths. Matches the adaptive controller's default window so adaptive
+/// runs interleave roughly one sample per window.
+pub const SAMPLE_PERIOD: u64 = 8192;

@@ -32,6 +32,7 @@ use crate::adapt::{AdaptiveController, ControlDecision, OnlineLearner, Predictor
 use crate::config::ExperimentConfig;
 use crate::mem::{Hierarchy, HierarchyConfig, ServiceLevel};
 use crate::metrics::MetricsReport;
+use crate::obs::{Payload, TelemetryPublisher};
 use crate::policy::AccessMeta;
 use crate::predictor::{FeatureExtractor, GeometryHints, PredictorBox, FEATURE_DIM};
 use crate::trace::{Access, Workload};
@@ -275,7 +276,7 @@ pub(crate) fn run_workload(
     workload: &mut dyn Workload,
     predictor: &mut PredictorBox,
 ) -> SimResult {
-    run_workload_adaptive(cfg, workload, predictor, None)
+    run_workload_adaptive(cfg, workload, predictor, None, None)
 }
 
 /// The per-access pipeline around one [`Engine`]: feature observation,
@@ -299,6 +300,12 @@ pub(crate) struct AccessDriver<'a> {
     feedback_interval: usize,
     prediction_batches: u64,
     pos: u64,
+    /// Optional telemetry stream for this engine (one source per
+    /// shard/run). Publishing is wait-free and allocation-free, and the
+    /// emission points (window boundaries, fixed sample periods) are
+    /// deterministic functions of the access stream — attaching a bus
+    /// cannot perturb the simulation.
+    publisher: Option<TelemetryPublisher>,
 }
 
 /// What an [`AccessDriver`] accumulated over its run.
@@ -316,6 +323,7 @@ impl<'a> AccessDriver<'a> {
         engine: Engine,
         predictor: &'a mut PredictorBox,
         controller: Option<&'a mut AdaptiveController>,
+        publisher: Option<TelemetryPublisher>,
     ) -> Self {
         // With a controller attached, its drift-triggered replay learner
         // owns online adaptation; running the legacy fixed-interval learner
@@ -346,6 +354,7 @@ impl<'a> AccessDriver<'a> {
             feedback_interval: cfg.feedback_interval,
             prediction_batches: 0,
             pos: 0,
+            publisher,
         }
     }
 
@@ -394,7 +403,26 @@ impl<'a> AccessDriver<'a> {
             } else {
                 PredictorAccess::None
             };
+            let (windows_before, drifts_before, events_before) =
+                (c.windows(), c.drift_count(), c.events().len());
             let decision = c.maybe_window(self.engine.steps(), &self.engine.hier, access);
+            // Stream the boundary's outcomes before reacting to the
+            // decision — events describe what the controller *observed*,
+            // independent of how this driver applies it.
+            if let Some(p) = self.publisher.as_mut() {
+                let steps = self.engine.steps();
+                if c.windows() > windows_before {
+                    if let Some(w) = c.last_window() {
+                        p.publish(steps, Payload::Window { stats: w, throttled: c.throttled() });
+                        if c.drift_count() > drifts_before {
+                            p.publish(steps, Payload::Drift { window: w.index });
+                        }
+                    }
+                }
+                for e in &c.events()[events_before..] {
+                    p.publish(steps, Payload::Adaptation(*e));
+                }
+            }
             match decision {
                 // Entering back-off: flush stale utilities so fills really
                 // are policy-default from here on. A hot swap flushes too —
@@ -420,6 +448,23 @@ impl<'a> AccessDriver<'a> {
                     self.engine.hier.set_prefetch_throttled(false);
                 }
                 None => {}
+            }
+        }
+
+        // Periodic cache-health sample — the only event kind non-adaptive
+        // runs produce. Cumulative counters, O(1) reads, zero allocation.
+        if self.publisher.is_some() && self.engine.steps() % crate::obs::SAMPLE_PERIOD == 0 {
+            let throttled =
+                self.controller.as_deref().map(|c| c.throttled()).unwrap_or(false);
+            let l2 = &self.engine.hier.l2;
+            let sample = Payload::Sample {
+                occupancy: l2.occupancy(),
+                hit_rate: l2.stats.hit_rate(),
+                pollution: l2.stats.pollution_ratio(),
+                throttled,
+            };
+            if let Some(p) = self.publisher.as_mut() {
+                p.publish(self.engine.steps(), sample);
             }
         }
 
@@ -451,12 +496,17 @@ impl<'a> AccessDriver<'a> {
 /// plain run. With a controller attached, the controller's drift-triggered
 /// learner replaces the legacy fixed-interval §3.4 feedback
 /// (`cfg.feedback_interval` is ignored).
+///
+/// `publisher` optionally streams window/drift/adaptation/sample events for
+/// this engine onto a [`crate::obs::TelemetryBus`]; `None` skips every
+/// telemetry branch and is byte-identical in outcome either way.
 /// Crate-internal delegate of [`crate::api::Runner::run`].
 pub(crate) fn run_workload_adaptive(
     cfg: &ExperimentConfig,
     workload: &mut dyn Workload,
     predictor: &mut PredictorBox,
     controller: Option<&mut AdaptiveController>,
+    publisher: Option<TelemetryPublisher>,
 ) -> SimResult {
     let t0 = Instant::now();
     let geom = GeometryHints::from_generator(&cfg.generator);
@@ -472,7 +522,7 @@ pub(crate) fn run_workload_adaptive(
         (None, None)
     };
 
-    let mut driver = AccessDriver::new(cfg, engine, predictor, controller);
+    let mut driver = AccessDriver::new(cfg, engine, predictor, controller, publisher);
     for i in 0..cfg.accesses {
         let a = match &trace_vec {
             Some(tv) => tv[i],
@@ -626,7 +676,8 @@ mod tests {
         assert!(base.is_some(), "acpc runs filtered from the start");
 
         let mut workload = cfg.workload();
-        let mut driver = AccessDriver::new(&cfg, engine, &mut predictor, Some(&mut controller));
+        let mut driver =
+            AccessDriver::new(&cfg, engine, &mut predictor, Some(&mut controller), None);
         for _ in 0..cfg.accesses {
             let a = workload.next_access();
             driver.drive(&a, None);

@@ -42,6 +42,7 @@ use crate::adapt::{AdaptiveController, ControllerConfig, ControllerSummary};
 use crate::config::ExperimentConfig;
 use crate::mem::Hierarchy;
 use crate::metrics::MetricsReport;
+use crate::obs::{SourceId, TelemetryBus, TelemetryPublisher};
 use crate::predictor::{GeometryHints, PredictorBox};
 use crate::trace::{Access, Workload};
 use crate::util::spsc;
@@ -171,8 +172,9 @@ thread_local! {
 /// thread; `reclaim` (if any) receives each shard's predictor after the
 /// run; `ccfg` attaches a per-shard [`AdaptiveController`] (seeded per
 /// shard). `shards <= 1` is exactly the single-threaded
-/// [`run_workload_adaptive`] path. Crate-internal delegate of
-/// [`crate::api::Runner::run`].
+/// [`run_workload_adaptive`] path. `bus` (if any) receives each shard's
+/// telemetry stream under source `sim/k` — attaching one does not perturb
+/// the run. Crate-internal delegate of [`crate::api::Runner::run`].
 pub(crate) fn run_workload_sharded(
     cfg: &ExperimentConfig,
     workload: &mut dyn Workload,
@@ -180,11 +182,14 @@ pub(crate) fn run_workload_sharded(
     mk_predictor: &PredictorFactory,
     reclaim: Option<&PredictorReclaim>,
     ccfg: Option<&ControllerConfig>,
+    bus: Option<&TelemetryBus>,
 ) -> Result<ShardedRun> {
     if shards <= 1 {
         let mut predictor = mk_predictor(0);
         let mut controller = ccfg.map(|c| AdaptiveController::new(c.clone()));
-        let result = run_workload_adaptive(cfg, workload, &mut predictor, controller.as_mut());
+        let publisher = bus.map(|b| b.publisher(SourceId::sim(0)));
+        let result =
+            run_workload_adaptive(cfg, workload, &mut predictor, controller.as_mut(), publisher);
         if let Some(r) = reclaim {
             r(0, predictor);
         }
@@ -235,6 +240,7 @@ pub(crate) fn run_workload_sharded(
                 mk: Arc::clone(mk_predictor),
                 reclaim: reclaim.cloned(),
                 ccfg: ccfg.cloned(),
+                publisher: bus.map(|b| b.publisher(SourceId::sim(k))),
                 res_tx: res_tx.clone(),
             }),
         );
@@ -312,6 +318,9 @@ struct ShardArgs {
     mk: PredictorFactory,
     reclaim: Option<PredictorReclaim>,
     ccfg: Option<ControllerConfig>,
+    /// This shard's telemetry stream (source `sim/k`), created bus-side by
+    /// the dispatcher so the per-source sequence counter has one owner.
+    publisher: Option<TelemetryPublisher>,
     res_tx: mpsc::Sender<(usize, ShardOut)>,
 }
 
@@ -320,8 +329,19 @@ struct ShardArgs {
 /// harvest.
 fn shard_job(args: ShardArgs) -> ShardJob {
     Box::new(move || {
-        let ShardArgs { cfg, k, shards, geom, mut rx, mut ret_tx, mk, reclaim, ccfg, res_tx } =
-            args;
+        let ShardArgs {
+            cfg,
+            k,
+            shards,
+            geom,
+            mut rx,
+            mut ret_tx,
+            mk,
+            reclaim,
+            ccfg,
+            publisher,
+            res_tx,
+        } = args;
         let hier = Hierarchy::new_sharded(cfg.hierarchy.clone(), &cfg.policy, k, shards);
         let mut predictor = mk(k);
         let pw = if predictor.is_some() { predictor.window().max(1) } else { 0 };
@@ -331,7 +351,8 @@ fn shard_job(args: ShardArgs) -> ShardJob {
             cc.seed ^= (k as u64).wrapping_mul(SHARD_SEED_MIX);
             AdaptiveController::new(cc)
         });
-        let mut driver = AccessDriver::new(&cfg, engine, &mut predictor, controller.as_mut());
+        let mut driver =
+            AccessDriver::new(&cfg, engine, &mut predictor, controller.as_mut(), publisher);
         while let Some(mut chunk) = rx.pop() {
             for (a, nu) in &chunk {
                 driver.drive(a, (*nu != u64::MAX).then_some(*nu));
@@ -452,7 +473,7 @@ mod tests {
         let mk = mk_none();
         let run = |shards: usize| {
             let mut w = cfg.workload();
-            run_workload_sharded(&cfg, w.as_mut(), shards, &mk, None, None)
+            run_workload_sharded(&cfg, w.as_mut(), shards, &mk, None, None, None)
                 .expect("sharded run")
         };
         let a = run(2);
@@ -488,9 +509,10 @@ mod tests {
         cfg.hierarchy.l3_policy = "srrip".into();
         let mk = mk_none();
         let mut w1 = cfg.workload();
-        let one = run_workload_sharded(&cfg, w1.as_mut(), 1, &mk, None, None).unwrap();
+        let one = run_workload_sharded(&cfg, w1.as_mut(), 1, &mk, None, None, None).unwrap();
         let mut w8 = cfg.workload();
-        let eight = run_workload_sharded(&cfg, w8.as_mut(), 8, &mk, None, None).unwrap();
+        let eight =
+            run_workload_sharded(&cfg, w8.as_mut(), 8, &mk, None, None, None).unwrap();
         assert_eq!(
             one.result.report.to_json().to_pretty(),
             eight.result.report.to_json().to_pretty()
