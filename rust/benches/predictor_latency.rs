@@ -1,17 +1,51 @@
-//! µbench: predictor-service latency/throughput — per-batch PJRT dispatch
-//! for the compiled TCN/DNN at their fixed AOT batch sizes, plus the
-//! feature-extraction rate feeding them. Targets EXPERIMENTS.md §Perf
-//! ("predictor amortized to <10% of end-to-end sim time").
+//! µbench: predictor inference latency — the native Rust kernel against
+//! per-batch PJRT dispatch, plus the feature-extraction rate feeding them.
+//! Targets EXPERIMENTS.md §Perf ("predictor amortized to <10% of
+//! end-to-end sim time").
+//!
+//! The native section needs no artifacts (synthetic weights at the
+//! production TCN geometry) and always records a `native_tcn_infer` case
+//! into the BENCH_sim.json perf trajectory, so `acpc diff --bench` gates
+//! the kernel on every CI run. The PJRT comparison — the per-row speedup
+//! the native kernel claims — additionally runs when `artifacts/` is
+//! present and prints the ratio for each manifest model.
 
-use acpc::predictor::{FeatureExtractor, GeometryHints, ModelRuntime, ReusePredictor};
-use acpc::runtime::{Engine, Manifest};
+use acpc::predictor::{
+    Backend, FeatureExtractor, GeometryHints, ModelRuntime, ReusePredictor, FEATURE_DIM,
+};
+use acpc::runtime::{synthetic_model, Engine, Manifest, NativeModel};
 use acpc::trace::{GeneratorConfig, ModelProfile, TraceGenerator};
-use acpc::util::bench::{black_box, Bench};
+use acpc::util::bench::{bench_scale, black_box, Bench, BenchJson};
 
 fn main() {
+    let smoke = bench_scale() == "smoke";
+
+    // Native kernel on synthetic weights at the production TCN geometry
+    // (window 16, 32 channels, dilations 1/2/4): artifact-free, so this
+    // case lands in the perf trajectory on every CI run.
+    let batch = 256usize;
+    let window = 16usize;
+    let (mm, store) = synthetic_model("tcn", window, FEATURE_DIM, 32, &[1, 2, 4], 0xBE7C);
+    let mut native = NativeModel::from_params(&mm, &store).unwrap();
+    let x = vec![0.3f32; batch * window * FEATURE_DIM];
+    let mut out: Vec<f32> = Vec::new();
+    let bench = Bench::new(3, if smoke { 10 } else { 40 }).throughput(batch as u64);
+    let res = bench.run("native_tcn_infer", || {
+        native.predict_into(&x, batch, &mut out);
+        black_box(out[0]);
+    });
+    let mut json = BenchJson::new("predictor_latency");
+    json.push(&res);
+    match json.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => acpc::log_warn!("predictor_latency: could not write trajectory: {e}"),
+    }
+
     let Some(dir) = acpc::runtime::artifacts_dir() else {
-        acpc::log_warn!("predictor_latency: artifacts/ missing — run `make artifacts`");
-        std::process::exit(0);
+        acpc::log_warn!(
+            "predictor_latency: artifacts/ missing — PJRT comparison skipped (run `make artifacts`)"
+        );
+        return;
     };
     let manifest = Manifest::load(&dir).unwrap();
     let engine = Engine::cpu().unwrap();
@@ -31,19 +65,30 @@ fn main() {
         }
     });
 
-    // Model inference at the AOT batch size.
-    for name in ["tcn", "dnn"] {
+    // Model inference, both backends, at the PJRT AOT batch size (the
+    // shape that maximally favors PJRT — no tail padding).
+    for name in manifest.models.keys() {
         let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
         let b = rt.infer_batch;
         let row = rt.row_elems();
         let x = vec![0.3f32; b * row];
         let bench = Bench::new(2, 10).throughput(b as u64);
-        bench.run(&format!("{name}.predict[b={b}]"), || {
+        let nat = bench.run(&format!("{name}.predict.native[b={b}]"), || {
             black_box(rt.predict(&x, b));
         });
+        rt.set_backend(Backend::Pjrt);
+        let pjrt = bench.run(&format!("{name}.predict.pjrt[b={b}]"), || {
+            black_box(rt.predict(&x, b));
+        });
+        println!(
+            "{name}: native {:.0} ns/row vs pjrt {:.0} ns/row — {:.2}x per-row speedup",
+            nat.mean_ns / b as f64,
+            pjrt.mean_ns / b as f64,
+            pjrt.mean_ns / nat.mean_ns
+        );
     }
 
-    // Train step latency (online-learning budget).
+    // Train step latency (online-learning budget; Adam stays in XLA).
     for name in ["tcn", "dnn"] {
         let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
         let b = rt.mm.train.batch;

@@ -6,12 +6,15 @@
 //! ```
 //!
 //! - [`RunSpec`] describes a run completely (policy, scenario/profile,
-//!   predictor + artifact override, hierarchy, accesses, shards, adaptive
-//!   controller, seed) and round-trips through JSON;
+//!   predictor + artifact override, inference [`Backend`], hierarchy,
+//!   accesses, shards, adaptive controller, seed) and round-trips through
+//!   JSON;
 //! - [`Runner`] owns all resolution — registry lookups, predictor loading
-//!   with heuristic fallback and per-thread TCN caching, single vs
-//!   set-sharded dispatch, controller construction — behind exactly one
-//!   entrypoint, [`Runner::run`];
+//!   with heuristic fallback (one process-wide native weight snapshot
+//!   shared across shards and sweep cells; a per-thread PJRT cache for the
+//!   `backend: pjrt` escape hatch), single vs set-sharded dispatch,
+//!   controller construction — behind exactly one entrypoint,
+//!   [`Runner::run`];
 //! - [`RunReport`] is the versioned result; its embedded resolved spec
 //!   re-runs to identical stats (`acpc run --spec <(jq .spec report.json)`).
 //!
@@ -28,6 +31,7 @@ pub mod store;
 pub use farm::{
     cells_to_json, load_manifest, run_farm, FarmCell, FarmConfig, FarmEntry, FARM_BASE_SEED,
 };
+pub use crate::predictor::Backend;
 pub use runner::{PredictorFactory, RunReport, Runner};
 pub use spec::{AdaptSpec, HierarchySpec, RunSpec, RunSpecBuilder, WorkloadSpec, SCHEMA};
 pub use store::{spec_hash, CacheMode, ReportStore, StoreEntry};

@@ -3,8 +3,10 @@
 //!
 //! The runner owns every piece of resolution that used to be duplicated
 //! across the CLI commands: scenario-registry lookup, predictor
-//! construction with artifact fallback (including the per-thread TCN
-//! cache), sharded-vs-single dispatch, and adaptive-controller wiring.
+//! construction with artifact fallback (one process-wide native weight
+//! snapshot shared across every shard and sweep cell, plus a per-thread
+//! PJRT cache for the `backend: pjrt` escape hatch), sharded-vs-single
+//! dispatch, and adaptive-controller wiring.
 //! `simulate`, `adapt`, each `sweep` cell, `acpc run --spec` and the
 //! examples all execute through [`Runner::run`]; the legacy
 //! `sim::run_workload*` functions survive only as crate-internal delegates.
@@ -15,20 +17,40 @@ use crate::adapt::{AdaptiveController, ControllerSummary};
 use crate::config::PredictorKind;
 use crate::metrics::MetricsReport;
 use crate::obs::{SourceId, TelemetryBus};
-use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
+use crate::predictor::{Backend, HeuristicPredictor, ModelRuntime, PredictorBox};
+use crate::runtime::{Manifest, NativeModel, NativeWeights};
 use crate::sim::shard::{run_workload_sharded, PredictorReclaim};
 use crate::sim::SimResult;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// A predictor constructor invoked once per worker thread (shard `k` gets
-/// `factory(k)`); predictors must be built *inside* the thread that runs
-/// them — PJRT handles are thread-affine. This is the parameter type of
-/// [`Runner::with_predictor_factory`].
+/// `factory(k)`). The indirection exists because *PJRT-backed* predictors
+/// hold thread-affine handles and must be built inside the thread that runs
+/// them; a factory handing out [`PredictorBox::Native`] clones over one
+/// shared [`NativeWeights`] snapshot is equally valid (and what the runner
+/// itself does for the default native backend). This is the parameter type
+/// of [`Runner::with_predictor_factory`].
 pub type PredictorFactory = Arc<dyn Fn(usize) -> PredictorBox + Send + Sync>;
+
+/// How a spec-built run obtains its predictor(s), decided once per
+/// [`Runner::run`] and shared by the single-threaded and sharded paths.
+enum SpecPlan {
+    /// Native backend, inference-only run: every shard/worker gets a
+    /// [`PredictorBox::Native`] clone over this one weight snapshot — the
+    /// artifact is read and repacked once per process, not once per thread.
+    SharedNative(Arc<NativeWeights>),
+    /// Native backend requested but the artifacts are unavailable; the
+    /// (already-warned) fallback is the heuristic predictor.
+    FallbackHeuristic,
+    /// Build inside each worker thread: PJRT-backed runs (`backend: pjrt`
+    /// or any run that trains — Adam stays in XLA) and non-learned kinds.
+    PerThread,
+}
 
 /// Where the runner gets its predictor(s) from.
 enum PredictorSource {
@@ -137,15 +159,40 @@ impl Runner {
         &self.resolved.spec
     }
 
-    /// May this run share the per-thread cached TCN? Only when the spec
-    /// asks for the default TCN artifact *and* nothing in the run can
-    /// mutate its weights (no adaptive retrains, no §3.4 interval
+    /// May this run share the per-thread cached PJRT TCN? Only for the
+    /// `backend: pjrt` escape hatch (native runs share one process-wide
+    /// weight snapshot instead — see [`SpecPlan::SharedNative`]), and only
+    /// when the spec asks for the default TCN artifact *and* nothing in the
+    /// run can mutate its weights (no adaptive retrains, no §3.4 interval
     /// feedback).
     fn cache_eligible(&self) -> bool {
-        self.resolved.cfg.predictor == PredictorKind::Tcn
+        self.resolved.backend == Backend::Pjrt
+            && self.resolved.cfg.predictor == PredictorKind::Tcn
             && self.resolved.model.is_none()
             && self.resolved.controller.is_none()
             && self.resolved.cfg.feedback_interval == 0
+    }
+
+    /// Decide how spec-built predictors are obtained for this run (see
+    /// [`SpecPlan`]). Trainable runs always use a [`ModelRuntime`]
+    /// ([`PredictorBox::Model`]) because `train_step` needs PJRT — its
+    /// *predict* path still runs the native kernel unless `backend: pjrt`.
+    fn spec_plan(&self) -> SpecPlan {
+        let r = &self.resolved;
+        let learned =
+            matches!(r.cfg.predictor, PredictorKind::Dnn | PredictorKind::Tcn);
+        let trains = r.controller.is_some() || r.cfg.feedback_interval > 0;
+        if !learned || trains || r.backend != Backend::Native {
+            return SpecPlan::PerThread;
+        }
+        let name = r.model.as_deref().unwrap_or(match r.cfg.predictor {
+            PredictorKind::Dnn => "dnn",
+            _ => "tcn",
+        });
+        match shared_native_weights(name) {
+            Some(w) => SpecPlan::SharedNative(w),
+            None => SpecPlan::FallbackHeuristic,
+        }
     }
 
     /// Execute the run: consult the attached report store (if any), else
@@ -185,13 +232,25 @@ impl Runner {
             let mk: PredictorFactory = match &self.source {
                 PredictorSource::Factory(f) => Arc::clone(f),
                 PredictorSource::Owned(_) => bail!(
-                    "an owned predictor cannot drive a sharded run (PJRT handles are \
-                     thread-affine); use with_predictor_factory"
+                    "an owned predictor cannot drive a sharded run (it may hold \
+                     thread-affine PJRT handles); use with_predictor_factory"
                 ),
                 PredictorSource::Spec => {
                     let kind = r.cfg.predictor;
                     let model = r.model.clone();
-                    Arc::new(move |_shard| build_in_thread(kind, model.as_deref(), cache).0)
+                    let backend = r.backend;
+                    let plan = self.spec_plan();
+                    Arc::new(move |_shard| match &plan {
+                        SpecPlan::SharedNative(w) => {
+                            PredictorBox::Native(NativeModel::from_weights(Arc::clone(w)))
+                        }
+                        SpecPlan::FallbackHeuristic => {
+                            PredictorBox::Heuristic(HeuristicPredictor)
+                        }
+                        SpecPlan::PerThread => {
+                            build_in_thread(kind, model.as_deref(), cache, backend).0
+                        }
+                    })
                 }
             };
             // Loaded default-TCN boxes flow back into each shard thread's
@@ -220,9 +279,17 @@ impl Runner {
             (run.result, run.controllers)
         } else {
             let (mut predictor, from_cache) = match &self.source {
-                PredictorSource::Spec => {
-                    build_in_thread(r.cfg.predictor, r.model.as_deref(), cache)
-                }
+                PredictorSource::Spec => match self.spec_plan() {
+                    SpecPlan::SharedNative(w) => {
+                        (PredictorBox::Native(NativeModel::from_weights(w)), false)
+                    }
+                    SpecPlan::FallbackHeuristic => {
+                        (PredictorBox::Heuristic(HeuristicPredictor), false)
+                    }
+                    SpecPlan::PerThread => {
+                        build_in_thread(r.cfg.predictor, r.model.as_deref(), cache, r.backend)
+                    }
+                },
                 PredictorSource::Owned(slot) => {
                     let p = slot.borrow_mut().take();
                     match p {
@@ -315,22 +382,35 @@ fn build_predictor(kind: PredictorKind, model_override: Option<&str>) -> Result<
 
 /// Build a predictor in the *calling* thread with the runner's fallback
 /// policy: learned predictors degrade to the heuristic with a warning when
-/// the artifacts are absent or fail to load. Returns `(box, from_cache)`.
+/// the artifacts are absent or fail to load. Learned boxes built here are
+/// [`ModelRuntime`]s whose predict path honours `backend`. Returns
+/// `(box, from_cache)`.
 fn build_in_thread(
     kind: PredictorKind,
     model: Option<&str>,
     cache: bool,
+    backend: Backend,
 ) -> (PredictorBox, bool) {
     match kind {
         PredictorKind::None => (PredictorBox::None, false),
         PredictorKind::Heuristic => (PredictorBox::Heuristic(HeuristicPredictor), false),
         PredictorKind::Tcn if cache && model.is_none() => match take_thread_tcn() {
-            Some(p) => (p, true),
+            Some(mut p) => {
+                if let Some(m) = p.model_mut() {
+                    m.set_backend(backend);
+                }
+                (p, true)
+            }
             // take_thread_tcn already warned, once per thread.
             None => (PredictorBox::Heuristic(HeuristicPredictor), false),
         },
         kind => match build_predictor(kind, model) {
-            Ok(p) => (p, false),
+            Ok(mut p) => {
+                if let Some(m) = p.model_mut() {
+                    m.set_backend(backend);
+                }
+                (p, false)
+            }
             Err(e) => {
                 crate::log_warn!(
                     "runner: predictor '{}' failed to load ({e}); falling back to the \
@@ -341,6 +421,53 @@ fn build_in_thread(
             }
         },
     }
+}
+
+/// Process-wide native weight snapshots, keyed by model name. Unlike the
+/// PJRT path there is nothing thread-affine to cache per thread: one
+/// artifact read + repack serves every shard, sweep cell, and serve worker
+/// in the process. Failures are cached too (a broken artifact bundle is not
+/// re-probed per run).
+static NATIVE_WEIGHTS: OnceLock<Mutex<HashMap<String, Option<Arc<NativeWeights>>>>> =
+    OnceLock::new();
+
+/// One process-wide warning for missing/broken native weights (mirrors
+/// [`TCN_FALLBACK_WARNED`] on the PJRT path).
+static NATIVE_FALLBACK_WARNED: AtomicBool = AtomicBool::new(false);
+
+fn load_native_weights(name: &str) -> Result<Arc<NativeWeights>> {
+    let dir = crate::runtime::artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("artifacts not built"))?;
+    let manifest = Manifest::load(&dir)?;
+    let mm = manifest.model(name)?;
+    let store = crate::runtime::ParamStore::load(&manifest, name)?;
+    Ok(Arc::new(NativeWeights::from_params(mm, &store)?))
+}
+
+/// Fetch (loading at most once per process) the shared native weight
+/// snapshot for a model. `None` means unavailable — already warned, cached
+/// as a permanent failure.
+fn shared_native_weights(name: &str) -> Option<Arc<NativeWeights>> {
+    let map = NATIVE_WEIGHTS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = map.lock().unwrap();
+    if let Some(cached) = map.get(name) {
+        return cached.clone();
+    }
+    let loaded = match load_native_weights(name) {
+        Ok(w) => Some(w),
+        Err(e) => {
+            if !NATIVE_FALLBACK_WARNED.swap(true, Ordering::Relaxed) {
+                crate::log_warn!(
+                    "runner: native weights for '{name}' unavailable ({e}); learned \
+                     runs fall back to the heuristic predictor (reported once; see \
+                     predictor_effective for per-run provenance)"
+                );
+            }
+            None
+        }
+    };
+    map.insert(name.to_string(), loaded.clone());
+    loaded
 }
 
 fn build_tcn_in_thread() -> Option<PredictorBox> {
@@ -635,6 +762,41 @@ mod tests {
         let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.to_json().to_pretty(), text);
         assert_eq!(back.result.predictor, "heuristic");
+    }
+
+    /// The per-thread PJRT TCN cache serves only the `backend: pjrt`
+    /// escape hatch; native-backend runs route through the shared snapshot
+    /// plan instead.
+    #[test]
+    fn pjrt_cache_is_gated_on_backend() {
+        let tcn = |backend: Option<Backend>| {
+            let mut b = RunSpec::builder()
+                .scenario("decode-heavy")
+                .policy("acpc")
+                .predictor(PredictorKind::Tcn)
+                .accesses(10_000);
+            if let Some(be) = backend {
+                b = b.backend(be);
+            }
+            Runner::new(b.build().unwrap()).unwrap()
+        };
+        assert!(!tcn(None).cache_eligible(), "default backend is native");
+        assert!(!tcn(Some(Backend::Native)).cache_eligible());
+        assert!(tcn(Some(Backend::Pjrt)).cache_eligible());
+        // Trainable native runs still go per-thread (ModelRuntime trains on
+        // PJRT), never through the shared-snapshot plan.
+        let adaptive = Runner::new(
+            RunSpec::builder()
+                .scenario("decode-heavy")
+                .policy("acpc")
+                .predictor(PredictorKind::Tcn)
+                .adaptive(true)
+                .accesses(10_000)
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(matches!(adaptive.spec_plan(), SpecPlan::PerThread));
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use crate::adapt::ControllerConfig;
 use crate::config::{ExperimentConfig, PredictorKind};
+use crate::predictor::Backend;
 use crate::trace::ModelProfile;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -220,6 +221,10 @@ pub struct RunSpec {
     pub predictor: PredictorKind,
     /// Artifact-model override for learned predictors (`tcn_flat`, ...).
     pub model: Option<String>,
+    /// Inference engine for learned predictors: the native kernel
+    /// (default) or the PJRT escape hatch. Resolution makes it explicit for
+    /// learned predictors and rejects it otherwise.
+    pub backend: Option<Backend>,
     /// Scenario-registry workload (mutually exclusive with `profile`).
     pub scenario: Option<String>,
     /// Model-profile workload (mutually exclusive with `scenario`).
@@ -246,6 +251,7 @@ impl Default for RunSpec {
             policy: "acpc".into(),
             predictor: PredictorKind::Heuristic,
             model: None,
+            backend: None,
             scenario: None,
             profile: None,
             workload: WorkloadSpec::default(),
@@ -267,6 +273,9 @@ pub(crate) struct Resolved {
     pub shards: usize,
     pub controller: Option<ControllerConfig>,
     pub model: Option<String>,
+    /// Predict engine for learned predictors (`Backend::default()` = native
+    /// unless the spec says otherwise; irrelevant for other predictors).
+    pub backend: Backend,
     /// The input spec with every defaulted scalar made explicit — embedded
     /// in reports so they re-run bit-for-bit.
     pub spec: RunSpec,
@@ -292,12 +301,18 @@ impl RunSpec {
         if self.scenario.is_some() && self.profile.is_some() {
             bail!("'scenario' and 'profile' are mutually exclusive");
         }
-        if self.model.is_some()
-            && !matches!(self.predictor, PredictorKind::Dnn | PredictorKind::Tcn)
-        {
+        let learned = matches!(self.predictor, PredictorKind::Dnn | PredictorKind::Tcn);
+        if self.model.is_some() && !learned {
             bail!(
                 "'model' overrides the artifact of a learned predictor — predictor '{}' \
                  does not load one",
+                self.predictor.label()
+            );
+        }
+        if self.backend.is_some() && !learned {
+            bail!(
+                "'backend' selects the inference engine of a learned predictor — predictor \
+                 '{}' does not run one",
                 self.predictor.label()
             );
         }
@@ -422,6 +437,12 @@ impl RunSpec {
             None => None,
         };
 
+        // Make the backend explicit for learned predictors (the report
+        // must say who ran predict); leave it unset otherwise so
+        // non-learned spec JSON is byte-identical to before the field
+        // existed (schema-compatible default).
+        let backend = self.backend.unwrap_or_default();
+
         let mut spec = self.clone();
         spec.name = Some(cfg.name.clone());
         spec.seed = Some(cfg.seed);
@@ -429,8 +450,16 @@ impl RunSpec {
         spec.predict_batch = Some(cfg.predict_batch);
         spec.feedback_interval = Some(cfg.feedback_interval);
         spec.adaptive = controller.as_ref().map(AdaptSpec::from_config);
+        spec.backend = learned.then_some(backend);
 
-        Ok(Resolved { cfg, shards: self.shards, controller, model: self.model.clone(), spec })
+        Ok(Resolved {
+            cfg,
+            shards: self.shards,
+            controller,
+            model: self.model.clone(),
+            backend,
+            spec,
+        })
     }
 
     // ---- JSON ----------------------------------------------------------
@@ -448,6 +477,9 @@ impl RunSpec {
         j.set("predictor", Json::Str(self.predictor.label().into()));
         if let Some(m) = &self.model {
             j.set("model", Json::Str(m.clone()));
+        }
+        if let Some(b) = self.backend {
+            j.set("backend", Json::Str(b.label().into()));
         }
         if let Some(n) = self.accesses {
             j.set("accesses", Json::Num(n as f64));
@@ -558,6 +590,10 @@ impl RunSpec {
                         PredictorKind::parse(v.as_str().ok_or_else(|| anyhow!("predictor"))?)?
                 }
                 "model" => spec.model = Some(str_field(v, k)?),
+                "backend" => {
+                    spec.backend =
+                        Some(Backend::parse(v.as_str().ok_or_else(|| anyhow!("backend"))?)?)
+                }
                 "accesses" => spec.accesses = Some(u64_field(v, k)? as usize),
                 "predict_batch" => spec.predict_batch = Some(u64_field(v, k)? as usize),
                 "feedback_interval" => {
@@ -709,6 +745,13 @@ impl RunSpecBuilder {
         self
     }
 
+    /// Predict engine for learned predictors (`Backend::Native` is the
+    /// default without this call).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.spec.backend = Some(backend);
+        self
+    }
+
     pub fn scenario(mut self, scenario: &str) -> Self {
         self.spec.scenario = Some(scenario.to_string());
         self
@@ -850,8 +893,49 @@ mod tests {
         assert!(RunSpec::builder().l3_policy("nope").build().is_err());
         assert!(RunSpec::builder().model("tcn_flat").build().is_err(),
             "model override without a learned predictor");
+        assert!(RunSpec::builder().backend(Backend::Pjrt).build().is_err(),
+            "backend selection without a learned predictor");
         // 96 KiB / 8-way / 64 B lines → 192 sets: not a power of two.
         assert!(RunSpec::builder().l2_kb(96).build().is_err());
+    }
+
+    #[test]
+    fn backend_roundtrips_and_resolves_explicitly() {
+        // Explicit pjrt escape hatch survives JSON.
+        let spec = RunSpec::builder()
+            .scenario("decode-heavy")
+            .predictor(PredictorKind::Tcn)
+            .backend(Backend::Pjrt)
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(back.backend, Some(Backend::Pjrt));
+        assert_eq!(back.resolve().unwrap().backend, Backend::Pjrt);
+
+        // Learned predictor without a backend: resolution defaults to
+        // native and makes it explicit in the resolved spec.
+        let spec =
+            RunSpec::builder().scenario("decode-heavy").predictor(PredictorKind::Tcn).build().unwrap();
+        assert_eq!(spec.backend, None);
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.backend, Backend::Native);
+        assert_eq!(r.spec.backend, Some(Backend::Native));
+
+        // Non-learned predictors: no backend key, before or after
+        // resolution — old spec/report JSON is byte-identical.
+        let spec = RunSpec::builder()
+            .scenario("decode-heavy")
+            .predictor(PredictorKind::Heuristic)
+            .build()
+            .unwrap();
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.spec.backend, None);
+        assert!(!r.spec.to_json().to_string().contains("backend"));
+
+        // Unknown backend values are rejected.
+        let j = Json::parse(r#"{"predictor": "tcn", "backend": "warp"}"#).unwrap();
+        assert!(RunSpec::from_json(&j).is_err());
     }
 
     #[test]

@@ -2,11 +2,12 @@
 
 use crate::cli::Args;
 use crate::config::PredictorKind;
-use crate::coordinator::{serve, RouterPolicy, ServeConfig};
-use crate::predictor::{HeuristicPredictor, ModelRuntime, PredictorBox};
-use crate::runtime::Manifest;
+use crate::coordinator::{serve, serve_shared, RouterPolicy, ServeConfig};
+use crate::predictor::{Backend, HeuristicPredictor, ModelRuntime, PredictorBox};
+use crate::runtime::{Manifest, NativeWeights, ParamStore};
 use crate::trace::{GeneratorConfig, ModelProfile};
 use anyhow::{Context, Result};
+use std::sync::Arc;
 use std::time::Duration;
 
 const HELP: &str = "\
@@ -17,6 +18,10 @@ OPTIONS:
     --sessions <n>       sessions to admit [default: 200]
     --policy <name>      L2 policy [default: acpc]
     --predictor <kind>   none|heuristic|dnn|tcn [default: heuristic]
+    --backend <name>     native|pjrt inference engine for dnn/tcn: native
+                         shares one weight snapshot across workers, pjrt
+                         runs the central predictor-service thread
+                         [default: native]
     --router <policy>    rr|least [default: least]
     --profile <name>     workload profile [default: gpt3ish]
     --scenario <name>    scenario-registry workload (mutually exclusive
@@ -41,8 +46,8 @@ pub fn run(args: &mut Args) -> Result<i32> {
         return Ok(0);
     }
     args.ensure_known(&[
-        "workers", "sessions", "policy", "predictor", "router", "profile", "scenario",
-        "adaptive", "batch", "deadline-us", "arrival-us", "seed", "dashboard",
+        "workers", "sessions", "policy", "predictor", "backend", "router", "profile",
+        "scenario", "adaptive", "batch", "deadline-us", "arrival-us", "seed", "dashboard",
         "dashboard-linger-ms", "json", "help",
     ])?;
     if args.opt("profile").is_some() && args.opt("scenario").is_some() {
@@ -53,6 +58,20 @@ pub fn run(args: &mut Args) -> Result<i32> {
     if args.flag("adaptive") && kind == PredictorKind::None {
         anyhow::bail!("--adaptive needs a predictor to throttle (drop --predictor none)");
     }
+    let learned = matches!(kind, PredictorKind::Dnn | PredictorKind::Tcn);
+    let backend = match args.opt("backend") {
+        Some(v) => {
+            let b = Backend::parse(&v)?;
+            if !learned {
+                anyhow::bail!(
+                    "--backend selects the inference engine of a learned predictor \
+                     (use --predictor dnn|tcn)"
+                );
+            }
+            b
+        }
+        None => Backend::default(),
+    };
     let seed = args.u64_or("seed", 0x5E21)?;
     let scenario = args.opt("scenario").map(|s| s.to_string());
     if let Some(name) = &scenario {
@@ -89,27 +108,42 @@ pub fn run(args: &mut Args) -> Result<i32> {
         dashboard_linger: Duration::from_millis(args.u64_or("dashboard-linger-ms", 0)?),
     };
 
-    // Window + thread-local factory (PJRT is !Send).
-    let (window, model_name): (usize, Option<String>) = match kind {
-        PredictorKind::None => (0, None),
-        PredictorKind::Heuristic | PredictorKind::Dnn => (1, kind_model(kind)),
-        PredictorKind::Tcn => {
-            let dir = crate::runtime::artifacts_dir().context("run `make artifacts`")?;
-            let manifest = Manifest::load(&dir)?;
-            (manifest.model("tcn")?.window, Some("tcn".into()))
-        }
-    };
     println!(
-        "serving: workers={} sessions={} policy={} predictor={:?} router={:?} workload={} adaptive={}",
+        "serving: workers={} sessions={} policy={} predictor={:?} backend={} router={:?} workload={} adaptive={}",
         cfg.workers,
         cfg.total_sessions,
         cfg.policy,
         kind,
+        if learned { backend.label() } else { "-" },
         cfg.router,
         cfg.scenario.as_deref().unwrap_or(&cfg.generator.profile.name),
         cfg.adaptive
     );
-    let rep = serve(&cfg, window, move || build_in_thread(kind, model_name.as_deref()));
+    let rep = if learned && backend == Backend::Native {
+        // Native default: load + repack the weights once on this thread and
+        // share the `Send` snapshot across every worker — no predictor
+        // service thread at all.
+        let dir = crate::runtime::artifacts_dir().context("run `make artifacts`")?;
+        let manifest = Manifest::load(&dir)?;
+        let name = kind_model(kind).unwrap();
+        let mm = manifest.model(&name)?;
+        let store = ParamStore::load(&manifest, &name)?;
+        let weights = Arc::new(NativeWeights::from_params(mm, &store)?);
+        serve_shared(&cfg, weights, None)
+    } else {
+        // Classic kinds, and the `--backend pjrt` escape hatch: the factory
+        // runs inside the predictor-service thread (PJRT is !Send).
+        let (window, model_name): (usize, Option<String>) = match kind {
+            PredictorKind::None => (0, None),
+            PredictorKind::Heuristic | PredictorKind::Dnn => (1, kind_model(kind)),
+            PredictorKind::Tcn => {
+                let dir = crate::runtime::artifacts_dir().context("run `make artifacts`")?;
+                let manifest = Manifest::load(&dir)?;
+                (manifest.model("tcn")?.window, Some("tcn".into()))
+            }
+        };
+        serve(&cfg, window, move || build_in_thread(kind, model_name.as_deref()))
+    };
 
     println!("\n== serve report ==");
     println!(
@@ -155,13 +189,17 @@ fn kind_model(kind: PredictorKind) -> Option<String> {
     }
 }
 
-/// Factory body run inside the predictor-service thread.
+/// Factory body run inside the predictor-service thread. Learned kinds
+/// reach this only under `--backend pjrt` (native runs use
+/// [`serve_shared`]), so the runtime is pinned to the PJRT predict path.
 fn build_in_thread(kind: PredictorKind, model: Option<&str>) -> PredictorBox {
     match kind {
         PredictorKind::None => PredictorBox::None,
         PredictorKind::Heuristic => PredictorBox::Heuristic(HeuristicPredictor),
         PredictorKind::Dnn | PredictorKind::Tcn => {
-            let rt = ModelRuntime::load_from_artifacts(model.unwrap()).expect("model artifacts");
+            let mut rt =
+                ModelRuntime::load_from_artifacts(model.unwrap()).expect("model artifacts");
+            rt.set_backend(Backend::Pjrt);
             PredictorBox::Model(Box::new(rt))
         }
     }

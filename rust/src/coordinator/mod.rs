@@ -6,8 +6,10 @@
 //! - [`batcher`]: size-or-deadline dynamic batching of predictor queries —
 //!   the same discipline a serving engine uses for model invocations;
 //! - [`server`]: worker threads (each owning a cache hierarchy + its
-//!   sessions) and a shared predictor service thread, connected by
-//!   channels; Python never appears — the predictor service executes the
+//!   sessions), connected by channels. Python never appears — learned
+//!   predictors default to per-worker native-kernel inference over one
+//!   shared weight snapshot ([`serve_shared`]); the `backend: pjrt` escape
+//!   hatch instead runs a central predictor service thread executing the
 //!   AOT artifacts via PJRT.
 
 pub mod batcher;
@@ -17,5 +19,6 @@ pub mod server;
 pub use batcher::DynamicBatcher;
 pub use router::{Router, RouterPolicy};
 pub use server::{
-    serve, serve_with_bus, ServeConfig, ServeReport, WorkerAdaptationEvent, SERVE_SCHEMA,
+    serve, serve_shared, serve_with_bus, ServeConfig, ServeReport, WorkerAdaptationEvent,
+    SERVE_SCHEMA,
 };

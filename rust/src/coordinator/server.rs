@@ -1,8 +1,14 @@
 //! The serving node: N worker threads (each owning a cache hierarchy and
-//! its admitted sessions) + one predictor service thread (owning the PJRT
-//! executables) + the main thread driving arrivals through the [`Router`].
+//! its admitted sessions) + the main thread driving arrivals through the
+//! [`Router`]. Predictions run in one of two modes:
 //!
-//! Dataflow per decoded token (all rust, no Python):
+//! - **Shared** ([`serve_shared`], the default for learned predictors):
+//!   every worker holds a [`NativeModel`] clone over one shared
+//!   [`NativeWeights`] snapshot and predicts its own batches inline — no
+//!   service thread, no channel round-trip, no cross-worker version races.
+//! - **Service** ([`serve`] / [`serve_with_bus`]): one predictor service
+//!   thread owns the predictor (required for PJRT executables, which are
+//!   thread-affine) and workers ship it batches over channels:
 //!
 //! ```text
 //!   main ──admit──▶ worker_i ──PredictReq──▶ predictor service
@@ -11,8 +17,8 @@
 //! ```
 //!
 //! Workers never block on predictions: fills use the latest completed
-//! utility for the line (the async model of §3.1), and responses are
-//! drained opportunistically each loop iteration.
+//! utility for the line (the async model of §3.1), and service-mode
+//! responses are drained opportunistically each loop iteration.
 //!
 //! Each worker drives its admitted sessions through the shared
 //! [`crate::sim::Engine`] — the same access loop the batch simulator and
@@ -36,7 +42,8 @@ use crate::adapt::{
 use crate::mem::HierarchyConfig;
 use crate::obs::{start_dashboard, Payload, SourceId, TelemetryBus, SAMPLE_PERIOD};
 use crate::util::json::Json;
-use crate::predictor::{GeometryHints, PredictorBox, FEATURE_DIM};
+use crate::predictor::{GeometryHints, PredictorBox, ReusePredictor, FEATURE_DIM};
+use crate::runtime::{NativeModel, NativeWeights};
 use crate::sim::{Engine, PredictionBatch};
 use crate::trace::{GeneratorConfig, Scenario, TraceGenerator, Workload};
 use crate::util::stats::percentile;
@@ -227,6 +234,11 @@ struct WorkerStats {
     drift_events: u64,
     throttled_windows: u64,
     events: Vec<AdaptationEvent>,
+    /// Prediction batches executed locally (shared mode; 0 in service mode,
+    /// where the service thread counts instead).
+    pred_batches: u64,
+    /// Rows predicted locally (shared mode).
+    pred_filled: u64,
 }
 
 struct PredictReq {
@@ -243,12 +255,24 @@ struct PredictReq {
 /// (line, probability, request version) triples for one worker.
 type PredictResp = Vec<(u64, f32, u64)>;
 
-/// Run the serving node to completion.
+/// How serving workers obtain predictions (see the module docs).
+enum PredictorMode<F: FnOnce() -> PredictorBox + Send> {
+    /// One predictor service thread; the factory runs *inside* it (PJRT
+    /// executables are thread-affine, `!Send`).
+    Service(F),
+    /// No service thread: each worker predicts locally over a
+    /// [`NativeModel`] clone of this shared snapshot.
+    Shared(Arc<NativeWeights>),
+}
+
+/// Run the serving node to completion with a central predictor service.
 ///
 /// `predictor_factory` is invoked *inside* the predictor-service thread
 /// (PJRT executables are thread-affine, `!Send`); `predictor_window`
 /// must match what the factory will produce: 0 = no predictor
 /// (`PredictorBox::None`), 1 for heuristic/DNN, the TCN window otherwise.
+/// Learned predictors on the default native backend should use
+/// [`serve_shared`] instead — no service thread required.
 pub fn serve(
     cfg: &ServeConfig,
     predictor_window: usize,
@@ -265,6 +289,30 @@ pub fn serve_with_bus(
     cfg: &ServeConfig,
     predictor_window: usize,
     predictor_factory: impl FnOnce() -> PredictorBox + Send,
+    bus: Option<&TelemetryBus>,
+) -> ServeReport {
+    run_serve(cfg, predictor_window, PredictorMode::Service(predictor_factory), bus)
+}
+
+/// Run the serving node with every worker predicting locally over one
+/// shared native weight snapshot — the default path for learned predictors.
+/// The predictor window comes from the snapshot itself; there is no
+/// predictor service thread and no cross-thread prediction round-trip
+/// (worker batches apply their utilities immediately, so a throttle can
+/// never race an in-flight response).
+pub fn serve_shared(
+    cfg: &ServeConfig,
+    weights: Arc<NativeWeights>,
+    bus: Option<&TelemetryBus>,
+) -> ServeReport {
+    let window = weights.window();
+    run_serve::<fn() -> PredictorBox>(cfg, window, PredictorMode::Shared(weights), bus)
+}
+
+fn run_serve<F: FnOnce() -> PredictorBox + Send>(
+    cfg: &ServeConfig,
+    predictor_window: usize,
+    mode: PredictorMode<F>,
     bus: Option<&TelemetryBus>,
 ) -> ServeReport {
     let t0 = Instant::now();
@@ -286,7 +334,7 @@ pub fn serve_with_bus(
             }
         }
     });
-    let report = serve_inner(cfg, predictor_window, predictor_factory, bus, t0);
+    let report = serve_inner(cfg, predictor_window, mode, bus, t0);
     if let Some(dash) = dashboard {
         if !cfg.dashboard_linger.is_zero() {
             crate::log_info!(
@@ -301,13 +349,17 @@ pub fn serve_with_bus(
     report
 }
 
-fn serve_inner(
+fn serve_inner<F: FnOnce() -> PredictorBox + Send>(
     cfg: &ServeConfig,
     predictor_window: usize,
-    predictor_factory: impl FnOnce() -> PredictorBox + Send,
+    mode: PredictorMode<F>,
     bus: Option<&TelemetryBus>,
     t0: Instant,
 ) -> ServeReport {
+    let (service_factory, shared) = match mode {
+        PredictorMode::Service(f) => (Some(f), None),
+        PredictorMode::Shared(w) => (None, Some(w)),
+    };
     let done = Arc::new(AtomicBool::new(false));
     let use_pred = predictor_window > 0;
     let window = predictor_window.max(1);
@@ -331,56 +383,68 @@ fn serve_inner(
         }
         let pred_deadline = cfg.predict_deadline;
         let pred_batch = cfg.predict_batch;
-        let pred_stats = s.spawn(move || {
-            // Construct inside the thread: PJRT handles are !Send.
-            let mut predictor = predictor_factory();
-            let mut batcher: DynamicBatcher<(usize, u64, u64)> =
-                DynamicBatcher::new(row, pred_batch, pred_deadline);
-            let mut batches = 0u64;
-            let mut filled = 0u64;
-            let flush = |batcher: &mut DynamicBatcher<(usize, u64, u64)>,
-                         predictor: &mut PredictorBox,
-                         by_deadline: bool,
-                         batches: &mut u64,
-                         filled: &mut u64| {
-                if batcher.is_empty() {
-                    return;
-                }
-                let (tags, x, n) = batcher.flush(by_deadline);
-                let probs = predictor.predict(&x, n);
-                *batches += 1;
-                *filled += n as u64;
-                let mut grouped: HashMap<usize, PredictResp> = HashMap::new();
-                for ((w, line, ver), p) in tags.into_iter().zip(probs) {
-                    grouped.entry(w).or_default().push((line, p, ver));
-                }
-                for (w, resp) in grouped {
-                    let _ = resp_txs[w].send(resp);
-                }
-            };
-            loop {
-                match pr_rx.recv_timeout(pred_deadline) {
-                    Ok(req) => {
-                        for (i, &line) in req.lines.iter().enumerate() {
-                            let full = batcher
-                                .push((req.worker, line, req.version), &req.x[i * row..(i + 1) * row]);
-                            if full {
-                                flush(&mut batcher, &mut predictor, false, &mut batches, &mut filled);
+        // Shared mode runs no service thread — workers predict locally, and
+        // pr_rx is simply dropped (workers never send in that mode).
+        let pred_stats = service_factory.map(|predictor_factory| {
+            s.spawn(move || {
+                // Construct inside the thread: PJRT handles are !Send.
+                let mut predictor = predictor_factory();
+                let mut batcher: DynamicBatcher<(usize, u64, u64)> =
+                    DynamicBatcher::new(row, pred_batch, pred_deadline);
+                let mut batches = 0u64;
+                let mut filled = 0u64;
+                let flush = |batcher: &mut DynamicBatcher<(usize, u64, u64)>,
+                             predictor: &mut PredictorBox,
+                             by_deadline: bool,
+                             batches: &mut u64,
+                             filled: &mut u64| {
+                    if batcher.is_empty() {
+                        return;
+                    }
+                    let (tags, x, n) = batcher.flush(by_deadline);
+                    let probs = predictor.predict(&x, n);
+                    *batches += 1;
+                    *filled += n as u64;
+                    let mut grouped: HashMap<usize, PredictResp> = HashMap::new();
+                    for ((w, line, ver), p) in tags.into_iter().zip(probs) {
+                        grouped.entry(w).or_default().push((line, p, ver));
+                    }
+                    for (w, resp) in grouped {
+                        let _ = resp_txs[w].send(resp);
+                    }
+                };
+                loop {
+                    match pr_rx.recv_timeout(pred_deadline) {
+                        Ok(req) => {
+                            for (i, &line) in req.lines.iter().enumerate() {
+                                let full = batcher.push(
+                                    (req.worker, line, req.version),
+                                    &req.x[i * row..(i + 1) * row],
+                                );
+                                if full {
+                                    flush(
+                                        &mut batcher,
+                                        &mut predictor,
+                                        false,
+                                        &mut batches,
+                                        &mut filled,
+                                    );
+                                }
                             }
                         }
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if batcher.deadline_expired() {
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if batcher.deadline_expired() {
+                                flush(&mut batcher, &mut predictor, true, &mut batches, &mut filled);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
                             flush(&mut batcher, &mut predictor, true, &mut batches, &mut filled);
+                            break;
                         }
                     }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        flush(&mut batcher, &mut predictor, true, &mut batches, &mut filled);
-                        break;
-                    }
                 }
-            }
-            (batches, filled)
+                (batches, filled)
+            })
         });
 
         // ---- workers ------------------------------------------------------
@@ -401,6 +465,7 @@ fn serve_inner(
             // Created dispatcher-side so the per-source (serve/w) sequence
             // counter has exactly one owner.
             let mut publisher = bus.map(|b| b.publisher(SourceId::serve(w)));
+            let shared_w = shared.clone();
             s.spawn(move || {
                 // The shared engine drives this worker's accesses; its
                 // feature rows are shipped to the predictor service rather
@@ -418,6 +483,11 @@ fn serve_inner(
                 // utilities) rather than retrains.
                 let mut controller =
                     if adaptive && use_pred { Some(AdaptiveController::new(acfg)) } else { None };
+                // Shared mode: this worker's own predictor over the shared
+                // snapshot — batches predict here, never cross a channel.
+                let mut local_model = shared_w.map(NativeModel::from_weights);
+                let mut local_probs: Vec<f32> = Vec::new();
+                let (mut local_batches, mut local_filled) = (0u64, 0u64);
 
                 loop {
                     // One throttle gate per iteration: it governs both the
@@ -515,12 +585,26 @@ fn serve_inner(
                             // have just drained the batch; don't ship an
                             // empty request.
                             if !lines.is_empty() {
-                                let _ = pr_tx.send(PredictReq {
-                                    worker: w,
-                                    version: cur_version,
-                                    lines,
-                                    x,
-                                });
+                                if let Some(m) = local_model.as_mut() {
+                                    // Shared mode: predict in place and
+                                    // apply immediately — same throttle
+                                    // regime that admitted the rows, so no
+                                    // version check is needed.
+                                    let n = lines.len();
+                                    m.predict_into(&x, n, &mut local_probs);
+                                    local_batches += 1;
+                                    local_filled += n as u64;
+                                    for (&line, &p) in lines.iter().zip(local_probs.iter()) {
+                                        engine.update_utility(line, p);
+                                    }
+                                } else {
+                                    let _ = pr_tx.send(PredictReq {
+                                        worker: w,
+                                        version: cur_version,
+                                        lines,
+                                        x,
+                                    });
+                                }
                             }
                         }
                         let c = workload.sessions_completed();
@@ -552,6 +636,8 @@ fn serve_inner(
                     drift_events,
                     throttled_windows,
                     events,
+                    pred_batches: local_batches,
+                    pred_filled: local_filled,
                 };
                 let _ = ev_tx.send(Event::Finished { stats });
             });
@@ -626,7 +712,12 @@ fn serve_inner(
                 Err(_) => break,
             }
         }
-        let (pred_batches, pred_filled) = pred_stats.join().unwrap_or((0, 0));
+        // Service-mode counters come from the service thread; shared-mode
+        // counters are summed from the workers (exactly one side is nonzero).
+        let (mut pred_batches, mut pred_filled) =
+            pred_stats.map(|h| h.join().unwrap_or((0, 0))).unwrap_or((0, 0));
+        pred_batches += stats.iter().map(|s| s.pred_batches).sum::<u64>();
+        pred_filled += stats.iter().map(|s| s.pred_filled).sum::<u64>();
 
         let wall = t0.elapsed().as_secs_f64();
         let tokens: u64 = stats.iter().map(|s| s.tokens).sum();
@@ -772,6 +863,30 @@ mod tests {
             j.get("adaptation_events").unwrap().as_arr().unwrap().len(),
             rep.adaptation_events.len()
         );
+    }
+
+    /// Shared mode: every worker predicts over one native snapshot — no
+    /// service thread — and the batch counters still land in the report.
+    /// Runs on synthetic weights, so it needs no artifacts.
+    #[test]
+    fn serve_shared_predicts_locally_without_service_thread() {
+        let (mm, store) =
+            crate::runtime::synthetic_model("tcn", 8, FEATURE_DIM, 8, &[1, 2], 0xC0FFEE);
+        let weights = Arc::new(NativeWeights::from_params(&mm, &store).unwrap());
+        let mut cfg = ServeConfig::quick("acpc");
+        cfg.total_sessions = 12;
+        cfg.adaptive = true;
+        cfg.adapt = crate::adapt::ControllerConfig::quick();
+        cfg.adapt.window_accesses = 1024;
+        let rep = serve_shared(&cfg, weights, None);
+        assert!(rep.prediction_batches > 0, "workers must predict locally");
+        assert!(
+            rep.mean_batch_fill > 1.0,
+            "local batching must amortize: {}",
+            rep.mean_batch_fill
+        );
+        assert!(rep.sessions_completed >= 10, "completed {}", rep.sessions_completed);
+        assert!(rep.adapt_windows > 0, "shared mode still ticks worker controllers");
     }
 
     #[test]

@@ -14,13 +14,49 @@ pub use heuristic::HeuristicPredictor;
 pub use labeler::{annotate, Annotation};
 pub use model::ModelRuntime;
 
+use anyhow::{bail, Result};
+
+/// Inference engine selection for learned predictors. Training and
+/// evaluation always run on PJRT (Adam stays in XLA); this only chooses who
+/// executes `predict`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// The pure-Rust kernel (`runtime::native`): allocation-free steady
+    /// state, arbitrary batch, `Send` snapshots. The default.
+    #[default]
+    Native,
+    /// The AOT-compiled HLO via PJRT — the escape hatch (and the reference
+    /// the native kernel is differentially tested against).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => bail!("unknown backend '{other}' (expected 'native' or 'pjrt')"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// A batched reuse predictor: maps per-line feature sequences to reuse
 /// probabilities in [0,1]. `window() == 1` means the model consumes only the
 /// current feature vector (the DNN baseline).
 ///
-/// Deliberately *not* `Send`: PJRT executables hold thread-affine handles,
-/// so learned predictors are constructed inside the thread that runs them
-/// (see `coordinator::server::serve`'s factory parameter).
+/// The trait itself is deliberately `Send`-agnostic: PJRT-backed
+/// implementations hold thread-affine handles and must be constructed
+/// inside the thread that runs them, while the native kernel
+/// (`runtime::NativeModel`) is `Send` and shares one weight snapshot across
+/// threads — the reason sweeps, shard pools, and serve workers no longer
+/// reload artifacts per thread.
 pub trait ReusePredictor {
     fn name(&self) -> String;
 
@@ -49,6 +85,10 @@ pub enum PredictorBox {
     None,
     Heuristic(HeuristicPredictor),
     Model(Box<ModelRuntime>),
+    /// Native-kernel predictor over a shared weight snapshot — `Send`, no
+    /// PJRT anywhere, for runs that never train (see
+    /// [`PredictorBox::model_mut`]).
+    Native(crate::runtime::NativeModel),
 }
 
 impl PredictorBox {
@@ -61,6 +101,7 @@ impl PredictorBox {
             PredictorBox::None => 1,
             PredictorBox::Heuristic(p) => p.window(),
             PredictorBox::Model(m) => m.window(),
+            PredictorBox::Native(m) => ReusePredictor::window(m),
         }
     }
 
@@ -69,6 +110,7 @@ impl PredictorBox {
             PredictorBox::None => "none".into(),
             PredictorBox::Heuristic(p) => p.name(),
             PredictorBox::Model(m) => ReusePredictor::name(&**m),
+            PredictorBox::Native(m) => ReusePredictor::name(m),
         }
     }
 
@@ -77,6 +119,7 @@ impl PredictorBox {
             PredictorBox::None => vec![0.5; n],
             PredictorBox::Heuristic(p) => p.predict(x, n),
             PredictorBox::Model(m) => m.predict(x, n),
+            PredictorBox::Native(m) => m.predict(x, n),
         }
     }
 
@@ -90,10 +133,15 @@ impl PredictorBox {
             }
             PredictorBox::Heuristic(p) => p.predict_into(x, n, out),
             PredictorBox::Model(m) => m.predict_into(x, n, out),
+            PredictorBox::Native(m) => m.predict_into(x, n, out),
         }
     }
 
-    /// Online-learning hook; `None` for non-trainable predictors.
+    /// Online-learning hook; `None` for non-trainable predictors. A
+    /// [`PredictorBox::Native`] snapshot is inference-only by construction —
+    /// runs that train (feedback or adaptive retraining) use
+    /// [`PredictorBox::Model`], whose `ModelRuntime` trains on PJRT and
+    /// re-snapshots native weights after each step.
     pub fn model_mut(&mut self) -> Option<&mut ModelRuntime> {
         match self {
             PredictorBox::Model(m) => Some(m),

@@ -3,9 +3,12 @@
 //! implements [`ReusePredictor`] for the simulator/coordinator.
 
 use super::feature::FEATURE_DIM;
-use super::ReusePredictor;
-use crate::runtime::{Engine, Executable, Manifest, ModelManifest, ParamStore, Tensor};
+use super::{Backend, ReusePredictor};
+use crate::runtime::{
+    Engine, Executable, Manifest, ModelManifest, NativeModel, NativeWeights, ParamStore, Tensor,
+};
 use anyhow::Result;
+use std::sync::Arc;
 
 pub struct ModelRuntime {
     pub mm: ModelManifest,
@@ -15,6 +18,14 @@ pub struct ModelRuntime {
     eval: Executable,
     /// Inference batch (from the manifest; AOT shape is fixed).
     pub infer_batch: usize,
+    /// Who runs `predict`: the native kernel (default) or PJRT (escape
+    /// hatch / differential-test reference). Train and eval are PJRT
+    /// regardless.
+    backend: Backend,
+    /// Repacked native weights, rebuilt lazily whenever `native_stale`
+    /// (first use, after each `train_step`, after `set_params`).
+    native: Option<NativeModel>,
+    native_stale: bool,
     /// Reusable `[infer_batch, row]` staging buffer for chunked inference:
     /// loaned into the input `Tensor` for the PJRT call and recovered
     /// afterwards, so steady-state prediction allocates no fresh staging
@@ -59,12 +70,52 @@ impl ModelRuntime {
             train,
             eval,
             infer_batch,
+            backend: Backend::default(),
+            native: None,
+            native_stale: true,
             stage: Vec::new(),
             infer_inputs: Vec::new(),
             infer_params_stale: true,
             predictions: 0,
             train_steps: 0,
         })
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Select the predict engine. `Native` re-snapshots lazily on the next
+    /// predict; `Pjrt` routes through the AOT executable again.
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+    }
+
+    /// Replace the parameters wholesale (differential fuzz tests inject
+    /// random `ParamStore` contents here); both backends see the new
+    /// weights on their next predict.
+    pub fn set_params(&mut self, store: ParamStore) {
+        self.store = store;
+        self.infer_params_stale = true;
+        self.native_stale = true;
+    }
+
+    /// The current native weight snapshot (repacking first if stale) —
+    /// what serve/sweep hand to worker threads, and what the `adapt/`
+    /// hot-swap publishes after a retrain.
+    pub fn native_snapshot(&mut self) -> Result<Arc<NativeWeights>> {
+        self.refresh_native()?;
+        Ok(self.native.as_ref().expect("refreshed above").snapshot())
+    }
+
+    fn refresh_native(&mut self) -> Result<()> {
+        if self.native_stale || self.native.is_none() {
+            // Once per *weight update* (never per chunk): repack the store
+            // into a fresh immutable snapshot, version = Adam step.
+            self.native = Some(NativeModel::from_params(&self.mm, &self.store)?);
+            self.native_stale = false;
+        }
+        Ok(())
     }
 
     /// Input row width: window*F for sequence models, F for the DNN.
@@ -94,9 +145,11 @@ impl ModelRuntime {
         let inputs = self.store.train_inputs(xt, yt);
         let out = self.train.run(&inputs)?;
         self.train_steps += 1;
-        // Weights changed: the cached inference input list must be rebuilt
-        // before the next predict (hot-swap correctness).
+        // Weights changed: the cached PJRT inference input list and the
+        // native snapshot must both be rebuilt before the next predict
+        // (hot-swap correctness on either backend).
         self.infer_params_stale = true;
+        self.native_stale = true;
         self.store.absorb_train_output(out)
     }
 
@@ -161,13 +214,23 @@ impl ReusePredictor for ModelRuntime {
         out
     }
 
-    /// Chunked prediction into a caller-owned buffer: the staging chunk and
-    /// the params side of the PJRT input list are reused across calls (see
-    /// `infer_staged`), so the per-chunk allocations left are the PJRT
-    /// literal marshalling and result readback inside `Executable::run`.
+    /// Prediction into a caller-owned buffer. On the native backend
+    /// (default) each row runs the pure-Rust kernel — arbitrary batch, no
+    /// tail padding, zero steady-state allocation. On the PJRT backend the
+    /// input is chunked to the fixed AOT batch with a zero-padded tail; the
+    /// staging chunk and the params side of the input list are reused
+    /// across calls (see `infer_staged`), but the per-chunk literal
+    /// marshalling and result readback inside `Executable::run` still
+    /// allocate — the known leftover the native kernel eliminates.
     fn predict_into(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) {
         let row = self.row_elems();
         assert_eq!(x.len(), n * row, "predict input length");
+        if self.backend == Backend::Native {
+            self.refresh_native().expect("native weight snapshot");
+            self.native.as_mut().expect("refreshed above").predict_into(x, n, out);
+            self.predictions += n as u64;
+            return;
+        }
         let b = self.infer_batch;
         out.clear();
         out.reserve(n);
@@ -204,19 +267,28 @@ mod tests {
             return;
         };
         let row = rt.row_elems();
-        // n = 1.5 × batch forces a padded tail chunk.
+        // n = 1.5 × batch forces a padded tail chunk on the PJRT backend.
         let n = rt.infer_batch * 3 / 2;
         let x = vec![0.1f32; n * row];
-        let probs = rt.predict(&x, n);
-        assert_eq!(probs.len(), n);
-        for &p in &probs {
-            assert!((0.0..=1.0).contains(&p));
+        assert_eq!(rt.backend(), Backend::Native, "native is the default");
+        let native = rt.predict(&x, n);
+        rt.set_backend(Backend::Pjrt);
+        let pjrt = rt.predict(&x, n);
+        for probs in [&native, &pjrt] {
+            assert_eq!(probs.len(), n);
+            for &p in probs.iter() {
+                assert!((0.0..=1.0).contains(&p));
+            }
+            // All-identical inputs ⇒ all-identical outputs (batch-position
+            // independence on either backend).
+            let spread = probs.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+                - probs.iter().cloned().fold(f32::INFINITY, f32::min);
+            assert!(spread < 1e-5, "spread {spread}");
         }
-        // All-identical inputs ⇒ all-identical outputs (batch-position
-        // independence of the lowered model).
-        let spread = probs.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
-            - probs.iter().cloned().fold(f32::INFINITY, f32::min);
-        assert!(spread < 1e-5, "spread {spread}");
+        // The two backends agree on the padded-tail batch shape.
+        for (a, b) in native.iter().zip(&pjrt) {
+            assert!((a - b).abs() <= 1e-5, "native {a} vs pjrt {b}");
+        }
     }
 
     #[test]

@@ -29,11 +29,19 @@ impl Engine {
 
     /// Load + compile an HLO-text artifact.
     pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("artifact path {path:?} is not valid UTF-8"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
             .with_context(|| format!("parse HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
-        Ok(Executable { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+        let name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("artifact path {path:?} has no file name"))?
+            .to_string_lossy()
+            .into_owned();
+        Ok(Executable { exe, name })
     }
 }
 

@@ -1,15 +1,18 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` and executes them from the simulation / serving
-//! hot path. Python never runs here — the HLO text + params binary are the
-//! only interface (see `artifacts/manifest.json`).
+//! Model runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (PJRT; train/eval) and executes inference
+//! through the pure-Rust [`native`] kernel on the hot path. Python never
+//! runs here — the HLO text + params binary are the only interface (see
+//! `artifacts/manifest.json`).
 
 mod artifact;
 mod engine;
+mod native;
 mod params;
 mod tensor;
 
 pub use artifact::{EntryPoint, Manifest, ModelManifest, ParamSpec};
 pub use engine::{Engine, Executable};
+pub use native::{synthetic_model, NativeKind, NativeModel, NativeWeights};
 pub use params::ParamStore;
 pub use tensor::Tensor;
 

@@ -37,11 +37,10 @@ impl ParamStore {
         let mut off = 0;
         for spec in &mm.params {
             let n = spec.numel();
-            let mut data = Vec::with_capacity(n);
-            for i in 0..n {
-                let b = &bytes[off + i * 4..off + i * 4 + 4];
-                data.push(f32::from_le_bytes(b.try_into().unwrap()));
-            }
+            let data: Vec<f32> = bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
             off += n * 4;
             params.push(Tensor::new(spec.shape.clone(), data));
         }

@@ -17,9 +17,13 @@
 //!
 //! Shard workers are **persistent per calling thread**: the first sharded
 //! run on a thread spawns its pool, later runs reuse it (and the pool dies
-//! with the thread). Predictor factories therefore run on long-lived
-//! threads, which is what lets the runner's per-thread TCN cache amortize
-//! one artifact load across every sharded sweep cell a thread executes.
+//! with the thread). Under the default native backend every shard's
+//! predictor is a [`PredictorBox::Native`] clone over one process-wide
+//! weight snapshot — workers share the model rather than reloading
+//! artifacts per thread. Predictor factories still run on the long-lived
+//! worker threads, which is what lets the runner's per-thread *PJRT* cache
+//! (the `backend: pjrt` escape hatch) amortize its one artifact load + XLA
+//! compile across every sharded sweep cell a thread executes.
 //!
 //! Aggregation is exact: [`CacheStats`](crate::mem::CacheStats) /
 //! [`SimResult`] merge by summing monotone counters and recomputing derived

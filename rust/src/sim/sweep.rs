@@ -12,13 +12,13 @@
 //! `tests/integration_sweep.rs`).
 //!
 //! The per-cell predictor is selectable (`--predictor`): `auto`/`heuristic`
-//! (artifact-free, the default), `tcn` (the compiled TCN loaded from the
-//! artifacts *inside* each worker thread — PJRT handles are thread-affine —
-//! falling back to the heuristic with a warning when artifacts are absent;
-//! the runner caches the load per worker thread, including the persistent
-//! shard-worker threads of `--shards` cells), `adaptive` (heuristic + a
-//! per-cell drift controller closing the loop), or `none`. Classic policies
-//! ignore the predictor entirely.
+//! (artifact-free, the default), `tcn` (the TCN executed by the native
+//! kernel over one process-wide weight snapshot shared by every worker and
+//! shard thread, falling back to the heuristic with a warning when
+//! artifacts are absent; `backend: pjrt` specs instead load PJRT inside
+//! each worker thread — handles are thread-affine — cached per thread),
+//! `adaptive` (heuristic + a per-cell drift controller closing the loop),
+//! or `none`. Classic policies ignore the predictor entirely.
 
 use super::engine::SimResult;
 use crate::api::{run_farm, CacheMode, FarmConfig, FarmEntry, ReportStore, RunSpec};

@@ -7,6 +7,9 @@
 //! full steady-state pass over the same working set must perform **zero**
 //! heap allocations — the acceptance bar for the buffer-reuse work
 //! (`PredictionBatch::clear`, `predict_into`, the staged model inference).
+//! The bar is applied twice: to the heuristic predictor and to the native
+//! TCN kernel (`runtime::NativeModel`, on synthetic weights), whose scratch
+//! buffers must be fully sized at construction.
 //!
 //! This file intentionally contains a single `#[test]`: the counting
 //! allocator is process-global, and a sibling test running concurrently
@@ -93,5 +96,28 @@ fn steady_state_predict_path_does_not_allocate() {
         delta, 0,
         "steady-state predict path performed {delta} heap allocations over 50k accesses \
          (expected 0: batch, probability and staging buffers must be reused)"
+    );
+
+    // Same bar for the native TCN kernel, on synthetic weights with the
+    // production geometry (window 16, 32 channels, dilations 1/2/4): after
+    // the warmup pass sizes the output buffer, the forward pass must run
+    // entirely in the scratch space allocated at construction.
+    let (mm, store) =
+        acpc::runtime::synthetic_model("tcn", 16, FEATURE_DIM, 32, &[1, 2, 4], 0xA110C);
+    let native = acpc::runtime::NativeModel::from_params(&mm, &store).unwrap();
+    let window = 16;
+    let mut predictor = PredictorBox::Native(native);
+    let mut batch = PredictionBatch::new(window * FEATURE_DIM, 256);
+    let mut probs: Vec<f32> = Vec::new();
+    let feats = vec![0.25f32; window * FEATURE_DIM];
+
+    predict_pass(&mut hier, &mut batch, &mut predictor, &mut probs, &lines, &feats);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    predict_pass(&mut hier, &mut batch, &mut predictor, &mut probs, &lines, &feats);
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        delta, 0,
+        "native TCN steady-state predict path performed {delta} heap allocations over \
+         50k accesses (expected 0: the kernel's scratch buffers are sized at construction)"
     );
 }

@@ -1,0 +1,155 @@
+//! Differential tests: the native inference kernel against the PJRT
+//! reference, on the real AOT artifacts.
+//!
+//! Every test is artifact-gated (prints `SKIP` and returns when
+//! `artifacts/` is absent — CI stage order) and loud-fails on any runtime
+//! error once the artifacts exist. Together they pin the tentpole parity
+//! guarantees: per-element agreement within 1e-5 across *all* manifest
+//! models, on padded-tail batch shapes, after train steps (the re-snapshot
+//! path), and on randomized weights (seeded fuzz through `set_params`).
+
+use acpc::predictor::{Backend, ModelRuntime, ReusePredictor};
+use acpc::runtime::{Engine, Manifest, NativeModel, ParamStore};
+
+const TOL: f32 = 1e-5;
+
+fn load_manifest() -> Option<Manifest> {
+    let dir = acpc::runtime::artifacts_dir()?;
+    Manifest::load(&dir).ok()
+}
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform in [-scale, scale).
+fn unit(state: &mut u64, scale: f32) -> f32 {
+    let u = (splitmix(state) >> 40) as f32 / (1u64 << 24) as f32;
+    (2.0 * u - 1.0) * scale
+}
+
+/// Deterministic feature-like input rows (non-negative, mixed zero/nonzero
+/// so the kernel's zero-skip path is exercised).
+fn input_rows(n: usize, row: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed;
+    (0..n * row)
+        .map(|_| {
+            let v = unit(&mut state, 1.0);
+            if v < -0.5 {
+                0.0
+            } else {
+                v.abs()
+            }
+        })
+        .collect()
+}
+
+fn assert_close(name: &str, native: &[f32], pjrt: &[f32]) {
+    assert_eq!(native.len(), pjrt.len());
+    for (i, (a, b)) in native.iter().zip(pjrt).enumerate() {
+        assert!(
+            (a - b).abs() <= TOL,
+            "{name}: row {i}: native {a} vs pjrt {b} (|Δ| = {})",
+            (a - b).abs()
+        );
+    }
+}
+
+/// Native ≡ PJRT on every model the manifest ships, with a batch size that
+/// forces the PJRT backend to zero-pad its tail chunk (the native kernel
+/// takes arbitrary n with no padding at all).
+#[test]
+fn native_matches_pjrt_on_every_manifest_model() {
+    let Some(manifest) = load_manifest() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    for name in manifest.models.keys() {
+        let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
+        let row = rt.row_elems();
+        let n = rt.infer_batch * 3 / 2;
+        let x = input_rows(n, row, 0xD1FF ^ name.len() as u64);
+        assert_eq!(rt.backend(), Backend::Native, "native is the default");
+        let native = rt.predict(&x, n);
+        rt.set_backend(Backend::Pjrt);
+        let pjrt = rt.predict(&x, n);
+        assert_close(name, &native, &pjrt);
+        // The standalone kernel (what serve/sweep workers run) agrees too.
+        let mut solo = NativeModel::from_params(&rt.mm, &rt.store).unwrap();
+        let mut out = Vec::new();
+        solo.predict_into(&x, n, &mut out);
+        assert_close(&format!("{name} (standalone)"), &out, &pjrt);
+    }
+}
+
+/// After PJRT train steps the runtime must re-snapshot the native weights:
+/// predictions agree on the *trained* parameters, and the snapshot version
+/// tracks the Adam step.
+#[test]
+fn native_matches_pjrt_after_train_steps() {
+    let Some(manifest) = load_manifest() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    let mut rt = ModelRuntime::load(&engine, &manifest, "tcn").unwrap();
+    let row = rt.row_elems();
+    let v0 = rt.native_snapshot().unwrap().version();
+
+    let b = rt.mm.train.batch;
+    let x = input_rows(b, row, 0x7EA1);
+    let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+    for _ in 0..3 {
+        rt.train_step(x.clone(), y.clone()).unwrap();
+    }
+    assert_eq!(
+        rt.native_snapshot().unwrap().version(),
+        v0 + 3,
+        "snapshot version must track the Adam step"
+    );
+
+    let n = rt.infer_batch + 7;
+    let probe = input_rows(n, row, 0xBEEF);
+    let native = rt.predict(&probe, n);
+    rt.set_backend(Backend::Pjrt);
+    let pjrt = rt.predict(&probe, n);
+    assert_close("tcn post-train", &native, &pjrt);
+}
+
+/// Seeded random-weight fuzz: inject random `ParamStore` contents (through
+/// the same `set_params` hook the checkpoint loader uses) and require the
+/// two backends to agree on the arbitrary weights — not just the shipped
+/// initialization.
+#[test]
+fn native_matches_pjrt_on_random_weights() {
+    let Some(manifest) = load_manifest() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let engine = Engine::cpu().unwrap();
+    for name in manifest.models.keys() {
+        let mut rt = ModelRuntime::load(&engine, &manifest, name).unwrap();
+        let mm = rt.mm.clone();
+        let row = rt.row_elems();
+        for seed in [1u64, 2, 3] {
+            let mut state = seed ^ 0xF022_5EED_0000_0001;
+            let bytes: Vec<u8> = (0..mm.total_param_elems())
+                .flat_map(|_| unit(&mut state, 0.3).to_le_bytes())
+                .collect();
+            let store = ParamStore::from_bytes(&mm, &bytes).unwrap();
+            rt.set_params(store);
+            let n = rt.infer_batch / 2 + 3;
+            let x = input_rows(n, row, seed.wrapping_mul(0x5DEECE66D));
+            rt.set_backend(Backend::Native);
+            let native = rt.predict(&x, n);
+            rt.set_backend(Backend::Pjrt);
+            let pjrt = rt.predict(&x, n);
+            assert_close(&format!("{name} fuzz seed {seed}"), &native, &pjrt);
+        }
+    }
+}

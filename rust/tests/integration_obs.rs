@@ -10,10 +10,13 @@
 //! 3. the ring is bounded and honest — a subscriber that never drains
 //!    accounts for every published event as delivered + dropped.
 
-use acpc::api::{AdaptSpec, RunReport, RunSpec, Runner};
+use acpc::api::{AdaptSpec, PredictorFactory, RunReport, RunSpec, Runner};
 use acpc::config::PredictorKind;
 use acpc::obs::{TelemetryBus, TelemetryEvent};
+use acpc::predictor::{PredictorBox, FEATURE_DIM};
+use acpc::runtime::{synthetic_model, NativeModel, NativeWeights};
 use acpc::util::json::Json;
+use std::sync::Arc;
 
 /// An adaptive spec small enough to be quick but busy enough to cross many
 /// telemetry windows (and several 8192-access sample periods).
@@ -73,6 +76,44 @@ fn subscribed_run_report_is_byte_identical_sharded() {
         events.iter().map(|e| e.source.index).collect();
     assert!(shards.len() > 1, "sharded runs must stream per-shard sources, got {shards:?}");
     assert_eq!(normalized(&plain), normalized(&subscribed));
+}
+
+/// The no-perturbation contract holds on the native backend too:
+/// factory-injected native predictors over *one* shared synthetic weight
+/// snapshot, adaptive controller on, single-threaded and sharded.
+#[test]
+fn subscribed_native_backend_run_is_byte_identical() {
+    let (mm, store) = synthetic_model("tcn", 16, FEATURE_DIM, 16, &[1, 2], 0xB0B5);
+    let weights = Arc::new(NativeWeights::from_params(&mm, &store).unwrap());
+    let factory = || -> PredictorFactory {
+        let w = Arc::clone(&weights);
+        Arc::new(move |_shard| PredictorBox::Native(NativeModel::from_weights(Arc::clone(&w))))
+    };
+    let native_spec = |shards: usize| {
+        let mut spec = busy_spec(shards);
+        spec.predictor = PredictorKind::Tcn;
+        spec
+    };
+    for shards in [1usize, 4] {
+        let plain = Runner::new(native_spec(shards))
+            .unwrap()
+            .with_predictor_factory(factory())
+            .run()
+            .unwrap();
+        let bus = TelemetryBus::with_capacity(1 << 16);
+        let mut sub = bus.subscribe();
+        let subscribed = Runner::new(native_spec(shards))
+            .unwrap()
+            .with_predictor_factory(factory())
+            .with_telemetry(bus)
+            .run()
+            .unwrap();
+        let mut events = Vec::new();
+        sub.drain(&mut events);
+        assert!(!events.is_empty(), "adaptive native runs must stream events");
+        assert_eq!(normalized(&plain), normalized(&subscribed), "{shards} shard(s)");
+        assert!(plain.result.prediction_batches > 0, "{shards} shard(s): predictions ran");
+    }
 }
 
 #[test]

@@ -5,9 +5,12 @@
 //! validation of unshardable inputs.
 
 use acpc::adapt::ControllerConfig;
-use acpc::api::{run_compare, AdaptSpec, RunReport, RunSpec, Runner};
+use acpc::api::{run_compare, AdaptSpec, PredictorFactory, RunReport, RunSpec, Runner};
 use acpc::config::PredictorKind;
 use acpc::metrics::MetricsReport;
+use acpc::predictor::{PredictorBox, FEATURE_DIM};
+use acpc::runtime::{synthetic_model, NativeModel, NativeWeights};
+use std::sync::Arc;
 
 /// Assert every aggregate metric is bit-identical, *except* EMU: EMU is a
 /// time-sampled statistic and the sampling instants are shard-local (every
@@ -135,6 +138,38 @@ fn heuristic_predictor_deterministic_per_shard_count() {
     assert_eq!(a.result.prediction_batches, b.result.prediction_batches);
     assert!(a.result.prediction_batches > 0, "predictor must have run in the shards");
     assert_eq!(a.result.report.accesses, 100_000);
+}
+
+/// Native-kernel predictors: every shard predicts over a clone of *one*
+/// shared weight snapshot (the `Send` property the per-thread PJRT cache
+/// could never offer). Each shard count must be deterministic across
+/// reruns, and the prediction pipeline must actually run in the shards.
+#[test]
+fn native_predictor_shares_one_snapshot_across_shards() {
+    let (mm, store) = synthetic_model("tcn", 16, FEATURE_DIM, 16, &[1, 2, 4], 0x5EED);
+    let weights = Arc::new(NativeWeights::from_params(&mm, &store).unwrap());
+    let run_with = |shards: usize| {
+        let w = Arc::clone(&weights);
+        let factory: PredictorFactory =
+            Arc::new(move |_shard| PredictorBox::Native(NativeModel::from_weights(Arc::clone(&w))));
+        let spec = spec_for("acpc", PredictorKind::Tcn, "composite", 100_000)
+            .shards(shards)
+            .build()
+            .unwrap();
+        Runner::new(spec).unwrap().with_predictor_factory(factory).run().unwrap()
+    };
+    for shards in [1usize, 8] {
+        let a = run_with(shards);
+        let b = run_with(shards);
+        assert_eq!(
+            a.result.report.to_json().to_pretty(),
+            b.result.report.to_json().to_pretty(),
+            "native predictor must be deterministic at {shards} shard(s)"
+        );
+        assert!(a.result.prediction_batches > 0, "predictions must run at {shards} shard(s)");
+        assert_eq!(a.result.report.accesses, 100_000);
+        assert_eq!(a.predictor_effective, "tcn");
+    }
 }
 
 /// Sharded adaptive runs: one controller per shard, drift detection and
