@@ -33,7 +33,7 @@ pub use farm::{
 };
 pub use crate::predictor::Backend;
 pub use runner::{PredictorFactory, RunReport, Runner};
-pub use spec::{AdaptSpec, HierarchySpec, RunSpec, RunSpecBuilder, WorkloadSpec, SCHEMA};
+pub use spec::{AdaptSpec, HierarchySpec, RunSpec, RunSpecBuilder, TrafficSpec, WorkloadSpec, SCHEMA};
 pub use store::{spec_hash, CacheMode, ReportStore, StoreEntry};
 
 use crate::adapt::{CompareOutput, ControllerSummary};

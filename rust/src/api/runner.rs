@@ -11,7 +11,7 @@
 //! examples all execute through [`Runner::run`]; the legacy
 //! `sim::run_workload*` functions survive only as crate-internal delegates.
 
-use super::spec::{Resolved, RunSpec, SCHEMA};
+use super::spec::{Resolved, ResolvedTraffic, RunSpec, SCHEMA};
 use super::store::{CacheMode, ReportStore};
 use crate::adapt::{AdaptiveController, ControllerSummary};
 use crate::config::PredictorKind;
@@ -21,6 +21,7 @@ use crate::predictor::{Backend, HeuristicPredictor, ModelRuntime, PredictorBox};
 use crate::runtime::{Manifest, NativeModel, NativeWeights};
 use crate::sim::shard::{run_workload_sharded, PredictorReclaim};
 use crate::sim::SimResult;
+use crate::traffic::{OpenLoopWorkload, ReplayWorkload, TrafficSummary};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
@@ -159,6 +160,13 @@ impl Runner {
         &self.resolved.spec
     }
 
+    /// Replay runs always simulate: the spec hash covers the capture
+    /// *path*, not its bytes, so a store hit could silently serve a stale
+    /// capture's results.
+    fn replays(&self) -> bool {
+        matches!(self.resolved.traffic, Some(ResolvedTraffic::Replay(_)))
+    }
+
     /// May this run share the per-thread cached PJRT TCN? Only for the
     /// `backend: pjrt` escape hatch (native runs share one process-wide
     /// weight snapshot instead — see [`SpecPlan::SharedNative`]), and only
@@ -206,7 +214,7 @@ impl Runner {
     /// when the report was served from the store without simulating.
     pub fn run_cached(&self) -> Result<(RunReport, bool)> {
         if let Some((store, mode)) = &self.store {
-            if mode.reads() && matches!(self.source, PredictorSource::Spec) {
+            if mode.reads() && matches!(self.source, PredictorSource::Spec) && !self.replays() {
                 let hash = self.spec_hash();
                 if let Some(report) = store.get(&hash) {
                     return Ok((report, true));
@@ -226,7 +234,13 @@ impl Runner {
     fn execute(&self) -> Result<RunReport> {
         let r = &self.resolved;
         let cache = self.cache_eligible();
-        let mut workload = r.cfg.workload();
+        let mut workload: Box<dyn crate::trace::Workload> = match &r.traffic {
+            Some(ResolvedTraffic::Replay(path)) => Box::new(ReplayWorkload::open(path)?),
+            Some(ResolvedTraffic::OpenLoop(ol)) => {
+                Box::new(OpenLoopWorkload::new(r.cfg.workload(), ol.clone(), None))
+            }
+            None => r.cfg.workload(),
+        };
 
         let (result, controllers) = if r.shards > 1 {
             let mk: PredictorFactory = match &self.source {
@@ -568,6 +582,9 @@ impl RunReport {
         if let Some(s) = self.adaptation() {
             j.set("adaptation", s.to_json());
         }
+        if let Some(t) = &r.traffic {
+            j.set("traffic", t.to_json());
+        }
         j
     }
 
@@ -609,6 +626,13 @@ impl RunReport {
             Some(a) => vec![ControllerSummary::from_json(a)?],
             None => Vec::new(),
         };
+        let traffic = match j.get("traffic") {
+            Some(t) => Some(
+                TrafficSummary::from_json(t)
+                    .map_err(|e| anyhow::anyhow!("report.traffic: {e}"))?,
+            ),
+            None => None,
+        };
         let result = SimResult {
             tokens: report.tokens,
             emu: report.emu,
@@ -621,6 +645,7 @@ impl RunReport {
             drift_events: u("drift_events")?,
             predictor_swaps: u("predictor_swaps")?,
             throttled_windows: u("throttled_windows")?,
+            traffic,
             report,
         };
         Ok(RunReport { spec, predictor_effective, result, controllers })
@@ -758,10 +783,13 @@ mod tests {
             .build()
             .unwrap();
         let report = Runner::new(spec).unwrap().run().unwrap();
+        let traffic = report.result.traffic.expect("open-loop scenario reports traffic");
+        assert!(traffic.offered > 0);
         let text = report.to_json().to_pretty();
         let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.to_json().to_pretty(), text);
         assert_eq!(back.result.predictor, "heuristic");
+        assert_eq!(back.result.traffic, Some(traffic));
     }
 
     /// The per-thread PJRT TCN cache serves only the `backend: pjrt`

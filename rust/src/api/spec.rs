@@ -38,6 +38,136 @@ pub struct WorkloadSpec {
     pub arrival_p_cold: Option<f64>,
 }
 
+/// The spec's `traffic` block: either an open-loop arrival process laid
+/// over the workload (offered rate decoupled from service rate, bounded
+/// admission queue — see [`crate::traffic::arrivals`]) or `replay`, which
+/// substitutes the whole workload with a captured `.acpctrace` played back
+/// bit-for-bit. `None` fields take the open-loop defaults; `replay` is
+/// mutually exclusive with every other knob in the block and with
+/// `scenario`/`profile`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrafficSpec {
+    /// Arrival process: `poisson` (default), `diurnal`, or `bursty`.
+    pub arrivals: Option<String>,
+    /// Mean offered rate, requests per 1000 access ticks.
+    pub rate: Option<f64>,
+    /// Diurnal cycle length in ticks.
+    pub period: Option<u64>,
+    /// Diurnal swing as a fraction of the base rate, in `[0, 1]`.
+    pub amplitude: Option<f64>,
+    /// Hot-state rate multiplier of the bursty process.
+    pub burst_factor: Option<f64>,
+    /// Per-tick probability of toggling the bursty hidden state.
+    pub burst_switch_p: Option<f64>,
+    /// Admission-queue capacity; arrivals beyond it are shed.
+    pub queue_depth: Option<usize>,
+    /// Path to a captured `.acpctrace` to replay instead of generating.
+    pub replay: Option<String>,
+}
+
+impl TrafficSpec {
+    fn has_open_loop_fields(&self) -> bool {
+        self.arrivals.is_some()
+            || self.rate.is_some()
+            || self.period.is_some()
+            || self.amplitude.is_some()
+            || self.burst_factor.is_some()
+            || self.burst_switch_p.is_some()
+            || self.queue_depth.is_some()
+    }
+
+    /// Spec view of a concrete open-loop config, every field explicit
+    /// (the resolved-spec analogue of [`AdaptSpec::from_config`]).
+    fn from_open_loop(c: &crate::traffic::OpenLoopConfig) -> Self {
+        Self {
+            arrivals: Some(c.kind.label().to_string()),
+            rate: Some(c.rate),
+            period: Some(c.period),
+            amplitude: Some(c.amplitude),
+            burst_factor: Some(c.burst_factor),
+            burst_switch_p: Some(c.burst_switch_p),
+            queue_depth: Some(c.queue_depth),
+            replay: None,
+        }
+    }
+
+    /// Concrete open-loop config; unset fields take the defaults, the RNG
+    /// stream seeds from the run seed.
+    fn resolve_open_loop(&self, run_seed: u64) -> Result<crate::traffic::OpenLoopConfig> {
+        let kind =
+            crate::traffic::ArrivalKind::parse(self.arrivals.as_deref().unwrap_or("poisson"))?;
+        let mut ol = crate::traffic::OpenLoopConfig::new(kind, run_seed);
+        if let Some(v) = self.rate {
+            ol.rate = v;
+        }
+        if let Some(v) = self.period {
+            ol.period = v;
+        }
+        if let Some(v) = self.amplitude {
+            ol.amplitude = v;
+        }
+        if let Some(v) = self.burst_factor {
+            ol.burst_factor = v;
+        }
+        if let Some(v) = self.burst_switch_p {
+            ol.burst_switch_p = v;
+        }
+        if let Some(v) = self.queue_depth {
+            ol.queue_depth = v;
+        }
+        ol.validate()?;
+        Ok(ol)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        if let Some(v) = &self.arrivals {
+            j.set("arrivals", Json::Str(v.clone()));
+        }
+        if let Some(v) = self.rate {
+            j.set("rate", f64_json(v));
+        }
+        if let Some(v) = self.period {
+            j.set("period", Json::Num(v as f64));
+        }
+        if let Some(v) = self.amplitude {
+            j.set("amplitude", f64_json(v));
+        }
+        if let Some(v) = self.burst_factor {
+            j.set("burst_factor", f64_json(v));
+        }
+        if let Some(v) = self.burst_switch_p {
+            j.set("burst_switch_p", f64_json(v));
+        }
+        if let Some(v) = self.queue_depth {
+            j.set("queue_depth", Json::Num(v as f64));
+        }
+        if let Some(v) = &self.replay {
+            j.set("replay", Json::Str(v.clone()));
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("'traffic' must be an object"))?;
+        let mut s = Self::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "arrivals" => s.arrivals = Some(str_field(v, k)?),
+                "rate" => s.rate = Some(f64_field(v, k)?),
+                "period" => s.period = Some(u64_field(v, k)?),
+                "amplitude" => s.amplitude = Some(f64_field(v, k)?),
+                "burst_factor" => s.burst_factor = Some(f64_field(v, k)?),
+                "burst_switch_p" => s.burst_switch_p = Some(f64_field(v, k)?),
+                "queue_depth" => s.queue_depth = Some(u64_field(v, k)? as usize),
+                "replay" => s.replay = Some(str_field(v, k)?),
+                other => bail!("unknown traffic key '{other}'"),
+            }
+        }
+        Ok(s)
+    }
+}
+
 /// Hierarchy overrides layered on top of the preset. Sizes are in KiB
 /// (matching the CLI/JSON config convention).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -240,6 +370,8 @@ pub struct RunSpec {
     /// Attach an adaptive controller (`Some`), optionally overriding its
     /// thresholds.
     pub adaptive: Option<AdaptSpec>,
+    /// Open-loop arrival process or capture replay (see [`TrafficSpec`]).
+    pub traffic: Option<TrafficSpec>,
     pub seed: Option<u64>,
 }
 
@@ -261,9 +393,18 @@ impl Default for RunSpec {
             feedback_interval: None,
             shards: 1,
             adaptive: None,
+            traffic: None,
             seed: None,
         }
     }
+}
+
+/// How the run's workload is shaped by the spec's `traffic` block.
+pub(crate) enum ResolvedTraffic {
+    /// Replay this capture instead of generating.
+    Replay(std::path::PathBuf),
+    /// Wrap the configured workload in an open-loop arrival process.
+    OpenLoop(crate::traffic::OpenLoopConfig),
 }
 
 /// A spec resolved against presets/registries: what the [`super::Runner`]
@@ -272,6 +413,7 @@ pub(crate) struct Resolved {
     pub cfg: ExperimentConfig,
     pub shards: usize,
     pub controller: Option<ControllerConfig>,
+    pub traffic: Option<ResolvedTraffic>,
     pub model: Option<String>,
     /// Predict engine for learned predictors (`Backend::default()` = native
     /// unless the spec says otherwise; irrelevant for other predictors).
@@ -437,6 +579,55 @@ impl RunSpec {
             None => None,
         };
 
+        // Traffic block: replay substitutes the workload wholesale; an
+        // open-loop block wraps it, taking over all session admission.
+        let mut traffic_spec = None;
+        let traffic = match &self.traffic {
+            Some(t) if t.replay.is_some() => {
+                if t.has_open_loop_fields() {
+                    bail!("'replay' is mutually exclusive with the other traffic knobs");
+                }
+                if self.scenario.is_some() || self.profile.is_some() {
+                    bail!("'replay' substitutes the workload — drop 'scenario'/'profile'");
+                }
+                let path = std::path::PathBuf::from(t.replay.as_deref().expect("replay set"));
+                let reader = crate::trace::file::TraceReader::open(&path)
+                    .map_err(|e| anyhow!("traffic.replay: {e}"))?;
+                if reader.count() == 0 {
+                    bail!("traffic.replay: {} holds no records", path.display());
+                }
+                // Default to exactly one pass of the capture.
+                if self.accesses.is_none() {
+                    cfg.accesses = reader.count() as usize;
+                }
+                cfg.name = self.name.clone().unwrap_or_else(|| {
+                    format!("replay-{}", self.policy)
+                });
+                traffic_spec = Some(t.clone());
+                Some(ResolvedTraffic::Replay(path))
+            }
+            Some(t) => {
+                if let Some(sc) =
+                    self.scenario.as_deref().and_then(crate::trace::Scenario::by_name)
+                {
+                    if sc.is_traffic() {
+                        bail!(
+                            "scenario '{}' already models traffic — drop the 'traffic' block",
+                            sc.name
+                        );
+                    }
+                }
+                let ol = t.resolve_open_loop(cfg.seed)?;
+                // All admission flows through the bounded queue: disable the
+                // generator's autonomous arrivals.
+                cfg.generator.arrival_p_hot = 0.0;
+                cfg.generator.arrival_p_cold = 0.0;
+                traffic_spec = Some(TrafficSpec::from_open_loop(&ol));
+                Some(ResolvedTraffic::OpenLoop(ol))
+            }
+            None => None,
+        };
+
         // Make the backend explicit for learned predictors (the report
         // must say who ran predict); leave it unset otherwise so
         // non-learned spec JSON is byte-identical to before the field
@@ -450,12 +641,14 @@ impl RunSpec {
         spec.predict_batch = Some(cfg.predict_batch);
         spec.feedback_interval = Some(cfg.feedback_interval);
         spec.adaptive = controller.as_ref().map(AdaptSpec::from_config);
+        spec.traffic = traffic_spec;
         spec.backend = learned.then_some(backend);
 
         Ok(Resolved {
             cfg,
             shards: self.shards,
             controller,
+            traffic,
             model: self.model.clone(),
             backend,
             spec,
@@ -497,6 +690,9 @@ impl RunSpec {
         j.set("shards", Json::Num(self.shards as f64));
         if let Some(a) = &self.adaptive {
             j.set("adaptive", a.to_json());
+        }
+        if let Some(t) = &self.traffic {
+            j.set("traffic", t.to_json());
         }
         let mut workload = Json::obj();
         if let Some(sc) = &self.scenario {
@@ -608,6 +804,7 @@ impl RunSpec {
                         other => Some(AdaptSpec::from_json(other)?),
                     }
                 }
+                "traffic" => spec.traffic = Some(TrafficSpec::from_json(v)?),
                 "workload" => parse_workload(&mut spec, v)?,
                 "hierarchy" => parse_hierarchy(&mut spec, v)?,
                 other => bail!("unknown run-spec key '{other}'"),
@@ -802,6 +999,20 @@ impl RunSpecBuilder {
     /// Attach an adaptive controller from partial spec fields.
     pub fn adaptive_spec(mut self, a: AdaptSpec) -> Self {
         self.spec.adaptive = Some(a);
+        self
+    }
+
+    /// Attach an open-loop / replay traffic block from partial spec fields.
+    pub fn traffic(mut self, t: TrafficSpec) -> Self {
+        self.spec.traffic = Some(t);
+        self
+    }
+
+    /// Replay a captured `.acpctrace` instead of generating a workload.
+    /// Validation opens the file, so it must exist when `build` runs.
+    pub fn replay(mut self, path: &str) -> Self {
+        self.spec.traffic =
+            Some(TrafficSpec { replay: Some(path.to_string()), ..TrafficSpec::default() });
         self
     }
 
@@ -1033,6 +1244,91 @@ mod tests {
         assert!(cc.ph_lambda.is_infinite());
         assert!(cc.pollution_margin.is_infinite());
         assert_eq!(cc.throttle_hit_ratio, 0.0);
+    }
+
+    #[test]
+    fn traffic_block_roundtrips_and_validates() {
+        let spec = RunSpec::builder()
+            .scenario("decode-heavy")
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .traffic(TrafficSpec {
+                arrivals: Some("bursty".into()),
+                rate: Some(6.0),
+                queue_depth: Some(16),
+                ..TrafficSpec::default()
+            })
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        // Resolution zeroes autonomous arrivals and makes the block
+        // explicit in the resolved copy.
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.cfg.generator.arrival_p_hot, 0.0);
+        assert_eq!(r.cfg.generator.arrival_p_cold, 0.0);
+        let t = r.spec.traffic.as_ref().unwrap();
+        assert_eq!(t.arrivals.as_deref(), Some("bursty"));
+        assert_eq!(t.rate, Some(6.0));
+        assert_eq!(t.period, Some(20_000), "defaults made explicit");
+        assert!(matches!(r.traffic, Some(ResolvedTraffic::OpenLoop(_))));
+
+        // Invalid knobs and unknown keys are rejected.
+        assert!(RunSpec::builder()
+            .traffic(TrafficSpec { arrivals: Some("tsunami".into()), ..TrafficSpec::default() })
+            .build()
+            .is_err());
+        assert!(RunSpec::builder()
+            .traffic(TrafficSpec { rate: Some(-1.0), ..TrafficSpec::default() })
+            .build()
+            .is_err());
+        let j = Json::parse(r#"{"traffic": {"rat": 4}}"#).unwrap();
+        assert!(RunSpec::from_json(&j).is_err());
+        // Traffic scenarios already model traffic.
+        assert!(RunSpec::builder()
+            .scenario("bursty-batch")
+            .traffic(TrafficSpec { rate: Some(4.0), ..TrafficSpec::default() })
+            .build()
+            .is_err());
+        // replay excludes other traffic knobs and scenario/profile.
+        assert!(RunSpec::builder()
+            .traffic(TrafficSpec {
+                replay: Some("/tmp/x.acpctrace".into()),
+                rate: Some(4.0),
+                ..TrafficSpec::default()
+            })
+            .build()
+            .is_err());
+        assert!(RunSpec::builder()
+            .scenario("decode-heavy")
+            .replay("/tmp/x.acpctrace")
+            .build()
+            .is_err());
+        // replay of a missing file fails at resolution.
+        assert!(RunSpec::builder().replay("/definitely/not/here.acpctrace").build().is_err());
+    }
+
+    #[test]
+    fn replay_spec_resolves_against_a_real_capture() {
+        let trace = crate::trace::TraceGenerator::new(crate::trace::GeneratorConfig::tiny(6))
+            .generate(800);
+        let dir = std::env::temp_dir().join("acpc_spec_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.acpctrace");
+        crate::trace::file::write_trace(&path, &trace).unwrap();
+        let spec = RunSpec::builder()
+            .policy("lru")
+            .predictor(PredictorKind::None)
+            .replay(path.to_str().unwrap())
+            .build()
+            .unwrap();
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.cfg.accesses, 800, "accesses default to one pass");
+        assert_eq!(r.cfg.name, "replay-lru");
+        assert!(matches!(r.traffic, Some(ResolvedTraffic::Replay(_))));
+        let back = RunSpec::from_json(&r.spec.to_json()).unwrap();
+        assert_eq!(back.resolve().unwrap().cfg.accesses, 800);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

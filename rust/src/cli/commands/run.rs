@@ -113,6 +113,9 @@ pub fn run(args: &mut Args) -> Result<i32> {
             a.windows_observed, a.drift_events, a.swaps, a.throttled_windows
         );
     }
+    if let Some(t) = report.result.traffic {
+        println!("{}", t.summary_line());
+    }
     if let Some(out) = args.opt("spec-out") {
         std::fs::write(out, report.spec.to_json().to_pretty())?;
         println!("wrote {out}");

@@ -36,6 +36,9 @@ OPTIONS:
                          duration (/health, /metrics.json, /events; 0 = any)
     --dashboard-linger-ms <n>  keep the dashboard up n ms after the run
                          drains (for external scrapers) [default: 0]
+    --capture <path>     record every served access into a v2 .acpctrace
+                         (tenant = worker, arrival = per-worker ordinal) for
+                         `acpc trace-stats --load` and `traffic.replay` runs
     --json <path>        write the ServeReport JSON (schema acpc-serve-v1,
                          includes the full adaptation-event list)
     --help";
@@ -48,7 +51,7 @@ pub fn run(args: &mut Args) -> Result<i32> {
     args.ensure_known(&[
         "workers", "sessions", "policy", "predictor", "backend", "router", "profile",
         "scenario", "adaptive", "batch", "deadline-us", "arrival-us", "seed", "dashboard",
-        "dashboard-linger-ms", "json", "help",
+        "dashboard-linger-ms", "capture", "json", "help",
     ])?;
     if args.opt("profile").is_some() && args.opt("scenario").is_some() {
         anyhow::bail!("--profile and --scenario are mutually exclusive");
@@ -106,6 +109,7 @@ pub fn run(args: &mut Args) -> Result<i32> {
             None => None,
         },
         dashboard_linger: Duration::from_millis(args.u64_or("dashboard-linger-ms", 0)?),
+        capture: args.opt("capture").map(std::path::PathBuf::from),
     };
 
     println!(

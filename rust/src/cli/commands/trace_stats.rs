@@ -14,7 +14,8 @@ OPTIONS:
     --accesses <n>     [default: 500000]
     --seed <n>
     --save <path>      also persist the trace (.acpctrace binary format)
-    --load <path>      analyze an existing trace file instead
+    --load <path>      analyze an existing trace file instead; v2 captures
+                       (acpc serve --capture) add a per-tenant breakdown
     --help";
 
 pub fn run(args: &mut Args) -> Result<i32> {
@@ -25,7 +26,23 @@ pub fn run(args: &mut Args) -> Result<i32> {
     args.ensure_known(&["profile", "accesses", "seed", "save", "load", "help"])?;
 
     let trace = if let Some(path) = args.opt("load") {
-        crate::trace::file::read_trace(Path::new(path))?
+        let reader = crate::trace::file::TraceReader::open(Path::new(path))?;
+        if reader.version() == 2 {
+            // Captures carry provenance: totals in the header, a tenant id
+            // per record. Surface both before the standard characterization.
+            println!(
+                "v2 capture: {} records / {} tokens / {} sessions",
+                reader.count(),
+                reader.tokens(),
+                reader.sessions()
+            );
+            let records = reader.collect::<Result<Vec<_>>>()?;
+            println!("\n{}", stats::analyze_tenants(&records).report());
+            records.into_iter().map(|r| r.access).collect()
+        } else {
+            // v1: same bytes on stdout as the pre-streaming reader printed.
+            reader.map(|r| r.map(|rec| rec.access)).collect::<Result<Vec<_>>>()?
+        }
     } else {
         let profile = ModelProfile::by_name(&args.opt_or("profile", "gpt3ish"))
             .context("unknown profile")?;

@@ -106,9 +106,17 @@ impl ExperimentConfig {
         Ok(())
     }
 
-    /// Build the workload this config describes (the generator state, boxed
-    /// behind the `Workload` trait the sim `Engine` drives).
+    /// Build the workload this config describes, boxed behind the
+    /// `Workload` trait the sim `Engine` drives. Scenario provenance
+    /// decides the shape: traffic scenarios (`prefix-share`,
+    /// `bursty-batch`) build their population / open-loop workloads, every
+    /// other config the plain generator over `self.generator`.
     pub fn workload(&self) -> Box<dyn crate::trace::Workload> {
+        if let Some(sc) =
+            self.scenario.as_deref().and_then(crate::trace::Scenario::by_name)
+        {
+            return sc.workload_from(self.generator.clone());
+        }
         Box::new(crate::trace::TraceGenerator::new(self.generator.clone()))
     }
 

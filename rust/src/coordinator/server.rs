@@ -81,6 +81,10 @@ pub struct ServeConfig {
     /// lets external probes (CI smoke, `acpc monitor --attach`) scrape the
     /// final state before shutdown.
     pub dashboard_linger: Duration,
+    /// Capture every access the workers serve into a v2 `.acpctrace`
+    /// (tenant = worker index, arrival = per-worker access ordinal) for
+    /// later `traffic.replay` runs.
+    pub capture: Option<std::path::PathBuf>,
 }
 
 impl ServeConfig {
@@ -108,6 +112,7 @@ impl ServeConfig {
             adapt: ControllerConfig::default(),
             dashboard_port: None,
             dashboard_linger: Duration::ZERO,
+            capture: None,
         }
     }
 
@@ -239,6 +244,9 @@ struct WorkerStats {
     pred_batches: u64,
     /// Rows predicted locally (shared mode).
     pred_filled: u64,
+    /// Served accesses in order, when [`ServeConfig::capture`] is set
+    /// (paired with the per-worker arrival ordinal).
+    captured: Vec<(crate::trace::Access, u64)>,
 }
 
 struct PredictReq {
@@ -466,6 +474,7 @@ fn serve_inner<F: FnOnce() -> PredictorBox + Send>(
             // counter has exactly one owner.
             let mut publisher = bus.map(|b| b.publisher(SourceId::serve(w)));
             let shared_w = shared.clone();
+            let capture_on = cfg.capture.is_some();
             s.spawn(move || {
                 // The shared engine drives this worker's accesses; its
                 // feature rows are shipped to the predictor service rather
@@ -488,6 +497,7 @@ fn serve_inner<F: FnOnce() -> PredictorBox + Send>(
                 let mut local_model = shared_w.map(NativeModel::from_weights);
                 let mut local_probs: Vec<f32> = Vec::new();
                 let (mut local_batches, mut local_filled) = (0u64, 0u64);
+                let mut captured: Vec<(crate::trace::Access, u64)> = Vec::new();
 
                 loop {
                     // One throttle gate per iteration: it governs both the
@@ -516,6 +526,9 @@ fn serve_inner<F: FnOnce() -> PredictorBox + Send>(
                     }
                     if workload.has_work() {
                         let a = workload.next_access();
+                        if capture_on {
+                            captured.push((a, captured.len() as u64));
+                        }
                         let full = match engine.step(&a, None) {
                             Some(feats) => apply && batch.push(a.line(), feats),
                             None => false,
@@ -638,6 +651,7 @@ fn serve_inner<F: FnOnce() -> PredictorBox + Send>(
                     events,
                     pred_batches: local_batches,
                     pred_filled: local_filled,
+                    captured,
                 };
                 let _ = ev_tx.send(Event::Finished { stats });
             });
@@ -736,6 +750,27 @@ fn serve_inner<F: FnOnce() -> PredictorBox + Send>(
             })
             .collect();
         adaptation_events.sort_by_key(|e| (e.worker, e.event.access, e.event.window));
+
+        if let Some(path) = &cfg.capture {
+            // Workers finish in nondeterministic order; sort by worker index
+            // so the capture layout is a pure function of what was served.
+            stats.sort_by_key(|s| s.worker);
+            let mut sink = crate::traffic::CaptureSink::new();
+            for s in &stats {
+                for &(a, arrival) in &s.captured {
+                    sink.record(a, s.worker as u32, arrival);
+                }
+            }
+            sink.set_totals(tokens, completed);
+            match sink.finish(path) {
+                Ok(()) => crate::log_info!(
+                    "serve: captured {} accesses to {}",
+                    sink.len(),
+                    path.display()
+                ),
+                Err(e) => crate::log_warn!("serve: capture to {} failed: {e}", path.display()),
+            }
+        }
 
         ServeReport {
             sessions_admitted: admitted,

@@ -15,7 +15,9 @@
 //!   a multi-level cache simulator ([`mem`]), replacement policies
 //!   ([`policy`]), the feature/label pipeline ([`predictor`]), Rust-driven
 //!   training of the compiled model ([`training`]), a serving-style
-//!   coordinator ([`coordinator`]), and the paper's metrics ([`metrics`]).
+//!   coordinator ([`coordinator`]), a population-scale traffic layer with
+//!   open-loop arrivals and capture/replay ([`traffic`]), and the paper's
+//!   metrics ([`metrics`]).
 //!
 //! Python never executes on the simulation/serving path.
 //!
@@ -38,5 +40,6 @@ pub mod predictor;
 pub mod runtime;
 pub mod sim;
 pub mod trace;
+pub mod traffic;
 pub mod training;
 pub mod util;

@@ -7,6 +7,11 @@
 //! - **MAL** — average memory access latency (AMAT, cycles);
 //! - **TGT** — token generation throughput from the analytic timing model;
 //! - **EMU** — effective memory utilization (useful resident lines / occupied).
+//!
+//! Open-loop runs (a `traffic` block or an open-loop scenario) additionally
+//! report the [`crate::traffic::TrafficSummary`] counters — offered vs
+//! admitted vs shed arrivals and admission-queue delay — under the report's
+//! `traffic` key.
 
 pub mod report;
 mod throughput;

@@ -59,6 +59,9 @@ pub struct SimResult {
     pub predictor_swaps: u64,
     /// Windows spent with predictions throttled to policy-default inserts.
     pub throttled_windows: u64,
+    /// Open-loop traffic counters when the workload models offered load
+    /// (see [`crate::traffic`]); `None` for closed-loop workloads.
+    pub traffic: Option<crate::traffic::TrafficSummary>,
 }
 
 /// Accumulates per-access feature rows until a predictor batch is ready.
@@ -543,6 +546,7 @@ pub(crate) fn run_workload_adaptive(
     let out = driver.finish();
 
     let tokens = workload.tokens_done();
+    let traffic = workload.traffic();
     let emu = out.engine.emu();
     let report = out.engine.report(&cfg.name, tokens);
     let wall = t0.elapsed().as_secs_f64();
@@ -563,6 +567,7 @@ pub(crate) fn run_workload_adaptive(
         drift_events,
         predictor_swaps,
         throttled_windows,
+        traffic,
     }
 }
 

@@ -300,7 +300,15 @@ pub(crate) fn run_workload_sharded(
     let outs: Vec<ShardOut> =
         outs.into_iter().map(|o| o.expect("every shard reported")).collect();
 
-    Ok(merge_shards(cfg, outs, workload.tokens_done(), t0.elapsed().as_secs_f64()))
+    // Traffic counters live in the producer-side workload, so they are
+    // shard-count invariant by construction (single arrival history).
+    Ok(merge_shards(
+        cfg,
+        outs,
+        workload.tokens_done(),
+        workload.traffic(),
+        t0.elapsed().as_secs_f64(),
+    ))
 }
 
 /// Pop a recycled chunk buffer off a shard's return ring (already cleared
@@ -399,7 +407,13 @@ fn shard_job(args: ShardArgs) -> ShardJob {
 }
 
 /// Exact merge of the per-shard outcomes into one [`SimResult`].
-fn merge_shards(cfg: &ExperimentConfig, outs: Vec<ShardOut>, tokens: u64, wall: f64) -> ShardedRun {
+fn merge_shards(
+    cfg: &ExperimentConfig,
+    outs: Vec<ShardOut>,
+    tokens: u64,
+    traffic: Option<crate::traffic::TrafficSummary>,
+    wall: f64,
+) -> ShardedRun {
     debug_assert_eq!(
         outs.iter().map(|o| o.steps).sum::<u64>(),
         cfg.accesses as u64,
@@ -448,6 +462,7 @@ fn merge_shards(cfg: &ExperimentConfig, outs: Vec<ShardOut>, tokens: u64, wall: 
             drift_events: de,
             predictor_swaps: ps,
             throttled_windows: tw,
+            traffic,
         },
         controllers,
     }

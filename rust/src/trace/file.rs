@@ -1,9 +1,9 @@
 //! Binary trace file format (`.acpctrace`): persist generated traces so the
 //! same workload can be replayed across policies, benches, and the Python
-//! side if ever needed. Little-endian, fixed 40-byte records, versioned
+//! side if ever needed. Little-endian, fixed-size records, versioned
 //! header with a record-count for integrity checking.
 //!
-//! Layout:
+//! v1 layout (synthetic traces, 40-byte records):
 //! ```text
 //! magic  u64  = 0x4143_5043_5452_4331  ("ACPCTRC1")
 //! count  u64
@@ -11,66 +11,240 @@
 //!   time u64 | addr u64 | pc u64 | session u32 | ctx_len u32 |
 //!   layer u16 | kind u8 | is_write u8 | pad u32
 //! ```
+//!
+//! v2 layout (serve captures, 56-byte records — see [`crate::traffic`]):
+//! ```text
+//! magic    u64  = 0x4143_5043_5452_4332  ("ACPCTRC2")
+//! count    u64
+//! tokens   u64   (decoded tokens behind the capture, for replay progress)
+//! sessions u64   (completed sessions behind the capture)
+//! record × count:
+//!   <v1 record, 40 bytes> | tenant u32 | pad u32 | arrival u64
+//! ```
+//!
+//! Reading goes through the streaming [`TraceReader`] — header-validated,
+//! chunked through a [`BufReader`] — so consumers like
+//! [`crate::traffic::ReplayWorkload`] never materialize the whole trace;
+//! [`read_trace`] is a thin collecting wrapper over it. Both versions are
+//! readable; v1 records surface with `tenant = 0`, `arrival = 0`.
 
 use super::{Access, StreamKind};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: u64 = 0x4143_5043_5452_4331;
+const MAGIC_V1: u64 = 0x4143_5043_5452_4331;
+const MAGIC_V2: u64 = 0x4143_5043_5452_4332;
 pub const RECORD_BYTES: usize = 40;
+pub const RECORD_BYTES_V2: usize = 56;
 
+/// One v2 record: the access plus its traffic provenance. v1 files read
+/// back with zeroed `tenant`/`arrival`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub access: Access,
+    /// Originating tenant (serve captures: the worker index).
+    pub tenant: u32,
+    /// Arrival timestamp in the producer's tick clock.
+    pub arrival: u64,
+}
+
+fn encode_access(a: &Access, rec: &mut [u8]) {
+    rec[0..8].copy_from_slice(&a.time.to_le_bytes());
+    rec[8..16].copy_from_slice(&a.addr.to_le_bytes());
+    rec[16..24].copy_from_slice(&a.pc.to_le_bytes());
+    rec[24..28].copy_from_slice(&a.session.to_le_bytes());
+    rec[28..32].copy_from_slice(&a.ctx_len.to_le_bytes());
+    rec[32..34].copy_from_slice(&a.layer.to_le_bytes());
+    rec[34] = a.kind as u8;
+    rec[35] = a.is_write as u8;
+    rec[36..40].fill(0);
+}
+
+fn decode_access(rec: &[u8]) -> Access {
+    Access {
+        time: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+        addr: u64::from_le_bytes(rec[8..16].try_into().unwrap()),
+        pc: u64::from_le_bytes(rec[16..24].try_into().unwrap()),
+        session: u32::from_le_bytes(rec[24..28].try_into().unwrap()),
+        ctx_len: u32::from_le_bytes(rec[28..32].try_into().unwrap()),
+        layer: u16::from_le_bytes(rec[32..34].try_into().unwrap()),
+        kind: StreamKind::from_u8(rec[34]),
+        is_write: rec[35] != 0,
+    }
+}
+
+/// Write a v1 (access-only) trace.
 pub fn write_trace(path: &Path, trace: &[Access]) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
-    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&MAGIC_V1.to_le_bytes())?;
     w.write_all(&(trace.len() as u64).to_le_bytes())?;
     let mut rec = [0u8; RECORD_BYTES];
     for a in trace {
-        rec[0..8].copy_from_slice(&a.time.to_le_bytes());
-        rec[8..16].copy_from_slice(&a.addr.to_le_bytes());
-        rec[16..24].copy_from_slice(&a.pc.to_le_bytes());
-        rec[24..28].copy_from_slice(&a.session.to_le_bytes());
-        rec[28..32].copy_from_slice(&a.ctx_len.to_le_bytes());
-        rec[32..34].copy_from_slice(&a.layer.to_le_bytes());
-        rec[34] = a.kind as u8;
-        rec[35] = a.is_write as u8;
-        rec[36..40].fill(0);
+        encode_access(a, &mut rec);
         w.write_all(&rec)?;
     }
     w.flush()?;
     Ok(())
 }
 
+/// Write a v2 (capture) trace: tenant + arrival per record, decoded-token
+/// and completed-session totals in the header so replay can report
+/// progress.
+pub fn write_trace_v2(
+    path: &Path,
+    records: &[TraceRecord],
+    tokens: u64,
+    sessions: u64,
+) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC_V2.to_le_bytes())?;
+    w.write_all(&(records.len() as u64).to_le_bytes())?;
+    w.write_all(&tokens.to_le_bytes())?;
+    w.write_all(&sessions.to_le_bytes())?;
+    let mut rec = [0u8; RECORD_BYTES_V2];
+    for r in records {
+        encode_access(&r.access, &mut rec);
+        rec[40..44].copy_from_slice(&r.tenant.to_le_bytes());
+        rec[44..48].fill(0);
+        rec[48..56].copy_from_slice(&r.arrival.to_le_bytes());
+        w.write_all(&rec)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Streaming `.acpctrace` reader: validates the header up front, then
+/// yields records one at a time (buffered in [`BufReader`]-sized chunks)
+/// without materializing the file. The iterator yields exactly
+/// `count` `Ok` records for an intact file; truncation surfaces as an
+/// `Err` item at the failing record, and trailing garbage as an `Err`
+/// after the last one.
+pub struct TraceReader {
+    r: BufReader<std::fs::File>,
+    version: u8,
+    count: u64,
+    tokens: u64,
+    sessions: u64,
+    read: u64,
+    done: bool,
+}
+
+impl TraceReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = BufReader::new(f);
+        let mut hdr = [0u8; 16];
+        r.read_exact(&mut hdr).context("trace header")?;
+        let magic = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let count = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let (version, tokens, sessions) = match magic {
+            MAGIC_V1 => (1, 0, 0),
+            MAGIC_V2 => {
+                let mut ext = [0u8; 16];
+                r.read_exact(&mut ext).context("v2 trace header")?;
+                (
+                    2,
+                    u64::from_le_bytes(ext[0..8].try_into().unwrap()),
+                    u64::from_le_bytes(ext[8..16].try_into().unwrap()),
+                )
+            }
+            _ => bail!("not an acpc trace file (bad magic {magic:#x})"),
+        };
+        Ok(Self { r, version, count, tokens, sessions, read: 0, done: false })
+    }
+
+    /// Format version: 1 (access-only) or 2 (capture).
+    pub fn version(&self) -> u8 {
+        self.version
+    }
+
+    /// Records the header promises.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Decoded tokens behind the capture (0 for v1 files).
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    /// Completed sessions behind the capture (0 for v1 files).
+    pub fn sessions(&self) -> u64 {
+        self.sessions
+    }
+
+    fn read_record(&mut self) -> Result<TraceRecord> {
+        let i = self.read;
+        let count = self.count;
+        if self.version == 1 {
+            let mut rec = [0u8; RECORD_BYTES];
+            self.r.read_exact(&mut rec).with_context(|| format!("record {i}/{count}"))?;
+            Ok(TraceRecord { access: decode_access(&rec), tenant: 0, arrival: 0 })
+        } else {
+            let mut rec = [0u8; RECORD_BYTES_V2];
+            self.r.read_exact(&mut rec).with_context(|| format!("record {i}/{count}"))?;
+            Ok(TraceRecord {
+                access: decode_access(&rec[..RECORD_BYTES]),
+                tenant: u32::from_le_bytes(rec[40..44].try_into().unwrap()),
+                arrival: u64::from_le_bytes(rec[48..56].try_into().unwrap()),
+            })
+        }
+    }
+}
+
+impl Iterator for TraceReader {
+    type Item = Result<TraceRecord>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        if self.read == self.count {
+            // Must be exactly at EOF.
+            self.done = true;
+            let mut extra = [0u8; 1];
+            return match self.r.read(&mut extra) {
+                Ok(0) => None,
+                Ok(_) => Some(Err(anyhow::anyhow!(
+                    "trailing bytes after {} records",
+                    self.count
+                ))),
+                Err(e) => Some(Err(e.into())),
+            };
+        }
+        match self.read_record() {
+            Ok(rec) => {
+                self.read += 1;
+                Some(Ok(rec))
+            }
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+/// Read a whole trace (either version) into memory — a thin collecting
+/// wrapper over [`TraceReader`].
 pub fn read_trace(path: &Path) -> Result<Vec<Access>> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut r = BufReader::new(f);
-    let mut hdr = [0u8; 16];
-    r.read_exact(&mut hdr).context("trace header")?;
-    let magic = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
-    if magic != MAGIC {
-        bail!("not an acpc trace file (bad magic {magic:#x})");
+    let reader = TraceReader::open(path)?;
+    let mut out = Vec::with_capacity(reader.count() as usize);
+    for rec in reader {
+        out.push(rec?.access);
     }
-    let count = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
-    let mut out = Vec::with_capacity(count);
-    let mut rec = [0u8; RECORD_BYTES];
-    for i in 0..count {
-        r.read_exact(&mut rec).with_context(|| format!("record {i}/{count}"))?;
-        out.push(Access {
-            time: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
-            addr: u64::from_le_bytes(rec[8..16].try_into().unwrap()),
-            pc: u64::from_le_bytes(rec[16..24].try_into().unwrap()),
-            session: u32::from_le_bytes(rec[24..28].try_into().unwrap()),
-            ctx_len: u32::from_le_bytes(rec[28..32].try_into().unwrap()),
-            layer: u16::from_le_bytes(rec[32..34].try_into().unwrap()),
-            kind: StreamKind::from_u8(rec[34]),
-            is_write: rec[35] != 0,
-        });
-    }
-    // Must be exactly at EOF.
-    let mut extra = [0u8; 1];
-    if r.read(&mut extra)? != 0 {
-        bail!("trailing bytes after {count} records");
+    Ok(out)
+}
+
+/// [`read_trace`] keeping the v2 provenance fields.
+pub fn read_records(path: &Path) -> Result<Vec<TraceRecord>> {
+    let reader = TraceReader::open(path)?;
+    let mut out = Vec::with_capacity(reader.count() as usize);
+    for rec in reader {
+        out.push(rec?);
     }
     Ok(out)
 }
@@ -93,6 +267,53 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_v2_preserves_provenance() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(8)).generate(2_000);
+        let records: Vec<TraceRecord> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, &access)| TraceRecord {
+                access,
+                tenant: (i % 5) as u32,
+                arrival: i as u64 * 3,
+            })
+            .collect();
+        let dir = std::env::temp_dir().join("acpc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t2.acpctrace");
+        write_trace_v2(&path, &records, 777, 42).unwrap();
+
+        let rd = TraceReader::open(&path).unwrap();
+        assert_eq!(rd.version(), 2);
+        assert_eq!(rd.count(), records.len() as u64);
+        assert_eq!((rd.tokens(), rd.sessions()), (777, 42));
+        let back = read_records(&path).unwrap();
+        assert_eq!(records, back);
+        // The access-only view still works on v2 files.
+        assert_eq!(read_trace(&path).unwrap(), trace);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn streaming_reader_matches_bulk_read_on_v1() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(4)).generate(1_000);
+        let dir = std::env::temp_dir().join("acpc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.acpctrace");
+        write_trace(&path, &trace).unwrap();
+        let rd = TraceReader::open(&path).unwrap();
+        assert_eq!(rd.version(), 1);
+        let streamed: Vec<Access> =
+            rd.map(|r| r.unwrap()).map(|r| {
+                assert_eq!((r.tenant, r.arrival), (0, 0), "v1 records carry no provenance");
+                r.access
+            })
+            .collect();
+        assert_eq!(streamed, trace);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let dir = std::env::temp_dir().join("acpc_trace_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -111,6 +332,20 @@ mod tests {
         write_trace(&path, &trace).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 13]).unwrap();
+        assert!(read_trace(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(2)).generate(50);
+        let dir = std::env::temp_dir().join("acpc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trail.acpctrace");
+        write_trace(&path, &trace).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0xAB);
+        std::fs::write(&path, &bytes).unwrap();
         assert!(read_trace(&path).is_err());
         std::fs::remove_file(&path).unwrap();
     }

@@ -40,7 +40,13 @@
 //! - [`multi-tenant-mix`](scenario) — many interleaved sessions with fast
 //!   phase drift;
 //! - [`speculative-decode`](scenario) — draft/verify interleave whose
-//!   verify passes re-read the drafted KV window in bulk.
+//!   verify passes re-read the drafted KV window in bulk;
+//! - [`prefix-share`](scenario) — churning tenant population with
+//!   per-tenant Zipf footprints and a shared system-prompt prefix block
+//!   ([`crate::traffic::population`]);
+//! - [`bursty-batch`](scenario) — the decode mix behind an open-loop
+//!   on/off arrival process and bounded admission queue
+//!   ([`crate::traffic::arrivals`]).
 //!
 //! Resolve by name with [`Scenario::by_name`], enumerate with
 //! [`Scenario::all`], and instantiate with `Scenario::workload(seed)`.

@@ -16,11 +16,31 @@
 //! | `long-context`       | max_ctx ≫ attention window, KV re-reads    | kv_rd    |
 //! | `multi-tenant-mix`   | many interleaved sessions, fast drift      | weight   |
 //! | `speculative-decode` | draft/verify interleave, KV verify re-reads| kv_rd    |
+//! | `prefix-share`       | tenant population, churn, shared prefix    | kv_rd    |
+//! | `bursty-batch`       | open-loop on/off arrivals, bounded queue   | weight   |
+//!
+//! The last two are *traffic* scenarios ([`crate::traffic`]): `prefix-share`
+//! runs the tenant-population workload and `bursty-batch` drives the stock
+//! decode generator through an open-loop bursty arrival process, so its run
+//! reports carry a `traffic` block (offered/admitted/shed, queue delay).
 
 use super::generator::{GeneratorConfig, TraceGenerator};
 use super::profile::ModelProfile;
 use super::workload::Workload;
 use super::StreamKind;
+use crate::traffic::{OpenLoopConfig, OpenLoopWorkload, PopulationConfig, PopulationWorkload};
+
+/// How a scenario turns its [`GeneratorConfig`] into a workload.
+#[derive(Clone, Copy)]
+enum Kind {
+    /// Plain closed-loop [`TraceGenerator`].
+    Generator,
+    /// Generator wrapped in an open-loop bursty arrival process.
+    OpenLoop,
+    /// Tenant-population workload (the generator config only contributes
+    /// its seed and profile name).
+    Population,
+}
 
 /// One named workload regime.
 #[derive(Clone, Copy)]
@@ -32,6 +52,7 @@ pub struct Scenario {
     /// (asserted by the scenario smoke tests).
     pub dominant: StreamKind,
     build: fn(u64) -> GeneratorConfig,
+    kind: Kind,
 }
 
 impl Scenario {
@@ -42,7 +63,35 @@ impl Scenario {
 
     /// Ready-to-run workload for this scenario and seed.
     pub fn workload(&self, seed: u64) -> Box<dyn Workload> {
-        Box::new(TraceGenerator::new(self.config(seed)))
+        self.workload_from(self.config(seed))
+    }
+
+    /// Build the workload from an already-resolved generator config (the
+    /// experiment config path, where profile/seed overrides have been
+    /// applied).
+    pub(crate) fn workload_from(&self, g: GeneratorConfig) -> Box<dyn Workload> {
+        match self.kind {
+            Kind::Generator => Box::new(TraceGenerator::new(g)),
+            Kind::OpenLoop => {
+                let ol = OpenLoopConfig::bursty_batch(g.seed);
+                Box::new(OpenLoopWorkload::new(
+                    Box::new(TraceGenerator::new(g)),
+                    ol,
+                    Some(self.name),
+                ))
+            }
+            Kind::Population => Box::new(PopulationWorkload::with_name(
+                PopulationConfig::prefix_share(g.seed),
+                self.name,
+            )),
+        }
+    }
+
+    /// True for scenarios whose workload already models traffic shape
+    /// (open-loop arrivals or a tenant population) — a spec-level `traffic`
+    /// block cannot stack on top of these.
+    pub(crate) fn is_traffic(&self) -> bool {
+        !matches!(self.kind, Kind::Generator)
     }
 
     /// Registry lookup.
@@ -73,6 +122,8 @@ pub const SCENARIO_NAMES: &[&str] = &[
     "long-context",
     "multi-tenant-mix",
     "speculative-decode",
+    "prefix-share",
+    "bursty-batch",
 ];
 
 static SCENARIOS: &[Scenario] = &[
@@ -81,36 +132,56 @@ static SCENARIOS: &[Scenario] = &[
         summary: "autoregressive decode over a GPT-style profile (paper's Table 1 workload)",
         dominant: StreamKind::Weight,
         build: decode_heavy,
+        kind: Kind::Generator,
     },
     Scenario {
         name: "prefill-burst",
         summary: "bursty arrivals in the MMPP hot state; long prompts make prefill KV writes dominate",
         dominant: StreamKind::KvWrite,
         build: prefill_burst,
+        kind: Kind::Generator,
     },
     Scenario {
         name: "rag-embedding",
         summary: "retrieval-style lookups over a huge flat-tailed embedding table",
         dominant: StreamKind::Embedding,
         build: rag_embedding,
+        kind: Kind::Generator,
     },
     Scenario {
         name: "long-context",
         summary: "contexts far beyond the attention window; KV re-reads dominate",
         dominant: StreamKind::KvRead,
         build: long_context,
+        kind: Kind::Generator,
     },
     Scenario {
         name: "multi-tenant-mix",
         summary: "many interleaved tenant sessions with fast phase drift",
         dominant: StreamKind::Weight,
         build: multi_tenant_mix,
+        kind: Kind::Generator,
     },
     Scenario {
         name: "speculative-decode",
         summary: "draft/verify interleave: verify passes re-read the drafted KV window in bulk",
         dominant: StreamKind::KvRead,
         build: speculative_decode,
+        kind: Kind::Generator,
+    },
+    Scenario {
+        name: "prefix-share",
+        summary: "tenant population with churn, Zipf footprints, and a shared system-prompt prefix block",
+        dominant: StreamKind::KvRead,
+        build: prefix_share,
+        kind: Kind::Population,
+    },
+    Scenario {
+        name: "bursty-batch",
+        summary: "open-loop on/off (MMPP) arrivals over the decode mix; bounded admission queue, shed on overload",
+        dominant: StreamKind::Weight,
+        build: bursty_batch,
+        kind: Kind::OpenLoop,
     },
 ];
 
@@ -238,6 +309,31 @@ fn speculative_decode(seed: u64) -> GeneratorConfig {
     c
 }
 
+/// Prefix-cache sharing across a churning tenant population (ROADMAP's
+/// oldest unclaimed scenario): the profile here only names the regime —
+/// [`PopulationWorkload`] synthesizes the stream itself, every session
+/// prefilling through one shared system-prompt block before decoding over
+/// its tenant's private Zipf footprint.
+fn prefix_share(seed: u64) -> GeneratorConfig {
+    let mut p = ModelProfile::gpt3ish();
+    p.name = "prefix-share".into();
+    GeneratorConfig::new(p, seed)
+}
+
+/// Open-loop overload stress: the stock decode mix served from a bounded
+/// admission queue fed by an on/off burst process whose hot state offers
+/// well above service capacity. Autonomous generator arrivals are disabled
+/// — every admission flows through the queue so offered, shed, and queue
+/// delay are measurable.
+fn bursty_batch(seed: u64) -> GeneratorConfig {
+    let mut p = ModelProfile::gpt3ish();
+    p.name = "bursty-batch".into();
+    let mut c = GeneratorConfig::new(p, seed);
+    c.arrival_p_hot = 0.0;
+    c.arrival_p_cold = 0.0;
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,5 +366,16 @@ mod tests {
             assert_eq!(sc.config(1).profile.name, sc.name);
             assert_eq!(sc.workload(1).name(), sc.name);
         }
+    }
+
+    #[test]
+    fn traffic_scenarios_report_their_nature() {
+        let mut w = Scenario::by_name("bursty-batch").unwrap().workload(9);
+        let _ = w.generate(30_000);
+        let t = w.traffic().expect("open-loop scenario reports traffic");
+        assert!(t.offered > 0, "{t:?}");
+        assert!(t.admitted > 0, "{t:?}");
+        let w2 = Scenario::by_name("prefix-share").unwrap().workload(9);
+        assert!(w2.traffic().is_none(), "population workload is closed-loop");
     }
 }

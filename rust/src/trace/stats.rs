@@ -3,6 +3,7 @@
 //! generator actually produces the irregular/bursty patterns the paper
 //! describes, and by EXPERIMENTS.md workload documentation.
 
+use super::file::TraceRecord;
 use super::{Access, StreamKind};
 use crate::util::stats::{cv, Histogram};
 use std::collections::HashMap;
@@ -109,6 +110,70 @@ impl TraceStats {
     }
 }
 
+/// Per-tenant footprint breakdown of a v2 capture (`acpc trace-stats` on a
+/// `--capture` file). Tenants are whatever the capturing side stamped —
+/// worker indices for serve captures, population tenant ids for synthetic
+/// multi-tenant traces.
+#[derive(Debug, Clone)]
+pub struct TenantBreakdown {
+    /// `(tenant, accesses, unique_lines)` sorted by accesses descending
+    /// (ties broken by tenant id for determinism).
+    pub tenants: Vec<(u32, usize, usize)>,
+    /// Share of all accesses owned by the top 3 tenants (1.0 when ≤3).
+    pub top3_share: f64,
+    /// Coefficient of variation of per-tenant access counts — 0 for a
+    /// perfectly balanced population, ≫0 for a skewed one.
+    pub footprint_skew_cv: f64,
+}
+
+/// Group a v2 record stream by tenant. Cheap single pass; callers already
+/// hold the records in memory for [`analyze`].
+pub fn analyze_tenants(records: &[TraceRecord]) -> TenantBreakdown {
+    let mut acc: HashMap<u32, usize> = HashMap::new();
+    let mut lines: HashMap<u32, std::collections::HashSet<u64>> = HashMap::new();
+    for r in records {
+        *acc.entry(r.tenant).or_default() += 1;
+        lines.entry(r.tenant).or_default().insert(r.access.line());
+    }
+    let mut tenants: Vec<(u32, usize, usize)> = acc
+        .iter()
+        .map(|(&t, &n)| (t, n, lines.get(&t).map(|s| s.len()).unwrap_or(0)))
+        .collect();
+    tenants.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let total: usize = tenants.iter().map(|t| t.1).sum();
+    let top3: usize = tenants.iter().take(3).map(|t| t.1).sum();
+    let counts: Vec<f64> = tenants.iter().map(|t| t.1 as f64).collect();
+    let skew = if counts.len() > 1 { cv(&counts) } else { 0.0 };
+    TenantBreakdown {
+        tenants,
+        top3_share: top3 as f64 / total.max(1) as f64,
+        footprint_skew_cv: if skew.is_finite() { skew } else { 0.0 },
+    }
+}
+
+impl TenantBreakdown {
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "tenants={} top3_share={:.1}% footprint_skew_cv={:.2}\n",
+            self.tenants.len(),
+            self.top3_share * 100.0,
+            self.footprint_skew_cv
+        ));
+        let total: usize = self.tenants.iter().map(|t| t.1).sum();
+        for (tenant, accesses, unique) in self.tenants.iter().take(8) {
+            s.push_str(&format!(
+                "  tenant {tenant}: accesses={accesses} ({:.1}%) unique_lines={unique}\n",
+                *accesses as f64 / total.max(1) as f64 * 100.0
+            ));
+        }
+        if self.tenants.len() > 8 {
+            s.push_str(&format!("  … {} more tenants\n", self.tenants.len() - 8));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +192,33 @@ mod tests {
         assert!(st.reuse_hist.count() > 0);
         let rep = st.report();
         assert!(rep.contains("stream mix"));
+    }
+
+    #[test]
+    fn tenant_breakdown_ranks_by_footprint() {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(7)).generate(3_000);
+        // Tenant 0 gets 2x the accesses of tenants 1 and 2.
+        let records: Vec<TraceRecord> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, &access)| TraceRecord {
+                access,
+                tenant: match i % 4 {
+                    0 => 1,
+                    1 => 2,
+                    _ => 0,
+                },
+                arrival: i as u64,
+            })
+            .collect();
+        let tb = analyze_tenants(&records);
+        assert_eq!(tb.tenants.len(), 3);
+        assert_eq!(tb.tenants[0].0, 0, "heaviest tenant first");
+        assert_eq!(tb.tenants[0].1, 1_500);
+        assert!((tb.top3_share - 1.0).abs() < 1e-12);
+        assert!(tb.footprint_skew_cv > 0.0);
+        let rep = tb.report();
+        assert!(rep.contains("tenants=3"), "{rep}");
+        assert!(rep.contains("tenant 0:"), "{rep}");
     }
 }

@@ -51,6 +51,13 @@ pub trait Workload: Send {
     /// Returns false when the workload cannot accept another session.
     fn force_arrival(&mut self) -> bool;
 
+    /// Open-loop traffic counters, when this workload models offered load
+    /// decoupled from service rate (see [`crate::traffic`]). Closed-loop
+    /// workloads report `None` and their runs carry no traffic block.
+    fn traffic(&self) -> Option<crate::traffic::TrafficSummary> {
+        None
+    }
+
     /// Materialize `n` accesses (consumes stream state). Oracle runs use
     /// this to annotate next-use times before simulation.
     fn generate(&mut self, n: usize) -> Vec<Access> {

@@ -1,0 +1,352 @@
+//! Open-loop arrival processes and the admission-queued workload wrapper.
+//!
+//! A closed-loop generator admits a new session the moment a slot frees,
+//! so offered load tracks service capacity and the system can never be
+//! overloaded. [`OpenLoopWorkload`] breaks that coupling: an
+//! [`ArrivalProcess`] injects requests on its own virtual clock (one tick
+//! per engine access), arrivals wait in a bounded FIFO admission queue,
+//! and when the queue is full further arrivals are *shed*. The inner
+//! workload (its autonomous arrivals disabled) only receives sessions via
+//! [`crate::trace::Workload::force_arrival`] — the same externally-driven
+//! admission path the serving coordinator uses — so queue delay, offered
+//! vs served throughput, and shed counts become measurable
+//! ([`TrafficSummary`]).
+//!
+//! Determinism: the process draws from its own [`Xoshiro256`] stream,
+//! never from the inner generator's, so attaching an arrival process does
+//! not perturb the per-session access pattern, and a fixed seed produces
+//! one arrival history regardless of shard or thread count (the wrapper
+//! always runs on the single producer thread).
+
+use super::TrafficSummary;
+use crate::trace::{Access, Workload};
+use crate::util::rng::Xoshiro256;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// The supported arrival-process shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson arrivals at a constant mean rate.
+    Poisson,
+    /// Sinusoidal rate curve (a compressed diurnal cycle): the mean rate
+    /// swings by `amplitude` around the base over one `period`.
+    Diurnal,
+    /// Two-state on/off modulated Poisson process (MMPP-style): a hidden
+    /// burst state toggles between a hot rate (`rate × burst_factor`) and
+    /// a cold rate (`rate × OFF_FACTOR`).
+    Bursty,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => Self::Poisson,
+            "diurnal" => Self::Diurnal,
+            "bursty" => Self::Bursty,
+            other => bail!("unknown arrival process '{other}' (poisson|diurnal|bursty)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Diurnal => "diurnal",
+            Self::Bursty => "bursty",
+        }
+    }
+}
+
+/// Cold-state rate multiplier of the bursty process.
+const OFF_FACTOR: f64 = 0.25;
+
+/// Everything an [`OpenLoopWorkload`] needs besides its inner workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenLoopConfig {
+    pub kind: ArrivalKind,
+    /// Mean offered rate, in requests per 1000 access ticks.
+    pub rate: f64,
+    /// Diurnal cycle length in ticks.
+    pub period: u64,
+    /// Diurnal swing as a fraction of the base rate, in `[0, 1]`.
+    pub amplitude: f64,
+    /// Hot-state rate multiplier of the bursty process (> 1 = overload
+    /// bursts).
+    pub burst_factor: f64,
+    /// Per-tick probability of toggling the bursty hidden state.
+    pub burst_switch_p: f64,
+    /// Admission-queue capacity; arrivals beyond it are shed.
+    pub queue_depth: usize,
+    /// Seed of the process' private RNG stream.
+    pub seed: u64,
+}
+
+impl OpenLoopConfig {
+    pub fn new(kind: ArrivalKind, seed: u64) -> Self {
+        Self {
+            kind,
+            rate: 4.0,
+            period: 20_000,
+            amplitude: 0.6,
+            burst_factor: 4.0,
+            burst_switch_p: 0.002,
+            queue_depth: 32,
+            seed,
+        }
+    }
+
+    /// The registry `bursty-batch` scenario: on/off bursts whose hot state
+    /// offers well above service capacity, so the queue fills and sheds.
+    pub fn bursty_batch(seed: u64) -> Self {
+        Self::new(ArrivalKind::Bursty, seed)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.rate.is_finite() && self.rate > 0.0) {
+            bail!("arrival rate must be finite and > 0 (got {})", self.rate);
+        }
+        if self.period == 0 {
+            bail!("diurnal period must be >= 1 tick");
+        }
+        if !(0.0..=1.0).contains(&self.amplitude) {
+            bail!("diurnal amplitude must be in [0, 1] (got {})", self.amplitude);
+        }
+        if !(self.burst_factor.is_finite() && self.burst_factor > 0.0) {
+            bail!("burst factor must be finite and > 0 (got {})", self.burst_factor);
+        }
+        if !(0.0..=1.0).contains(&self.burst_switch_p) {
+            bail!("burst switch probability must be in [0, 1] (got {})", self.burst_switch_p);
+        }
+        if self.queue_depth == 0 {
+            bail!("admission queue depth must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// A seeded arrival process over a virtual tick clock.
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    cfg: OpenLoopConfig,
+    rng: Xoshiro256,
+    /// Hidden state of the bursty process.
+    hot: bool,
+}
+
+impl ArrivalProcess {
+    pub fn new(cfg: OpenLoopConfig) -> Self {
+        let rng = Xoshiro256::new(cfg.seed);
+        // Bursty starts hot so even short runs exercise the overload path
+        // (and the first arrivals land early regardless of seed).
+        let hot = cfg.kind == ArrivalKind::Bursty;
+        Self { cfg, rng, hot }
+    }
+
+    /// The instantaneous mean rate (requests per 1000 ticks) at `tick`.
+    pub fn rate_at(&self, tick: u64) -> f64 {
+        let base = self.cfg.rate;
+        match self.cfg.kind {
+            ArrivalKind::Poisson => base,
+            ArrivalKind::Diurnal => {
+                let frac = (tick % self.cfg.period) as f64 / self.cfg.period as f64;
+                base * (1.0 + self.cfg.amplitude * (frac * std::f64::consts::TAU).sin())
+            }
+            ArrivalKind::Bursty => {
+                if self.hot {
+                    base * self.cfg.burst_factor
+                } else {
+                    base * OFF_FACTOR
+                }
+            }
+        }
+    }
+
+    /// Advance one tick and sample how many requests arrive during it.
+    pub fn step(&mut self, tick: u64) -> u64 {
+        if self.cfg.kind == ArrivalKind::Bursty && self.rng.chance(self.cfg.burst_switch_p) {
+            self.hot = !self.hot;
+        }
+        let lambda = self.rate_at(tick) / 1000.0;
+        if lambda <= 0.0 {
+            return 0;
+        }
+        self.rng.next_poisson(lambda)
+    }
+}
+
+/// A closed-loop workload driven open-loop: arrivals at an offered rate,
+/// a bounded admission queue in front of the session slots, and shed on
+/// overflow. Implements [`Workload`], so it runs through the engine, the
+/// sharded path, sweeps, and the farm unchanged.
+pub struct OpenLoopWorkload {
+    name: String,
+    inner: Box<dyn Workload>,
+    process: ArrivalProcess,
+    /// Enqueue tick of each waiting request (FIFO).
+    queue: VecDeque<u64>,
+    queue_depth: usize,
+    tick: u64,
+    summary: TrafficSummary,
+}
+
+impl OpenLoopWorkload {
+    /// Wrap `inner` (which must have autonomous arrivals disabled — all
+    /// admission flows through `force_arrival`). `name` overrides the
+    /// reported workload name; `None` keeps the inner one.
+    pub fn new(inner: Box<dyn Workload>, cfg: OpenLoopConfig, name: Option<&str>) -> Self {
+        let name = name.map(str::to_string).unwrap_or_else(|| inner.name());
+        let queue_depth = cfg.queue_depth;
+        Self {
+            name,
+            inner,
+            process: ArrivalProcess::new(cfg),
+            queue: VecDeque::new(),
+            queue_depth,
+            tick: 0,
+            summary: TrafficSummary::default(),
+        }
+    }
+
+    /// The traffic counters accumulated so far (`served` tracks the inner
+    /// workload's completed sessions).
+    pub fn summary(&self) -> TrafficSummary {
+        let mut s = self.summary;
+        s.served = self.inner.sessions_completed();
+        s
+    }
+
+    /// One virtual tick: sample arrivals, shed on overflow, then admit
+    /// from the queue head while the inner workload has free capacity.
+    fn advance(&mut self) {
+        self.tick += 1;
+        let arrivals = self.process.step(self.tick);
+        for _ in 0..arrivals {
+            self.summary.offered += 1;
+            if self.queue.len() < self.queue_depth {
+                self.queue.push_back(self.tick);
+            } else {
+                self.summary.shed += 1;
+            }
+        }
+        self.summary.queue_peak = self.summary.queue_peak.max(self.queue.len() as u64);
+        while let Some(&enqueued) = self.queue.front() {
+            if !self.inner.force_arrival() {
+                break;
+            }
+            self.queue.pop_front();
+            let delay = self.tick - enqueued;
+            self.summary.admitted += 1;
+            self.summary.queue_delay_sum += delay;
+            self.summary.queue_delay_max = self.summary.queue_delay_max.max(delay);
+        }
+    }
+}
+
+impl Workload for OpenLoopWorkload {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn next_access(&mut self) -> Access {
+        self.advance();
+        self.inner.next_access()
+    }
+
+    fn tokens_done(&self) -> u64 {
+        self.inner.tokens_done()
+    }
+
+    fn sessions_completed(&self) -> u64 {
+        self.inner.sessions_completed()
+    }
+
+    fn live_sessions(&self) -> usize {
+        self.inner.live_sessions()
+    }
+
+    fn has_work(&self) -> bool {
+        self.inner.has_work() || !self.queue.is_empty()
+    }
+
+    /// External admission bypasses the queue (the serving coordinator
+    /// routes its own arrivals); open-loop runs never call this.
+    fn force_arrival(&mut self) -> bool {
+        self.inner.force_arrival()
+    }
+
+    fn traffic(&self) -> Option<TrafficSummary> {
+        Some(self.summary())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    fn open_loop(seed: u64, kind: ArrivalKind) -> OpenLoopWorkload {
+        let mut g = GeneratorConfig::tiny(seed);
+        g.arrival_p_hot = 0.0;
+        g.arrival_p_cold = 0.0;
+        let mut cfg = OpenLoopConfig::new(kind, seed);
+        cfg.rate = 8.0;
+        cfg.queue_depth = 4;
+        OpenLoopWorkload::new(Box::new(TraceGenerator::new(g)), cfg, Some("open-loop-test"))
+    }
+
+    #[test]
+    fn arrivals_are_seed_deterministic() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Diurnal, ArrivalKind::Bursty] {
+            let a = open_loop(11, kind).generate(6_000);
+            let b = open_loop(11, kind).generate(6_000);
+            assert_eq!(a, b, "{kind:?} must be deterministic");
+            let c = open_loop(12, kind).generate(6_000);
+            assert_ne!(a, c, "{kind:?} must vary with the seed");
+        }
+    }
+
+    #[test]
+    fn queue_admits_sheds_and_accounts_delay() {
+        let mut w = open_loop(7, ArrivalKind::Bursty);
+        let _ = w.generate(30_000);
+        let t = w.traffic().expect("open-loop workloads report traffic");
+        assert!(t.offered > 0, "arrivals must occur: {t:?}");
+        assert!(t.admitted > 0, "some requests must be admitted: {t:?}");
+        assert!(t.admitted + t.shed <= t.offered);
+        assert!(t.queue_delay_max >= t.queue_delay_mean() as u64);
+        assert!(t.queue_peak as usize <= 4, "queue is bounded: {t:?}");
+        assert!(w.tokens_done() > 0, "admitted sessions must decode tokens");
+    }
+
+    #[test]
+    fn diurnal_rate_swings_around_base() {
+        let mut cfg = OpenLoopConfig::new(ArrivalKind::Diurnal, 1);
+        cfg.rate = 10.0;
+        cfg.amplitude = 0.5;
+        cfg.period = 1000;
+        let p = ArrivalProcess::new(cfg);
+        let peak = p.rate_at(250); // sin peak
+        let trough = p.rate_at(750); // sin trough
+        assert!(peak > 14.0 && peak < 16.0, "peak {peak}");
+        assert!(trough > 4.0 && trough < 6.0, "trough {trough}");
+        assert!((p.rate_at(0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let ok = OpenLoopConfig::new(ArrivalKind::Poisson, 0);
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.rate = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.amplitude = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.queue_depth = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok;
+        bad.period = 0;
+        assert!(bad.validate().is_err());
+    }
+}

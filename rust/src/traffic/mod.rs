@@ -1,0 +1,165 @@
+//! Population-scale traffic: open-loop arrivals, tenant churn, and
+//! serve-trace capture/replay.
+//!
+//! Every scenario in [`crate::trace::scenario`] was historically a
+//! *closed-loop* generator: a session departs, a slot frees, the generator
+//! immediately admits the next arrival, so offered load always equals
+//! service capacity and overload is unobservable. This module decouples
+//! the two sides:
+//!
+//! - [`arrivals`] — seeded-deterministic arrival processes (Poisson,
+//!   diurnal rate curve, bursty on/off MMPP) driving an
+//!   [`OpenLoopWorkload`]: requests arrive at an *offered* rate, wait in a
+//!   bounded admission queue, and are shed when it overflows. Queue delay,
+//!   offered-vs-served throughput and shed counts surface as a
+//!   [`TrafficSummary`] in the run report.
+//! - [`population`] — a tenant population with churn, per-tenant
+//!   Zipf-distributed address footprints, and a shared system-prompt
+//!   prefix block whose cross-tenant reuse (and pollution) the
+//!   `prefix-share` scenario makes measurable.
+//! - [`capture`] / [`replay`] — a sink recording the access stream the
+//!   serve coordinator *actually produced* into a v2 `.acpctrace`
+//!   (tenant id + arrival timestamp per record), and a streaming
+//!   [`ReplayWorkload`] that plays a capture back bit-for-bit through
+//!   [`crate::api::Runner`], making serve-mode regressions reproducible
+//!   offline.
+//!
+//! Open-loop counters are **shard- and thread-count invariant by
+//! construction**: the workload always runs on exactly one thread — inline
+//! in the single-threaded engine, producer-side in the sharded path — so a
+//! fixed seed yields one arrival/admission/shed history regardless of how
+//! the access stream is partitioned downstream
+//! (`tests/integration_traffic.rs` asserts this).
+
+pub mod arrivals;
+pub mod capture;
+pub mod population;
+pub mod replay;
+
+pub use arrivals::{ArrivalKind, ArrivalProcess, OpenLoopConfig, OpenLoopWorkload};
+pub use capture::CaptureSink;
+pub use population::{PopulationConfig, PopulationWorkload, SHARED_PREFIX_BASE};
+pub use replay::ReplayWorkload;
+
+use crate::util::json::{Json, JsonError};
+
+/// Open-loop traffic counters harvested from a workload after a run.
+///
+/// All counters are monotone and fully determined by the workload seed
+/// (the arrival process never observes wall-clock time or thread
+/// scheduling), so two runs of the same spec report identical summaries.
+/// Time is measured in *access ticks* — one tick per access the engine
+/// drives — the same virtual clock the generator stamps into
+/// [`crate::trace::Access::time`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TrafficSummary {
+    /// Requests the arrival process generated (offered load).
+    pub offered: u64,
+    /// Requests admitted into a session slot.
+    pub admitted: u64,
+    /// Requests dropped because the admission queue was full (overload).
+    pub shed: u64,
+    /// Sessions fully served (completed) by the inner workload.
+    pub served: u64,
+    /// Total ticks admitted requests spent queued before admission.
+    pub queue_delay_sum: u64,
+    /// Worst single queueing delay (ticks).
+    pub queue_delay_max: u64,
+    /// Peak admission-queue depth observed.
+    pub queue_peak: u64,
+}
+
+impl TrafficSummary {
+    /// Mean queueing delay (ticks) over admitted requests.
+    pub fn queue_delay_mean(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.queue_delay_sum as f64 / self.admitted as f64
+        }
+    }
+
+    /// Fraction of offered requests shed by the bounded queue.
+    pub fn shed_frac(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("queue_delay_sum", Json::Num(self.queue_delay_sum as f64)),
+            ("queue_delay_max", Json::Num(self.queue_delay_max as f64)),
+            ("queue_peak", Json::Num(self.queue_peak as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        let u = |k: &str| -> Result<u64, JsonError> {
+            Ok(j.req(k)?.as_f64().unwrap_or(0.0).max(0.0) as u64)
+        };
+        Ok(Self {
+            offered: u("offered")?,
+            admitted: u("admitted")?,
+            shed: u("shed")?,
+            served: u("served")?,
+            queue_delay_sum: u("queue_delay_sum")?,
+            queue_delay_max: u("queue_delay_max")?,
+            queue_peak: u("queue_peak")?,
+        })
+    }
+
+    /// One-line human rendering for `acpc run` output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "traffic: offered={} admitted={} shed={} ({:.1}%) served={} \
+             queue_delay mean={:.1} max={} peak_depth={}",
+            self.offered,
+            self.admitted,
+            self.shed,
+            self.shed_frac() * 100.0,
+            self.served,
+            self.queue_delay_mean(),
+            self.queue_delay_max,
+            self.queue_peak
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let t = TrafficSummary {
+            offered: 120,
+            admitted: 100,
+            shed: 20,
+            served: 88,
+            queue_delay_sum: 4200,
+            queue_delay_max: 311,
+            queue_peak: 17,
+        };
+        let j = t.to_json();
+        let back = TrafficSummary::from_json(&j).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(j.to_pretty(), back.to_json().to_pretty());
+        assert!((t.queue_delay_mean() - 42.0).abs() < 1e-9);
+        assert!((t.shed_frac() - 20.0 / 120.0).abs() < 1e-12);
+        assert!(t.summary_line().contains("offered=120"));
+    }
+
+    #[test]
+    fn empty_summary_has_safe_rates() {
+        let t = TrafficSummary::default();
+        assert_eq!(t.queue_delay_mean(), 0.0);
+        assert_eq!(t.shed_frac(), 0.0);
+    }
+}

@@ -1,0 +1,409 @@
+//! Tenant-population workload: arrival/churn of tenants over time,
+//! per-tenant Zipf-distributed address footprints, and a shared
+//! system-prompt prefix block reused across every tenant.
+//!
+//! The closed-loop scenario generators model one serving node's session
+//! mix; this workload models the *population* above it. Each tenant owns
+//! a private KV footprint (Zipf-skewed sizes across tenants, Zipf-skewed
+//! line popularity within a footprint) at a tenant-unique address base, so
+//! tenant churn — a slot being recycled to a fresh tenant id — turns a
+//! warm footprint cold exactly the way a new customer's traffic does.
+//! Every session additionally scans the **shared system-prompt prefix**
+//! block ([`SHARED_PREFIX_BASE`]) during prefill and keeps re-reading it
+//! while decoding: those lines are the only cross-tenant reuse in the
+//! stream, which is what makes prefix-cache sharing (and the pollution
+//! one-shot tenants inflict on it) measurable — the registered
+//! `prefix-share` scenario.
+//!
+//! Session ids encode their tenant (`tenant_id % 2^16` in the high half),
+//! so a trace alone is enough to attribute accesses to tenants.
+
+use crate::trace::generator::LINE;
+use crate::trace::{region, Access, StreamKind, Workload};
+use crate::util::rng::{Xoshiro256, Zipf};
+use std::collections::VecDeque;
+
+/// First byte of the shared system-prompt prefix block (KV region).
+pub const SHARED_PREFIX_BASE: u64 = region::KV;
+
+/// Per-tenant address stride (64 MiB): footprints never overlap.
+const TENANT_STRIDE: u64 = 1 << 26;
+
+/// Tenant ids wrap for addressing after this many (keeps every footprint
+/// inside the KV region); churn histories longer than this reuse bases.
+const MAX_TENANT_BASES: u32 = 1 << 13;
+
+/// Append-ring length (lines) for per-tenant KV writes.
+const APPEND_RING: u64 = 1 << 12;
+
+/// Prefill scans at most this many shared-prefix lines per admission.
+const PREFIX_SCAN: u64 = 48;
+
+#[derive(Debug, Clone)]
+pub struct PopulationConfig {
+    pub seed: u64,
+    /// Concurrently active tenants.
+    pub tenant_slots: usize,
+    /// Per-token probability a tenant slot churns to a fresh tenant.
+    pub churn_p: f64,
+    /// Largest per-tenant footprint (lines); sizes are Zipf-skewed below it.
+    pub footprint_lines_max: u64,
+    /// Zipf skew of line popularity inside one tenant's footprint.
+    pub footprint_theta: f64,
+    /// Zipf skew of which tenant a new session belongs to.
+    pub tenant_select_theta: f64,
+    /// Shared system-prompt prefix size (lines).
+    pub shared_prefix_lines: u64,
+    /// Probability a decode-time KV read hits the shared prefix.
+    pub prefix_read_p: f64,
+    /// KV reads per decoded token.
+    pub reads_per_token: usize,
+    /// Concurrent session cap.
+    pub max_live_sessions: usize,
+    /// Mean session length (tokens, exponential).
+    pub session_tokens_mean: f64,
+    /// Per-token probability of a new session arriving (closed-loop).
+    pub arrival_p: f64,
+}
+
+impl PopulationConfig {
+    /// The registry `prefix-share` scenario parameters.
+    pub fn prefix_share(seed: u64) -> Self {
+        Self {
+            seed,
+            tenant_slots: 8,
+            churn_p: 0.002,
+            footprint_lines_max: 1 << 13,
+            footprint_theta: 0.9,
+            tenant_select_theta: 1.2,
+            shared_prefix_lines: 384,
+            prefix_read_p: 0.3,
+            reads_per_token: 8,
+            max_live_sessions: 12,
+            session_tokens_mean: 48.0,
+            arrival_p: 0.08,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Tenant {
+    id: u32,
+    /// Footprint size in lines (Zipf-skewed across tenants).
+    footprint: u64,
+    /// Line popularity inside the footprint.
+    zipf: Zipf,
+    /// KV-append cursor (ring beyond the footprint).
+    append: u64,
+}
+
+impl Tenant {
+    fn base(&self) -> u64 {
+        region::KV + (1 + (self.id % MAX_TENANT_BASES)) as u64 * TENANT_STRIDE
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Sess {
+    id: u32,
+    slot: usize,
+    ctx: u32,
+    tokens_left: u32,
+}
+
+/// The population [`Workload`]: self-contained (no [`super::arrivals`]
+/// wrapper needed) and seed-deterministic.
+pub struct PopulationWorkload {
+    name: String,
+    cfg: PopulationConfig,
+    rng: Xoshiro256,
+    tenants: Vec<Tenant>,
+    sessions: Vec<Sess>,
+    tenant_select: Zipf,
+    prefix_zipf: Zipf,
+    embed_zipf: Zipf,
+    footprint_rank: Zipf,
+    pending: VecDeque<Access>,
+    time: u64,
+    scratch_head: u64,
+    next_tenant_id: u32,
+    session_counter: u32,
+    tokens_done: u64,
+    sessions_completed: u64,
+}
+
+impl PopulationWorkload {
+    pub fn new(cfg: PopulationConfig) -> Self {
+        Self::with_name(cfg, "population")
+    }
+
+    pub fn with_name(cfg: PopulationConfig, name: &str) -> Self {
+        assert!(cfg.tenant_slots > 0, "need at least one tenant slot");
+        assert!(cfg.shared_prefix_lines > 0, "need a shared prefix block");
+        assert!(cfg.reads_per_token > 0 && cfg.max_live_sessions > 0);
+        let mut rng = Xoshiro256::new(cfg.seed);
+        let footprint_rank = Zipf::new(64, 1.1);
+        let mut next_tenant_id = 0u32;
+        let mut tenants = Vec::with_capacity(cfg.tenant_slots);
+        for _ in 0..cfg.tenant_slots {
+            tenants.push(Self::fresh_tenant(&cfg, &footprint_rank, &mut rng, &mut next_tenant_id));
+        }
+        let tenant_select = Zipf::new(cfg.tenant_slots as u64, cfg.tenant_select_theta);
+        let prefix_zipf = Zipf::new(cfg.shared_prefix_lines, 1.1);
+        let embed_zipf = Zipf::new(50_000, 0.95);
+        Self {
+            name: name.to_string(),
+            cfg,
+            rng,
+            tenants,
+            sessions: Vec::new(),
+            tenant_select,
+            prefix_zipf,
+            embed_zipf,
+            footprint_rank,
+            pending: VecDeque::new(),
+            time: 0,
+            scratch_head: 0,
+            next_tenant_id,
+            session_counter: 0,
+            tokens_done: 0,
+            sessions_completed: 0,
+        }
+    }
+
+    pub fn tokens_done(&self) -> u64 {
+        self.tokens_done
+    }
+
+    pub fn sessions_completed(&self) -> u64 {
+        self.sessions_completed
+    }
+
+    /// Active tenant ids (for tests / characterization).
+    pub fn tenant_ids(&self) -> Vec<u32> {
+        self.tenants.iter().map(|t| t.id).collect()
+    }
+
+    fn fresh_tenant(
+        cfg: &PopulationConfig,
+        footprint_rank: &Zipf,
+        rng: &mut Xoshiro256,
+        next_id: &mut u32,
+    ) -> Tenant {
+        let id = *next_id;
+        *next_id += 1;
+        // Zipf-skewed footprint sizes: a few whales, a long tail of small
+        // tenants (floor keeps the within-tenant Zipf meaningful).
+        let rank = footprint_rank.sample(rng);
+        let footprint = (cfg.footprint_lines_max / (1 + rank)).max(64);
+        Tenant { id, footprint, zipf: Zipf::new(footprint, cfg.footprint_theta), append: 0 }
+    }
+
+    fn pc(kind: StreamKind, site: u64) -> u64 {
+        ((kind as u64) << 32) | site
+    }
+
+    fn push(&mut self, s: &Sess, kind: StreamKind, addr: u64, site: u64, is_write: bool) {
+        self.time += 1;
+        self.pending.push_back(Access {
+            time: self.time,
+            addr,
+            pc: Self::pc(kind, site),
+            kind,
+            session: s.id,
+            ctx_len: s.ctx,
+            layer: 0,
+            is_write,
+        });
+    }
+
+    fn maybe_churn(&mut self) {
+        if self.rng.chance(self.cfg.churn_p) {
+            let slot = self.rng.range_usize(0, self.tenants.len());
+            self.tenants[slot] = Self::fresh_tenant(
+                &self.cfg,
+                &self.footprint_rank,
+                &mut self.rng,
+                &mut self.next_tenant_id,
+            );
+            // Sessions of the departed tenant run out naturally; their
+            // remaining reads land in the fresh tenant's (cold) footprint,
+            // which is exactly the pollution churn causes.
+        }
+    }
+
+    fn admit_session(&mut self) -> bool {
+        if self.sessions.len() >= self.cfg.max_live_sessions {
+            return false;
+        }
+        let slot = self.tenant_select.sample(&mut self.rng) as usize;
+        let tenant_id = self.tenants[slot].id;
+        self.session_counter = self.session_counter.wrapping_add(1);
+        let id = ((tenant_id & 0xFFFF) << 16) | (self.session_counter & 0xFFFF);
+        let tokens =
+            self.rng.next_exp(1.0 / self.cfg.session_tokens_mean).round().clamp(4.0, 512.0) as u32;
+        let s = Sess { id, slot, ctx: 0, tokens_left: tokens };
+        // Prefill: scan the shared system-prompt prefix (the cross-tenant
+        // reuse surface), then seed the tenant footprint with a few writes.
+        let scan = self.cfg.shared_prefix_lines.min(PREFIX_SCAN);
+        for i in 0..scan {
+            self.push(&s, StreamKind::KvRead, SHARED_PREFIX_BASE + i * LINE, 7, false);
+        }
+        for _ in 0..4 {
+            let t = &mut self.tenants[slot];
+            let addr = t.base() + (t.footprint + t.append % APPEND_RING) * LINE;
+            t.append += 1;
+            self.push(&s, StreamKind::KvWrite, addr, 2, true);
+        }
+        self.sessions.push(s);
+        true
+    }
+
+    fn decode_token(&mut self, si: usize) {
+        let s = self.sessions[si].clone();
+        let embed = region::EMBED + self.embed_zipf.sample(&mut self.rng) * 128;
+        self.push(&s, StreamKind::Embedding, embed, 1, false);
+        for _ in 0..self.cfg.reads_per_token {
+            let addr = if self.rng.chance(self.cfg.prefix_read_p) {
+                SHARED_PREFIX_BASE + self.prefix_zipf.sample(&mut self.rng) * LINE
+            } else {
+                let t = &self.tenants[s.slot];
+                t.base() + self.tenants[s.slot].zipf.sample(&mut self.rng) * LINE
+            };
+            self.push(&s, StreamKind::KvRead, addr, 4, false);
+        }
+        {
+            let t = &mut self.tenants[s.slot];
+            let addr = t.base() + (t.footprint + t.append % APPEND_RING) * LINE;
+            t.append += 1;
+            self.push(&s, StreamKind::KvWrite, addr, 2, true);
+        }
+        let scratch = region::SCRATCH + (self.scratch_head % (1 << 14)) * LINE;
+        self.scratch_head += 1;
+        self.push(&s, StreamKind::Scratch, scratch, 5, true);
+
+        self.tokens_done += 1;
+        let sess = &mut self.sessions[si];
+        sess.ctx += 1;
+        sess.tokens_left -= 1;
+        if sess.tokens_left == 0 {
+            self.sessions.swap_remove(si);
+            self.sessions_completed += 1;
+        }
+    }
+
+    fn refill(&mut self) {
+        while self.pending.is_empty() {
+            self.maybe_churn();
+            if self.rng.chance(self.cfg.arrival_p) {
+                self.admit_session();
+            }
+            if self.sessions.is_empty() {
+                // Never starve the stream: population scenarios are
+                // closed-loop, a new session replaces the drained mix.
+                self.admit_session();
+                continue;
+            }
+            let si = self.rng.range_usize(0, self.sessions.len());
+            self.decode_token(si);
+        }
+    }
+
+    pub fn next_access(&mut self) -> Access {
+        self.refill();
+        self.pending.pop_front().expect("refill produced accesses")
+    }
+}
+
+impl Workload for PopulationWorkload {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn next_access(&mut self) -> Access {
+        PopulationWorkload::next_access(self)
+    }
+
+    fn tokens_done(&self) -> u64 {
+        self.tokens_done
+    }
+
+    fn sessions_completed(&self) -> u64 {
+        self.sessions_completed
+    }
+
+    fn live_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.sessions.is_empty()
+    }
+
+    fn force_arrival(&mut self) -> bool {
+        self.admit_session()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn workload(seed: u64) -> PopulationWorkload {
+        PopulationWorkload::with_name(PopulationConfig::prefix_share(seed), "prefix-share")
+    }
+
+    #[test]
+    fn stream_is_seed_deterministic_and_monotone() {
+        let a = workload(5).generate(20_000);
+        let b = workload(5).generate(20_000);
+        assert_eq!(a, b);
+        let c = workload(6).generate(20_000);
+        assert_ne!(a, c);
+        assert!(a.windows(2).all(|p| p[0].time < p[1].time), "time must be strictly increasing");
+    }
+
+    #[test]
+    fn shared_prefix_is_reused_across_tenants() {
+        let mut w = workload(9);
+        let trace = w.generate(40_000);
+        assert!(w.tokens_done() > 0);
+        let span = PopulationConfig::prefix_share(9).shared_prefix_lines * LINE;
+        let tenants_on_prefix: HashSet<u32> = trace
+            .iter()
+            .filter(|a| a.addr >= SHARED_PREFIX_BASE && a.addr < SHARED_PREFIX_BASE + span)
+            .map(|a| a.session >> 16)
+            .collect();
+        assert!(
+            tenants_on_prefix.len() >= 2,
+            "shared prefix must be read by multiple tenants: {tenants_on_prefix:?}"
+        );
+    }
+
+    #[test]
+    fn churn_rotates_tenant_ids() {
+        let mut w = workload(3);
+        let before: HashSet<u32> = w.tenant_ids().into_iter().collect();
+        let _ = w.generate(120_000);
+        let after: HashSet<u32> = w.tenant_ids().into_iter().collect();
+        assert!(
+            after.iter().any(|id| !before.contains(id)),
+            "churn must introduce fresh tenants: before={before:?} after={after:?}"
+        );
+    }
+
+    #[test]
+    fn addresses_stay_in_their_regions() {
+        let trace = workload(1).generate(30_000);
+        for a in &trace {
+            let want = match a.kind {
+                StreamKind::Embedding => region::of(region::EMBED),
+                StreamKind::KvRead | StreamKind::KvWrite => region::of(region::KV),
+                StreamKind::Weight => region::of(region::WEIGHT),
+                StreamKind::Scratch => region::of(region::SCRATCH),
+            };
+            assert_eq!(region::of(a.addr), want, "{a:?}");
+        }
+    }
+}

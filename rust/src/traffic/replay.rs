@@ -1,0 +1,190 @@
+//! Streaming replay of a captured `.acpctrace` through the [`Workload`]
+//! trait: serve-mode regressions become reproducible offline, bit-for-bit,
+//! via the ordinary `acpc run` / farm / store machinery.
+
+use crate::trace::file::{TraceReader, TraceRecord};
+use crate::trace::{Access, Workload};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+
+/// Records pulled from the file per refill; keeps memory flat no matter
+/// how large the capture is.
+const CHUNK: usize = 4096;
+
+/// A [`Workload`] that replays a `.acpctrace` (v1 or v2) in file order.
+///
+/// The stream wraps around when the capture is exhausted (the `Workload`
+/// contract is an infinite stream), so a run of exactly `count()` accesses
+/// reproduces the capture bit-for-bit and longer runs loop it.
+/// [`Workload::tokens_done`] scales the header's token total by replay
+/// progress (v1 files carry no totals and report 0). The header is
+/// validated at [`open`](Self::open); a file that turns corrupt or
+/// truncated mid-replay panics, since `next_access` cannot surface errors.
+pub struct ReplayWorkload {
+    path: PathBuf,
+    name: String,
+    count: u64,
+    total_tokens: u64,
+    total_sessions: u64,
+    reader: TraceReader,
+    buf: VecDeque<TraceRecord>,
+    /// Records handed out so far, monotone across wrap-arounds.
+    consumed: u64,
+}
+
+impl ReplayWorkload {
+    pub fn open(path: &Path) -> Result<Self> {
+        let reader = TraceReader::open(path)?;
+        if reader.count() == 0 {
+            bail!("cannot replay empty trace {path:?}");
+        }
+        let stem = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        Ok(Self {
+            path: path.to_path_buf(),
+            name: format!("replay:{stem}"),
+            count: reader.count(),
+            total_tokens: reader.tokens(),
+            total_sessions: reader.sessions(),
+            reader,
+            buf: VecDeque::with_capacity(CHUNK),
+            consumed: 0,
+        })
+    }
+
+    /// Records in the underlying capture (one full pass of the stream).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Header totals scaled by replay progress; exact at whole passes.
+    fn scaled(&self, total: u64) -> u64 {
+        (total as u128 * self.consumed as u128 / self.count as u128) as u64
+    }
+
+    fn refill(&mut self) {
+        while self.buf.is_empty() {
+            for rec in self.reader.by_ref().take(CHUNK) {
+                let rec = rec
+                    .with_context(|| format!("replaying {:?}", self.path))
+                    .expect("capture became unreadable mid-replay");
+                self.buf.push_back(rec);
+            }
+            if self.buf.is_empty() {
+                // Exhausted: wrap around by reopening.
+                self.reader = TraceReader::open(&self.path)
+                    .expect("capture disappeared mid-replay");
+            }
+        }
+    }
+}
+
+impl Workload for ReplayWorkload {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn next_access(&mut self) -> Access {
+        if self.buf.is_empty() {
+            self.refill();
+        }
+        self.consumed += 1;
+        self.buf.pop_front().expect("refill guarantees a record").access
+    }
+
+    fn tokens_done(&self) -> u64 {
+        self.scaled(self.total_tokens)
+    }
+
+    fn sessions_completed(&self) -> u64 {
+        self.scaled(self.total_sessions)
+    }
+
+    fn live_sessions(&self) -> usize {
+        0
+    }
+
+    fn has_work(&self) -> bool {
+        true
+    }
+
+    fn force_arrival(&mut self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::file::write_trace_v2;
+    use crate::trace::{GeneratorConfig, TraceGenerator};
+
+    fn capture_file(n: usize, tokens: u64, sessions: u64) -> PathBuf {
+        let trace = TraceGenerator::new(GeneratorConfig::tiny(17)).generate(n);
+        let records: Vec<TraceRecord> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, &access)| TraceRecord { access, tenant: (i % 4) as u32, arrival: i as u64 })
+            .collect();
+        let dir = std::env::temp_dir().join("acpc_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("replay_{n}.acpctrace"));
+        write_trace_v2(&path, &records, tokens, sessions).unwrap();
+        path
+    }
+
+    #[test]
+    fn replay_reproduces_the_capture_bit_for_bit() {
+        let path = capture_file(3_000, 900, 30);
+        let expected = crate::trace::file::read_trace(&path).unwrap();
+        let mut w = ReplayWorkload::open(&path).unwrap();
+        assert_eq!(w.count(), 3_000);
+        let replayed = w.generate(3_000);
+        assert_eq!(replayed, expected);
+        assert_eq!(w.tokens_done(), 900);
+        assert_eq!(w.sessions_completed(), 30);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn replay_wraps_around_and_keeps_counting() {
+        let path = capture_file(400, 100, 8);
+        let expected = crate::trace::file::read_trace(&path).unwrap();
+        let mut w = ReplayWorkload::open(&path).unwrap();
+        let two_passes = w.generate(800);
+        assert_eq!(&two_passes[..400], &expected[..]);
+        assert_eq!(&two_passes[400..], &expected[..]);
+        assert_eq!(w.tokens_done(), 200, "tokens scale with wrapped progress");
+        assert!(w.has_work());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn replay_rejects_empty_and_missing_files() {
+        let dir = std::env::temp_dir().join("acpc_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let empty = dir.join("empty.acpctrace");
+        write_trace_v2(&empty, &[], 0, 0).unwrap();
+        assert!(ReplayWorkload::open(&empty).is_err());
+        assert!(ReplayWorkload::open(&dir.join("nope.acpctrace")).is_err());
+        std::fs::remove_file(&empty).unwrap();
+    }
+
+    #[test]
+    fn replay_is_boxable_as_a_workload() {
+        let path = capture_file(50, 10, 1);
+        let mut boxed: Box<dyn Workload> = Box::new(ReplayWorkload::open(&path).unwrap());
+        assert!(boxed.name().starts_with("replay:"));
+        assert_eq!(boxed.live_sessions(), 0);
+        assert!(!boxed.force_arrival());
+        let _ = boxed.next_access();
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration tests over the population-scale traffic subsystem: open-loop
+//! arrival determinism and shard invariance, serve-trace capture → replay
+//! bit-for-bit fidelity, and the multi-tenant population scenario.
+
+use acpc::api::{RunReport, RunSpec, Runner};
+use acpc::config::PredictorKind;
+use acpc::coordinator::{serve, ServeConfig};
+use acpc::predictor::PredictorBox;
+use acpc::trace::file::TraceReader;
+use acpc::trace::{Scenario, Workload};
+use acpc::traffic::{ReplayWorkload, SHARED_PREFIX_BASE};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("acpc_integration_traffic");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn open_loop_report(shards: usize) -> RunReport {
+    let mut spec = RunSpec::builder()
+        .scenario("bursty-batch")
+        .policy("srrip")
+        .predictor(PredictorKind::None)
+        .accesses(60_000)
+        .seed(0x7AFF)
+        .build()
+        .unwrap();
+    spec.shards = shards;
+    Runner::new(spec).unwrap().run().unwrap()
+}
+
+/// The ISSUE's acceptance gate: for a fixed seed, open-loop traffic counters
+/// are a pure function of the spec — invariant across `--shards` (the
+/// arrival process always runs producer-side on one thread) and across
+/// repeated runs.
+#[test]
+fn open_loop_traffic_is_shard_invariant_and_deterministic() {
+    let base = open_loop_report(1);
+    let t1 = base.result.traffic.expect("open-loop run must report traffic");
+    assert!(t1.offered > 0, "no arrivals offered");
+    assert!(t1.admitted > 0, "no arrivals admitted");
+    assert!(
+        t1.offered >= t1.admitted + t1.shed,
+        "offered {} < admitted {} + shed {}",
+        t1.offered,
+        t1.admitted,
+        t1.shed
+    );
+
+    for shards in [2usize, 4] {
+        let rep = open_loop_report(shards);
+        assert_eq!(
+            rep.result.traffic,
+            Some(t1),
+            "traffic counters changed under {shards} shards"
+        );
+    }
+
+    // Re-running the identical spec reproduces the traffic block *and* the
+    // cache metrics byte-for-byte (wall-clock fields live outside both).
+    let again = open_loop_report(1);
+    assert_eq!(again.result.traffic, Some(t1));
+    assert_eq!(
+        again.result.report.to_json().to_pretty(),
+        base.result.report.to_json().to_pretty(),
+        "open-loop metrics are not deterministic"
+    );
+}
+
+/// Capture a real serve run, then replay it: the replayed access stream
+/// must equal the captured one record-for-record, and replay runs must be
+/// metric-deterministic.
+#[test]
+fn serve_capture_replays_bit_for_bit() {
+    let path = tmp("serve-capture.acpctrace");
+    let mut cfg = ServeConfig::quick("srrip");
+    cfg.total_sessions = 12;
+    cfg.capture = Some(path.clone());
+    let rep = serve(&cfg, 0, || PredictorBox::None);
+    assert!(rep.tokens > 0);
+
+    let reader = TraceReader::open(&path).unwrap();
+    assert_eq!(reader.version(), 2, "serve captures are v2");
+    let count = reader.count() as usize;
+    assert!(count > 0, "capture is empty");
+    assert_eq!(reader.tokens(), rep.tokens, "header token total");
+    let records: Vec<_> = reader.map(|r| r.unwrap()).collect();
+
+    // Tenant ids are worker indices; quick() runs 2 workers and both serve.
+    let tenants: std::collections::BTreeSet<u32> =
+        records.iter().map(|r| r.tenant).collect();
+    assert!(tenants.len() >= 2, "expected multiple capture tenants, got {tenants:?}");
+
+    // The streaming replay workload reproduces the capture exactly.
+    let mut replay = ReplayWorkload::open(&path).unwrap();
+    let replayed = replay.generate(count);
+    let captured: Vec<_> = records.iter().map(|r| r.access).collect();
+    assert_eq!(replayed, captured, "replay diverged from capture");
+
+    // And a full Runner replay run is deterministic end to end.
+    let spec = RunSpec::builder()
+        .policy("lru")
+        .predictor(PredictorKind::None)
+        .replay(path.to_str().unwrap())
+        .build()
+        .unwrap();
+    let r1 = Runner::new(spec.clone()).unwrap().run().unwrap();
+    let r2 = Runner::new(spec).unwrap().run().unwrap();
+    assert_eq!(r1.result.report.accesses, count as u64, "replay run length");
+    assert_eq!(
+        r1.result.report.to_json().to_pretty(),
+        r2.result.report.to_json().to_pretty(),
+        "replay runs are not deterministic"
+    );
+}
+
+/// Traffic-backed scenario workloads are pure functions of their seed, like
+/// every generator scenario.
+#[test]
+fn traffic_scenarios_are_seed_deterministic() {
+    for name in ["prefix-share", "bursty-batch"] {
+        let sc = Scenario::by_name(name).unwrap();
+        let a = sc.workload(77).generate(30_000);
+        let b = sc.workload(77).generate(30_000);
+        assert_eq!(a, b, "{name}: same seed diverged");
+        let c = sc.workload(78).generate(30_000);
+        assert_ne!(a, c, "{name}: seed is ignored");
+    }
+}
+
+/// The population scenario's point: distinct tenants hit the *same* shared
+/// system-prompt prefix lines (cross-tenant reuse a per-tenant Zipf model
+/// cannot produce).
+#[test]
+fn prefix_share_tenants_reuse_the_shared_prefix() {
+    let trace = Scenario::by_name("prefix-share").unwrap().workload(5).generate(60_000);
+    // PopulationConfig::prefix_share keeps a 384-line shared prefix block.
+    let prefix_end = SHARED_PREFIX_BASE + 384 * 64;
+    let tenants: std::collections::BTreeSet<u32> = trace
+        .iter()
+        .filter(|a| a.addr >= SHARED_PREFIX_BASE && a.addr < prefix_end && !a.is_write)
+        .map(|a| a.session >> 16)
+        .collect();
+    assert!(
+        tenants.len() >= 2,
+        "shared prefix touched by {} tenant(s), want cross-tenant reuse",
+        tenants.len()
+    );
+}

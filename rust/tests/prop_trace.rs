@@ -3,7 +3,8 @@
 //! combination.
 
 use acpc::predictor::{labeler, Dataset, FeatureExtractor, GeometryHints, FEATURE_DIM};
-use acpc::trace::{region, GeneratorConfig, ModelProfile, StreamKind, TraceGenerator};
+use acpc::trace::file::{read_trace, write_trace, write_trace_v2, TraceReader, TraceRecord};
+use acpc::trace::{region, Access, GeneratorConfig, ModelProfile, StreamKind, TraceGenerator};
 use acpc::util::proptest::prop_check;
 
 fn random_config(g: &mut acpc::util::proptest::Gen) -> GeneratorConfig {
@@ -66,6 +67,87 @@ fn prop_generator_invariants() {
         }
         Ok(())
     });
+}
+
+fn random_access(g: &mut acpc::util::proptest::Gen, time: u64) -> Access {
+    Access {
+        time,
+        addr: g.u64(0, 1 << 44),
+        pc: g.u64(0, 1 << 20),
+        kind: StreamKind::from_u8(g.usize(0, 4) as u8),
+        session: g.u64(0, 1 << 16) as u32,
+        ctx_len: g.u64(0, 4096) as u32,
+        layer: g.u64(0, 96) as u16,
+        is_write: g.bool(),
+    }
+}
+
+/// `.acpctrace` round-trip: any record stream survives v1 (accesses only)
+/// and v2 (tenant + arrival + header totals) write/read bit-for-bit, the
+/// streaming [`TraceReader`] agrees with the bulk wrappers, and v1 files
+/// read back with zeroed provenance.
+#[test]
+fn prop_trace_file_roundtrip_v1_v2() {
+    let dir = std::env::temp_dir().join("acpc_prop_trace_file");
+    std::fs::create_dir_all(&dir).unwrap();
+    let case_counter = std::cell::Cell::new(0usize);
+    prop_check("trace file round-trip", 12, |g| {
+        let case = case_counter.get() + 1;
+        case_counter.set(case);
+        let n = g.usize(1, 400);
+        let mut time = 0u64;
+        let records: Vec<TraceRecord> = (0..n)
+            .map(|_| {
+                time += g.u64(1, 50);
+                TraceRecord {
+                    access: random_access(g, time),
+                    tenant: g.u64(0, 64) as u32,
+                    arrival: g.u64(0, 1 << 30),
+                }
+            })
+            .collect();
+        let accesses: Vec<Access> = records.iter().map(|r| r.access).collect();
+
+        // v1: accesses only.
+        let v1 = dir.join(format!("case{case}.v1.acpctrace"));
+        write_trace(&v1, &accesses).map_err(|e| e.to_string())?;
+        if read_trace(&v1).map_err(|e| e.to_string())? != accesses {
+            return Err("v1 bulk read mismatch".into());
+        }
+        let rd = TraceReader::open(&v1).map_err(|e| e.to_string())?;
+        if rd.version() != 1 || rd.count() != n as u64 {
+            return Err(format!("v1 header: version {} count {}", rd.version(), rd.count()));
+        }
+        for (i, r) in rd.enumerate() {
+            let r = r.map_err(|e| e.to_string())?;
+            if r.access != accesses[i] || r.tenant != 0 || r.arrival != 0 {
+                return Err(format!("v1 streaming record {i} mismatch"));
+            }
+        }
+
+        // v2: provenance-preserving.
+        let tokens = g.u64(0, 1 << 30);
+        let sessions = g.u64(0, 1 << 20);
+        let v2 = dir.join(format!("case{case}.v2.acpctrace"));
+        write_trace_v2(&v2, &records, tokens, sessions).map_err(|e| e.to_string())?;
+        let rd = TraceReader::open(&v2).map_err(|e| e.to_string())?;
+        if rd.version() != 2 || rd.count() != n as u64 {
+            return Err(format!("v2 header: version {} count {}", rd.version(), rd.count()));
+        }
+        if rd.tokens() != tokens || rd.sessions() != sessions {
+            return Err("v2 header totals mismatch".into());
+        }
+        let back: Vec<TraceRecord> =
+            rd.collect::<Result<_, _>>().map_err(|e| e.to_string())?;
+        if back != records {
+            return Err("v2 streaming read mismatch".into());
+        }
+        if read_trace(&v2).map_err(|e| e.to_string())? != accesses {
+            return Err("v2 thin-wrapper read mismatch".into());
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Labeler invariants: labels consistent with next_use, and next_use always
