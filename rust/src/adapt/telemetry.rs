@@ -166,6 +166,16 @@ impl ReuseSketch {
     pub fn reset_window(&mut self) {
         self.hist = [0; 33];
     }
+
+    /// Fold another sketch's histogram into this one (last-touch maps stay
+    /// separate). The serve engine keeps one sketch per (worker, tenant) so
+    /// positions stay per-worker-monotone, then absorbs them into a
+    /// per-tenant sketch at each arbitration window boundary.
+    pub fn absorb(&mut self, other: &ReuseSketch) {
+        for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
+            *a += *b;
+        }
+    }
 }
 
 /// Incremental window telemetry over a running [`Hierarchy`].

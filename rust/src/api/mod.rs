@@ -25,7 +25,7 @@
 
 pub mod farm;
 mod runner;
-mod spec;
+pub(crate) mod spec;
 pub mod store;
 
 pub use farm::{

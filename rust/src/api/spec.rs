@@ -188,6 +188,106 @@ impl HierarchySpec {
     fn is_empty(&self) -> bool {
         *self == Self::default()
     }
+
+    /// Layer these overrides onto `cfg` (preset swap first, then geometry),
+    /// validating names and the final geometry. Shared by the run spec and
+    /// the serve spec so the two cannot drift on hierarchy semantics.
+    pub(crate) fn apply(&self, cfg: &mut crate::mem::HierarchyConfig) -> Result<()> {
+        if let Some(name) = &self.preset {
+            *cfg = crate::mem::HierarchyConfig::by_name(name)
+                .ok_or_else(|| anyhow!("unknown hierarchy preset '{name}'"))?;
+        }
+        if let Some(p) = &self.prefetcher {
+            if crate::mem::prefetch::make_prefetcher(p, 0).is_none() {
+                bail!("unknown prefetcher '{p}'");
+            }
+            cfg.prefetcher = p.clone();
+        }
+        if let Some(p) = &self.l3_policy {
+            if crate::policy::make_policy(p, 2, 2, 0).is_none() {
+                bail!("unknown l3_policy '{p}'");
+            }
+            cfg.l3_policy = p.clone();
+        }
+        if let Some(v) = self.l1_kb {
+            cfg.l1.size_bytes = v * 1024;
+        }
+        if let Some(v) = self.l2_kb {
+            cfg.l2.size_bytes = v * 1024;
+        }
+        if let Some(v) = self.l3_kb {
+            cfg.l3.size_bytes = v * 1024;
+        }
+        if let Some(v) = self.l1_assoc {
+            cfg.l1.assoc = v;
+        }
+        if let Some(v) = self.l2_assoc {
+            cfg.l2.assoc = v;
+        }
+        if let Some(v) = self.l3_assoc {
+            cfg.l3.assoc = v;
+        }
+        if let Some(v) = self.dram_latency {
+            cfg.dram_latency = v;
+        }
+        cfg.validate().map_err(|e| anyhow!("invalid hierarchy geometry: {e}"))
+    }
+
+    pub(crate) fn to_json(&self) -> Json {
+        let mut hv = Json::obj();
+        if let Some(v) = &self.preset {
+            hv.set("preset", Json::Str(v.clone()));
+        }
+        if let Some(v) = &self.prefetcher {
+            hv.set("prefetcher", Json::Str(v.clone()));
+        }
+        if let Some(v) = &self.l3_policy {
+            hv.set("l3_policy", Json::Str(v.clone()));
+        }
+        if let Some(v) = self.l1_kb {
+            hv.set("l1_kb", Json::Num(v as f64));
+        }
+        if let Some(v) = self.l2_kb {
+            hv.set("l2_kb", Json::Num(v as f64));
+        }
+        if let Some(v) = self.l3_kb {
+            hv.set("l3_kb", Json::Num(v as f64));
+        }
+        if let Some(v) = self.l1_assoc {
+            hv.set("l1_assoc", Json::Num(v as f64));
+        }
+        if let Some(v) = self.l2_assoc {
+            hv.set("l2_assoc", Json::Num(v as f64));
+        }
+        if let Some(v) = self.l3_assoc {
+            hv.set("l3_assoc", Json::Num(v as f64));
+        }
+        if let Some(v) = self.dram_latency {
+            hv.set("dram_latency", Json::Num(v as f64));
+        }
+        hv
+    }
+
+    pub(crate) fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("'hierarchy' must be an object"))?;
+        let mut h = Self::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "preset" => h.preset = Some(str_field(v, k)?),
+                "prefetcher" => h.prefetcher = Some(str_field(v, k)?),
+                "l3_policy" => h.l3_policy = Some(str_field(v, k)?),
+                "l1_kb" => h.l1_kb = Some(u64_field(v, k)?),
+                "l2_kb" => h.l2_kb = Some(u64_field(v, k)?),
+                "l3_kb" => h.l3_kb = Some(u64_field(v, k)?),
+                "l1_assoc" => h.l1_assoc = Some(u64_field(v, k)? as usize),
+                "l2_assoc" => h.l2_assoc = Some(u64_field(v, k)? as usize),
+                "l3_assoc" => h.l3_assoc = Some(u64_field(v, k)? as usize),
+                "dram_latency" => h.dram_latency = Some(u64_field(v, k)?),
+                other => bail!("unknown hierarchy key '{other}'"),
+            }
+        }
+        Ok(h)
+    }
 }
 
 /// Adaptive-controller configuration as spec fields: `None` = the
@@ -500,45 +600,7 @@ impl RunSpec {
             cfg.generator.arrival_p_cold = v;
         }
 
-        let h = &self.hierarchy;
-        if let Some(name) = &h.preset {
-            cfg.hierarchy = crate::mem::HierarchyConfig::by_name(name)
-                .ok_or_else(|| anyhow!("unknown hierarchy preset '{name}'"))?;
-        }
-        if let Some(p) = &h.prefetcher {
-            if crate::mem::prefetch::make_prefetcher(p, 0).is_none() {
-                bail!("unknown prefetcher '{p}'");
-            }
-            cfg.hierarchy.prefetcher = p.clone();
-        }
-        if let Some(p) = &h.l3_policy {
-            if crate::policy::make_policy(p, 2, 2, 0).is_none() {
-                bail!("unknown l3_policy '{p}'");
-            }
-            cfg.hierarchy.l3_policy = p.clone();
-        }
-        if let Some(v) = h.l1_kb {
-            cfg.hierarchy.l1.size_bytes = v * 1024;
-        }
-        if let Some(v) = h.l2_kb {
-            cfg.hierarchy.l2.size_bytes = v * 1024;
-        }
-        if let Some(v) = h.l3_kb {
-            cfg.hierarchy.l3.size_bytes = v * 1024;
-        }
-        if let Some(v) = h.l1_assoc {
-            cfg.hierarchy.l1.assoc = v;
-        }
-        if let Some(v) = h.l2_assoc {
-            cfg.hierarchy.l2.assoc = v;
-        }
-        if let Some(v) = h.l3_assoc {
-            cfg.hierarchy.l3.assoc = v;
-        }
-        if let Some(v) = h.dram_latency {
-            cfg.hierarchy.dram_latency = v;
-        }
-        cfg.hierarchy.validate().map_err(|e| anyhow!("invalid hierarchy geometry: {e}"))?;
+        self.hierarchy.apply(&mut cfg.hierarchy)?;
 
         if let Some(n) = self.accesses {
             if n == 0 {
@@ -720,40 +782,8 @@ impl RunSpec {
         if workload != Json::obj() {
             j.set("workload", workload);
         }
-        let h = &self.hierarchy;
-        if !h.is_empty() {
-            let mut hv = Json::obj();
-            if let Some(v) = &h.preset {
-                hv.set("preset", Json::Str(v.clone()));
-            }
-            if let Some(v) = &h.prefetcher {
-                hv.set("prefetcher", Json::Str(v.clone()));
-            }
-            if let Some(v) = &h.l3_policy {
-                hv.set("l3_policy", Json::Str(v.clone()));
-            }
-            if let Some(v) = h.l1_kb {
-                hv.set("l1_kb", Json::Num(v as f64));
-            }
-            if let Some(v) = h.l2_kb {
-                hv.set("l2_kb", Json::Num(v as f64));
-            }
-            if let Some(v) = h.l3_kb {
-                hv.set("l3_kb", Json::Num(v as f64));
-            }
-            if let Some(v) = h.l1_assoc {
-                hv.set("l1_assoc", Json::Num(v as f64));
-            }
-            if let Some(v) = h.l2_assoc {
-                hv.set("l2_assoc", Json::Num(v as f64));
-            }
-            if let Some(v) = h.l3_assoc {
-                hv.set("l3_assoc", Json::Num(v as f64));
-            }
-            if let Some(v) = h.dram_latency {
-                hv.set("dram_latency", Json::Num(v as f64));
-            }
-            j.set("hierarchy", hv);
+        if !self.hierarchy.is_empty() {
+            j.set("hierarchy", self.hierarchy.to_json());
         }
         j
     }
@@ -806,7 +836,7 @@ impl RunSpec {
                 }
                 "traffic" => spec.traffic = Some(TrafficSpec::from_json(v)?),
                 "workload" => parse_workload(&mut spec, v)?,
-                "hierarchy" => parse_hierarchy(&mut spec, v)?,
+                "hierarchy" => spec.hierarchy = HierarchySpec::from_json(v)?,
                 other => bail!("unknown run-spec key '{other}'"),
             }
         }
@@ -841,29 +871,9 @@ fn parse_workload(spec: &mut RunSpec, j: &Json) -> Result<()> {
     Ok(())
 }
 
-fn parse_hierarchy(spec: &mut RunSpec, j: &Json) -> Result<()> {
-    let obj = j.as_obj().ok_or_else(|| anyhow!("'hierarchy' must be an object"))?;
-    for (k, v) in obj {
-        match k.as_str() {
-            "preset" => spec.hierarchy.preset = Some(str_field(v, k)?),
-            "prefetcher" => spec.hierarchy.prefetcher = Some(str_field(v, k)?),
-            "l3_policy" => spec.hierarchy.l3_policy = Some(str_field(v, k)?),
-            "l1_kb" => spec.hierarchy.l1_kb = Some(u64_field(v, k)?),
-            "l2_kb" => spec.hierarchy.l2_kb = Some(u64_field(v, k)?),
-            "l3_kb" => spec.hierarchy.l3_kb = Some(u64_field(v, k)?),
-            "l1_assoc" => spec.hierarchy.l1_assoc = Some(u64_field(v, k)? as usize),
-            "l2_assoc" => spec.hierarchy.l2_assoc = Some(u64_field(v, k)? as usize),
-            "l3_assoc" => spec.hierarchy.l3_assoc = Some(u64_field(v, k)? as usize),
-            "dram_latency" => spec.hierarchy.dram_latency = Some(u64_field(v, k)?),
-            other => bail!("unknown hierarchy key '{other}'"),
-        }
-    }
-    Ok(())
-}
+// ---- field helpers (shared with the serve spec) ------------------------
 
-// ---- field helpers -----------------------------------------------------
-
-fn str_field(v: &Json, what: &str) -> Result<String> {
+pub(crate) fn str_field(v: &Json, what: &str) -> Result<String> {
     v.as_str().map(|s| s.to_string()).ok_or_else(|| anyhow!("'{what}' must be a string"))
 }
 
@@ -871,7 +881,7 @@ fn str_field(v: &Json, what: &str) -> Result<String> {
 /// exact range, so seeds round-trip as strings). Fractional values and
 /// numbers past f64's exact-integer range are rejected, not truncated —
 /// a spec must mean exactly what it says.
-fn u64_field(v: &Json, what: &str) -> Result<u64> {
+pub(crate) fn u64_field(v: &Json, what: &str) -> Result<u64> {
     const F64_EXACT_MAX: f64 = 9_007_199_254_740_992.0; // 2^53
     match v {
         Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= F64_EXACT_MAX => Ok(*x as u64),
@@ -886,7 +896,7 @@ fn u64_field(v: &Json, what: &str) -> Result<u64> {
     }
 }
 
-fn f64_field(v: &Json, what: &str) -> Result<f64> {
+pub(crate) fn f64_field(v: &Json, what: &str) -> Result<f64> {
     match v {
         Json::Num(x) => Ok(*x),
         // JSON has no Infinity token; passive-controller thresholds
@@ -897,7 +907,7 @@ fn f64_field(v: &Json, what: &str) -> Result<f64> {
     }
 }
 
-fn f64_json(x: f64) -> Json {
+pub(crate) fn f64_json(x: f64) -> Json {
     if x.is_finite() {
         Json::Num(x)
     } else if x > 0.0 {

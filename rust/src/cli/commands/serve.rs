@@ -14,6 +14,12 @@ const HELP: &str = "\
 acpc serve — serving-node simulation: router + workers + batched predictor
 
 OPTIONS:
+    --spec <path>        run a ServeSpec JSON (schema acpc-serve-spec-v1):
+                         spec-driven tenant-aware serving with per-tenant
+                         arrival processes, token-bucket admission, and the
+                         noisy-neighbor arbiter. Mutually exclusive with
+                         every workload flag below (the spec carries them);
+                         combine only with --json
     --workers <n>        worker threads [default: 4]
     --sessions <n>       sessions to admit [default: 200]
     --policy <name>      L2 policy [default: acpc]
@@ -49,10 +55,36 @@ pub fn run(args: &mut Args) -> Result<i32> {
         return Ok(0);
     }
     args.ensure_known(&[
-        "workers", "sessions", "policy", "predictor", "backend", "router", "profile",
+        "spec", "workers", "sessions", "policy", "predictor", "backend", "router", "profile",
         "scenario", "adaptive", "batch", "deadline-us", "arrival-us", "seed", "dashboard",
         "dashboard-linger-ms", "capture", "json", "help",
     ])?;
+    if let Some(path) = args.opt("spec") {
+        // Spec-driven tenant-aware mode: the spec carries the whole run
+        // description, so classic workload flags are rejected rather than
+        // silently ignored.
+        const CLASSIC: &[&str] = &[
+            "workers", "sessions", "policy", "predictor", "backend", "router", "profile",
+            "scenario", "batch", "deadline-us", "arrival-us", "seed", "dashboard",
+            "dashboard-linger-ms", "capture",
+        ];
+        for k in CLASSIC {
+            if args.opt(k).is_some() {
+                anyhow::bail!("--{k} conflicts with --spec (put it in the spec file)");
+            }
+        }
+        if args.flag("adaptive") {
+            anyhow::bail!("--adaptive conflicts with --spec (arbitration lives in the spec)");
+        }
+        let spec = crate::serve::ServeSpec::from_file(std::path::Path::new(path))?;
+        let rep = crate::serve::run(&spec)?;
+        print_tenant_report(&rep);
+        if let Some(out) = args.opt("json") {
+            std::fs::write(out, rep.to_json().to_pretty())?;
+            println!("wrote {out}");
+        }
+        return Ok(0);
+    }
     if args.opt("profile").is_some() && args.opt("scenario").is_some() {
         anyhow::bail!("--profile and --scenario are mutually exclusive");
     }
@@ -183,6 +215,39 @@ pub fn run(args: &mut Args) -> Result<i32> {
         println!("wrote {out}");
     }
     Ok(0)
+}
+
+fn print_tenant_report(rep: &crate::coordinator::ServeReport) {
+    println!("\n== serve report (tenant-aware) ==");
+    println!(
+        "sessions: admitted={} completed={} shed={}",
+        rep.sessions_admitted, rep.sessions_completed, rep.sessions_rejected
+    );
+    println!(
+        "tokens={} accesses={} | L2 hit rate={:.1}% pollution={:.2}%",
+        rep.tokens,
+        rep.accesses,
+        rep.l2_hit_rate * 100.0,
+        rep.l2_pollution_ratio * 100.0
+    );
+    println!("arbiter: windows={} throttled_windows={}", rep.adapt_windows, rep.throttled_windows);
+    for t in &rep.tenants {
+        println!(
+            "tenant {:>12}: offered={} admitted={} shed={} deferred={} completed={} \
+             hit={:.1}% pollution={:.2}% delay(mean/max)={:.1}/{} throttled={}",
+            t.name,
+            t.offered,
+            t.admitted,
+            t.shed,
+            t.deferred,
+            t.completed,
+            t.l2_hit_rate * 100.0,
+            t.l2_pollution_ratio * 100.0,
+            t.queue_delay_mean_ticks,
+            t.queue_delay_max_ticks,
+            t.throttled_windows
+        );
+    }
 }
 
 fn kind_model(kind: PredictorKind) -> Option<String> {

@@ -169,6 +169,13 @@ pub struct ServeReport {
     /// the worker index and sorted by `(worker, access, window)`. The full
     /// list behind the three counters above (same timing caveat).
     pub adaptation_events: Vec<WorkerAdaptationEvent>,
+    /// Per-tenant QoS accounting — populated only by the tenant-aware
+    /// engine ([`crate::serve::run`]); classic `serve()` leaves it empty
+    /// and the JSON shape unchanged.
+    pub tenants: Vec<crate::serve::TenantReport>,
+    /// The resolved serve spec of a spec-driven run (`acpc serve --spec`),
+    /// embedded so the report reproduces its run.
+    pub serve_spec: Option<Json>,
 }
 
 /// One controller [`AdaptationEvent`] attributed to its serving worker.
@@ -194,7 +201,7 @@ impl ServeReport {
     /// [`SERVE_SCHEMA`]. Adaptation events are the full per-worker list,
     /// not just the summed counters.
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("schema", Json::Str(SERVE_SCHEMA.into())),
             ("sessions_admitted", Json::Num(self.sessions_admitted as f64)),
             ("sessions_completed", Json::Num(self.sessions_completed as f64)),
@@ -217,7 +224,16 @@ impl ServeReport {
                 "adaptation_events",
                 Json::Arr(self.adaptation_events.iter().map(|e| e.to_json()).collect()),
             ),
-        ])
+        ]);
+        // Tenant-aware extensions only when present, so classic serve
+        // reports keep their exact legacy shape.
+        if !self.tenants.is_empty() {
+            j.set("tenants", Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect()));
+        }
+        if let Some(spec) = &self.serve_spec {
+            j.set("serve_spec", spec.clone());
+        }
+        j
     }
 }
 
@@ -795,6 +811,8 @@ fn serve_inner<F: FnOnce() -> PredictorBox + Send>(
             drift_events,
             throttled_windows,
             adaptation_events,
+            tenants: Vec::new(),
+            serve_spec: None,
         }
     })
 }

@@ -38,6 +38,7 @@ pub mod obs;
 pub mod policy;
 pub mod predictor;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod traffic;

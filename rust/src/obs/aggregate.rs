@@ -182,40 +182,51 @@ impl MonitorState {
 
     /// The dashboard's `/metrics.json` body (schema `acpc-metrics-v1`):
     /// per-source snapshots with health scores plus stream accounting.
+    /// Tenant sources (the serve engine's per-tenant attribution streams)
+    /// are partitioned into their own `tenants` array so per-worker and
+    /// per-tenant health read side by side without label parsing.
     pub fn metrics_json(&self) -> Json {
-        let sources: Vec<Json> = self
-            .sources
-            .iter()
-            .map(|(id, s)| {
-                let mut j = Json::from_pairs(vec![
-                    ("source", Json::Str(id.label())),
-                    ("events", Json::Num(s.events as f64)),
-                    ("last_seq", Json::Num(s.last_seq as f64)),
-                    ("access", Json::Num(s.access as f64)),
-                    ("windows", Json::Num(s.windows as f64)),
-                    ("hit_rate", Json::Num(s.hit_rate)),
-                    ("pollution", Json::Num(s.pollution)),
-                    ("occupancy", Json::Num(s.occupancy)),
-                    ("drift_events", Json::Num(s.drift_events as f64)),
-                    ("retrains", Json::Num(s.retrains as f64)),
-                    ("throttles", Json::Num(s.throttles as f64)),
-                    ("resumes", Json::Num(s.resumes as f64)),
-                    ("throttled", Json::Bool(s.throttled)),
-                    ("state", Json::Str(s.state_label().into())),
-                    ("health", Json::Num(s.health())),
-                ]);
-                if let Some(d) = s.last_drift_window {
-                    j.set("last_drift_window", Json::Num(d as f64));
-                }
-                j
-            })
-            .collect();
-        Json::from_pairs(vec![
+        let snapshot = |id: &SourceId, s: &SourceState| {
+            let mut j = Json::from_pairs(vec![
+                ("source", Json::Str(id.label())),
+                ("events", Json::Num(s.events as f64)),
+                ("last_seq", Json::Num(s.last_seq as f64)),
+                ("access", Json::Num(s.access as f64)),
+                ("windows", Json::Num(s.windows as f64)),
+                ("hit_rate", Json::Num(s.hit_rate)),
+                ("pollution", Json::Num(s.pollution)),
+                ("occupancy", Json::Num(s.occupancy)),
+                ("drift_events", Json::Num(s.drift_events as f64)),
+                ("retrains", Json::Num(s.retrains as f64)),
+                ("throttles", Json::Num(s.throttles as f64)),
+                ("resumes", Json::Num(s.resumes as f64)),
+                ("throttled", Json::Bool(s.throttled)),
+                ("state", Json::Str(s.state_label().into())),
+                ("health", Json::Num(s.health())),
+            ]);
+            if let Some(d) = s.last_drift_window {
+                j.set("last_drift_window", Json::Num(d as f64));
+            }
+            j
+        };
+        let (mut sources, mut tenants) = (Vec::new(), Vec::new());
+        for (id, s) in &self.sources {
+            if id.kind == super::event::SourceKind::Tenant {
+                tenants.push(snapshot(id, s));
+            } else {
+                sources.push(snapshot(id, s));
+            }
+        }
+        let mut j = Json::from_pairs(vec![
             ("schema", Json::Str("acpc-metrics-v1".into())),
             ("events", Json::Num(self.events as f64)),
             ("dropped", Json::Num(self.dropped as f64)),
             ("sources", Json::Arr(sources)),
-        ])
+        ]);
+        if !tenants.is_empty() {
+            j.set("tenants", Json::Arr(tenants));
+        }
+        j
     }
 
     /// Render the refreshing monitor table.
@@ -361,5 +372,29 @@ mod tests {
         let table = m.render_table();
         assert!(table.contains("sim/0") && table.contains("sim/1"));
         assert!(table.contains("dropped=3"));
+    }
+
+    #[test]
+    fn tenant_sources_partition_into_their_own_array() {
+        let mut m = MonitorState::new();
+        m.apply(&ev(SourceId::serve(0), 0, window(0, 0.8, 0.1)));
+        m.apply(&ev(
+            SourceId::tenant(1),
+            0,
+            Payload::Sample { occupancy: 0.4, hit_rate: 0.9, pollution: 0.02, throttled: false },
+        ));
+        let j = m.metrics_json();
+        let sources = j.get("sources").unwrap().as_arr().unwrap();
+        assert_eq!(sources.len(), 1, "tenant stream must not appear among workers");
+        assert_eq!(sources[0].get("source").unwrap().as_str(), Some("serve/0"));
+        let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("source").unwrap().as_str(), Some("tenant/1"));
+        assert!(tenants[0].get("health").unwrap().as_f64().is_some());
+
+        // No tenant streams → no tenants key (legacy shape unchanged).
+        let mut plain = MonitorState::new();
+        plain.apply(&ev(SourceId::serve(0), 0, window(0, 0.8, 0.1)));
+        assert!(plain.metrics_json().get("tenants").is_none());
     }
 }

@@ -29,6 +29,8 @@ pub enum SourceKind {
     Sim,
     /// A serving-coordinator worker.
     Serve,
+    /// A serving tenant (QoS engine attribution — cuts across workers).
+    Tenant,
 }
 
 impl SourceKind {
@@ -36,6 +38,7 @@ impl SourceKind {
         match self {
             SourceKind::Sim => "sim",
             SourceKind::Serve => "serve",
+            SourceKind::Tenant => "tenant",
         }
     }
 
@@ -43,7 +46,8 @@ impl SourceKind {
         match s {
             "sim" => Ok(SourceKind::Sim),
             "serve" => Ok(SourceKind::Serve),
-            other => bail!("telemetry source kind '{other}' (expected sim|serve)"),
+            "tenant" => Ok(SourceKind::Tenant),
+            other => bail!("telemetry source kind '{other}' (expected sim|serve|tenant)"),
         }
     }
 }
@@ -65,6 +69,11 @@ impl SourceId {
     /// Serving-coordinator worker `w`.
     pub fn serve(w: usize) -> SourceId {
         SourceId { kind: SourceKind::Serve, index: w as u32 }
+    }
+
+    /// Serving tenant `t` (tenant-aware serve engine attribution).
+    pub fn tenant(t: usize) -> SourceId {
+        SourceId { kind: SourceKind::Tenant, index: t as u32 }
     }
 
     /// `kind/index` label (allocates — subscriber-side only).
@@ -302,7 +311,7 @@ mod tests {
 
     #[test]
     fn source_labels_roundtrip() {
-        for s in [SourceId::sim(0), SourceId::sim(15), SourceId::serve(3)] {
+        for s in [SourceId::sim(0), SourceId::sim(15), SourceId::serve(3), SourceId::tenant(1)] {
             assert_eq!(SourceId::parse(&s.label()).unwrap(), s);
         }
         assert!(SourceId::parse("bogus/1").is_err());

@@ -1,0 +1,334 @@
+//! Admission control and QoS arbitration for the tenant-aware serve engine.
+//!
+//! Two mechanisms stack in front of the workers:
+//!
+//! * **Token buckets** — a static per-tenant rate contract. A tenant with a
+//!   bucket can only admit sessions while it has tokens; the bucket refills
+//!   at `rate` tokens per tick up to `burst`. Tenants without a bucket are
+//!   uncapped (subject only to arbitration).
+//! * **The arbiter** — an LLaMCAT-style dynamic throttle. Every window it
+//!   scores each tenant from windowed cache telemetry (miss share ×
+//!   a blend of miss rate, inflicted pollution, and reuse distance) and
+//!   throttles the worst offender for the next window iff that tenant also
+//!   holds a meaningful share of traffic. Throttled tenants defer
+//!   admissions; their in-flight sessions keep running.
+//!
+//! Every admission attempt lands in exactly one counter bucket, so
+//! `offered == admitted + shed + deferred` holds per tenant by
+//! construction — [`TenantCounters::reconcile`] asserts it and the report
+//! path calls it before serialization.
+
+use crate::adapt::telemetry::ReuseSketch;
+
+/// Classic token bucket in tick time, fractional refill.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    tokens: f64,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    /// `rate` tokens per tick, capacity `burst`. Starts full.
+    pub fn new(rate: f64, burst: f64) -> Self {
+        Self { tokens: burst, rate, burst }
+    }
+
+    /// Advance one tick of refill.
+    pub fn tick(&mut self) {
+        self.tokens = (self.tokens + self.rate).min(self.burst);
+    }
+
+    /// Spend one token if available.
+    pub fn try_take(&mut self) -> bool {
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-tenant admission accounting. One increment per offered session:
+/// admitted (placed on a worker), shed (token bucket dry — dropped), or
+/// deferred (throttled by the arbiter or no worker slot — stays queued and
+/// is re-offered, but the *terminal* disposition of a never-admitted
+/// session is `deferred`).
+#[derive(Debug, Clone, Default)]
+pub struct TenantCounters {
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub deferred: u64,
+}
+
+impl TenantCounters {
+    /// The audit the report path runs before serializing: every offered
+    /// session must have exactly one disposition.
+    pub fn reconcile(&self) -> Result<(), String> {
+        let accounted = self.admitted + self.shed + self.deferred;
+        if self.offered == accounted {
+            Ok(())
+        } else {
+            Err(format!(
+                "tenant counters drifted: offered={} != admitted={} + shed={} + deferred={}",
+                self.offered, self.admitted, self.shed, self.deferred
+            ))
+        }
+    }
+}
+
+/// Arbiter tuning; defaults mirror `ArbiterSpec` resolution.
+#[derive(Debug, Clone)]
+pub struct ArbiterConfig {
+    /// Score a tenant must exceed to be throttled.
+    pub score_threshold: f64,
+    /// Minimum share of window accesses the top scorer must hold — a tiny
+    /// tenant is never the noisy neighbor no matter how poorly it reuses.
+    pub min_share: f64,
+    /// Minimum absolute accesses the top scorer must have made this window.
+    /// In drain windows a lone quiet tenant holds 100% share on a handful
+    /// of accesses; the floor keeps such statistical noise unthrottled.
+    pub min_accesses: u64,
+    /// Windows to observe before the first throttle decision.
+    pub warmup_windows: u64,
+}
+
+impl Default for ArbiterConfig {
+    fn default() -> Self {
+        Self { score_threshold: 0.25, min_share: 0.2, min_accesses: 64, warmup_windows: 1 }
+    }
+}
+
+/// One tenant's telemetry for a closed window, harvested by the engine
+/// from per-access counter deltas plus the merged reuse sketches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantWindow {
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Dead prefetch evictions attributed to this tenant's fills.
+    pub dead_fills: u64,
+    /// Prefetch fills issued while serving this tenant.
+    pub fills: u64,
+    /// Median reuse-distance bucket (log2), `None` when nothing reused.
+    pub reuse_p50: Option<u8>,
+}
+
+impl TenantWindow {
+    pub fn from_sketch(&mut self, sketch: &ReuseSketch) {
+        self.reuse_p50 = sketch.p50_bucket();
+    }
+
+    fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            return 0.0;
+        }
+        self.misses as f64 / self.accesses as f64
+    }
+
+    fn pollution(&self) -> f64 {
+        if self.fills == 0 {
+            return 0.0;
+        }
+        (self.dead_fills as f64 / self.fills as f64).min(1.0)
+    }
+}
+
+/// Outcome of one arbitration window, kept for the report/telemetry.
+#[derive(Debug, Clone)]
+pub struct ArbiterDecision {
+    pub window: u64,
+    /// Tenant throttled for the *next* window, if any.
+    pub throttled: Option<usize>,
+    /// Per-tenant scores this window (same order as tenants).
+    pub scores: Vec<f64>,
+}
+
+/// Windowed noisy-neighbor arbiter. Call [`Arbiter::close_window`] at each
+/// window boundary with per-tenant telemetry; query [`Arbiter::throttled`]
+/// on every admission attempt.
+#[derive(Debug, Clone)]
+pub struct Arbiter {
+    cfg: ArbiterConfig,
+    enabled: bool,
+    windows_seen: u64,
+    throttled: Option<usize>,
+    pub decisions: Vec<ArbiterDecision>,
+}
+
+impl Arbiter {
+    pub fn new(cfg: ArbiterConfig, enabled: bool) -> Self {
+        Self { cfg, enabled, windows_seen: 0, throttled: None, decisions: Vec::new() }
+    }
+
+    /// Is this tenant's admission gate closed right now?
+    pub fn throttled(&self, tenant: usize) -> bool {
+        self.throttled == Some(tenant)
+    }
+
+    /// Score the closed window and pick at most one tenant to throttle for
+    /// the next. Score = miss_share × (0.5·miss_rate + 0.25·pollution +
+    /// 0.25·reuse_norm): a tenant is only dangerous when it both misses a
+    /// lot *and* carries enough traffic for those misses to evict others.
+    pub fn close_window(&mut self, windows: &[TenantWindow]) -> &ArbiterDecision {
+        self.windows_seen += 1;
+        let total: u64 = windows.iter().map(|w| w.accesses).sum();
+        let scores: Vec<f64> = windows
+            .iter()
+            .map(|w| {
+                if total == 0 {
+                    return 0.0;
+                }
+                let share = w.accesses as f64 / total as f64;
+                let reuse_norm = match w.reuse_p50 {
+                    Some(b) => (b as f64 / 16.0).min(1.0),
+                    None => 1.0, // no reuse observed at all: worst case
+                };
+                share * (0.5 * w.miss_rate() + 0.25 * w.pollution() + 0.25 * reuse_norm)
+            })
+            .collect();
+
+        self.throttled = None;
+        if self.enabled && windows.len() >= 2 && self.windows_seen > self.cfg.warmup_windows {
+            if let Some((t, &score)) = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+            {
+                let share = if total == 0 {
+                    0.0
+                } else {
+                    windows[t].accesses as f64 / total as f64
+                };
+                if score > self.cfg.score_threshold
+                    && share >= self.cfg.min_share
+                    && windows[t].accesses >= self.cfg.min_accesses
+                {
+                    self.throttled = Some(t);
+                }
+            }
+        }
+        self.decisions.push(ArbiterDecision {
+            window: self.windows_seen,
+            throttled: self.throttled,
+            scores,
+        });
+        self.decisions.last().unwrap()
+    }
+
+    pub fn throttled_windows(&self) -> u64 {
+        self.decisions.iter().filter(|d| d.throttled.is_some()).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_refills_and_caps() {
+        let mut b = TokenBucket::new(0.5, 2.0);
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take(), "bucket starts at burst, not infinite");
+        b.tick();
+        assert!(!b.try_take(), "0.5 tokens is not a whole token");
+        b.tick();
+        assert!(b.try_take());
+        for _ in 0..10 {
+            b.tick();
+        }
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take(), "refill caps at burst");
+    }
+
+    #[test]
+    fn counters_reconcile() {
+        let mut c = TenantCounters::default();
+        c.offered = 10;
+        c.admitted = 6;
+        c.shed = 3;
+        c.deferred = 1;
+        assert!(c.reconcile().is_ok());
+        c.deferred = 2;
+        let err = c.reconcile().unwrap_err();
+        assert!(err.contains("drifted"), "{err}");
+    }
+
+    fn noisy(accesses: u64) -> TenantWindow {
+        TenantWindow {
+            accesses,
+            hits: accesses / 10,
+            misses: accesses - accesses / 10,
+            dead_fills: 40,
+            fills: 50,
+            reuse_p50: Some(20),
+        }
+    }
+
+    fn quiet(accesses: u64) -> TenantWindow {
+        TenantWindow {
+            accesses,
+            hits: accesses * 9 / 10,
+            misses: accesses / 10,
+            dead_fills: 0,
+            fills: 10,
+            reuse_p50: Some(3),
+        }
+    }
+
+    #[test]
+    fn arbiter_throttles_the_noisy_majority_tenant_after_warmup() {
+        let mut a = Arbiter::new(ArbiterConfig::default(), true);
+        let w = vec![noisy(800), quiet(200)];
+        assert_eq!(a.close_window(&w).throttled, None, "warmup window");
+        assert_eq!(a.close_window(&w).throttled, Some(0));
+        assert!(a.throttled(0));
+        assert!(!a.throttled(1));
+        // Once the noisy tenant calms down, the throttle lifts.
+        let calm = vec![quiet(500), quiet(500)];
+        assert_eq!(a.close_window(&calm).throttled, None);
+        assert_eq!(a.throttled_windows(), 1);
+    }
+
+    #[test]
+    fn arbiter_spares_small_tenants_and_disabled_never_throttles() {
+        let mut a = Arbiter::new(ArbiterConfig::default(), true);
+        // Noisy but tiny (under min_share): spared.
+        let w = vec![noisy(50), quiet(950)];
+        a.close_window(&w);
+        assert_eq!(a.close_window(&w).throttled, None);
+
+        let mut off = Arbiter::new(ArbiterConfig::default(), false);
+        let w = vec![noisy(900), quiet(100)];
+        off.close_window(&w);
+        assert_eq!(off.close_window(&w).throttled, None);
+        assert_eq!(off.throttled_windows(), 0);
+    }
+
+    #[test]
+    fn access_floor_spares_drain_window_noise() {
+        // 100% share but only a handful of accesses (a drain window):
+        // under the floor, never throttled no matter how bad the telemetry.
+        let mut a = Arbiter::new(ArbiterConfig::default(), true);
+        let w = vec![noisy(20), TenantWindow::default()];
+        a.close_window(&w);
+        assert_eq!(a.close_window(&w).throttled, None);
+        // The same shape above the floor IS throttled.
+        let mut a = Arbiter::new(ArbiterConfig::default(), true);
+        let w = vec![noisy(200), TenantWindow::default()];
+        a.close_window(&w);
+        assert_eq!(a.close_window(&w).throttled, Some(0));
+    }
+
+    #[test]
+    fn single_tenant_is_never_throttled() {
+        let mut a = Arbiter::new(ArbiterConfig::default(), true);
+        let w = vec![noisy(1000)];
+        a.close_window(&w);
+        assert_eq!(a.close_window(&w).throttled, None);
+    }
+}

@@ -1,0 +1,693 @@
+//! The tenant-aware QoS serve engine: deterministic, virtual-tick
+//! execution of a [`ServeSpec`].
+//!
+//! The classic coordinator ([`crate::coordinator::serve`]) is wall-clock
+//! threaded — faithful to a live serving node, but its counters race
+//! arrivals and cannot be reproduced bit-for-bit. This engine is the
+//! spec-driven complement: one thread, virtual ticks, every random draw
+//! seeded, so per-tenant admission counters and cache attribution are
+//! identical across reruns of the same resolved spec.
+//!
+//! Per tick:
+//!
+//! 1. **Arrivals** — each tenant's [`ArrivalProcess`] samples new sessions.
+//!    An arrival is *offered*; it is *shed* immediately when the tenant's
+//!    token bucket is dry or its admission queue is full, else it queues.
+//! 2. **Admission** — queued sessions route via the consistent-hash
+//!    [`SessionRouter`] (per-tenant pins honored, full workers walked
+//!    past) onto per-(worker, tenant) generator slots. A tenant the
+//!    arbiter throttled defers — its queue simply waits.
+//! 3. **Service** — each worker drives `quantum` accesses through its
+//!    [`Engine`], split across tenants in proportion to their live
+//!    sessions. KV/scratch addresses are rebased per tenant by
+//!    [`TENANT_STRIDE`] so tenants contend for cache *capacity* without
+//!    aliasing each other's lines. L2 counter deltas around each access
+//!    attribute hits, misses, and dead prefetch fills to the serving
+//!    tenant; a per-(worker, tenant) [`ReuseSketch`] histograms reuse.
+//! 4. **Arbitration** — every `window_ticks`, the [`Arbiter`] scores
+//!    tenants on their windowed telemetry and throttles the noisiest
+//!    (see [`super::admission`]); per-tenant `Sample` events go to the
+//!    telemetry bus (source `tenant/t`) next to the per-worker `serve/w`
+//!    stream.
+//!
+//! After the arrival horizon (`ticks`) the engine stops admitting and
+//! drains in-flight sessions; whatever is still queued then is *deferred*.
+//! Every offered session thus lands in exactly one of admitted/shed/
+//! deferred — [`TenantCounters::reconcile`] audits this before the report
+//! serializes.
+//!
+//! In the produced [`ServeReport`], `adapt_windows` counts arbitration
+//! windows, `throttled_windows` counts windows with a tenant throttled,
+//! and `session_latency_ms_*` are zero (queueing delay is reported
+//! per-tenant in ticks instead — virtual time has no milliseconds).
+
+use super::admission::{Arbiter, TenantCounters, TenantWindow, TokenBucket};
+use super::router::SessionRouter;
+use super::spec::{ResolvedServe, ServeSpec, MAX_TENANTS};
+use crate::adapt::telemetry::ReuseSketch;
+use crate::config::PredictorKind;
+use crate::coordinator::ServeReport;
+use crate::obs::{Payload, SourceId, TelemetryBus, TelemetryPublisher, SAMPLE_PERIOD};
+use crate::predictor::{GeometryHints, HeuristicPredictor, ReusePredictor};
+use crate::sim::{Engine, PredictionBatch};
+use crate::trace::{region, Access, TraceGenerator};
+use crate::traffic::{ArrivalProcess, CaptureSink};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Address-space stride separating tenants inside the KV and scratch
+/// regions. Region tags live at bit [`region::SHIFT`] (40); with at most
+/// [`MAX_TENANTS`] (8) tenants the largest rebase offset is `9 × 2^36 <
+/// 2^40`, so rebased addresses never cross into the next region, while
+/// realistic per-tenant footprints stay far below the stride.
+pub const TENANT_STRIDE: u64 = 1 << 36;
+
+/// Rebase one access into `tenant`'s private KV/scratch address space.
+/// Embedding and weight regions are genuinely shared between tenants (same
+/// model), so they keep their addresses — constructive sharing stays,
+/// capacity contention stays, aliasing of private state goes.
+fn rebase(mut a: Access, tenant: usize) -> Access {
+    let r = region::of(a.addr);
+    if r == region::of(region::KV) || r == region::of(region::SCRATCH) {
+        a.addr += (tenant as u64 + 1) * TENANT_STRIDE;
+    }
+    a
+}
+
+/// One tenant's slice of the final report.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    /// Sessions the arrival process generated.
+    pub offered: u64,
+    /// Sessions placed on a worker.
+    pub admitted: u64,
+    /// Sessions dropped (token bucket dry or queue full at arrival).
+    pub shed: u64,
+    /// Sessions still queued when the run drained (never admitted).
+    pub deferred: u64,
+    pub completed: u64,
+    pub tokens: u64,
+    /// L2 demand accesses attributed to this tenant.
+    pub accesses: u64,
+    pub l2_hit_rate: f64,
+    pub l2_pollution_ratio: f64,
+    /// Median log2 reuse-distance bucket over the whole run.
+    pub reuse_p50_log2: Option<u8>,
+    pub queue_delay_mean_ticks: f64,
+    pub queue_delay_max_ticks: u64,
+    /// Arbitration windows this tenant spent throttled.
+    pub throttled_windows: u64,
+}
+
+impl TenantReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deferred", Json::Num(self.deferred as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("accesses", Json::Num(self.accesses as f64)),
+            ("l2_hit_rate", Json::Num(self.l2_hit_rate)),
+            ("l2_pollution_ratio", Json::Num(self.l2_pollution_ratio)),
+            ("queue_delay_mean_ticks", Json::Num(self.queue_delay_mean_ticks)),
+            ("queue_delay_max_ticks", Json::Num(self.queue_delay_max_ticks as f64)),
+            ("throttled_windows", Json::Num(self.throttled_windows as f64)),
+        ]);
+        if let Some(b) = self.reuse_p50_log2 {
+            j.set("reuse_p50_log2", Json::Num(b as f64));
+        }
+        j
+    }
+}
+
+/// Run a serve spec to completion (resolves, drives, reports).
+pub fn run(spec: &ServeSpec) -> Result<ServeReport> {
+    run_with_bus(spec, None)
+}
+
+/// [`run`], streaming telemetry (sources `serve/w` and `tenant/t`) onto
+/// `bus`; when the spec asks for a dashboard and no bus is supplied, an
+/// internal one feeds the HTTP endpoint, mirroring the classic
+/// coordinator's behavior.
+pub fn run_with_bus(spec: &ServeSpec, bus: Option<&TelemetryBus>) -> Result<ServeReport> {
+    let resolved = spec.resolve()?;
+    let internal_bus =
+        (bus.is_none() && resolved.dashboard_port.is_some()).then(TelemetryBus::new);
+    let bus = bus.or(internal_bus.as_ref());
+    let dashboard = resolved.dashboard_port.and_then(|port| {
+        let sub = bus.expect("dashboard_port implies a bus").subscribe();
+        match crate::obs::start_dashboard(port, sub) {
+            Ok(h) => {
+                crate::log_info!("dashboard: listening on http://{}/", h.addr());
+                Some(h)
+            }
+            Err(e) => {
+                crate::log_warn!("dashboard: disabled: {e:#}");
+                None
+            }
+        }
+    });
+    let report = drive(&resolved, bus);
+    if let Some(dash) = dashboard {
+        if !resolved.dashboard_linger.is_zero() {
+            crate::log_info!(
+                "dashboard: run drained; lingering {:?} at http://{}/",
+                resolved.dashboard_linger,
+                dash.addr()
+            );
+            std::thread::sleep(resolved.dashboard_linger);
+        }
+        dash.shutdown();
+    }
+    report
+}
+
+struct WorkerSlot {
+    engine: Engine,
+    /// One generator per tenant: session slots (KV capacity) are a
+    /// per-(worker, tenant) resource, so a noisy tenant can exhaust its
+    /// own slots but never a neighbor's.
+    gens: Vec<TraceGenerator>,
+    /// Per-tenant reuse sketches (positions are this worker's monotone
+    /// access counter; merged per tenant at window close).
+    sketches: Vec<ReuseSketch>,
+    /// Per-tenant `sessions_completed` watermark.
+    completed_seen: Vec<u64>,
+    batch: PredictionBatch,
+}
+
+struct TenantState {
+    process: ArrivalProcess,
+    bucket: Option<TokenBucket>,
+    /// Enqueue tick of each waiting session (FIFO).
+    queue: VecDeque<u64>,
+    queue_depth: usize,
+    counters: TenantCounters,
+    /// Session key counter — the router input, so placement is a pure
+    /// function of (tenant, admission ordinal).
+    admit_seq: u64,
+    /// Total accesses served (all levels; capture ordinal + bus stamp).
+    served: u64,
+    /// Current-window L2 attribution deltas.
+    window: TenantWindow,
+    /// Whole-run L2 attribution totals.
+    cum: TenantWindow,
+    /// Whole-run merged reuse histogram.
+    cum_sketch: ReuseSketch,
+    completed: u64,
+    queue_delay_sum: u64,
+    queue_delay_max: u64,
+    throttled_windows: u64,
+}
+
+fn drive(r: &ResolvedServe, bus: Option<&TelemetryBus>) -> Result<ServeReport> {
+    let t0 = Instant::now();
+    let nt = r.tenants.len();
+    let use_pred = r.predictor == PredictorKind::Heuristic;
+    let window = if use_pred { 1 } else { 0 };
+
+    let mut workers: Vec<WorkerSlot> = (0..r.workers)
+        .map(|w| {
+            let geom = GeometryHints::from_generator(&r.generator);
+            let engine = Engine::new(r.hierarchy.clone(), &r.policy, geom, window);
+            let row = engine.row();
+            let gens = (0..nt)
+                .map(|t| {
+                    let mut g = r.generator.clone();
+                    // Independent per-(worker, tenant) content streams off
+                    // the template seed (splitmix odd-constant spacing).
+                    g.seed = r.generator.seed.wrapping_add(
+                        ((w * MAX_TENANTS + t) as u64 + 1)
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    TraceGenerator::new(g)
+                })
+                .collect();
+            WorkerSlot {
+                engine,
+                gens,
+                sketches: (0..nt).map(|_| ReuseSketch::new(1 << 14)).collect(),
+                completed_seen: vec![0; nt],
+                batch: PredictionBatch::new(row, r.predict_batch),
+            }
+        })
+        .collect();
+
+    let mut tenants: Vec<TenantState> = r
+        .tenants
+        .iter()
+        .map(|t| TenantState {
+            process: ArrivalProcess::new(t.arrivals.clone()),
+            bucket: t.bucket.map(|(rate, burst)| TokenBucket::new(rate, burst)),
+            queue: VecDeque::new(),
+            queue_depth: t.arrivals.queue_depth,
+            counters: TenantCounters::default(),
+            admit_seq: 0,
+            served: 0,
+            window: TenantWindow::default(),
+            cum: TenantWindow::default(),
+            cum_sketch: ReuseSketch::new(1 << 14),
+            completed: 0,
+            queue_delay_sum: 0,
+            queue_delay_max: 0,
+            throttled_windows: 0,
+        })
+        .collect();
+
+    let mut router = SessionRouter::new(r.workers, r.vnodes, r.seed, r.pins());
+    let mut arbiter = Arbiter::new(r.arbiter.clone(), r.arbiter_enabled);
+    let mut heuristic = HeuristicPredictor;
+    let mut sink = r.capture.is_some().then(CaptureSink::new);
+
+    let mut worker_pubs: Vec<Option<TelemetryPublisher>> = (0..r.workers)
+        .map(|w| bus.map(|b| b.publisher(SourceId::serve(w))))
+        .collect();
+    let mut tenant_pubs: Vec<Option<TelemetryPublisher>> = (0..nt)
+        .map(|t| bus.map(|b| b.publisher(SourceId::tenant(t))))
+        .collect();
+
+    let mut pred_batches = 0u64;
+    let mut pred_filled = 0u64;
+    let mut max_imbalance = 0u64;
+
+    // Hard bound on the drain phase: sessions are finite, so this only
+    // trips if service stalls entirely (a bug, not a workload property).
+    let drain_deadline = r.ticks.saturating_mul(16).saturating_add(1_000_000);
+    let mut tick = 0u64;
+    loop {
+        let arrivals_open = tick < r.ticks;
+
+        if arrivals_open {
+            for ts in tenants.iter_mut() {
+                if let Some(b) = &mut ts.bucket {
+                    b.tick();
+                }
+                // Offered → shed (bucket dry / queue full) or queued.
+                for _ in 0..ts.process.step(tick) {
+                    ts.counters.offered += 1;
+                    let has_token =
+                        ts.bucket.as_mut().map(|b| b.try_take()).unwrap_or(true);
+                    if !has_token || ts.queue.len() >= ts.queue_depth {
+                        ts.counters.shed += 1;
+                    } else {
+                        ts.queue.push_back(tick);
+                    }
+                }
+            }
+            // Admission, start tenant rotated per tick for fairness.
+            for k in 0..nt {
+                let ti = (tick as usize + k) % nt;
+                while !tenants[ti].queue.is_empty() {
+                    if arbiter.throttled(ti) {
+                        break; // defer: the queue waits the window out
+                    }
+                    let key = tenants[ti].admit_seq;
+                    let w = {
+                        let avail = |w: usize| workers[w].gens[ti].free_slots() > 0;
+                        router.route(ti, key, &avail)
+                    };
+                    let Some(w) = w else {
+                        break; // no slot anywhere (or pin full): wait
+                    };
+                    let enq = tenants[ti].queue.pop_front().expect("checked non-empty");
+                    let placed = workers[w].gens[ti].force_arrival();
+                    debug_assert!(placed, "router probed free_slots");
+                    router.admit(w);
+                    max_imbalance = max_imbalance.max(router.imbalance());
+                    let ts = &mut tenants[ti];
+                    ts.counters.admitted += 1;
+                    ts.admit_seq += 1;
+                    let delay = tick - enq;
+                    ts.queue_delay_sum += delay;
+                    ts.queue_delay_max = ts.queue_delay_max.max(delay);
+                }
+            }
+        }
+
+        // Service: each worker spends `quantum` accesses, split across
+        // tenants in proportion to live sessions (integer shares, the
+        // remainder rotating with the tick).
+        for w in 0..r.workers {
+            let lives: Vec<u64> =
+                workers[w].gens.iter().map(|g| g.live_sessions() as u64).collect();
+            let total_live: u64 = lives.iter().sum();
+            if total_live == 0 {
+                continue;
+            }
+            let mut alloc: Vec<u64> =
+                lives.iter().map(|&l| r.quantum * l / total_live).collect();
+            let mut rem = r.quantum - alloc.iter().sum::<u64>();
+            let mut k = 0usize;
+            while rem > 0 {
+                let ti = (tick as usize + k) % nt;
+                if lives[ti] > 0 {
+                    alloc[ti] += 1;
+                    rem -= 1;
+                }
+                k += 1;
+            }
+            for k in 0..nt {
+                let ti = (tick as usize + k) % nt;
+                for _ in 0..alloc[ti] {
+                    if !workers[w].gens[ti].has_work() {
+                        break;
+                    }
+                    let ws = &mut workers[w];
+                    let a = rebase(ws.gens[ti].next_access(), ti);
+                    if let Some(s) = sink.as_mut() {
+                        s.record(a, ti as u32, tenants[ti].served);
+                    }
+                    let before = {
+                        let s = &ws.engine.hier.l2.stats;
+                        (
+                            s.demand_accesses,
+                            s.demand_hits,
+                            s.demand_misses,
+                            s.demand_misses + s.prefetch_fills,
+                            s.dead_prefetch_evictions,
+                        )
+                    };
+                    let pos = ws.engine.steps();
+                    let full = match ws.engine.step(&a, None) {
+                        Some(feats) => ws.batch.push(a.line(), feats),
+                        None => false,
+                    };
+                    if full {
+                        let (lines, x) = ws.batch.take();
+                        let n = lines.len();
+                        let probs = heuristic.predict(&x, n);
+                        for (&line, &p) in lines.iter().zip(probs.iter()) {
+                            ws.engine.update_utility(line, p);
+                        }
+                        pred_batches += 1;
+                        pred_filled += n as u64;
+                    }
+                    ws.sketches[ti].touch(pos, a.line());
+                    let s = &ws.engine.hier.l2.stats;
+                    let ts = &mut tenants[ti];
+                    ts.served += 1;
+                    for acc in [&mut ts.window, &mut ts.cum] {
+                        acc.accesses += s.demand_accesses - before.0;
+                        acc.hits += s.demand_hits - before.1;
+                        acc.misses += s.demand_misses - before.2;
+                        acc.fills += s.demand_misses + s.prefetch_fills - before.3;
+                        acc.dead_fills += s.dead_prefetch_evictions - before.4;
+                    }
+                    if ws.engine.steps() % SAMPLE_PERIOD == 0 {
+                        if let Some(p) = worker_pubs[w].as_mut() {
+                            let l2 = &ws.engine.hier.l2;
+                            p.publish(
+                                ws.engine.steps(),
+                                Payload::Sample {
+                                    occupancy: l2.occupancy(),
+                                    hit_rate: l2.stats.hit_rate(),
+                                    pollution: l2.stats.pollution_ratio(),
+                                    throttled: false,
+                                },
+                            );
+                        }
+                    }
+                }
+            }
+            // Completions free router load and per-tenant slots.
+            for ti in 0..nt {
+                let done = workers[w].gens[ti].sessions_completed();
+                let seen = workers[w].completed_seen[ti];
+                if done > seen {
+                    workers[w].completed_seen[ti] = done;
+                    tenants[ti].completed += done - seen;
+                    for _ in 0..(done - seen) {
+                        router.complete(w);
+                    }
+                }
+            }
+        }
+
+        // Arbitration window boundary.
+        if (tick + 1) % r.window_ticks == 0 {
+            let mut wins = Vec::with_capacity(nt);
+            for (ti, ts) in tenants.iter_mut().enumerate() {
+                let mut merged = ReuseSketch::new(0);
+                for ws in workers.iter() {
+                    merged.absorb(&ws.sketches[ti]);
+                }
+                ts.cum_sketch.absorb(&merged);
+                let mut win = ts.window;
+                win.from_sketch(&merged);
+                wins.push(win);
+                for ws in workers.iter_mut() {
+                    ws.sketches[ti].reset_window();
+                }
+            }
+            arbiter.close_window(&wins);
+            let total: u64 = wins.iter().map(|w| w.accesses).sum();
+            for (ti, ts) in tenants.iter_mut().enumerate() {
+                let throttled = arbiter.throttled(ti);
+                if throttled {
+                    ts.throttled_windows += 1;
+                }
+                if let Some(p) = tenant_pubs[ti].as_mut() {
+                    let w = &wins[ti];
+                    let ratio = |num: u64, den: u64| {
+                        if den == 0 {
+                            0.0
+                        } else {
+                            num as f64 / den as f64
+                        }
+                    };
+                    p.publish(
+                        ts.served,
+                        Payload::Sample {
+                            occupancy: ratio(w.accesses, total),
+                            hit_rate: ratio(w.hits, w.accesses),
+                            pollution: ratio(w.dead_fills, w.fills),
+                            throttled,
+                        },
+                    );
+                }
+                ts.window = TenantWindow::default();
+            }
+        }
+
+        tick += 1;
+        if !arrivals_open {
+            let busy = workers.iter().any(|ws| ws.gens.iter().any(|g| g.has_work()));
+            if !busy {
+                break;
+            }
+            if tick >= drain_deadline {
+                crate::log_warn!("serve engine: drain deadline hit at tick {tick}");
+                break;
+            }
+        }
+    }
+
+    // Terminal disposition of everything still queued.
+    for ts in tenants.iter_mut() {
+        ts.counters.deferred += ts.queue.len() as u64;
+        ts.queue.clear();
+    }
+
+    let mut tenant_reports = Vec::with_capacity(nt);
+    for (ti, ts) in tenants.iter().enumerate() {
+        ts.counters
+            .reconcile()
+            .map_err(|e| anyhow!("tenant '{}': {e}", r.tenants[ti].name))?;
+        let tokens: u64 = workers.iter().map(|ws| ws.gens[ti].tokens_done()).sum();
+        let c = &ts.cum;
+        tenant_reports.push(TenantReport {
+            name: r.tenants[ti].name.clone(),
+            offered: ts.counters.offered,
+            admitted: ts.counters.admitted,
+            shed: ts.counters.shed,
+            deferred: ts.counters.deferred,
+            completed: ts.completed,
+            tokens,
+            accesses: c.accesses,
+            l2_hit_rate: c.hits as f64 / c.accesses.max(1) as f64,
+            l2_pollution_ratio: c.dead_fills as f64 / c.fills.max(1) as f64,
+            reuse_p50_log2: ts.cum_sketch.p50_bucket(),
+            queue_delay_mean_ticks: ts.queue_delay_sum as f64
+                / ts.counters.admitted.max(1) as f64,
+            queue_delay_max_ticks: ts.queue_delay_max,
+            throttled_windows: ts.throttled_windows,
+        });
+    }
+
+    let tokens: u64 =
+        workers.iter().flat_map(|ws| ws.gens.iter().map(|g| g.tokens_done())).sum();
+    let accesses: u64 = workers.iter().map(|ws| ws.engine.hier.accesses).sum();
+    let (l2_hits, l2_acc, l2_fills, l2_dead) =
+        workers.iter().fold((0u64, 0u64, 0u64, 0u64), |acc, ws| {
+            let s = &ws.engine.hier.l2.stats;
+            (
+                acc.0 + s.demand_hits,
+                acc.1 + s.demand_accesses,
+                acc.2 + s.demand_misses + s.prefetch_fills,
+                acc.3 + s.dead_prefetch_evictions,
+            )
+        });
+    let completed: u64 = tenant_reports.iter().map(|t| t.completed).sum();
+
+    if let (Some(s), Some(path)) = (sink.as_mut(), r.capture.as_ref()) {
+        s.set_totals(tokens, completed);
+        match s.finish(path) {
+            Ok(()) => crate::log_info!(
+                "capture: wrote {} accesses to {}",
+                s.len(),
+                path.display()
+            ),
+            Err(e) => crate::log_warn!("capture: {}: {e:#}", path.display()),
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(ServeReport {
+        sessions_admitted: tenant_reports.iter().map(|t| t.admitted).sum(),
+        sessions_completed: completed,
+        sessions_rejected: tenant_reports.iter().map(|t| t.shed).sum(),
+        tokens,
+        accesses,
+        wall_secs: wall,
+        tokens_per_sec_wall: tokens as f64 / wall,
+        l2_hit_rate: l2_hits as f64 / l2_acc.max(1) as f64,
+        l2_pollution_ratio: l2_dead as f64 / l2_fills.max(1) as f64,
+        session_latency_ms_p50: 0.0,
+        session_latency_ms_p95: 0.0,
+        prediction_batches: pred_batches,
+        mean_batch_fill: if pred_batches > 0 {
+            pred_filled as f64 / pred_batches as f64
+        } else {
+            0.0
+        },
+        router_imbalance_max: max_imbalance as usize,
+        adapt_windows: arbiter.decisions.len() as u64,
+        drift_events: 0,
+        throttled_windows: arbiter.throttled_windows(),
+        adaptation_events: Vec::new(),
+        tenants: tenant_reports,
+        serve_spec: Some(r.spec.to_json()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::spec::TenantSpec;
+
+    fn small_spec() -> ServeSpec {
+        ServeSpec::builder()
+            .workers(2)
+            .ticks(3_000)
+            .window_ticks(500)
+            .seed(0xBEEF)
+            .tenant(TenantSpec {
+                arrivals: Some("bursty".into()),
+                rate: Some(10.0),
+                queue_depth: Some(4),
+                ..TenantSpec::new("noisy")
+            })
+            .tenant(TenantSpec { rate: Some(2.0), ..TenantSpec::new("quiet") })
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn rebase_isolates_kv_but_shares_weights() {
+        let kv = Access {
+            time: 0,
+            addr: region::KV + 0x400,
+            pc: 0,
+            kind: crate::trace::StreamKind::KvRead,
+            session: 0,
+            ctx_len: 0,
+            layer: 0,
+            is_write: false,
+        };
+        let w = Access { addr: region::WEIGHT + 0x400, ..kv };
+        assert_ne!(rebase(kv, 0).addr, rebase(kv, 1).addr);
+        assert_eq!(rebase(w, 0).addr, rebase(w, 1).addr, "weights are shared");
+        for t in 0..MAX_TENANTS {
+            assert_eq!(
+                region::of(rebase(kv, t).addr),
+                region::of(region::KV),
+                "rebase must stay inside the region"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_runs_reconciles_and_reproduces() {
+        let spec = small_spec();
+        let a = run(&spec).unwrap();
+        let b = run(&spec).unwrap();
+        assert_eq!(a.tenants.len(), 2);
+        let offered: u64 = a.tenants.iter().map(|t| t.offered).sum();
+        assert!(offered > 0, "arrivals must flow");
+        assert!(a.sessions_admitted > 0);
+        assert!(a.accesses > 0);
+        for (x, y) in a.tenants.iter().zip(b.tenants.iter()) {
+            assert_eq!(x.offered, y.offered, "{}", x.name);
+            assert_eq!(x.admitted, y.admitted, "{}", x.name);
+            assert_eq!(x.shed, y.shed, "{}", x.name);
+            assert_eq!(x.deferred, y.deferred, "{}", x.name);
+            assert_eq!(x.accesses, y.accesses, "{}", x.name);
+            assert_eq!(x.tokens, y.tokens, "{}", x.name);
+            assert_eq!(x.offered, x.admitted + x.shed + x.deferred, "{}", x.name);
+        }
+        assert_eq!(a.accesses, b.accesses, "whole run is seed-deterministic");
+        // The report embeds the resolved spec, which re-resolves.
+        let j = a.to_json();
+        let embedded = j.get("serve_spec").expect("resolved spec embedded");
+        let back = ServeSpec::from_json(embedded).unwrap();
+        assert!(back.resolve().is_ok());
+        assert_eq!(back.workers, Some(2));
+        assert_eq!(
+            j.get("tenants").and_then(|t| t.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn bucket_caps_admissions() {
+        let base = ServeSpec::builder()
+            .workers(1)
+            .ticks(2_000)
+            .seed(7)
+            .tenant(TenantSpec { rate: Some(20.0), ..TenantSpec::new("t") })
+            .build()
+            .unwrap();
+        let capped = ServeSpec::builder()
+            .workers(1)
+            .ticks(2_000)
+            .seed(7)
+            .tenant(TenantSpec {
+                rate: Some(20.0),
+                // ~1 admission per 500 ticks: far below the offered rate.
+                bucket_rate: Some(0.002),
+                bucket_burst: Some(1.0),
+                ..TenantSpec::new("t")
+            })
+            .build()
+            .unwrap();
+        let a = run(&base).unwrap();
+        let b = run(&capped).unwrap();
+        assert_eq!(
+            a.tenants[0].offered, b.tenants[0].offered,
+            "same seed, same arrivals"
+        );
+        assert!(
+            b.tenants[0].admitted < a.tenants[0].admitted,
+            "bucket must bite: {} vs {}",
+            b.tenants[0].admitted,
+            a.tenants[0].admitted
+        );
+        assert!(b.tenants[0].shed > a.tenants[0].shed);
+    }
+}

@@ -1,0 +1,49 @@
+//! Tenant-aware serving core: spec-driven QoS serving on top of the cache
+//! simulator.
+//!
+//! The classic [`crate::coordinator`] answers "how fast does a threaded
+//! serving node go?" — wall-clock workers, load-balancing router, one
+//! anonymous stream of sessions. This subsystem answers the *multi-tenant*
+//! question the paper's pollution-control story leads to: when several
+//! tenants with different traffic shapes share one cache hierarchy, who
+//! gets hurt, and what does admission-level QoS buy?
+//!
+//! Three pieces, each its own module:
+//!
+//! - [`spec`] — [`ServeSpec`] (schema [`SERVE_SPEC_SCHEMA`]), the
+//!   JSON-round-trippable description of a run: workers, workload
+//!   template, hierarchy, router geometry, arbiter thresholds, and one
+//!   block per tenant (arrival process, token-bucket contract, optional
+//!   worker pin). Resolution follows the `acpc-run-v1` discipline: all
+//!   validation at the boundary, and the resolved spec — every default
+//!   made explicit — is embedded in the report for bit-for-bit replay.
+//! - [`router`] — [`SessionRouter`], consistent-hash session → tenant →
+//!   worker placement with per-tenant pinning. Placement is a pure
+//!   function of identity and seed, not of load.
+//! - [`admission`] — per-tenant [`TokenBucket`] rate contracts plus the
+//!   [`Arbiter`], an LLaMCAT-style noisy-neighbor throttle scoring
+//!   tenants each window on miss share, inflicted prefetch pollution, and
+//!   reuse distance.
+//!
+//! [`engine`] (entrypoint [`run`]) executes a resolved spec on a
+//! single-threaded virtual-tick loop — fully seed-deterministic, with
+//! per-tenant cache attribution, telemetry-bus streaming (`serve/w` and
+//! `tenant/t` sources feed the dashboard's `/metrics.json`), and optional
+//! v2 trace capture stamped with real tenant ids. It fills the same
+//! [`crate::coordinator::ServeReport`] the classic path produces, plus
+//! per-tenant [`TenantReport`] blocks and the embedded resolved spec.
+
+pub mod admission;
+pub mod engine;
+pub mod router;
+pub mod spec;
+
+pub use admission::{
+    Arbiter, ArbiterConfig, ArbiterDecision, TenantCounters, TenantWindow, TokenBucket,
+};
+pub use engine::{run, run_with_bus, TenantReport, TENANT_STRIDE};
+pub use router::{SessionRouter, MAX_WORKERS};
+pub use spec::{
+    ArbiterSpec, ResolvedServe, ResolvedTenant, RouterSpec, ServeSpec, ServeSpecBuilder,
+    TenantSpec, MAX_TENANTS, SERVE_SPEC_SCHEMA,
+};

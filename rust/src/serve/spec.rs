@@ -1,0 +1,935 @@
+//! [`ServeSpec`] — the serializable description of one tenant-aware serve
+//! run (schema [`SERVE_SPEC_SCHEMA`]), with the same JSON round-trip,
+//! builder-validation, and resolution discipline as `acpc-run-v1`.
+//!
+//! A serve spec captures everything the QoS engine needs: worker count and
+//! L2 policy, the workload template (scenario or model profile), hierarchy
+//! overrides (shared with the run spec via
+//! [`crate::api::HierarchySpec`]), the session-router geometry, the
+//! arbiter thresholds, and one block per tenant — its open-loop arrival
+//! process, optional token-bucket rate contract, and optional worker pin.
+//! [`ServeSpec::resolve`] validates everything at the boundary and derives
+//! a *fully-explicit* copy of the spec which [`super::engine::run`] embeds
+//! in the [`crate::coordinator::ServeReport`], so a report reproduces its
+//! run bit-for-bit — `acpc serve --spec <(jq .serve_spec report.json)`.
+
+use super::admission::ArbiterConfig;
+use super::router::MAX_WORKERS;
+use crate::api::spec::{f64_field, f64_json, str_field, u64_field, HierarchySpec};
+use crate::config::PredictorKind;
+use crate::mem::HierarchyConfig;
+use crate::trace::{GeneratorConfig, ModelProfile, Scenario};
+use crate::traffic::{ArrivalKind, OpenLoopConfig};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::time::Duration;
+
+/// Schema identifier stamped into serve-spec JSON.
+pub const SERVE_SPEC_SCHEMA: &str = "acpc-serve-spec-v1";
+
+/// Most tenants one serve engine arbitrates between.
+pub const MAX_TENANTS: usize = 8;
+
+/// One tenant: identity, offered-traffic shape, rate contract, placement.
+/// Arrival fields mirror [`crate::api::TrafficSpec`] (`None` = the
+/// [`OpenLoopConfig`] default); the RNG stream seeds from the run seed
+/// plus the tenant index, so tenants draw independent arrival histories.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Arrival process: `poisson` (default), `diurnal`, or `bursty`.
+    pub arrivals: Option<String>,
+    /// Mean offered rate, sessions per 1000 engine ticks.
+    pub rate: Option<f64>,
+    pub period: Option<u64>,
+    pub amplitude: Option<f64>,
+    pub burst_factor: Option<f64>,
+    pub burst_switch_p: Option<f64>,
+    /// Admission-queue capacity; arrivals beyond it are shed.
+    pub queue_depth: Option<usize>,
+    /// Token-bucket refill, tokens per tick (`None` = uncapped).
+    pub bucket_rate: Option<f64>,
+    /// Token-bucket capacity (requires `bucket_rate`; default 4).
+    pub bucket_burst: Option<f64>,
+    /// Pin every session of this tenant to one worker (hard isolation —
+    /// pinned admissions never fail over).
+    pub pin_worker: Option<usize>,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Self::default() }
+    }
+
+    /// Concrete arrival process + bucket for tenant `index`; unset fields
+    /// take the open-loop defaults.
+    fn resolve(&self, run_seed: u64, index: usize, workers: usize) -> Result<ResolvedTenant> {
+        if self.name.is_empty() {
+            bail!("tenant {index}: 'name' must be non-empty");
+        }
+        let kind = ArrivalKind::parse(self.arrivals.as_deref().unwrap_or("poisson"))
+            .map_err(|e| anyhow!("tenant '{}': {e}", self.name))?;
+        // Independent per-tenant stream from the run seed (SplitMix-style
+        // odd-constant spacing, same idiom as worker seeds).
+        let seed = run_seed.wrapping_add((index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut ol = OpenLoopConfig::new(kind, seed);
+        if let Some(v) = self.rate {
+            ol.rate = v;
+        }
+        if let Some(v) = self.period {
+            ol.period = v;
+        }
+        if let Some(v) = self.amplitude {
+            ol.amplitude = v;
+        }
+        if let Some(v) = self.burst_factor {
+            ol.burst_factor = v;
+        }
+        if let Some(v) = self.burst_switch_p {
+            ol.burst_switch_p = v;
+        }
+        if let Some(v) = self.queue_depth {
+            ol.queue_depth = v;
+        }
+        ol.validate().map_err(|e| anyhow!("tenant '{}': {e}", self.name))?;
+        let bucket = match (self.bucket_rate, self.bucket_burst) {
+            (None, None) => None,
+            (None, Some(_)) => {
+                bail!("tenant '{}': 'bucket_burst' requires 'bucket_rate'", self.name)
+            }
+            (Some(rate), burst) => {
+                let burst = burst.unwrap_or(4.0);
+                if !(rate.is_finite() && rate > 0.0) {
+                    bail!("tenant '{}': bucket_rate must be finite and > 0", self.name);
+                }
+                if !(burst.is_finite() && burst >= 1.0) {
+                    bail!("tenant '{}': bucket_burst must be finite and >= 1", self.name);
+                }
+                Some((rate, burst))
+            }
+        };
+        if let Some(pin) = self.pin_worker {
+            if pin >= workers {
+                bail!(
+                    "tenant '{}': pin_worker {pin} out of range (workers = {workers})",
+                    self.name
+                );
+            }
+        }
+        Ok(ResolvedTenant {
+            name: self.name.clone(),
+            arrivals: ol,
+            bucket,
+            pin: self.pin_worker,
+        })
+    }
+
+    /// Spec view of a resolved tenant, every arrival field explicit.
+    fn from_resolved(r: &ResolvedTenant) -> Self {
+        Self {
+            name: r.name.clone(),
+            arrivals: Some(r.arrivals.kind.label().to_string()),
+            rate: Some(r.arrivals.rate),
+            period: Some(r.arrivals.period),
+            amplitude: Some(r.arrivals.amplitude),
+            burst_factor: Some(r.arrivals.burst_factor),
+            burst_switch_p: Some(r.arrivals.burst_switch_p),
+            queue_depth: Some(r.arrivals.queue_depth),
+            bucket_rate: r.bucket.map(|(rate, _)| rate),
+            bucket_burst: r.bucket.map(|(_, burst)| burst),
+            pin_worker: r.pin,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        if let Some(v) = &self.arrivals {
+            j.set("arrivals", Json::Str(v.clone()));
+        }
+        if let Some(v) = self.rate {
+            j.set("rate", f64_json(v));
+        }
+        if let Some(v) = self.period {
+            j.set("period", Json::Num(v as f64));
+        }
+        if let Some(v) = self.amplitude {
+            j.set("amplitude", f64_json(v));
+        }
+        if let Some(v) = self.burst_factor {
+            j.set("burst_factor", f64_json(v));
+        }
+        if let Some(v) = self.burst_switch_p {
+            j.set("burst_switch_p", f64_json(v));
+        }
+        if let Some(v) = self.queue_depth {
+            j.set("queue_depth", Json::Num(v as f64));
+        }
+        if let Some(v) = self.bucket_rate {
+            j.set("bucket_rate", f64_json(v));
+        }
+        if let Some(v) = self.bucket_burst {
+            j.set("bucket_burst", f64_json(v));
+        }
+        if let Some(v) = self.pin_worker {
+            j.set("pin_worker", Json::Num(v as f64));
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("each tenant must be an object"))?;
+        let mut t = Self::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "name" => t.name = str_field(v, k)?,
+                "arrivals" => t.arrivals = Some(str_field(v, k)?),
+                "rate" => t.rate = Some(f64_field(v, k)?),
+                "period" => t.period = Some(u64_field(v, k)?),
+                "amplitude" => t.amplitude = Some(f64_field(v, k)?),
+                "burst_factor" => t.burst_factor = Some(f64_field(v, k)?),
+                "burst_switch_p" => t.burst_switch_p = Some(f64_field(v, k)?),
+                "queue_depth" => t.queue_depth = Some(u64_field(v, k)? as usize),
+                "bucket_rate" => t.bucket_rate = Some(f64_field(v, k)?),
+                "bucket_burst" => t.bucket_burst = Some(f64_field(v, k)?),
+                "pin_worker" => t.pin_worker = Some(u64_field(v, k)? as usize),
+                other => bail!("unknown tenant key '{other}'"),
+            }
+        }
+        if t.name.is_empty() {
+            bail!("each tenant needs a non-empty 'name'");
+        }
+        Ok(t)
+    }
+}
+
+/// Session-router geometry. `None` = default.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RouterSpec {
+    /// Consistent-hash ring points per worker (default 16).
+    pub vnodes: Option<usize>,
+}
+
+/// Arbiter knobs as spec fields; `None` = the [`ArbiterConfig`] default.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArbiterSpec {
+    /// Arbitrate at all (default true; `false` = observe-only scoring).
+    pub enabled: Option<bool>,
+    /// Engine ticks per arbitration window (default 2000).
+    pub window_ticks: Option<u64>,
+    pub score_threshold: Option<f64>,
+    pub min_share: Option<f64>,
+    pub min_accesses: Option<u64>,
+    pub warmup_windows: Option<u64>,
+}
+
+impl ArbiterSpec {
+    fn resolve(&self) -> Result<(ArbiterConfig, bool, u64)> {
+        let d = ArbiterConfig::default();
+        let cfg = ArbiterConfig {
+            score_threshold: self.score_threshold.unwrap_or(d.score_threshold),
+            min_share: self.min_share.unwrap_or(d.min_share),
+            min_accesses: self.min_accesses.unwrap_or(d.min_accesses),
+            warmup_windows: self.warmup_windows.unwrap_or(d.warmup_windows),
+        };
+        if !(cfg.score_threshold.is_finite() && cfg.score_threshold >= 0.0) {
+            bail!("arbiter.score_threshold must be finite and >= 0");
+        }
+        if !(0.0..=1.0).contains(&cfg.min_share) {
+            bail!("arbiter.min_share must be in [0, 1]");
+        }
+        let window_ticks = self.window_ticks.unwrap_or(2000);
+        if window_ticks == 0 {
+            bail!("arbiter.window_ticks must be >= 1");
+        }
+        Ok((cfg, self.enabled.unwrap_or(true), window_ticks))
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        if let Some(v) = self.enabled {
+            j.set("enabled", Json::Bool(v));
+        }
+        if let Some(v) = self.window_ticks {
+            j.set("window_ticks", Json::Num(v as f64));
+        }
+        if let Some(v) = self.score_threshold {
+            j.set("score_threshold", f64_json(v));
+        }
+        if let Some(v) = self.min_share {
+            j.set("min_share", f64_json(v));
+        }
+        if let Some(v) = self.min_accesses {
+            j.set("min_accesses", Json::Num(v as f64));
+        }
+        if let Some(v) = self.warmup_windows {
+            j.set("warmup_windows", Json::Num(v as f64));
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("'arbiter' must be an object"))?;
+        let mut s = Self::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "enabled" => {
+                    s.enabled =
+                        Some(v.as_bool().ok_or_else(|| anyhow!("'enabled' must be a bool"))?)
+                }
+                "window_ticks" => s.window_ticks = Some(u64_field(v, k)?),
+                "score_threshold" => s.score_threshold = Some(f64_field(v, k)?),
+                "min_share" => s.min_share = Some(f64_field(v, k)?),
+                "min_accesses" => s.min_accesses = Some(u64_field(v, k)?),
+                "warmup_windows" => s.warmup_windows = Some(u64_field(v, k)?),
+                other => bail!("unknown arbiter key '{other}'"),
+            }
+        }
+        Ok(s)
+    }
+}
+
+/// Everything needed to reproduce one tenant-aware serve run. Build with
+/// [`ServeSpec::builder`], load with [`ServeSpec::from_file`] /
+/// [`ServeSpec::from_json`], execute with [`super::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Run name; `None` derives `serve-{policy}-{tenants}t`.
+    pub name: Option<String>,
+    /// L2 replacement policy under test.
+    pub policy: String,
+    /// `none` or `heuristic` — the deterministic QoS engine never loads a
+    /// learned artifact (use classic `acpc serve` for dnn/tcn).
+    pub predictor: PredictorKind,
+    /// Scenario-registry workload template (mutually exclusive with
+    /// `profile`); tenants share the template, each over its own seeded
+    /// generator and rebased address space.
+    pub scenario: Option<String>,
+    /// Model-profile workload template (mutually exclusive with
+    /// `scenario`). Both unset = the tiny smoke generator.
+    pub profile: Option<String>,
+    pub workers: Option<usize>,
+    /// Engine ticks to run arrivals for (service then drains).
+    pub ticks: Option<u64>,
+    /// Accesses each worker serves per tick.
+    pub quantum: Option<u64>,
+    pub predict_batch: Option<usize>,
+    pub seed: Option<u64>,
+    pub hierarchy: HierarchySpec,
+    pub router: RouterSpec,
+    pub arbiter: ArbiterSpec,
+    /// The tenant population, 1..=[`MAX_TENANTS`], unique names.
+    pub tenants: Vec<TenantSpec>,
+    /// Record every served access into a v2 `.acpctrace` (tenant = routed
+    /// tenant id, arrival = per-tenant access ordinal).
+    pub capture: Option<String>,
+    /// HTTP dashboard port (0 = any free port).
+    pub dashboard: Option<u16>,
+    pub dashboard_linger_ms: Option<u64>,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            name: None,
+            policy: "acpc".into(),
+            predictor: PredictorKind::Heuristic,
+            scenario: None,
+            profile: None,
+            workers: None,
+            ticks: None,
+            quantum: None,
+            predict_batch: None,
+            seed: None,
+            hierarchy: HierarchySpec::default(),
+            router: RouterSpec::default(),
+            arbiter: ArbiterSpec::default(),
+            tenants: Vec::new(),
+            capture: None,
+            dashboard: None,
+            dashboard_linger_ms: None,
+        }
+    }
+}
+
+/// One tenant resolved: concrete arrival process, bucket contract, pin.
+#[derive(Debug, Clone)]
+pub struct ResolvedTenant {
+    pub name: String,
+    pub arrivals: OpenLoopConfig,
+    /// `(rate, burst)` token-bucket contract, `None` = uncapped.
+    pub bucket: Option<(f64, f64)>,
+    pub pin: Option<usize>,
+}
+
+/// A serve spec resolved against the registries: what
+/// [`super::engine::run`] executes.
+#[derive(Debug, Clone)]
+pub struct ResolvedServe {
+    pub name: String,
+    pub workers: usize,
+    pub policy: String,
+    pub predictor: PredictorKind,
+    pub hierarchy: HierarchyConfig,
+    /// Per-tenant generator template (arrivals zeroed — all admission is
+    /// engine-driven); each (worker, tenant) generator derives its seed
+    /// from this one.
+    pub generator: GeneratorConfig,
+    pub ticks: u64,
+    pub quantum: u64,
+    pub predict_batch: usize,
+    pub seed: u64,
+    pub vnodes: usize,
+    pub arbiter: ArbiterConfig,
+    pub arbiter_enabled: bool,
+    pub window_ticks: u64,
+    pub tenants: Vec<ResolvedTenant>,
+    pub capture: Option<std::path::PathBuf>,
+    pub dashboard_port: Option<u16>,
+    pub dashboard_linger: Duration,
+    /// The input spec with every defaulted scalar made explicit — embedded
+    /// in the report so it re-runs bit-for-bit.
+    pub spec: ServeSpec,
+}
+
+impl ResolvedServe {
+    /// Per-tenant pin vector in router shape.
+    pub fn pins(&self) -> Vec<Option<usize>> {
+        self.tenants.iter().map(|t| t.pin).collect()
+    }
+}
+
+impl ServeSpec {
+    pub fn builder() -> ServeSpecBuilder {
+        ServeSpecBuilder { spec: ServeSpec::default() }
+    }
+
+    /// Validate without running (resolution side effects discarded).
+    pub fn validate(&self) -> Result<()> {
+        self.resolve().map(|_| ())
+    }
+
+    /// Resolve against the registries into the concrete engine
+    /// configuration, validating at the boundary.
+    pub fn resolve(&self) -> Result<ResolvedServe> {
+        if crate::policy::make_policy(&self.policy, 2, 2, 0).is_none() {
+            bail!("unknown policy '{}' (see `acpc policies`)", self.policy);
+        }
+        match self.predictor {
+            PredictorKind::None | PredictorKind::Heuristic => {}
+            other => bail!(
+                "serve spec predictor must be none|heuristic (got '{}'): the QoS engine \
+                 is deterministic and loads no artifacts — use classic `acpc serve` for \
+                 learned predictors",
+                other.label()
+            ),
+        }
+        if self.scenario.is_some() && self.profile.is_some() {
+            bail!("'scenario' and 'profile' are mutually exclusive");
+        }
+        let workers = self.workers.unwrap_or(2);
+        if workers == 0 || workers > MAX_WORKERS {
+            bail!("workers must be in 1..={MAX_WORKERS} (got {workers})");
+        }
+        if self.tenants.is_empty() {
+            bail!("a serve spec needs at least one tenant");
+        }
+        if self.tenants.len() > MAX_TENANTS {
+            bail!("at most {MAX_TENANTS} tenants (got {})", self.tenants.len());
+        }
+        for (i, a) in self.tenants.iter().enumerate() {
+            for b in &self.tenants[i + 1..] {
+                if a.name == b.name {
+                    bail!("duplicate tenant name '{}'", a.name);
+                }
+            }
+        }
+        let seed = self.seed.unwrap_or(0x5EED);
+        let ticks = self.ticks.unwrap_or(20_000);
+        if ticks == 0 {
+            bail!("ticks must be >= 1");
+        }
+        let quantum = self.quantum.unwrap_or(64);
+        if quantum == 0 {
+            bail!("quantum must be >= 1");
+        }
+        let predict_batch = self.predict_batch.unwrap_or(32);
+        if predict_batch == 0 {
+            bail!("predict_batch must be >= 1");
+        }
+        let vnodes = self.router.vnodes.unwrap_or(16);
+        if vnodes == 0 {
+            bail!("router.vnodes must be >= 1");
+        }
+        let (arbiter, arbiter_enabled, window_ticks) = self.arbiter.resolve()?;
+
+        let mut generator = match (&self.scenario, &self.profile) {
+            (Some(name), None) => {
+                let sc = Scenario::by_name(name)
+                    .ok_or_else(|| anyhow!("unknown scenario '{name}' (see `acpc policies`)"))?;
+                if sc.is_traffic() {
+                    bail!(
+                        "scenario '{name}' already models traffic shape; in a serve spec \
+                         the tenants define arrivals — pick a generator scenario"
+                    );
+                }
+                sc.config(seed)
+            }
+            (None, Some(p)) => {
+                let profile = ModelProfile::by_name(p)
+                    .ok_or_else(|| anyhow!("unknown model profile '{p}'"))?;
+                GeneratorConfig::new(profile, seed)
+            }
+            (None, None) => GeneratorConfig::tiny(seed),
+            (Some(_), Some(_)) => unreachable!("checked above"),
+        };
+        // All admission is engine-driven; autonomous arrivals off.
+        generator.arrival_p_hot = 0.0;
+        generator.arrival_p_cold = 0.0;
+
+        let mut hierarchy = HierarchyConfig::scaled();
+        hierarchy.prefetcher = "composite".into();
+        self.hierarchy.apply(&mut hierarchy)?;
+
+        let tenants: Vec<ResolvedTenant> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| t.resolve(seed, i, workers))
+            .collect::<Result<_>>()?;
+
+        let name = self
+            .name
+            .clone()
+            .unwrap_or_else(|| format!("serve-{}-{}t", self.policy, tenants.len()));
+
+        // The fully-explicit copy the report embeds.
+        let mut spec = self.clone();
+        spec.name = Some(name.clone());
+        spec.workers = Some(workers);
+        spec.ticks = Some(ticks);
+        spec.quantum = Some(quantum);
+        spec.predict_batch = Some(predict_batch);
+        spec.seed = Some(seed);
+        spec.router = RouterSpec { vnodes: Some(vnodes) };
+        spec.arbiter = ArbiterSpec {
+            enabled: Some(arbiter_enabled),
+            window_ticks: Some(window_ticks),
+            score_threshold: Some(arbiter.score_threshold),
+            min_share: Some(arbiter.min_share),
+            min_accesses: Some(arbiter.min_accesses),
+            warmup_windows: Some(arbiter.warmup_windows),
+        };
+        spec.tenants = tenants.iter().map(TenantSpec::from_resolved).collect();
+        spec.dashboard_linger_ms = Some(self.dashboard_linger_ms.unwrap_or(0));
+
+        Ok(ResolvedServe {
+            name,
+            workers,
+            policy: self.policy.clone(),
+            predictor: self.predictor,
+            hierarchy,
+            generator,
+            ticks,
+            quantum,
+            predict_batch,
+            seed,
+            vnodes,
+            arbiter,
+            arbiter_enabled,
+            window_ticks,
+            tenants,
+            capture: self.capture.as_ref().map(std::path::PathBuf::from),
+            dashboard_port: self.dashboard,
+            dashboard_linger: Duration::from_millis(self.dashboard_linger_ms.unwrap_or(0)),
+            spec,
+        })
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    /// Serialize (schema-stamped). Unset optional fields are omitted; a
+    /// resolved spec (as embedded in reports) has its scalars explicit.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Str(SERVE_SPEC_SCHEMA.into()));
+        if let Some(n) = &self.name {
+            j.set("name", Json::Str(n.clone()));
+        }
+        j.set("policy", Json::Str(self.policy.clone()));
+        j.set("predictor", Json::Str(self.predictor.label().into()));
+        if let Some(sc) = &self.scenario {
+            j.set("scenario", Json::Str(sc.clone()));
+        }
+        if let Some(p) = &self.profile {
+            j.set("profile", Json::Str(p.clone()));
+        }
+        if let Some(v) = self.workers {
+            j.set("workers", Json::Num(v as f64));
+        }
+        if let Some(v) = self.ticks {
+            j.set("ticks", Json::Num(v as f64));
+        }
+        if let Some(v) = self.quantum {
+            j.set("quantum", Json::Num(v as f64));
+        }
+        if let Some(v) = self.predict_batch {
+            j.set("predict_batch", Json::Num(v as f64));
+        }
+        // String, not Num: u64 seeds exceed f64's exact-integer range.
+        if let Some(s) = self.seed {
+            j.set("seed", Json::Str(s.to_string()));
+        }
+        if self.hierarchy != HierarchySpec::default() {
+            j.set("hierarchy", self.hierarchy.to_json());
+        }
+        if let Some(v) = self.router.vnodes {
+            j.set("router", Json::from_pairs(vec![("vnodes", Json::Num(v as f64))]));
+        }
+        if self.arbiter != ArbiterSpec::default() {
+            j.set("arbiter", self.arbiter.to_json());
+        }
+        j.set("tenants", Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect()));
+        if let Some(c) = &self.capture {
+            j.set("capture", Json::Str(c.clone()));
+        }
+        if let Some(p) = self.dashboard {
+            j.set("dashboard", Json::Num(p as f64));
+        }
+        if let Some(v) = self.dashboard_linger_ms {
+            j.set("dashboard_linger_ms", Json::Num(v as f64));
+        }
+        j
+    }
+
+    /// Parse a spec. Unknown keys are errors (typo protection).
+    pub fn from_json(j: &Json) -> Result<ServeSpec> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("serve spec root must be an object"))?;
+        let mut spec = ServeSpec::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "schema" => {
+                    let s = v.as_str().ok_or_else(|| anyhow!("schema must be a string"))?;
+                    if s != SERVE_SPEC_SCHEMA {
+                        bail!("unsupported spec schema '{s}' (expected '{SERVE_SPEC_SCHEMA}')");
+                    }
+                }
+                "name" => spec.name = Some(str_field(v, k)?),
+                "policy" => spec.policy = str_field(v, k)?,
+                "predictor" => {
+                    spec.predictor =
+                        PredictorKind::parse(v.as_str().ok_or_else(|| anyhow!("predictor"))?)?
+                }
+                "scenario" => spec.scenario = Some(str_field(v, k)?),
+                "profile" => spec.profile = Some(str_field(v, k)?),
+                "workers" => spec.workers = Some(u64_field(v, k)? as usize),
+                "ticks" => spec.ticks = Some(u64_field(v, k)?),
+                "quantum" => spec.quantum = Some(u64_field(v, k)?),
+                "predict_batch" => spec.predict_batch = Some(u64_field(v, k)? as usize),
+                "seed" => spec.seed = Some(u64_field(v, k)?),
+                "hierarchy" => spec.hierarchy = HierarchySpec::from_json(v)?,
+                "router" => {
+                    let obj =
+                        v.as_obj().ok_or_else(|| anyhow!("'router' must be an object"))?;
+                    for (rk, rv) in obj {
+                        match rk.as_str() {
+                            "vnodes" => {
+                                spec.router.vnodes = Some(u64_field(rv, rk)? as usize)
+                            }
+                            other => bail!("unknown router key '{other}'"),
+                        }
+                    }
+                }
+                "arbiter" => spec.arbiter = ArbiterSpec::from_json(v)?,
+                "tenants" => {
+                    let arr =
+                        v.as_arr().ok_or_else(|| anyhow!("'tenants' must be an array"))?;
+                    spec.tenants =
+                        arr.iter().map(TenantSpec::from_json).collect::<Result<_>>()?;
+                }
+                "capture" => spec.capture = Some(str_field(v, k)?),
+                "dashboard" => spec.dashboard = Some(u64_field(v, k)? as u16),
+                "dashboard_linger_ms" => spec.dashboard_linger_ms = Some(u64_field(v, k)?),
+                other => bail!("unknown serve-spec key '{other}'"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> Result<ServeSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+}
+
+// ---- builder -----------------------------------------------------------
+
+/// Fluent construction of a [`ServeSpec`]; [`build`](Self::build)
+/// validates by resolving against the registries.
+#[derive(Debug, Clone)]
+pub struct ServeSpecBuilder {
+    spec: ServeSpec,
+}
+
+impl ServeSpecBuilder {
+    pub fn name(mut self, name: &str) -> Self {
+        self.spec.name = Some(name.to_string());
+        self
+    }
+
+    pub fn policy(mut self, policy: &str) -> Self {
+        self.spec.policy = policy.to_string();
+        self
+    }
+
+    pub fn predictor(mut self, kind: PredictorKind) -> Self {
+        self.spec.predictor = kind;
+        self
+    }
+
+    pub fn scenario(mut self, scenario: &str) -> Self {
+        self.spec.scenario = Some(scenario.to_string());
+        self
+    }
+
+    pub fn profile(mut self, profile: &str) -> Self {
+        self.spec.profile = Some(profile.to_string());
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.spec.workers = Some(n);
+        self
+    }
+
+    pub fn ticks(mut self, n: u64) -> Self {
+        self.spec.ticks = Some(n);
+        self
+    }
+
+    pub fn quantum(mut self, n: u64) -> Self {
+        self.spec.quantum = Some(n);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = Some(seed);
+        self
+    }
+
+    /// Append one tenant block.
+    pub fn tenant(mut self, t: TenantSpec) -> Self {
+        self.spec.tenants.push(t);
+        self
+    }
+
+    pub fn vnodes(mut self, n: usize) -> Self {
+        self.spec.router.vnodes = Some(n);
+        self
+    }
+
+    pub fn arbiter(mut self, a: ArbiterSpec) -> Self {
+        self.spec.arbiter = a;
+        self
+    }
+
+    /// Toggle arbitration (scores are computed either way).
+    pub fn arbiter_enabled(mut self, on: bool) -> Self {
+        self.spec.arbiter.enabled = Some(on);
+        self
+    }
+
+    pub fn window_ticks(mut self, n: u64) -> Self {
+        self.spec.arbiter.window_ticks = Some(n);
+        self
+    }
+
+    pub fn hierarchy_preset(mut self, preset: &str) -> Self {
+        self.spec.hierarchy.preset = Some(preset.to_string());
+        self
+    }
+
+    pub fn prefetcher(mut self, prefetcher: &str) -> Self {
+        self.spec.hierarchy.prefetcher = Some(prefetcher.to_string());
+        self
+    }
+
+    pub fn l2_kb(mut self, kb: u64) -> Self {
+        self.spec.hierarchy.l2_kb = Some(kb);
+        self
+    }
+
+    pub fn capture(mut self, path: &str) -> Self {
+        self.spec.capture = Some(path.to_string());
+        self
+    }
+
+    pub fn dashboard(mut self, port: u16) -> Self {
+        self.spec.dashboard = Some(port);
+        self
+    }
+
+    /// Validate (full resolution against the registries) and return the
+    /// spec.
+    pub fn build(self) -> Result<ServeSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenants() -> ServeSpecBuilder {
+        ServeSpec::builder()
+            .tenant(TenantSpec {
+                arrivals: Some("bursty".into()),
+                rate: Some(8.0),
+                queue_depth: Some(4),
+                ..TenantSpec::new("noisy")
+            })
+            .tenant(TenantSpec {
+                rate: Some(1.0),
+                bucket_rate: Some(0.01),
+                ..TenantSpec::new("quiet")
+            })
+    }
+
+    #[test]
+    fn builder_validates_and_roundtrips() {
+        let spec = two_tenants()
+            .policy("acpc")
+            .workers(2)
+            .ticks(5_000)
+            .seed(0xFFFF_FFFF_FFFF_FFF1) // > 2^53: must survive JSON
+            .prefetcher("stride")
+            .build()
+            .unwrap();
+        let back = ServeSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(back.seed, Some(0xFFFF_FFFF_FFFF_FFF1));
+        assert_eq!(back.tenants.len(), 2);
+    }
+
+    #[test]
+    fn resolution_makes_every_scalar_explicit_and_reresolves() {
+        let spec = two_tenants().build().unwrap();
+        let r = spec.resolve().unwrap();
+        assert_eq!(r.workers, 2);
+        assert_eq!(r.ticks, 20_000);
+        assert_eq!(r.window_ticks, 2000);
+        assert!(r.arbiter_enabled);
+        assert_eq!(r.name, "serve-acpc-2t");
+        assert_eq!(r.tenants[1].bucket, Some((0.01, 4.0)), "burst defaults to 4");
+        // Tenants draw distinct arrival streams off the run seed.
+        assert_ne!(r.tenants[0].arrivals.seed, r.tenants[1].arrivals.seed);
+        // The resolved copy re-resolves to the same configuration.
+        let back = ServeSpec::from_json(&r.spec.to_json()).unwrap();
+        let r2 = back.resolve().unwrap();
+        assert_eq!(format!("{:?}", r.hierarchy), format!("{:?}", r2.hierarchy));
+        assert_eq!(format!("{:?}", r.tenants), format!("{:?}", r2.tenants));
+        assert_eq!(format!("{:?}", r.arbiter), format!("{:?}", r2.arbiter));
+        assert_eq!((r.ticks, r.quantum, r.seed), (r2.ticks, r2.quantum, r2.seed));
+    }
+
+    #[test]
+    fn builder_rejects_invalid_specs() {
+        let one = |t: TenantSpec| ServeSpec::builder().tenant(t);
+        assert!(ServeSpec::builder().build().is_err(), "no tenants");
+        assert!(one(TenantSpec::new("")).build().is_err(), "empty name");
+        assert!(two_tenants().policy("nope").build().is_err());
+        assert!(two_tenants().scenario("no-such-scenario").build().is_err());
+        assert!(
+            two_tenants().scenario("bursty-batch").build().is_err(),
+            "traffic scenarios cannot stack under tenant arrivals"
+        );
+        assert!(two_tenants().profile("no-such-profile").build().is_err());
+        assert!(
+            two_tenants().scenario("decode-heavy").profile("gpt3ish").build().is_err(),
+            "scenario+profile is ambiguous"
+        );
+        assert!(
+            two_tenants().predictor(crate::config::PredictorKind::Tcn).build().is_err(),
+            "learned predictors are the classic serve path"
+        );
+        assert!(two_tenants().workers(0).build().is_err());
+        assert!(two_tenants().workers(65).build().is_err());
+        assert!(two_tenants().ticks(0).build().is_err());
+        assert!(two_tenants().quantum(0).build().is_err());
+        assert!(two_tenants().vnodes(0).build().is_err());
+        assert!(two_tenants().window_ticks(0).build().is_err());
+        assert!(two_tenants().l2_kb(96).build().is_err(), "non-power-of-two sets");
+        assert!(
+            two_tenants().tenant(TenantSpec::new("noisy")).build().is_err(),
+            "duplicate tenant name"
+        );
+        assert!(
+            one(TenantSpec { arrivals: Some("tsunami".into()), ..TenantSpec::new("t") })
+                .build()
+                .is_err(),
+            "unknown arrival kind"
+        );
+        assert!(
+            one(TenantSpec { rate: Some(-1.0), ..TenantSpec::new("t") }).build().is_err(),
+            "negative rate"
+        );
+        assert!(
+            one(TenantSpec { bucket_burst: Some(4.0), ..TenantSpec::new("t") })
+                .build()
+                .is_err(),
+            "bucket_burst without bucket_rate"
+        );
+        assert!(
+            one(TenantSpec { bucket_rate: Some(0.0), ..TenantSpec::new("t") })
+                .build()
+                .is_err(),
+            "zero bucket rate"
+        );
+        assert!(
+            one(TenantSpec { pin_worker: Some(2), ..TenantSpec::new("t") })
+                .workers(2)
+                .build()
+                .is_err(),
+            "pin out of range"
+        );
+        let nine = (0..9).fold(ServeSpec::builder(), |b, i| {
+            b.tenant(TenantSpec::new(&format!("t{i}")))
+        });
+        assert!(nine.build().is_err(), "too many tenants");
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        for text in [
+            r#"{"polcy": "lru", "tenants": [{"name": "a"}]}"#,
+            r#"{"tenants": [{"nmae": "a"}]}"#,
+            r#"{"tenants": [{"name": "a", "rat": 4}]}"#,
+            r#"{"arbiter": {"window": 1}, "tenants": [{"name": "a"}]}"#,
+            r#"{"router": {"vnode": 8}, "tenants": [{"name": "a"}]}"#,
+            r#"{"schema": "acpc-serve-spec-v0", "tenants": [{"name": "a"}]}"#,
+            r#"{"tenants": [{}]}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(ServeSpec::from_json(&j).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn imprecise_numbers_rejected_not_truncated() {
+        for text in [
+            r#"{"ticks": 2.5, "tenants": [{"name": "a"}]}"#,
+            r#"{"seed": 18446744073709551615, "tenants": [{"name": "a"}]}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(ServeSpec::from_json(&j).is_err(), "{text}");
+        }
+        let j =
+            Json::parse(r#"{"seed": "18446744073709551615", "tenants": [{"name": "a"}]}"#)
+                .unwrap();
+        assert_eq!(ServeSpec::from_json(&j).unwrap().seed, Some(u64::MAX));
+    }
+}

@@ -1,0 +1,240 @@
+//! Integration tests over the tenant-aware serving core: ServeSpec
+//! round-trip and validation, session-router determinism, engine counter
+//! reconciliation and seed determinism, the noisy-neighbor arbitration
+//! story, and tenant-stamped trace capture.
+
+use acpc::serve::{run, ArbiterSpec, ServeSpec, SessionRouter, TenantSpec};
+use acpc::trace::file::TraceReader;
+use acpc::util::json::Json;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("acpc_integration_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Two tenants with opposite traffic shapes sharing one worker's cache.
+fn contended(ticks: u64, arbitrate: bool) -> ServeSpec {
+    ServeSpec::builder()
+        .workers(1)
+        .ticks(ticks)
+        .seed(0xC0FFEE)
+        .l2_kb(64)
+        .tenant(TenantSpec {
+            arrivals: Some("bursty".into()),
+            rate: Some(150.0),
+            burst_factor: Some(6.0),
+            burst_switch_p: Some(0.005),
+            ..TenantSpec::new("noisy")
+        })
+        .tenant(TenantSpec {
+            rate: Some(4.0),
+            ..TenantSpec::new("quiet")
+        })
+        .arbiter(ArbiterSpec {
+            enabled: Some(arbitrate),
+            window_ticks: Some(1000),
+            score_threshold: Some(0.01),
+            min_share: Some(0.4),
+            min_accesses: Some(256),
+            warmup_windows: Some(2),
+        })
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn serve_spec_roundtrips_through_json_files() {
+    let spec = ServeSpec::builder()
+        .name("rt")
+        .policy("srrip")
+        .workers(3)
+        .ticks(9_000)
+        .seed(0xFFFF_FFFF_FFFF_FF17) // > 2^53: must survive JSON as a string
+        .vnodes(8)
+        .tenant(TenantSpec {
+            arrivals: Some("diurnal".into()),
+            rate: Some(6.0),
+            period: Some(4_000),
+            amplitude: Some(0.5),
+            bucket_rate: Some(0.01),
+            bucket_burst: Some(2.0),
+            ..TenantSpec::new("a")
+        })
+        .tenant(TenantSpec { pin_worker: Some(2), ..TenantSpec::new("b") })
+        .build()
+        .unwrap();
+
+    let path = tmp("roundtrip.json");
+    std::fs::write(&path, spec.to_json().to_pretty()).unwrap();
+    let back = ServeSpec::from_file(&path).unwrap();
+    assert_eq!(spec, back, "file round-trip must be lossless");
+    assert_eq!(back.seed, Some(0xFFFF_FFFF_FFFF_FF17));
+
+    // The resolved copy (what reports embed) round-trips and re-resolves.
+    let r = spec.resolve().unwrap();
+    let back = ServeSpec::from_json(&r.spec.to_json()).unwrap();
+    assert_eq!(r.spec, back);
+    assert!(back.resolve().is_ok());
+}
+
+#[test]
+fn serve_spec_builder_rejects_bad_configurations() {
+    let base = || {
+        ServeSpec::builder()
+            .tenant(TenantSpec::new("a"))
+            .tenant(TenantSpec::new("b"))
+    };
+    assert!(base().build().is_ok());
+    assert!(ServeSpec::builder().build().is_err(), "no tenants");
+    assert!(base().policy("no-such-policy").build().is_err());
+    assert!(base().tenant(TenantSpec::new("a")).build().is_err(), "dup name");
+    assert!(base().workers(0).build().is_err());
+    assert!(base().window_ticks(0).build().is_err());
+    assert!(
+        base().scenario("bursty-batch").build().is_err(),
+        "traffic scenarios cannot stack under tenant arrivals"
+    );
+    assert!(
+        ServeSpec::builder()
+            .tenant(TenantSpec { bucket_burst: Some(4.0), ..TenantSpec::new("a") })
+            .build()
+            .is_err(),
+        "bucket_burst without bucket_rate"
+    );
+    assert!(
+        ServeSpec::builder()
+            .workers(2)
+            .tenant(TenantSpec { pin_worker: Some(2), ..TenantSpec::new("a") })
+            .build()
+            .is_err(),
+        "pin out of range"
+    );
+    // Unknown keys are parse errors, not silent drops.
+    let j = Json::parse(r#"{"tennants": [{"name": "a"}]}"#).unwrap();
+    assert!(ServeSpec::from_json(&j).is_err());
+}
+
+#[test]
+fn session_router_is_deterministic_and_honors_pins() {
+    let all = |_: usize| true;
+    let a = SessionRouter::new(8, 16, 0xABCD, vec![None, Some(5)]);
+    let b = SessionRouter::new(8, 16, 0xABCD, vec![None, Some(5)]);
+    for key in 0..500u64 {
+        assert_eq!(a.route(0, key, &all), b.route(0, key, &all), "key {key}");
+        assert_eq!(a.route(1, key, &all), Some(5), "pins are absolute");
+    }
+    // Pins never fail over; unpinned sessions walk past full workers.
+    assert_eq!(a.route(1, 0, &|w| w != 5), None);
+    let home = a.route(0, 7, &all).unwrap();
+    let next = a.route(0, 7, &|w| w != home).unwrap();
+    assert_ne!(next, home);
+}
+
+#[test]
+fn engine_reruns_reproduce_per_tenant_counters_and_embed_the_spec() {
+    let spec = contended(4_000, true);
+    let a = run(&spec).unwrap();
+    let b = run(&spec).unwrap();
+    assert_eq!(a.tenants.len(), 2);
+    for (x, y) in a.tenants.iter().zip(b.tenants.iter()) {
+        // The audited admission identity: every offered session has exactly
+        // one terminal disposition.
+        assert_eq!(x.offered, x.admitted + x.shed + x.deferred, "{}", x.name);
+        assert_eq!(
+            (x.offered, x.admitted, x.shed, x.deferred, x.accesses, x.tokens),
+            (y.offered, y.admitted, y.shed, y.deferred, y.accesses, y.tokens),
+            "{} not deterministic across reruns",
+            x.name
+        );
+    }
+
+    // The report embeds the fully-resolved spec; running *that* reproduces
+    // the run — a report is a recipe.
+    let j = a.to_json();
+    let embedded = j.get("serve_spec").expect("report embeds its resolved spec");
+    let back = ServeSpec::from_json(embedded).unwrap();
+    let c = run(&back).unwrap();
+    for (x, z) in a.tenants.iter().zip(c.tenants.iter()) {
+        assert_eq!(
+            (x.offered, x.admitted, x.shed, x.deferred, x.accesses),
+            (z.offered, z.admitted, z.shed, z.deferred, z.accesses),
+            "{}: embedded spec did not reproduce the run",
+            x.name
+        );
+    }
+}
+
+/// The tentpole claim: with a bursty tenant thrashing a small shared L2,
+/// turning the arbiter on (same seed, same arrivals) leaves the steady
+/// tenant strictly better off — higher hit rate, no more pollution — by
+/// throttling the noisy tenant's admissions.
+#[test]
+fn arbitration_on_dominates_off_for_the_quiet_tenant() {
+    let off = run(&contended(40_000, false)).unwrap();
+    let on = run(&contended(40_000, true)).unwrap();
+
+    let q_off = &off.tenants[1];
+    let q_on = &on.tenants[1];
+    assert_eq!(q_off.name, "quiet");
+    // Same seed → the quiet tenant's offered traffic is identical in both
+    // arms; only what the cache does to it differs.
+    assert_eq!(q_on.offered, q_off.offered, "arms must see identical arrivals");
+    assert!(q_on.accesses > 0 && q_off.accesses > 0);
+
+    let n_off = &off.tenants[0];
+    let n_on = &on.tenants[0];
+    assert_eq!(n_off.throttled_windows, 0, "disabled arbiter must not throttle");
+    assert_eq!(off.throttled_windows, 0);
+    assert!(
+        n_on.throttled_windows > 0,
+        "the arbiter never identified the noisy tenant (scores too low?)"
+    );
+
+    assert!(
+        q_on.l2_hit_rate > q_off.l2_hit_rate,
+        "quiet tenant hit rate must strictly improve under arbitration: \
+         on={:.4} off={:.4}",
+        q_on.l2_hit_rate,
+        q_off.l2_hit_rate
+    );
+    assert!(
+        q_on.l2_pollution_ratio <= q_off.l2_pollution_ratio,
+        "quiet tenant pollution must not worsen under arbitration: \
+         on={:.4} off={:.4}",
+        q_on.l2_pollution_ratio,
+        q_off.l2_pollution_ratio
+    );
+}
+
+#[test]
+fn capture_stamps_real_tenant_ids() {
+    let path = tmp("tenant-capture.acpctrace");
+    let mut spec = contended(2_000, true);
+    spec.capture = Some(path.to_str().unwrap().to_string());
+    let rep = run(&spec).unwrap();
+    assert!(rep.accesses > 0);
+
+    let reader = TraceReader::open(&path).unwrap();
+    assert_eq!(reader.version(), 2, "serve captures are v2");
+    assert_eq!(reader.tokens(), rep.tokens, "header totals");
+    let records: Vec<_> = reader.map(|r| r.unwrap()).collect();
+    assert!(!records.is_empty());
+
+    // Tenant ids are *tenant* indices (not worker indices as in the classic
+    // coordinator capture): exactly the spec's two tenants appear.
+    let tenants: std::collections::BTreeSet<u32> =
+        records.iter().map(|r| r.tenant).collect();
+    assert_eq!(
+        tenants,
+        [0u32, 1].into_iter().collect(),
+        "capture must carry both tenants' ids"
+    );
+
+    // Per-tenant access counts in the capture match the report attribution.
+    for (ti, tr) in rep.tenants.iter().enumerate() {
+        let n = records.iter().filter(|r| r.tenant == ti as u32).count();
+        assert!(n > 0, "tenant {} served nothing", tr.name);
+    }
+}
